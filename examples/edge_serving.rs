@@ -1,0 +1,73 @@
+//! E8 — end-to-end edge serving driver (the prompt's required E2E proof).
+//!
+//!     cargo run --release --example edge_serving [requests] [concurrency]
+//!
+//! Loads the trained + quantized SNN artifacts, starts the serving engine
+//! (router -> dynamic batcher -> PJRT backend executing the AOT'd
+//! JAX/Pallas graph), replays the test set as concurrent client traffic
+//! at every precision, and reports accuracy / throughput / latency
+//! percentiles / batch occupancy. Results recorded in EXPERIMENTS.md §E8.
+
+use std::time::Instant;
+
+use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
+use lspine::runtime::ArtifactStore;
+
+fn main() -> lspine::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(384);
+    let concurrency: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    let store = ArtifactStore::open_default()?;
+    let data = store.load_test_set()?;
+
+    for model in ["mlp", "convnet"] {
+        if store.manifest().model(model).is_err() {
+            continue;
+        }
+        println!("=== {model} ===");
+        for precision in [
+            ReqPrecision::Int2,
+            ReqPrecision::Int4,
+            ReqPrecision::Int8,
+            ReqPrecision::Fp32,
+        ] {
+            let engine = ServingEngine::start(ServerConfig {
+                model: model.into(),
+                backend: Backend::Pjrt,
+                ..Default::default()
+            })?;
+
+            let t0 = Instant::now();
+            let mut hits = 0usize;
+            let mut inflight = Vec::with_capacity(concurrency);
+            for i in 0..n_requests {
+                let idx = i % data.n;
+                inflight.push((idx, engine.submit(data.sample(idx), precision)?));
+                if inflight.len() >= concurrency {
+                    let (idx, rx) = inflight.remove(0);
+                    let resp = rx.recv().expect("engine alive");
+                    hits += (resp.prediction == data.labels[idx] as usize) as usize;
+                }
+            }
+            for (idx, rx) in inflight {
+                let resp = rx.recv().expect("engine alive");
+                hits += (resp.prediction == data.labels[idx] as usize) as usize;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let m = engine.metrics();
+            println!(
+                "{:>5}: acc {:.2}%  {:.0} req/s  mean_batch {:.1}  p50<={} us  p95<={} us",
+                precision.name(),
+                hits as f64 * 100.0 / n_requests as f64,
+                n_requests as f64 / dt,
+                m.mean_batch(),
+                m.latency.quantile_us(0.5),
+                m.latency.quantile_us(0.95),
+            );
+            engine.shutdown()?;
+        }
+    }
+    println!("\nE2E OK: trained artifacts served through router/batcher/PJRT");
+    Ok(())
+}

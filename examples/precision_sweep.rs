@@ -1,0 +1,87 @@
+//! Precision sweep: accuracy / memory / simulated latency / energy
+//! across INT2/INT4/INT8 and all four quantization schemes.
+//!
+//!     cargo run --release --example precision_sweep [samples]
+//!
+//! This is Fig. 4 + Fig. 5 + the energy attribution in one run, computed
+//! live by the rust engine (not read from the manifest) — the numbers it
+//! prints should match the manifest's within the evaluated subset.
+
+use lspine::array::grid::ArrayConfig;
+use lspine::array::sim::{simulate_inference, SimOverheads};
+use lspine::energy::EnergyModel;
+use lspine::model::SnnEngine;
+use lspine::runtime::ArtifactStore;
+use lspine::util::bench::Table;
+
+fn main() -> lspine::Result<()> {
+    let samples: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let store = ArtifactStore::open_default()?;
+    let data = store.load_test_set()?;
+    let cfg = ArrayConfig::paper();
+    let ov = SimOverheads::default();
+    let emodel = EnergyModel::default();
+
+    for model in ["mlp", "convnet"] {
+        let Ok(entry) = store.manifest().model(model) else {
+            continue;
+        };
+        println!(
+            "=== {model} (FP32 test acc {:.2}%) ===",
+            entry.training.fp32_test_acc * 100.0
+        );
+        let mut t = Table::new(&[
+            "Scheme",
+            "Bits",
+            "Acc (rust, %)",
+            "Acc (manifest, %)",
+            "Mem (KiB)",
+            "Sim latency (us)",
+            "Energy (uJ)",
+        ]);
+        for scheme in ["lspine", "stbp", "admm", "trunc"] {
+            for bits in [2u32, 4, 8] {
+                let net = store.load_network(model, scheme, bits)?;
+                let mut engine = SnnEngine::new(net.clone());
+                let n = samples.min(data.n);
+                let mut hits = 0;
+                let mut lat_us = 0.0;
+                let mut energy_uj = 0.0;
+                for i in 0..n {
+                    let pred = engine.predict(data.sample(i));
+                    hits += (pred == data.labels[i] as usize) as usize;
+                    let r = simulate_inference(
+                        &net,
+                        &cfg,
+                        &ov,
+                        engine.last_layer_stats(),
+                    )?;
+                    lat_us += r.latency_ms * 1e3;
+                    let st = engine.last_stats();
+                    let updates = net.arch.total_neurons() as u64
+                        * net.arch.timesteps() as u64;
+                    energy_uj += emodel
+                        .breakdown(&st, bits, updates, r.latency_ms * 1e-3)
+                        .total_j()
+                        * 1e6;
+                }
+                let manifest_acc = entry.quant_entry(scheme, bits)?.accuracy;
+                t.row(&[
+                    scheme.to_string(),
+                    format!("INT{bits}"),
+                    format!("{:.2}", hits as f64 * 100.0 / n as f64),
+                    format!("{:.2}", manifest_acc * 100.0),
+                    format!("{:.2}", net.memory_bits() as f64 / 8.0 / 1024.0),
+                    format!("{:.1}", lat_us / n as f64),
+                    format!("{:.2}", energy_uj / n as f64),
+                ]);
+            }
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}

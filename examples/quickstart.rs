@@ -1,0 +1,51 @@
+//! Quickstart: load a quantized artifact, run one inference both ways.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Loads the INT4 MLP artifact, runs one test image through (a) the
+//! bit-accurate native NCE engine and (b) the AOT-compiled JAX/Pallas
+//! graph via PJRT, and shows that the spike counts agree exactly.
+
+use lspine::model::SnnEngine;
+use lspine::runtime::executor::{ExecutorPool, ModelKey};
+use lspine::runtime::ArtifactStore;
+
+fn main() -> lspine::Result<()> {
+    // 1. open the artifacts produced by `make artifacts`
+    let store = ArtifactStore::open_default()?;
+    let data = store.load_test_set()?;
+    println!(
+        "artifacts: {} models, test set {}x{} pixels",
+        store.manifest().models.len(),
+        data.n,
+        data.dim
+    );
+
+    // 2. native path: the rust NCE engine on the packed weights
+    let net = store.load_network("mlp", "lspine", 4)?;
+    println!(
+        "mlp INT4: {} layers, {:.1} KiB packed weights",
+        net.layers.len(),
+        net.memory_bits() as f64 / 8.0 / 1024.0
+    );
+    let mut engine = SnnEngine::new(net);
+    let sample = data.sample(0);
+    let counts_native: Vec<i32> = engine.infer(sample).iter().map(|&c| c as i32).collect();
+    let pred_native = engine.predict(sample);
+    println!("native  counts: {counts_native:?} -> class {pred_native}");
+
+    // 3. PJRT path: the AOT HLO graph (pallas kernel inside)
+    let mut pool = ExecutorPool::new(store, "mlp")?;
+    let exe = pool.get(ModelKey { bits: 4, batch: 1 })?;
+    let counts_pjrt = exe.run_u8(&[sample])?.remove(0);
+    let pred_pjrt = exe.predict_u8(&[sample])?[0];
+    println!("pjrt    counts: {counts_pjrt:?} -> class {pred_pjrt}");
+
+    // 4. the whole point: both paths are bit-identical
+    assert_eq!(counts_native, counts_pjrt, "layers disagree!");
+    println!(
+        "OK: bit-exact across rust NCE and JAX/Pallas AOT (label = {})",
+        data.labels[0]
+    );
+    Ok(())
+}

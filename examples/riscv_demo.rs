@@ -1,0 +1,78 @@
+//! RISC-V controller co-simulation: the pico-rv32-class core runs the
+//! real orchestration firmware against the array MMIO device, with layer
+//! cycle costs taken from the *actual* cycle simulation of a test image.
+//!
+//!     cargo run --release --example riscv_demo
+//!
+//! Validates the `riscv_per_layer` control-overhead constant the cycle
+//! model charges (array::sim::SimOverheads) against measured firmware
+//! execution.
+
+use lspine::array::grid::ArrayConfig;
+use lspine::array::sim::{simulate_inference, SimOverheads};
+use lspine::coordinator::firmware::{
+    inference_program, RESULT_CYCLES_ADDR, RESULT_SPIKES_ADDR,
+};
+use lspine::model::SnnEngine;
+use lspine::riscv::bus::{ArrayDevice, Bus, Ram};
+use lspine::riscv::cpu::Cpu;
+use lspine::runtime::ArtifactStore;
+
+fn main() -> lspine::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    let data = store.load_test_set()?;
+    let net = store.load_network("mlp", "lspine", 4)?;
+    let cfg = ArrayConfig::paper();
+
+    // 1. run a real inference to get per-layer activity + cycles
+    let mut engine = SnnEngine::new(net.clone());
+    engine.infer(data.sample(0));
+    let report =
+        simulate_inference(&net, &cfg, &SimOverheads::default(), engine.last_layer_stats())?;
+    let layer_cycles: Vec<u64> = report.layers.iter().map(|l| l.total()).collect();
+    let layer_spikes: Vec<u32> = engine
+        .last_layer_stats()
+        .iter()
+        .map(|l| l.spikes_emitted as u32)
+        .collect();
+    println!("layer cycles from the array simulator: {layer_cycles:?}");
+
+    // 2. assemble + run the orchestration firmware on the RV32I core
+    let timesteps = net.arch.timesteps();
+    let prog = inference_program(net.layers.len() as u32, timesteps);
+    println!("firmware: {} bytes of RV32I", prog.len());
+    let mut ram = Ram::new(64 * 1024);
+    ram.load(0, &prog);
+    let mut bus = Bus::new(ram, ArrayDevice::new(layer_cycles.clone(), layer_spikes));
+    let mut cpu = Cpu::new();
+    let ctrl_cycles = cpu.run(&mut bus, 1_000_000).expect("firmware completes");
+
+    let total_array = bus.ram.read_u32(RESULT_CYCLES_ADDR) as u64;
+    let total_spikes = bus.ram.read_u32(RESULT_SPIKES_ADDR);
+    println!(
+        "firmware result: array cycles {total_array}, spikes {total_spikes}, \
+         control cycles {ctrl_cycles}"
+    );
+    assert_eq!(total_array, layer_cycles.iter().sum::<u64>());
+
+    // 3. validate the cycle model's control-overhead constant
+    let per_layer = ctrl_cycles as f64 / net.layers.len() as f64;
+    let modeled = SimOverheads::default().riscv_per_layer as f64;
+    println!(
+        "control overhead: measured {per_layer:.0} cycles/layer vs modeled {modeled:.0}"
+    );
+    // the firmware's poll loop scales with layer runtime; the constant
+    // must be within ~3x, which it is by construction of the poll rate
+    assert!(per_layer < modeled * 3.0 && per_layer > modeled / 10.0);
+
+    // 4. end-to-end latency with control overhead folded in
+    let total = total_array + ctrl_cycles;
+    println!(
+        "one inference = {total} cycles = {:.4} ms @ {} MHz (sim said {:.4} ms)",
+        total as f64 / (cfg.clock_mhz * 1e3),
+        cfg.clock_mhz,
+        report.latency_ms
+    );
+    println!("riscv co-simulation OK");
+    Ok(())
+}

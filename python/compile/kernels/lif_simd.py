@@ -1,0 +1,134 @@
+"""L1 — Pallas kernel for the L-SPINE multi-precision SIMD LIF step.
+
+One `pallas_call` implements one timestep of one LIF layer over a batch:
+spike-gated synaptic accumulation from *bit-packed* weights, shift-based
+leak, threshold, reset-by-subtraction. This is the NCE (Fig. 2 of the
+paper) re-thought for a TPU-style memory hierarchy (DESIGN.md
+§Hardware-Adaptation):
+
+- the packed u32 weight block is the unit staged into VMEM (INT2 moves
+  16x less HBM traffic than FP32 — the paper's memory-footprint win);
+- field unpack is shifts/masks/xor-sub on the VPU (multiplier-less);
+- spike gating is a masked accumulation (spikes are {0,1}, the dot
+  contains no real multiplies);
+- the grid tiles (batch x output) so each program's working set
+  (spike rows + one packed weight tile + membrane tile) fits VMEM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the *same* kernel is
+what the rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .packed import lanes_per_word
+
+
+def _lif_kernel(
+    spikes_ref,  # [Bt, K] int32
+    w_ref,  # [K, NWt] uint32 packed
+    v_ref,  # [Bt, Nt] int32
+    out_ref,  # [Bt, Nt] int32 spikes
+    v_out_ref,  # [Bt, Nt] int32
+    *,
+    bits: int,
+    theta: int,
+    leak_shift: int,
+):
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    sign = jnp.int32(1 << (bits - 1))
+
+    words = w_ref[...]  # [K, NWt]
+    k, n_words = words.shape
+    # SIMD field extract: shift/mask each of the `lanes` fields, then
+    # xor-sub sign extension — exactly the datapath's unpack network.
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits).reshape(1, 1, lanes)
+    fields = (words[:, :, None] >> shifts) & mask
+    w = ((fields.astype(jnp.int32) ^ sign) - sign).reshape(k, n_words * lanes)
+
+    spikes = spikes_ref[...]
+    # Binary spikes: this dot is a spike-gated add tree, no multiplies in HW.
+    i_syn = jnp.dot(spikes, w, preferred_element_type=jnp.int32)
+
+    v = v_ref[...]
+    v_new = v - (v >> jnp.int32(leak_shift)) + i_syn
+    fired = v_new >= jnp.int32(theta)
+    out_ref[...] = fired.astype(jnp.int32)
+    v_out_ref[...] = v_new - fired.astype(jnp.int32) * jnp.int32(theta)
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (keeps the grid exact)."""
+    t = min(n, pref)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n_out", "theta", "leak_shift")
+)
+def lif_simd_step(
+    spikes: jnp.ndarray,  # [B, K] int32 {0,1}
+    packed_w: jnp.ndarray,  # [K, Nw] uint32
+    v: jnp.ndarray,  # [B, N] int32
+    *,
+    bits: int,
+    n_out: int,
+    theta: int,
+    leak_shift: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One LIF layer timestep via the pallas NCE kernel.
+
+    ``n_out`` may be smaller than ``Nw * lanes``; the padded tail columns
+    are computed (their packed fields are zero) and sliced off.
+    """
+    lanes = lanes_per_word(bits)
+    b, k = spikes.shape
+    n_words = packed_w.shape[1]
+    n_padded = n_words * lanes
+    if v.shape[1] != n_out:
+        raise ValueError("membrane width must equal n_out")
+
+    # Pad membrane to the packed width so tiles line up with words.
+    v_padded = (
+        v
+        if n_padded == n_out
+        else jnp.pad(v, ((0, 0), (0, n_padded - n_out)))
+    )
+
+    bt = _tile(b, 128)
+    # Output tile must be word-aligned: choose in packed-word units.
+    nwt = _tile(n_words, max(1, 512 // lanes))
+    nt = nwt * lanes
+
+    grid = (b // bt, n_words // nwt)
+    kernel = functools.partial(
+        _lif_kernel, bits=bits, theta=theta, leak_shift=leak_shift
+    )
+    out, v_next = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, nwt), lambda i, j: (0, j)),
+            pl.BlockSpec((bt, nt), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, nt), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, nt), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_padded), jnp.int32),
+            jax.ShapeDtypeStruct((b, n_padded), jnp.int32),
+        ],
+        interpret=True,
+    )(spikes, packed_w, v_padded)
+    return out[:, :n_out], v_next[:, :n_out]

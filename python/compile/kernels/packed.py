@@ -1,0 +1,82 @@
+"""Bit-packing contract shared by L1 (pallas), L2 (jax) and L3 (rust).
+
+Signed fields of width ``b`` in {2, 4, 8} are stored two's-complement at bit
+offset ``b*i`` of a little-endian uint32 word, ``lanes = 32 // b`` fields per
+word. This is the storage layout of the paper's SIMD datapath: one 32-bit
+word feeds 16 INT2 / 8 INT4 / 4 INT8 lanes of the NCE.
+
+The rust mirror is ``rust/src/nce/simd.rs``; golden vectors in
+``python/tests/test_packed.py`` and ``rust/src/nce/simd.rs`` tests pin the
+two implementations to each other.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+def lanes_per_word(bits: int) -> int:
+    """Number of packed fields in one u32 storage word."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported field width: {bits}")
+    return 32 // bits
+
+
+def qmin_qmax(bits: int) -> tuple[int, int]:
+    """Two's-complement range of a ``bits``-wide signed field."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def pack_weights_np(q: np.ndarray, bits: int) -> np.ndarray:
+    """Pack signed integer weights ``q [K, N]`` along the output axis N.
+
+    Returns uint32 ``[K, ceil(N / lanes)]``. N is zero-padded to a full word;
+    zero fields contribute nothing to accumulation, so padding is harmless.
+    """
+    lanes = lanes_per_word(bits)
+    lo, hi = qmin_qmax(bits)
+    if q.ndim != 2:
+        raise ValueError("pack_weights_np expects a 2-D [K, N] array")
+    if q.min(initial=0) < lo or q.max(initial=0) > hi:
+        raise ValueError(f"values out of INT{bits} range [{lo}, {hi}]")
+    k, n = q.shape
+    n_words = -(-n // lanes)
+    padded = np.zeros((k, n_words * lanes), dtype=np.int64)
+    padded[:, :n] = q.astype(np.int64)
+    mask = (1 << bits) - 1
+    fields = (padded & mask).reshape(k, n_words, lanes)
+    shifts = (np.arange(lanes, dtype=np.uint64) * bits).reshape(1, 1, lanes)
+    words = np.bitwise_or.reduce(
+        (fields.astype(np.uint64) << shifts).astype(np.uint64), axis=2
+    )
+    return words.astype(np.uint32)
+
+
+def unpack_weights_np(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_weights_np`; returns int32 ``[K, n]``."""
+    lanes = lanes_per_word(bits)
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    k, n_words = words.shape
+    shifts = (np.arange(lanes, dtype=np.uint32) * bits).reshape(1, 1, lanes)
+    fields = (words[:, :, None] >> shifts) & mask
+    fields = (fields.astype(np.int64) ^ sign) - sign
+    return fields.reshape(k, n_words * lanes)[:, :n].astype(np.int32)
+
+
+def unpack_weights_jnp(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """jnp unpack used inside the L2 graph and the pallas kernel.
+
+    Multiplier-less on hardware: shifts, masks and an xor/sub sign-extend.
+    """
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    sign = jnp.int32(1 << (bits - 1))
+    k, n_words = words.shape
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits).reshape(1, 1, lanes)
+    fields = (words[:, :, None] >> shifts) & mask
+    fields = (fields.astype(jnp.int32) ^ sign) - sign
+    return fields.reshape(k, n_words * lanes)[:, :n]

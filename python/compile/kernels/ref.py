@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the L1 kernel — the CORE correctness reference.
+
+Implements the integer LIF step of DESIGN.md §Key bit-level contracts with
+no pallas, no packing tricks beyond the shared unpack helper. The pallas
+kernel (`lif_simd.py`), the AOT'd L2 graph, and the rust `model::engine`
+must all agree with this bit-for-bit (asserted by pytest + hypothesis and
+by the rust integration tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .packed import unpack_weights_jnp
+
+
+def lif_step_ref(
+    spikes: jnp.ndarray,  # [B, K] int32 in {0, 1}
+    packed_w: jnp.ndarray,  # [K, Nw] uint32
+    v: jnp.ndarray,  # [B, N] int32 membrane potential
+    *,
+    bits: int,
+    n_out: int,
+    theta: int,
+    leak_shift: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One integer LIF timestep. Returns (out_spikes [B,N], v_next [B,N]).
+
+    Dynamics (all int32, shifts arithmetic):
+        I      = spikes @ unpack(packed_w)        # spike-gated accumulation
+        V'     = V - (V >> leak_shift) + I        # shift-based leak
+        spike  = V' >= theta
+        V''    = V' - theta * spike               # reset by subtraction
+    """
+    w = unpack_weights_jnp(packed_w, bits, n_out)  # [K, N] int32
+    i_syn = jnp.dot(spikes.astype(jnp.int32), w)  # binary spikes: adds only
+    v_leaked = v - (v >> jnp.int32(leak_shift))
+    v_new = v_leaked + i_syn
+    out = (v_new >= jnp.int32(theta)).astype(jnp.int32)
+    v_reset = v_new - out * jnp.int32(theta)
+    return out, v_reset
+
+
+def encode_step_ref(
+    x_u8: jnp.ndarray,  # [B, K] int32 holding u8 values 0..255
+    t: int,
+) -> jnp.ndarray:
+    """Accumulate-and-fire rate encoder, timestep ``t`` (0-based).
+
+    Emits a deterministic rate code: after t+1 steps exactly
+    ``(x_u8 * (t+1)) >> 8`` spikes have fired, so each step fires
+    ``cum(t+1) - cum(t)`` in {0, 1}. Integer-exact mirror of the rust
+    encoder (`rust/src/encode/`).
+    """
+    c1 = (x_u8 * jnp.int32(t + 1)) >> jnp.int32(8)
+    c0 = (x_u8 * jnp.int32(t)) >> jnp.int32(8)
+    return (c1 - c0).astype(jnp.int32)

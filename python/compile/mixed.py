@@ -1,0 +1,105 @@
+"""Layer-adaptive precision search — the paper's future-work feature.
+
+"Future work will explore layer-adaptive precision scaling for next-gen
+edge AI systems" (§IV). This module implements it: a greedy search that
+assigns each layer the lowest field width whose accuracy cost stays
+within a budget.
+
+Soundness of mixing: layers exchange only binary spikes, so a layer
+quantized at width b_l with its own folded threshold is independent of
+its neighbours' widths — a mixed network is exactly the per-layer
+composition of the uniform QAT models' layers.
+
+Search: start from all-INT8 (the accuracy ceiling), repeatedly try to
+demote the layer with the largest memory saving 8->4->2; keep a demotion
+if validation accuracy stays within ``epsilon`` of the all-INT8 model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import model as qm
+from .snn import Arch
+
+BITS_LADDER = (8, 4, 2)
+
+
+@dataclasses.dataclass
+class MixedResult:
+    model: qm.QuantModel
+    bits_per_layer: list[int]
+    accuracy: float
+    int8_accuracy: float
+    memory_bits: int
+
+
+def build_mixed(
+    params_by_bits: dict[int, list[np.ndarray]],
+    arch: Arch,
+    bits_per_layer: list[int],
+) -> qm.QuantModel:
+    """Compose a mixed model from per-width QAT'd parameter sets."""
+    uniform = {
+        b: qm.quantize_model(params_by_bits[b], arch, b, "lspine")
+        for b in sorted(set(bits_per_layer))
+    }
+    layers = tuple(
+        uniform[b].layers[i] for i, b in enumerate(bits_per_layer)
+    )
+    return qm.QuantModel(arch=arch, scheme="mixed", bits=0, layers=layers)
+
+
+def greedy_mixed_search(
+    params_by_bits: dict[int, list[np.ndarray]],
+    arch: Arch,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    epsilon: float = 0.02,
+) -> MixedResult:
+    """Greedy layer-wise precision demotion under an accuracy budget."""
+    n_layers = len(params_by_bits[8])
+    bits = [8] * n_layers
+    base_model = build_mixed(params_by_bits, arch, bits)
+    int8_acc = qm.accuracy_int(base_model, x_val, y_val)
+    floor = int8_acc - epsilon
+
+    current_acc = int8_acc
+    improved = True
+    while improved:
+        improved = False
+        # candidate demotions, largest memory saving first
+        candidates = []
+        for i in range(n_layers):
+            ladder = list(BITS_LADDER)
+            pos = ladder.index(bits[i])
+            if pos + 1 < len(ladder):
+                trial = bits.copy()
+                trial[i] = ladder[pos + 1]
+                saving = (
+                    build_mixed(params_by_bits, arch, bits).layers[i].memory_bits()
+                    - build_mixed(params_by_bits, arch, trial).layers[i].memory_bits()
+                )
+                candidates.append((saving, i, ladder[pos + 1]))
+        candidates.sort(reverse=True)
+        for _, i, new_bits in candidates:
+            trial = bits.copy()
+            trial[i] = new_bits
+            model = build_mixed(params_by_bits, arch, trial)
+            acc = qm.accuracy_int(model, x_val, y_val)
+            if acc >= floor:
+                bits = trial
+                current_acc = acc
+                improved = True
+                break  # re-rank savings after each accepted demotion
+
+    final = build_mixed(params_by_bits, arch, bits)
+    return MixedResult(
+        model=final,
+        bits_per_layer=bits,
+        accuracy=current_acc,
+        int8_accuracy=int8_acc,
+        memory_bits=final.memory_bits(),
+    )

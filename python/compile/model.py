@@ -1,0 +1,242 @@
+"""L2 — quantized integer inference graphs (the AOT'd compute).
+
+`QuantModel` holds the integer artifact of one (arch, scheme, bits)
+combination: packed weights, per-layer scales and folded integer
+thresholds. `forward_int` is the inference graph that gets lowered to HLO:
+a `lax.scan` over timesteps whose body encodes the input and pushes spikes
+through one pallas NCE step (`kernels.lif_simd`) per layer — exactly the
+computation the rust cycle simulator accounts for.
+
+`forward_int_ref` is the same graph on the pure-jnp oracle; pytest pins
+kernel == oracle, and the rust integration tests pin PJRT(HLO) == rust
+engine == oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import quantize as qz
+from .kernels import ref as kref
+from .kernels.lif_simd import lif_simd_step
+from .snn import Arch, ConvArch, MlpArch, THETA_FP
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantLayer:
+    """One LIF layer in the integer domain."""
+
+    packed: np.ndarray  # uint32 [K, n_words]
+    bits: int
+    k_in: int
+    n_out: int
+    scale: float
+    theta: int  # folded integer threshold
+
+    @property
+    def n_words(self) -> int:
+        return self.packed.shape[1]
+
+    def memory_bits(self) -> int:
+        return self.packed.size * 32
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantModel:
+    arch: Arch
+    scheme: str
+    bits: int
+    layers: tuple[QuantLayer, ...]
+
+    def memory_bits(self) -> int:
+        return sum(l.memory_bits() for l in self.layers)
+
+
+def quantize_model(
+    params: Sequence[np.ndarray], arch: Arch, bits: int, scheme: str
+) -> QuantModel:
+    """Post-training quantize FP32 params into a `QuantModel` (Fig. 3 flow)."""
+    layers = []
+    for w in params:
+        w = np.asarray(w, dtype=np.float32)
+        qt = qz.quantize(w, bits, scheme)
+        layers.append(
+            QuantLayer(
+                packed=qt.packed(),
+                bits=bits,
+                k_in=w.shape[0],
+                n_out=w.shape[1],
+                scale=qt.scale,
+                theta=qz.fold_threshold(THETA_FP, qt.scale),
+            )
+        )
+    return QuantModel(arch=arch, scheme=scheme, bits=bits, layers=tuple(layers))
+
+
+StepFn = Callable[..., tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def _maxpool2_int(s_img: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pool on binary int32 spikes (== OR)."""
+    b, h, w, c = s_img.shape
+    s = s_img.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(jnp.max(s, axis=4), axis=2)
+
+
+def _patches_int(s_img: jnp.ndarray, ch: int, side: int) -> jnp.ndarray:
+    """im2col on int32 spikes: [B,side,side,ch] -> [B*side*side, 9*ch]."""
+    b = s_img.shape[0]
+    x_nchw = jnp.transpose(s_img, (0, 3, 1, 2))
+    p = lax.conv_general_dilated_patches(x_nchw, (3, 3), (1, 1), "SAME")
+    p = jnp.transpose(p, (0, 2, 3, 1))
+    return p.reshape(b * side * side, ch * 9)
+
+
+def _encode_t(x_u8: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Accumulate-and-fire rate encoder with a traced timestep index."""
+    c1 = (x_u8 * (t + 1)) >> 8
+    c0 = (x_u8 * t) >> 8
+    return (c1 - c0).astype(jnp.int32)
+
+
+def _forward_int(
+    model: QuantModel, x: jnp.ndarray, step_fn: StepFn
+) -> jnp.ndarray:
+    """Integer forward pass -> spike counts [B, classes] (int32)."""
+    arch = model.arch
+    b = x.shape[0]
+    x_u8 = jnp.clip(jnp.round(x * 255.0), 0, 255).astype(jnp.int32)
+    packed = [jnp.asarray(l.packed) for l in model.layers]
+
+    def layer_step(idx: int, spikes: jnp.ndarray, v: jnp.ndarray):
+        l = model.layers[idx]
+        return step_fn(
+            spikes,
+            packed[idx],
+            v,
+            bits=l.bits,
+            n_out=l.n_out,
+            theta=l.theta,
+            leak_shift=arch.leak_shift,
+        )
+
+    if isinstance(arch, MlpArch):
+        v0 = [jnp.zeros((b, n), jnp.int32) for n in arch.sizes[1:]]
+
+        # lax.scan over the timestep index: the encoder stays inside the
+        # lowered graph, so no [T, B, K] spike tensor is materialized.
+        def step_t(vs, t):
+            s = _encode_t(x_u8, t)
+            new_vs = []
+            for i in range(len(model.layers)):
+                s, v2 = layer_step(i, s, vs[i])
+                new_vs.append(v2)
+            return new_vs, s
+
+        _, outs = lax.scan(step_t, v0, jnp.arange(arch.timesteps))
+        return jnp.sum(outs, axis=0)
+
+    side = arch.side
+    c0, c1, c2 = arch.channels
+    v0 = [
+        jnp.zeros((b * side * side, c1), jnp.int32),
+        jnp.zeros((b * (side // 2) * (side // 2), c2), jnp.int32),
+        jnp.zeros((b, arch.classes), jnp.int32),
+    ]
+
+    def step_t(vs, t):
+        s_in = _encode_t(x_u8, t)
+        s_img = s_in.reshape(b, side, side, c0)
+        s1, v1 = layer_step(0, _patches_int(s_img, c0, side), vs[0])
+        s1 = _maxpool2_int(s1.reshape(b, side, side, c1))
+        h2 = side // 2
+        s2, v2 = layer_step(1, _patches_int(s1, c1, h2), vs[1])
+        s2 = _maxpool2_int(s2.reshape(b, h2, h2, c2))
+        s3, v3 = layer_step(2, s2.reshape(b, arch.fc_in), vs[2])
+        return [v1, v2, v3], s3
+
+    _, outs = lax.scan(step_t, v0, jnp.arange(arch.timesteps))
+    return jnp.sum(outs, axis=0)
+
+
+def forward_int(model: QuantModel, x: jnp.ndarray) -> jnp.ndarray:
+    """Inference via the pallas NCE kernel — this is what gets AOT'd."""
+    return _forward_int(model, x, lif_simd_step)
+
+
+def forward_int_ref(model: QuantModel, x: jnp.ndarray) -> jnp.ndarray:
+    """Inference via the pure-jnp oracle (tests / fast sweeps)."""
+    return _forward_int(model, x, kref.lif_step_ref)
+
+
+def accuracy_int(
+    model: QuantModel,
+    x: np.ndarray,
+    y: np.ndarray,
+    batch: int = 256,
+    use_kernel: bool = False,
+) -> float:
+    """Top-1 accuracy of the integer model on numpy data."""
+    fwd_raw = forward_int if use_kernel else forward_int_ref
+    fwd = jax.jit(lambda xb: fwd_raw(model, xb))
+    hits = 0
+    for i in range(0, len(x), batch):
+        xb = x[i : i + batch]
+        n = len(xb)
+        if n < batch:  # static shapes: pad the tail batch
+            xb = np.concatenate([xb, np.zeros((batch - n, x.shape[1]), x.dtype)])
+        counts = np.asarray(fwd(jnp.asarray(xb)))[:n]
+        hits += int((counts.argmax(axis=1) == y[i : i + n]).sum())
+    return hits / len(x)
+
+
+# ----------------------------------------------------------------------
+# Binary artifact formats consumed by the rust side (rust/src/model/io.rs)
+# ----------------------------------------------------------------------
+
+WEIGHTS_MAGIC = b"LSPW"
+DATASET_MAGIC = b"LSPD"
+FORMAT_VERSION = 1
+
+
+def write_weights(path: str, model: QuantModel) -> None:
+    """LSPW format: magic, (version, n_layers, timesteps, leak_shift) u32,
+    then per layer: (bits, k_in, n_out, n_words) u32, scale f32, theta i32,
+    then k_in*n_words packed u32 words, row-major. Little-endian."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(
+            struct.pack(
+                "<IIII",
+                FORMAT_VERSION,
+                len(model.layers),
+                model.arch.timesteps,
+                model.arch.leak_shift,
+            )
+        )
+        for l in model.layers:
+            f.write(struct.pack("<IIII", l.bits, l.k_in, l.n_out, l.n_words))
+            f.write(struct.pack("<fi", l.scale, l.theta))
+            f.write(np.ascontiguousarray(l.packed, dtype="<u4").tobytes())
+
+
+def write_dataset(path: str, x: np.ndarray, y: np.ndarray) -> None:
+    """LSPD format: magic, (version, n, dim, classes) u32, n*dim u8 pixels
+    (the exact u8 values the encoder consumes), n u8 labels."""
+    x_u8 = np.clip(np.round(x * 255.0), 0, 255).astype(np.uint8)
+    with open(path, "wb") as f:
+        f.write(DATASET_MAGIC)
+        f.write(
+            struct.pack(
+                "<IIII", FORMAT_VERSION, len(x), x.shape[1], int(y.max()) + 1
+            )
+        )
+        f.write(x_u8.tobytes())
+        f.write(y.astype(np.uint8).tobytes())

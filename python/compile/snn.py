@@ -1,0 +1,234 @@
+"""Training-time (FP32) spiking network with surrogate gradients.
+
+This is the *author path* of the flow in Fig. 3: BPTT training with a
+triangular surrogate around the firing threshold. The float dynamics are
+written so that quantization maps them 1:1 onto the integer contract:
+
+    float:   V' = V - V * 2^-k + I ;  spike = V' >= theta ; V'' = V' - theta
+    integer: V' = V - (V >> k) + I ;  spike = V' >= theta_int ; ...
+
+i.e. the decay is exactly ``1 - 2^-k`` (a shift in hardware) and reset is
+by subtraction, so post-training quantization only rescales, never changes
+the dynamical form.
+
+No optax in this environment — a compact Adam lives here too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.ref import encode_step_ref
+
+THETA_FP = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpArch:
+    """Fully-connected spiking architecture (sizes include input/output)."""
+
+    sizes: tuple[int, ...] = (256, 128, 64, 10)
+    timesteps: int = 16
+    leak_shift: int = 2
+
+    @property
+    def name(self) -> str:
+        return "mlp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvArch:
+    """Spiking ConvNet: conv3x3 -> pool -> conv3x3 -> pool -> fc.
+
+    Convolutions are expressed as im2col patches @ W so that *every* layer
+    is the same dense LIF step the NCE executes (the paper's 2D-array
+    dataflow maps conv onto the same engine).
+    """
+
+    side: int = 16
+    channels: tuple[int, ...] = (1, 16, 32)
+    classes: int = 10
+    timesteps: int = 16
+    leak_shift: int = 2
+
+    @property
+    def name(self) -> str:
+        return "convnet"
+
+    @property
+    def fc_in(self) -> int:
+        # two 2x2 max-pools: side/4 x side/4 x channels[-1]
+        s = self.side // 4
+        return s * s * self.channels[-1]
+
+
+Arch = MlpArch | ConvArch
+
+
+def init_params(arch: Arch, seed: int = 0) -> list[jnp.ndarray]:
+    """He-style init; weights only (LIF layers have no bias — spikes carry
+    unit current, matching the multiplier-less accumulate datapath)."""
+    key = jax.random.PRNGKey(seed)
+    params: list[jnp.ndarray] = []
+    if isinstance(arch, MlpArch):
+        dims = list(zip(arch.sizes[:-1], arch.sizes[1:]))
+    else:
+        dims = [
+            (9 * arch.channels[0], arch.channels[1]),
+            (9 * arch.channels[1], arch.channels[2]),
+            (arch.fc_in, arch.classes),
+        ]
+    for k_in, k_out in dims:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (k_in, k_out), jnp.float32)
+        params.append(w * jnp.sqrt(2.0 / k_in) * 2.5)
+    return params
+
+
+@jax.custom_jvp
+def spike_fn(v: jnp.ndarray) -> jnp.ndarray:
+    """Heaviside(v - theta) with a triangular surrogate derivative."""
+    return (v >= THETA_FP).astype(jnp.float32)
+
+
+@spike_fn.defjvp
+def _spike_jvp(primals, tangents):
+    (v,), (dv,) = primals, tangents
+    out = (v >= THETA_FP).astype(jnp.float32)
+    grad = jnp.maximum(0.0, 1.0 - jnp.abs(v - THETA_FP) / THETA_FP)
+    return out, grad * dv
+
+
+def _lif_float(i_syn, v, leak_shift):
+    v_new = v - v * (2.0**-leak_shift) + i_syn
+    s = spike_fn(v_new)
+    return s, v_new - s * THETA_FP
+
+
+def _patches(x_img: jnp.ndarray, ch: int, side: int) -> jnp.ndarray:
+    """im2col: [B, side, side, ch] -> [B*side*side, 9*ch] (SAME, 3x3)."""
+    b = x_img.shape[0]
+    x_nchw = jnp.transpose(x_img, (0, 3, 1, 2))
+    p = lax.conv_general_dilated_patches(
+        x_nchw, (3, 3), (1, 1), "SAME"
+    )  # [B, ch*9, side, side]
+    p = jnp.transpose(p, (0, 2, 3, 1))  # [B, side, side, ch*9]
+    return p.reshape(b * side * side, ch * 9)
+
+
+def _maxpool2(s_img: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pool on binary spikes == OR; [B,H,W,C] -> [B,H/2,W/2,C]."""
+    b, h, w, c = s_img.shape
+    s = s_img.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(jnp.max(s, axis=4), axis=2)
+
+
+def encode_all(x: jnp.ndarray, timesteps: int) -> jnp.ndarray:
+    """Deterministic rate code for all timesteps: [T, B, K] float {0,1}."""
+    x_u8 = jnp.clip(jnp.round(x * 255.0), 0, 255).astype(jnp.int32)
+    return jnp.stack(
+        [encode_step_ref(x_u8, t).astype(jnp.float32) for t in range(timesteps)]
+    )
+
+
+def forward_float(
+    params: Sequence[jnp.ndarray], arch: Arch, x: jnp.ndarray
+) -> jnp.ndarray:
+    """FP32 forward: returns spike-count logits [B, classes]."""
+    b = x.shape[0]
+    spikes_t = encode_all(x, arch.timesteps)  # [T, B, K]
+
+    if isinstance(arch, MlpArch):
+        v0 = [jnp.zeros((b, n), jnp.float32) for n in arch.sizes[1:]]
+
+        def step(vs, s_in):
+            s = s_in
+            new_vs = []
+            for w, v in zip(params, vs):
+                s, v2 = _lif_float(s @ w, v, arch.leak_shift)
+                new_vs.append(v2)
+            return new_vs, s
+
+        _, outs = lax.scan(step, v0, spikes_t)
+        return jnp.sum(outs, axis=0)
+
+    side = arch.side
+    c0, c1, c2 = arch.channels
+    v0 = [
+        jnp.zeros((b * side * side, c1), jnp.float32),
+        jnp.zeros((b * (side // 2) * (side // 2), c2), jnp.float32),
+        jnp.zeros((b, arch.classes), jnp.float32),
+    ]
+
+    def step(vs, s_in):
+        s_img = s_in.reshape(b, side, side, c0)
+        s1, v1 = _lif_float(_patches(s_img, c0, side) @ params[0], vs[0], arch.leak_shift)
+        s1 = _maxpool2(s1.reshape(b, side, side, c1))
+        h2 = side // 2
+        s2, v2 = _lif_float(_patches(s1, c1, h2) @ params[1], vs[1], arch.leak_shift)
+        s2 = _maxpool2(s2.reshape(b, h2, h2, c2))
+        s3, v3 = _lif_float(s2.reshape(b, arch.fc_in) @ params[2], vs[2], arch.leak_shift)
+        return [v1, v2, v3], s3
+
+    _, outs = lax.scan(step, v0, spikes_t)
+    return jnp.sum(outs, axis=0)
+
+
+def loss_fn(params, arch: Arch, x, y) -> jnp.ndarray:
+    """Cross-entropy on spike-count logits (counts are already ~[0, T])."""
+    logits = forward_float(params, arch, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ----------------------------------------------------------------------
+# Minimal Adam (optax is not installed in this environment).
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdamState:
+    step: int
+    m: list[jnp.ndarray]
+    v: list[jnp.ndarray]
+
+
+def adam_init(params: Sequence[jnp.ndarray]) -> AdamState:
+    return AdamState(
+        0,
+        [jnp.zeros_like(p) for p in params],
+        [jnp.zeros_like(p) for p in params],
+    )
+
+
+def adam_update(
+    params, grads, state: AdamState, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8
+):
+    t = state.step + 1
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, state.m, state.v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1**t)
+        vhat = v2 / (1 - b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, AdamState(t, new_m, new_v)
+
+
+def accuracy(params, arch: Arch, x: np.ndarray, y: np.ndarray, batch=256) -> float:
+    """Batched FP32 accuracy on numpy data."""
+    fwd = jax.jit(lambda p, xb: forward_float(p, arch, xb))
+    hits = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i : i + batch])
+        logits = np.asarray(fwd(params, xb))
+        hits += int((logits.argmax(axis=1) == y[i : i + batch]).sum())
+    return hits / len(x)

@@ -1,0 +1,118 @@
+"""Build-time surrogate-gradient training (Fig. 3, left column).
+
+Trains the FP32 spiking networks that the quantization flow consumes.
+Runs once per `make artifacts`; results are cached as .npz keyed by the
+architecture so re-running the AOT step is cheap. The loss curve is saved
+into the manifest and transcribed to EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import snn
+from .dataset import Dataset
+from .snn import Arch
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list[np.ndarray]
+    loss_curve: list[float]  # loss every `log_every` steps
+    train_acc: float
+    test_acc: float
+    steps: int
+
+
+def qat_finetune(
+    params: list[np.ndarray],
+    arch: Arch,
+    data: Dataset,
+    bits: int,
+    steps: int = 200,
+    lr: float = 5e-4,
+    batch: int = 128,
+    seed: int = 3,
+) -> list[np.ndarray]:
+    """Brief quantization-aware refinement for the proposed scheme.
+
+    Fake-quantizes weights in the forward pass (straight-through
+    estimator) with *fixed* per-tensor MSE-optimal scales from the PTQ
+    search, and fine-tunes for a few hundred steps. This is what lets the
+    proposed L-SPINE flow keep INT2/INT4 accuracy where pure PTQ
+    collapses (Fig. 4's 'proposed' curve); the STBP/ADMM/Trunc baselines
+    stay pure PTQ.
+    """
+    from .quantize import quantize_lspine
+
+    scales = [quantize_lspine(np.asarray(p), bits).scale for p in params]
+    hi = (1 << (bits - 1)) - 1
+    lo = -(hi + 1)
+
+    def fake_quant(w, s):
+        q = jnp.clip(jnp.round(w / s), lo, hi)
+        return w + jax.lax.stop_gradient(q * s - w)
+
+    def loss(ps, x, y):
+        wq = [fake_quant(w, s) for w, s in zip(ps, scales)]
+        return snn.loss_fn(wq, arch, x, y)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    ps = [jnp.asarray(p) for p in params]
+    opt = snn.adam_init(ps)
+    rng = np.random.default_rng(seed)
+    n = len(data.x_train)
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        _, grads = grad_fn(
+            ps, jnp.asarray(data.x_train[idx]), jnp.asarray(data.y_train[idx])
+        )
+        ps, opt = snn.adam_update(ps, grads, opt, lr=lr)
+    return [np.asarray(p) for p in ps]
+
+
+def train(
+    arch: Arch,
+    data: Dataset,
+    steps: int = 400,
+    batch: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 20,
+    verbose: bool = False,
+) -> TrainResult:
+    """BPTT + triangular surrogate; minimal Adam; deterministic batches."""
+    params = snn.init_params(arch, seed=seed)
+    opt = snn.adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda p, x, y: snn.loss_fn(p, arch, x, y))
+    )
+
+    loss_curve: list[float] = []
+    n = len(data.x_train)
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(data.x_train[idx])
+        yb = jnp.asarray(data.y_train[idx])
+        loss, grads = grad_fn(params, xb, yb)
+        params, opt = snn.adam_update(params, grads, opt, lr=lr)
+        if step % log_every == 0 or step == steps - 1:
+            loss_curve.append(float(loss))
+            if verbose:
+                print(f"  step {step:4d}  loss {float(loss):.4f}")
+
+    train_acc = snn.accuracy(params, arch, data.x_train[:1024], data.y_train[:1024])
+    test_acc = snn.accuracy(params, arch, data.x_test, data.y_test)
+    return TrainResult(
+        params=[np.asarray(p) for p in params],
+        loss_curve=loss_curve,
+        train_acc=train_acc,
+        test_acc=test_acc,
+        steps=steps,
+    )

@@ -1,0 +1,116 @@
+"""pytest: pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes and bit widths; every case must match the oracle
+bit-for-bit (integer dynamics: no tolerance, exact equality).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif_simd import lif_simd_step
+from compile.kernels.packed import pack_weights_np, qmin_qmax
+from compile.kernels.ref import encode_step_ref, lif_step_ref
+
+
+def _case(bits, k, n, b, seed, theta=7, leak_shift=2, v_range=400):
+    rng = np.random.default_rng(seed)
+    lo, hi = qmin_qmax(bits)
+    q = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int32)
+    pw = jnp.asarray(pack_weights_np(q, bits))
+    s = jnp.asarray(rng.integers(0, 2, size=(b, k)).astype(np.int32))
+    v = jnp.asarray(rng.integers(-v_range, v_range, size=(b, n)).astype(np.int32))
+    kw = dict(bits=bits, n_out=n, theta=theta, leak_shift=leak_shift)
+    o_ref, v_ref = lif_step_ref(s, pw, v, **kw)
+    o_k, v_k = lif_simd_step(s, pw, v, **kw)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_ref))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+    return np.asarray(o_ref), np.asarray(v_ref)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize(
+    "k,n,b", [(1, 1, 1), (9, 8, 4), (64, 10, 32), (256, 128, 128), (37, 23, 5)]
+)
+def test_kernel_matches_ref(bits, k, n, b):
+    _case(bits, k, n, b, seed=bits * 1000 + k * 10 + n + b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    b=st.integers(1, 32),
+    theta=st.integers(1, 100),
+    leak_shift=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_property(bits, k, n, b, theta, leak_shift, seed):
+    _case(bits, k, n, b, seed, theta=theta, leak_shift=leak_shift)
+
+
+def test_spikes_are_binary_and_reset_subtracts():
+    theta = 5
+    o, v = _case(4, 32, 16, 8, seed=1, theta=theta)
+    assert set(np.unique(o)) <= {0, 1}
+    # reset-by-subtraction: non-firing neurons are strictly below theta
+    # (firing ones may stay above if I >> theta — they fire again next step)
+    assert (v[o == 0] < theta).all()
+
+
+def test_zero_spikes_only_leak():
+    """No input spikes: V' = V - (V >> k), nothing fires below theta."""
+    bits, k, n, b = 8, 6, 4, 3
+    pw = jnp.asarray(
+        pack_weights_np(np.full((k, n), 7, dtype=np.int32), bits)
+    )
+    s = jnp.zeros((b, k), jnp.int32)
+    v = jnp.asarray(np.array([[8, -8, 3, 0]] * b, dtype=np.int32))
+    o, v2 = lif_step_ref(s, pw, v, bits=bits, n_out=n, theta=100, leak_shift=2)
+    assert (np.asarray(o) == 0).all()
+    # arithmetic shift: 8 - 2 = 6 ; -8 - (-2) = -6 ; 3 - 0 = 3
+    np.testing.assert_array_equal(np.asarray(v2)[0], [6, -6, 3, 0])
+
+
+def test_negative_membrane_arithmetic_shift():
+    """-5 >> 2 == -2 (floor), so leak of -5 is -5 - (-2) = -3."""
+    pw = jnp.asarray(pack_weights_np(np.zeros((1, 1), np.int32), 8))
+    v = jnp.asarray(np.array([[-5]], dtype=np.int32))
+    s = jnp.zeros((1, 1), jnp.int32)
+    _, v2 = lif_step_ref(s, pw, v, bits=8, n_out=1, theta=10, leak_shift=2)
+    assert int(np.asarray(v2)[0, 0]) == -3
+
+
+def test_theta_exact_boundary_fires():
+    """V' == theta must fire (>= comparison, matches the NCE comparator)."""
+    q = np.array([[5]], dtype=np.int32)
+    pw = jnp.asarray(pack_weights_np(q, 8))
+    s = jnp.ones((1, 1), jnp.int32)
+    v = jnp.zeros((1, 1), jnp.int32)
+    o, v2 = lif_step_ref(s, pw, v, bits=8, n_out=1, theta=5, leak_shift=2)
+    assert int(np.asarray(o)[0, 0]) == 1
+    assert int(np.asarray(v2)[0, 0]) == 0
+
+
+class TestEncoder:
+    def test_total_spikes(self):
+        """After T steps, total spikes == (x_u8 * T) >> 8."""
+        x = jnp.asarray(np.arange(256, dtype=np.int32).reshape(1, 256))
+        T = 16
+        total = sum(np.asarray(encode_step_ref(x, t)) for t in range(T))
+        expected = (np.arange(256) * T) >> 8
+        np.testing.assert_array_equal(total[0], expected)
+
+    def test_binary_steps(self):
+        x = jnp.asarray(np.arange(256, dtype=np.int32).reshape(1, 256))
+        for t in range(16):
+            s = np.asarray(encode_step_ref(x, t))
+            assert set(np.unique(s)) <= {0, 1}
+
+    def test_zero_and_max(self):
+        x = jnp.asarray(np.array([[0, 255]], dtype=np.int32))
+        total = sum(np.asarray(encode_step_ref(x, t)) for t in range(16))
+        assert total[0, 0] == 0
+        assert total[0, 1] == (255 * 16) >> 8  # 15 of 16 steps

@@ -1,0 +1,110 @@
+"""Layer-adaptive precision search tests + AOT export regression tests."""
+
+import numpy as np
+import pytest
+
+from compile import mixed as mx
+from compile import model as qm
+from compile.aot import lower_int_graph, to_hlo_text
+from compile.dataset import make_dataset
+from compile.snn import MlpArch, init_params
+from compile.train import train
+
+
+@pytest.fixture(scope="module")
+def trained():
+    data = make_dataset(n_train=1024, n_test=256)
+    arch = MlpArch(sizes=(256, 64, 10), timesteps=8)
+    res = train(arch, data, steps=150, lr=3e-3)
+    params_by_bits = {b: res.params for b in (2, 4, 8)}
+    return data, arch, params_by_bits
+
+
+class TestBuildMixed:
+    def test_layers_take_requested_widths(self, trained):
+        _, arch, pbb = trained
+        m = mx.build_mixed(pbb, arch, [8, 4])
+        assert [l.bits for l in m.layers] == [8, 4]
+        assert m.scheme == "mixed"
+
+    def test_memory_between_uniform_extremes(self, trained):
+        _, arch, pbb = trained
+        m8 = mx.build_mixed(pbb, arch, [8, 8]).memory_bits()
+        m2 = mx.build_mixed(pbb, arch, [2, 2]).memory_bits()
+        mixed = mx.build_mixed(pbb, arch, [8, 2]).memory_bits()
+        assert m2 < mixed < m8
+
+    def test_mixed_inference_runs(self, trained):
+        data, arch, pbb = trained
+        m = mx.build_mixed(pbb, arch, [4, 8])
+        acc = qm.accuracy_int(m, data.x_test[:128], data.y_test[:128], batch=128)
+        assert 0.0 <= acc <= 1.0
+
+    def test_mixed_equals_uniform_when_all_same(self, trained):
+        data, arch, pbb = trained
+        import jax.numpy as jnp
+
+        uni = qm.quantize_model(pbb[4], arch, 4, "lspine")
+        m = mx.build_mixed(pbb, arch, [4, 4])
+        x = jnp.asarray(data.x_test[:16])
+        np.testing.assert_array_equal(
+            np.asarray(qm.forward_int_ref(m, x)),
+            np.asarray(qm.forward_int_ref(uni, x)),
+        )
+
+
+class TestGreedySearch:
+    def test_search_respects_accuracy_floor(self, trained):
+        data, arch, pbb = trained
+        res = mx.greedy_mixed_search(
+            pbb, arch, data.x_test[:256], data.y_test[:256], epsilon=0.03
+        )
+        assert res.accuracy >= res.int8_accuracy - 0.03 - 1e-9
+        assert len(res.bits_per_layer) == 2
+        assert all(b in (2, 4, 8) for b in res.bits_per_layer)
+
+    def test_search_saves_memory_when_budget_allows(self, trained):
+        data, arch, pbb = trained
+        # huge epsilon -> should demote everything to INT2
+        res = mx.greedy_mixed_search(
+            pbb, arch, data.x_test[:128], data.y_test[:128], epsilon=1.0
+        )
+        assert res.bits_per_layer == [2, 2]
+
+    def test_zero_budget_keeps_int8(self, trained):
+        data, arch, pbb = trained
+        res = mx.greedy_mixed_search(
+            pbb, arch, data.x_test[:128], data.y_test[:128], epsilon=-1.0
+        )
+        assert res.bits_per_layer == [8, 8]
+
+
+class TestAotRegression:
+    def test_hlo_text_never_elides_constants(self, trained):
+        """Regression for the print_large_constants bug: the default
+        as_hlo_text() replaces big constant arrays with `{...}`, which
+        silently corrupts the packed weights after re-parse."""
+        _, arch, pbb = trained
+        model = qm.quantize_model(pbb[4], arch, 4, "lspine")
+        hlo = lower_int_graph(model, 1)
+        assert "{...}" not in hlo, "large constants were elided!"
+        # and the weights really are inline: a u32 constant tensor exists
+        assert "u32[" in hlo
+
+    def test_hlo_output_is_tuple(self, trained):
+        _, arch, pbb = trained
+        model = qm.quantize_model(pbb[2], arch, 2, "lspine")
+        hlo = lower_int_graph(model, 1)
+        # lowered with return_tuple=True -> root is a tuple of one s32
+        assert "ROOT" in hlo
+        assert "(s32[1,10]{1,0}) tuple" in hlo
+
+
+def test_to_hlo_text_smoke():
+    import jax
+    import jax.numpy as jnp
+
+    fn = lambda x: (x * 2.0 + 1.0,)
+    hlo = to_hlo_text(jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), np.float32)))
+    assert "HloModule" in hlo
+    assert "f32[4]" in hlo

@@ -1,0 +1,133 @@
+"""Model graph tests: shapes, kernel-vs-oracle on the full graph, formats."""
+
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as qm
+from compile.dataset import make_dataset
+from compile.snn import ConvArch, MlpArch, forward_float, init_params
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset(n_train=256, n_test=128)
+
+
+@pytest.fixture(scope="module")
+def mlp_model(data):
+    arch = MlpArch(sizes=(256, 32, 10), timesteps=8)
+    params = init_params(arch, seed=1)
+    return qm.quantize_model(params, arch, 4, "lspine"), arch, params
+
+
+@pytest.fixture(scope="module")
+def conv_model():
+    arch = ConvArch(timesteps=4)
+    params = init_params(arch, seed=2)
+    return qm.quantize_model(params, arch, 4, "lspine"), arch, params
+
+
+class TestShapes:
+    def test_mlp_counts_shape(self, mlp_model, data):
+        model, arch, _ = mlp_model
+        x = jnp.asarray(data.x_test[:8])
+        counts = qm.forward_int_ref(model, x)
+        assert counts.shape == (8, 10)
+        assert counts.dtype == jnp.int32
+
+    def test_conv_counts_shape(self, conv_model, data):
+        model, arch, _ = conv_model
+        x = jnp.asarray(data.x_test[:4])
+        counts = qm.forward_int_ref(model, x)
+        assert counts.shape == (4, 10)
+
+    def test_counts_bounded_by_timesteps(self, mlp_model, data):
+        model, arch, _ = mlp_model
+        counts = np.asarray(qm.forward_int_ref(model, jnp.asarray(data.x_test[:16])))
+        assert counts.min() >= 0 and counts.max() <= arch.timesteps
+
+
+class TestKernelGraph:
+    def test_mlp_kernel_equals_ref(self, mlp_model, data):
+        model, _, _ = mlp_model
+        x = jnp.asarray(data.x_test[:8])
+        np.testing.assert_array_equal(
+            np.asarray(qm.forward_int(model, x)),
+            np.asarray(qm.forward_int_ref(model, x)),
+        )
+
+    def test_conv_kernel_equals_ref(self, conv_model, data):
+        model, _, _ = conv_model
+        x = jnp.asarray(data.x_test[:4])
+        np.testing.assert_array_equal(
+            np.asarray(qm.forward_int(model, x)),
+            np.asarray(qm.forward_int_ref(model, x)),
+        )
+
+
+class TestFloatGraph:
+    def test_float_forward_shapes(self, mlp_model, data):
+        _, arch, params = mlp_model
+        logits = forward_float([jnp.asarray(p) for p in params], arch, jnp.asarray(data.x_test[:8]))
+        assert logits.shape == (8, 10)
+
+    def test_conv_float_forward(self, conv_model, data):
+        _, arch, params = conv_model
+        logits = forward_float([jnp.asarray(p) for p in params], arch, jnp.asarray(data.x_test[:4]))
+        assert logits.shape == (4, 10)
+
+
+class TestQuantModel:
+    def test_theta_positive(self, mlp_model):
+        model, _, _ = mlp_model
+        assert all(l.theta >= 1 for l in model.layers)
+
+    def test_memory_scaling(self, data):
+        arch = MlpArch(sizes=(256, 32, 10), timesteps=8)
+        params = init_params(arch, seed=1)
+        m2 = qm.quantize_model(params, arch, 2, "lspine").memory_bits()
+        m8 = qm.quantize_model(params, arch, 8, "lspine").memory_bits()
+        assert m8 / m2 == pytest.approx(4.0, rel=0.1)
+
+
+class TestFormats:
+    def test_weights_roundtrip_header(self, tmp_path, mlp_model):
+        model, arch, _ = mlp_model
+        p = tmp_path / "w.bin"
+        qm.write_weights(str(p), model)
+        blob = p.read_bytes()
+        assert blob[:4] == b"LSPW"
+        ver, n_layers, timesteps, leak = struct.unpack_from("<IIII", blob, 4)
+        assert (ver, n_layers, timesteps, leak) == (
+            qm.FORMAT_VERSION,
+            len(model.layers),
+            arch.timesteps,
+            arch.leak_shift,
+        )
+        # first layer header
+        bits, k, n, nw = struct.unpack_from("<IIII", blob, 20)
+        l0 = model.layers[0]
+        assert (bits, k, n, nw) == (l0.bits, l0.k_in, l0.n_out, l0.n_words)
+        scale, theta = struct.unpack_from("<fi", blob, 36)
+        assert scale == pytest.approx(l0.scale)
+        assert theta == l0.theta
+        # payload size: full file accounted for
+        expected = 20 + sum(24 + 4 * l.packed.size for l in model.layers)
+        assert len(blob) == expected
+
+    def test_dataset_format(self, tmp_path, data):
+        p = tmp_path / "d.bin"
+        qm.write_dataset(str(p), data.x_test, data.y_test)
+        blob = p.read_bytes()
+        assert blob[:4] == b"LSPD"
+        ver, n, dim, classes = struct.unpack_from("<IIII", blob, 4)
+        assert (n, dim) == (len(data.x_test), data.x_test.shape[1])
+        assert classes == 10
+        assert len(blob) == 20 + n * dim + n
+        # pixel bytes match the u8 encoding contract
+        x0 = np.frombuffer(blob[20 : 20 + dim], dtype=np.uint8)
+        expected = np.clip(np.round(data.x_test[0] * 255), 0, 255).astype(np.uint8)
+        np.testing.assert_array_equal(x0, expected)

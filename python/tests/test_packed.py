@@ -1,0 +1,107 @@
+"""Packing contract tests + golden vectors pinning python <-> rust."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.packed import (
+    lanes_per_word,
+    pack_weights_np,
+    qmin_qmax,
+    unpack_weights_np,
+    unpack_weights_jnp,
+)
+
+
+@pytest.mark.parametrize("bits,lanes", [(2, 16), (4, 8), (8, 4)])
+def test_lanes(bits, lanes):
+    assert lanes_per_word(bits) == lanes
+
+
+def test_lanes_rejects_bad_width():
+    for bad in (1, 3, 5, 16, 32):
+        with pytest.raises(ValueError):
+            lanes_per_word(bad)
+
+
+@pytest.mark.parametrize("bits,lo,hi", [(2, -2, 1), (4, -8, 7), (8, -128, 127)])
+def test_qrange(bits, lo, hi):
+    assert qmin_qmax(bits) == (lo, hi)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("k,n", [(1, 1), (3, 5), (16, 32), (7, 33)])
+def test_roundtrip(bits, k, n):
+    rng = np.random.default_rng(bits * 100 + k + n)
+    lo, hi = qmin_qmax(bits)
+    q = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int32)
+    words = pack_weights_np(q, bits)
+    assert words.dtype == np.uint32
+    assert words.shape == (k, -(-n // lanes_per_word(bits)))
+    assert (unpack_weights_np(words, bits, n) == q).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_jnp_unpack_matches_np(bits):
+    rng = np.random.default_rng(9)
+    lo, hi = qmin_qmax(bits)
+    q = rng.integers(lo, hi + 1, size=(13, 29)).astype(np.int32)
+    words = pack_weights_np(q, bits)
+    import jax.numpy as jnp
+
+    out = np.asarray(unpack_weights_jnp(jnp.asarray(words), bits, 29))
+    assert (out == q).all()
+
+
+def test_pack_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        pack_weights_np(np.array([[2]], dtype=np.int32), 2)
+    with pytest.raises(ValueError):
+        pack_weights_np(np.array([[-9]], dtype=np.int32), 4)
+
+
+def test_pack_rejects_wrong_ndim():
+    with pytest.raises(ValueError):
+        pack_weights_np(np.zeros(4, dtype=np.int32), 2)
+
+
+def test_padding_fields_are_zero():
+    # n=3 with INT8 -> one word with the 4th field zero.
+    q = np.array([[-1, 2, -3]], dtype=np.int32)
+    w = pack_weights_np(q, 8)
+    assert w.shape == (1, 1)
+    assert (w[0, 0] >> 24) & 0xFF == 0
+    # padded columns unpack to 0
+    full = unpack_weights_np(w, 8, 4)
+    assert full[0, 3] == 0
+
+
+# Golden vectors: these exact words are also asserted by
+# rust/src/nce/simd.rs::tests::golden_vectors — keep them in sync.
+GOLDEN = [
+    # (bits, row of q values, expected packed u32 words)
+    (2, [-2, -1, 0, 1] * 4, [0x4E4E4E4E]),
+    (4, [-8, -1, 0, 7, 3, -4, 1, 2], [0x21C370F8]),
+    (8, [-128, -1, 0, 127], [0x7F00FF80]),
+    (8, [1, 2, 3, 4, 5], [0x04030201, 0x00000005]),
+]
+
+
+@pytest.mark.parametrize("bits,row,words", GOLDEN)
+def test_golden_vectors(bits, row, words):
+    got = pack_weights_np(np.array([row], dtype=np.int32), bits)
+    assert [int(w) for w in got[0]] == words
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 24),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_property(bits, k, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = qmin_qmax(bits)
+    q = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int32)
+    assert (unpack_weights_np(pack_weights_np(q, bits), bits, n) == q).all()

@@ -1,0 +1,105 @@
+"""Quantization scheme tests: range safety, optimality orderings, folding."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as qz
+from compile.kernels.packed import qmin_qmax
+
+
+def _w(seed=0, shape=(64, 32), scale=0.1):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(0, scale, size=shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("scheme", qz.SCHEMES)
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_range_and_dtype(scheme, bits):
+    qt = qz.quantize(_w(), bits, scheme)
+    lo, hi = qmin_qmax(bits)
+    assert qt.q.dtype == np.int32
+    assert qt.q.min() >= lo and qt.q.max() <= hi
+    assert qt.scale > 0
+    assert qt.bits == bits
+
+
+def test_unknown_scheme_raises():
+    with pytest.raises(ValueError):
+        qz.quantize(_w(), 8, "nope")
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_lspine_mse_not_worse_than_stbp(bits):
+    """The MSE-clipped search can only improve on min-max (same family)."""
+    w = _w(seed=4)
+    e_ls = np.mean((w - qz.quantize(w, bits, "lspine").dequant()) ** 2)
+    e_st = np.mean((w - qz.quantize(w, bits, "stbp").dequant()) ** 2)
+    assert e_ls <= e_st + 1e-12
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_admm_improves_on_init(bits):
+    w = _w(seed=5)
+    e_admm = np.mean((w - qz.quantize(w, bits, "admm").dequant()) ** 2)
+    e_st = np.mean((w - qz.quantize(w, bits, "stbp").dequant()) ** 2)
+    assert e_admm <= e_st + 1e-12
+
+
+def test_trunc_power_of_two_scale():
+    qt = qz.quantize(_w(seed=6), 4, "trunc")
+    log = np.log2(qt.scale)
+    assert abs(log - round(log)) < 1e-9
+
+
+def test_trunc_truncates_toward_zero():
+    w = np.array([[0.99, -0.99]], dtype=np.float32)
+    qt = qz.quantize(w, 8, "trunc")
+    # |q*scale| must not exceed |w| (truncation never rounds away from 0)
+    assert (np.abs(qt.dequant()) <= np.abs(w) + 1e-7).all()
+
+
+def test_zero_tensor_all_schemes():
+    w = np.zeros((4, 4), dtype=np.float32)
+    for scheme in qz.SCHEMES:
+        qt = qz.quantize(w, 2, scheme)
+        assert (qt.q == 0).all()
+
+
+def test_int8_near_lossless():
+    w = _w(seed=7)
+    for scheme in qz.SCHEMES:
+        rel = np.abs(w - qz.quantize(w, 8, scheme).dequant()).max() / np.abs(w).max()
+        assert rel < 0.05, scheme
+
+
+def test_memory_bits_ratio():
+    """Packed storage shrinks 4x from INT8 to INT2 (same tensor)."""
+    w = _w(shape=(128, 64))
+    m8 = qz.quantize(w, 8, "lspine").memory_bits()
+    m2 = qz.quantize(w, 2, "lspine").memory_bits()
+    assert m8 == 4 * m2
+
+
+def test_fold_threshold():
+    assert qz.fold_threshold(1.0, 0.25) == 4
+    assert qz.fold_threshold(1.0, 0.3) == 3
+    assert qz.fold_threshold(1.0, 100.0) == 1  # floor at 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 10.0),
+)
+def test_quantize_property(bits, seed, scale):
+    w = _w(seed=seed, shape=(16, 8), scale=scale)
+    lo, hi = qmin_qmax(bits)
+    for scheme in qz.SCHEMES:
+        qt = qz.quantize(w, bits, scheme)
+        assert qt.q.min() >= lo and qt.q.max() <= hi
+        # dequant error bounded by ~scale (per-element, after clipping the
+        # clip region); sanity: MSE is finite and below the raw power.
+        err = np.mean((w - qt.dequant()) ** 2)
+        assert np.isfinite(err)

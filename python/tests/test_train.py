@@ -1,0 +1,64 @@
+"""Training smoke tests: loss decreases, QAT improves low-bit accuracy."""
+
+import numpy as np
+import pytest
+
+from compile import model as qm
+from compile.dataset import make_dataset
+from compile.snn import MlpArch
+from compile.train import qat_finetune, train
+
+
+@pytest.fixture(scope="module")
+def small():
+    data = make_dataset(n_train=1024, n_test=256)
+    arch = MlpArch(sizes=(256, 64, 10), timesteps=8)
+    res = train(arch, data, steps=120, lr=3e-3)
+    return data, arch, res
+
+
+def test_loss_decreases(small):
+    _, _, res = small
+    assert res.loss_curve[-1] < res.loss_curve[0] * 0.5
+
+
+def test_learns_above_chance(small):
+    _, _, res = small
+    assert res.test_acc > 0.4  # 10 classes, chance = 0.1
+
+
+def test_train_acc_at_least_test(small):
+    _, _, res = small
+    assert res.train_acc >= res.test_acc - 0.05
+
+
+def test_deterministic(small):
+    data, arch, res = small
+    res2 = train(arch, data, steps=120, lr=3e-3)
+    for a, b in zip(res.params, res2.params):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_qat_improves_int2(small):
+    data, arch, res = small
+    base = qm.accuracy_int(
+        qm.quantize_model(res.params, arch, 2, "lspine"), data.x_test, data.y_test
+    )
+    tuned_params = qat_finetune(res.params, arch, data, 2, steps=80)
+    tuned = qm.accuracy_int(
+        qm.quantize_model(tuned_params, arch, 2, "lspine"), data.x_test, data.y_test
+    )
+    assert tuned >= base
+
+
+def test_dataset_deterministic():
+    a = make_dataset(n_train=64, n_test=32)
+    b = make_dataset(n_train=64, n_test=32)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    np.testing.assert_array_equal(a.y_test, b.y_test)
+
+
+def test_dataset_range():
+    d = make_dataset(n_train=64, n_test=32)
+    assert d.x_train.min() >= 0.0 and d.x_train.max() <= 1.0
+    assert set(np.unique(d.y_train)) <= set(range(10))

@@ -1,0 +1,216 @@
+//! Ablation benches for the design choices DESIGN.md calls out, plus the
+//! paper's future-work feature (layer-adaptive precision).
+//!
+//!     cargo bench --bench ablation
+//!
+//! A1 layer-adaptive precision vs uniform (accuracy / memory / latency)
+//! A2 timestep sweep (accuracy vs T — latency is linear in T)
+//! A3 encoder ablation (deterministic rate vs Poisson vs TTFS)
+//! A4 array geometry sweep (PE count vs latency/utilization)
+//! A5 batching policy (max_wait vs throughput and p50, native backend)
+
+use std::time::Duration;
+
+use lspine::array::grid::ArrayConfig;
+use lspine::array::sim::{simulate_inference, SimOverheads};
+use lspine::coordinator::batcher::BatcherConfig;
+use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
+use lspine::encode::{PoissonEncoder, RateEncoder, TtfsEncoder};
+use lspine::model::SnnEngine;
+use lspine::runtime::ArtifactStore;
+use lspine::util::bench::Table;
+
+fn main() {
+    let store = ArtifactStore::open("artifacts").expect("run `make artifacts`");
+    let data = store.load_test_set().expect("test set");
+    let n = 256.min(data.n);
+
+    // ---------- A1: layer-adaptive precision ----------
+    println!("A1 — layer-adaptive precision (paper §IV future work)\n");
+    let mut t = Table::new(&[
+        "Model",
+        "Config",
+        "Accuracy (%)",
+        "Memory (KiB)",
+        "Sim latency (us)",
+    ]);
+    let cfg = ArrayConfig::paper();
+    let ov = SimOverheads::default();
+    for model in ["mlp", "convnet"] {
+        let Ok(entry) = store.manifest().model(model) else { continue };
+        let mut row = |label: String, net: lspine::model::QuantNetwork| {
+            let mut engine = SnnEngine::new(net.clone());
+            let mut hits = 0;
+            let mut lat = 0.0;
+            for i in 0..n {
+                hits += (engine.predict(data.sample(i)) == data.labels[i] as usize)
+                    as usize;
+                let r =
+                    simulate_inference(&net, &cfg, &ov, engine.last_layer_stats())
+                        .unwrap();
+                lat += r.latency_ms * 1e3;
+            }
+            t.row(&[
+                model.to_string(),
+                label,
+                format!("{:.2}", hits as f64 * 100.0 / n as f64),
+                format!("{:.2}", net.memory_bits() as f64 / 8.0 / 1024.0),
+                format!("{:.1}", lat / n as f64),
+            ]);
+        };
+        for bits in [8u32, 4, 2] {
+            row(
+                format!("uniform INT{bits}"),
+                store.load_network(model, "lspine", bits).unwrap(),
+            );
+        }
+        if let Ok(net) = store.load_mixed_network(model) {
+            let label = format!(
+                "mixed {:?}",
+                entry.mixed.as_ref().unwrap().bits_per_layer
+            );
+            row(label, net);
+        }
+    }
+    t.print();
+
+    // ---------- A2: timestep sweep ----------
+    println!("\nA2 — accuracy vs timesteps (mlp INT4; latency linear in T)\n");
+    let net = store.load_network("mlp", "lspine", 4).unwrap();
+    let mut engine = SnnEngine::new(net);
+    let mut t2 = Table::new(&["T", "Accuracy (%)"]);
+    for steps in [2u32, 4, 6, 8, 12, 16] {
+        let mut hits = 0;
+        for i in 0..n {
+            let counts = engine.infer_steps(data.sample(i), steps).to_vec();
+            let pred = lspine::model::engine::argmax(&counts);
+            hits += (pred == data.labels[i] as usize) as usize;
+        }
+        t2.row(&[steps.to_string(), format!("{:.2}", hits as f64 * 100.0 / n as f64)]);
+    }
+    t2.print();
+
+    // ---------- A3: encoder ablation ----------
+    println!("\nA3 — encoder ablation (mlp INT4, T=16)\n");
+    let net = store.load_network("mlp", "lspine", 4).unwrap();
+    let mut engine = SnnEngine::new(net);
+    let mut t3 = Table::new(&["Encoder", "Accuracy (%)", "Input spikes/sample"]);
+    let mut run = |name: &str, enc: &mut dyn lspine::encode::SpikeEncoder| {
+        let mut hits = 0;
+        let mut spikes = 0u64;
+        for i in 0..n {
+            let counts = engine.infer_with_encoder(data.sample(i), 16, enc).to_vec();
+            let pred = lspine::model::engine::argmax(&counts);
+            hits += (pred == data.labels[i] as usize) as usize;
+            spikes += engine.last_layer_stats()[0].active_rows;
+        }
+        t3.row(&[
+            name.to_string(),
+            format!("{:.2}", hits as f64 * 100.0 / n as f64),
+            format!("{:.0}", spikes as f64 / n as f64),
+        ]);
+    };
+    run("deterministic rate (deployed)", &mut RateEncoder::new());
+    run("Poisson", &mut PoissonEncoder::new(42));
+    run("TTFS (1 spike/pixel)", &mut TtfsEncoder::new(16));
+    t3.print();
+
+    // ---------- A4: array geometry ----------
+    println!("\nA4 — array geometry sweep (mlp INT2 workload)\n");
+    let net = store.load_network("mlp", "lspine", 2).unwrap();
+    let mut engine = SnnEngine::new(net.clone());
+    engine.infer(data.sample(0));
+    let stats = engine.last_layer_stats().to_vec();
+    let mut t4 = Table::new(&["Grid", "PEs", "Latency (us)", "Utilization (%)"]);
+    for (r, c) in [(2usize, 2usize), (4, 4), (8, 4), (12, 8), (16, 16)] {
+        let g = ArrayConfig { rows: r, cols: c, ..ArrayConfig::paper() };
+        let rep = simulate_inference(&net, &g, &ov, &stats).unwrap();
+        t4.row(&[
+            format!("{r}x{c}"),
+            (r * c).to_string(),
+            format!("{:.2}", rep.latency_ms * 1e3),
+            format!("{:.1}", rep.utilization * 100.0),
+        ]);
+    }
+    t4.print();
+    println!("(diminishing returns past the point where per-step overheads dominate — why the paper stops at ~100 PEs)");
+
+    // ---------- A5: batching policy ----------
+    println!("\nA5 — batching policy (native backend, 256 requests, 16 clients)\n");
+    let mut t5 = Table::new(&["max_wait", "throughput (req/s)", "p50 (us)", "mean batch"]);
+    for wait_ms in [0u64, 1, 2, 8] {
+        let engine = ServingEngine::start(ServerConfig {
+            model: "mlp".into(),
+            backend: Backend::Native,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let total = 256usize;
+        let mut inflight = Vec::new();
+        for i in 0..total {
+            inflight.push(engine.submit(data.sample(i % data.n), ReqPrecision::Int4).unwrap());
+            if inflight.len() >= 16 {
+                inflight.remove(0).recv().unwrap();
+            }
+        }
+        for rx in inflight {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = engine.metrics();
+        t5.row(&[
+            format!("{wait_ms} ms"),
+            format!("{:.0}", total as f64 / dt),
+            format!("{}", m.latency.quantile_us(0.5)),
+            format!("{:.1}", m.mean_batch()),
+        ]);
+        engine.shutdown().unwrap();
+    }
+    t5.print();
+    println!("(idle-dispatch keeps p50 low even at large max_wait — §Perf P1)");
+
+    // ---------- A6: weight-memory fault injection ----------
+    // Edge deployments care about scratchpad soft errors: flip random
+    // bits in the packed weight words at a given BER and measure the
+    // accuracy cliff per precision. Narrow fields degrade more gently:
+    // one flipped bit corrupts one INT2 field by at most 2 quanta but an
+    // INT8 field by up to 128.
+    println!("\nA6 — packed-weight fault injection (mlp, 128 samples)\n");
+    let mut t6 = Table::new(&["BER", "INT2 acc (%)", "INT4 acc (%)", "INT8 acc (%)"]);
+    let n6 = 128.min(data.n);
+    for ber in [0.0f64, 1e-5, 1e-4, 1e-3] {
+        let mut cells = vec![format!("{ber:.0e}")];
+        for bits in [2u32, 4, 8] {
+            let mut net = store.load_network("mlp", "lspine", bits).unwrap();
+            let mut rng = lspine::util::rng::Rng::new(99);
+            for layer in &mut net.layers {
+                for w in &mut layer.packed {
+                    for b in 0..32 {
+                        if rng.f64() < ber {
+                            *w ^= 1 << b;
+                        }
+                    }
+                }
+                // clamp corrupted fields back into range by re-packing?
+                // no — hardware faults do not respect ranges; feed as-is.
+            }
+            // bypass validate(): corrupted fields are still valid 2's-
+            // complement fields, only their values changed
+            let mut engine = SnnEngine::new(net);
+            let mut hits = 0;
+            for i in 0..n6 {
+                hits += (engine.predict(data.sample(i)) == data.labels[i] as usize)
+                    as usize;
+            }
+            cells.push(format!("{:.2}", hits as f64 * 100.0 / n6 as f64));
+        }
+        t6.row(&cells);
+    }
+    t6.print();
+    println!("(packed low precision is also the more fault-tolerant representation)");
+}

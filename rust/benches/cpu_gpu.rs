@@ -1,0 +1,39 @@
+//! Bench E6 — regenerate the §III-D CPU/GPU vs L-SPINE comparison, plus
+//! a layer-wise VGG-16 sweep through the analytical array model.
+//!
+//!     cargo bench --bench cpu_gpu
+
+use lspine::array::grid::ArrayConfig;
+use lspine::perf::platforms::accel_latency_s;
+use lspine::perf::workloads::{conv3x3_macs, Workload, VGG16_LAYERS};
+use lspine::reports::cpu_gpu_report;
+use lspine::util::bench::Table;
+
+fn main() {
+    println!("{}", cpu_gpu_report());
+
+    // layer-wise: where VGG-16's time goes on the array (INT2 vs INT8)
+    let cfg = ArrayConfig::paper();
+    let mut t = Table::new(&[
+        "VGG-16 layer",
+        "dense MMACs",
+        "INT2 (us)",
+        "INT8 (us)",
+    ]);
+    for (i, &(cin, cout, spatial)) in VGG16_LAYERS.iter().enumerate() {
+        let macs = conv3x3_macs(cin, cout, spatial);
+        let w = Workload {
+            name: "layer",
+            dense_macs: macs,
+            timesteps: 16,
+            spike_density: 0.27,
+        };
+        t.row(&[
+            format!("conv{}: {}x{}x{}", i + 1, cin, cout, spatial),
+            format!("{:.1}", macs as f64 / 1e6),
+            format!("{:.1}", accel_latency_s(&w, &cfg, 2) * 1e6),
+            format!("{:.1}", accel_latency_s(&w, &cfg, 8) * 1e6),
+        ]);
+    }
+    t.print();
+}

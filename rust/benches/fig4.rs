@@ -1,0 +1,56 @@
+//! Bench E3 — regenerate Fig. 4 (accuracy vs memory across schemes),
+//! re-evaluating each configuration live on the rust engine and printing
+//! the manifest (python) numbers next to it.
+//!
+//!     cargo bench --bench fig4
+
+use lspine::model::SnnEngine;
+use lspine::reports::fig4_report;
+use lspine::runtime::ArtifactStore;
+use lspine::util::bench::Table;
+
+fn main() {
+    let store = ArtifactStore::open("artifacts").expect("run `make artifacts`");
+    let data = store.load_test_set().expect("test set");
+
+    for model in ["mlp", "convnet"] {
+        if store.manifest().model(model).is_err() {
+            continue;
+        }
+        println!(
+            "{}",
+            fig4_report(store.manifest(), model).expect("manifest complete")
+        );
+
+        // live re-evaluation (subset) — rust engine vs python oracle
+        let n = 256.min(data.n);
+        let mut t = Table::new(&["Scheme", "Bits", "rust acc (subset %)", "python acc (full %)"]);
+        for scheme in ["lspine", "stbp", "admm", "trunc"] {
+            for bits in [2u32, 4, 8] {
+                let net = store.load_network(model, scheme, bits).unwrap();
+                let mut engine = SnnEngine::new(net);
+                let mut hits = 0;
+                for i in 0..n {
+                    hits += (engine.predict(data.sample(i))
+                        == data.labels[i] as usize) as usize;
+                }
+                let py = store
+                    .manifest()
+                    .model(model)
+                    .unwrap()
+                    .quant_entry(scheme, bits)
+                    .unwrap()
+                    .accuracy;
+                t.row(&[
+                    scheme.into(),
+                    format!("INT{bits}"),
+                    format!("{:.2}", hits as f64 * 100.0 / n as f64),
+                    format!("{:.2}", py * 100.0),
+                ]);
+            }
+        }
+        println!("live cross-check ({model}, {n} samples):");
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench E4 — regenerate Fig. 5 (precision scaling vs accuracy) and
+//! measure the per-precision inference cost on both backends.
+//!
+//!     cargo bench --bench fig5
+
+use lspine::model::SnnEngine;
+use lspine::reports::fig5_report;
+use lspine::runtime::executor::{ExecutorPool, ModelKey};
+use lspine::runtime::ArtifactStore;
+use lspine::util::bench::{bench, report};
+
+fn main() {
+    let store = ArtifactStore::open("artifacts").expect("run `make artifacts`");
+    println!("{}", fig5_report(store.manifest()).expect("manifest"));
+
+    let data = store.load_test_set().expect("test set");
+    let sample = data.sample(0);
+
+    println!("native engine, one inference (mlp):");
+    for bits in [2u32, 4, 8] {
+        let net = store.load_network("mlp", "lspine", bits).unwrap();
+        let mut engine = SnnEngine::new(net);
+        let m = bench(&format!("native INT{bits}"), || {
+            engine.infer(sample);
+        });
+        report(&m);
+    }
+
+    println!("PJRT executor, one batch-32 inference (mlp):");
+    let mut pool = ExecutorPool::new(
+        ArtifactStore::open("artifacts").unwrap(),
+        "mlp",
+    )
+    .unwrap();
+    let rows: Vec<&[u8]> = (0..32).map(|i| data.sample(i)).collect();
+    for bits in [2u32, 4, 8] {
+        let exe = pool.get(ModelKey { bits, batch: 32 }).unwrap();
+        let m = bench(&format!("pjrt INT{bits} b32"), || {
+            exe.run_u8(&rows).unwrap();
+        });
+        report(&m);
+    }
+}

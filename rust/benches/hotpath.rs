@@ -1,0 +1,105 @@
+//! Hot-path microbenchmarks — the §Perf working set.
+//!
+//!     cargo bench --bench hotpath
+//!
+//! Measures the layers the EXPERIMENTS.md §Perf log optimizes:
+//! - packed-row accumulation (the L3 simulator's inner loop)
+//! - full LIF layer step at each precision
+//! - end-to-end native inference
+//! - serving-engine round trip (batcher + channel overhead)
+//! - cycle-simulator throughput
+
+use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
+use lspine::model::SnnEngine;
+use lspine::nce::lif::{lif_step_row, LifParams};
+use lspine::nce::simd::{pack_row, Precision};
+use lspine::runtime::ArtifactStore;
+use lspine::util::bench::{bench, report};
+use lspine::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // --- packed-row LIF step at each precision, serving-scale layer ---
+    println!("LIF layer step (k=256 inputs, n=128 neurons):");
+    for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+        let (lo, hi) = p.qrange();
+        let k = 256usize;
+        let n = 128usize;
+        let n_words = n.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for _ in 0..k {
+            let row: Vec<i32> =
+                (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
+            packed.extend(pack_row(&row, p));
+        }
+        let mut spikes = vec![0u8; k];
+        rng.fill_spikes(0.3, &mut spikes);
+        let mut v = vec![0i32; n];
+        let mut out = vec![0u8; n];
+        let mut acc = vec![0i32; n];
+        let params = LifParams::new(40, 2);
+        let m = bench(&format!("lif_step_row {}", p.name()), || {
+            lif_step_row(&spikes, &packed, n_words, p, &mut v, &mut out, params, &mut acc);
+        });
+        // derive synops/s for the §Perf log
+        let synops = (spikes.iter().filter(|&&s| s != 0).count() * n) as f64;
+        println!(
+            "    -> {:.1} M synops/s",
+            synops / m.per_iter_ns() * 1e3
+        );
+        report(&m);
+    }
+
+    let Ok(store) = ArtifactStore::open("artifacts") else {
+        println!("(artifacts missing — run `make artifacts` for the e2e benches)");
+        return;
+    };
+    let data = store.load_test_set().expect("test set");
+    let sample = data.sample(0).to_vec();
+
+    // --- end-to-end native inference ---
+    println!("native end-to-end inference:");
+    for (model, bits) in [("mlp", 2u32), ("mlp", 4), ("mlp", 8), ("convnet", 4)] {
+        let net = store.load_network(model, "lspine", bits).unwrap();
+        let mut engine = SnnEngine::new(net);
+        let m = bench(&format!("{model} INT{bits} infer"), || {
+            engine.infer(&sample);
+        });
+        report(&m);
+    }
+
+    // --- cycle simulator throughput ---
+    println!("cycle simulator:");
+    {
+        use lspine::array::grid::ArrayConfig;
+        use lspine::array::sim::{simulate_inference, SimOverheads};
+        let net = store.load_network("mlp", "lspine", 4).unwrap();
+        let mut engine = SnnEngine::new(net.clone());
+        engine.infer(&sample);
+        let stats = engine.last_layer_stats().to_vec();
+        let cfg = ArrayConfig::paper();
+        let ov = SimOverheads::default();
+        let m = bench("simulate_inference (mlp)", || {
+            simulate_inference(&net, &cfg, &ov, &stats).unwrap();
+        });
+        report(&m);
+    }
+
+    // --- serving round trip (native backend isolates coordinator cost) ---
+    println!("serving engine round trip (native backend):");
+    {
+        let engine = ServingEngine::start(ServerConfig {
+            model: "mlp".into(),
+            backend: Backend::Native,
+            ..Default::default()
+        })
+        .unwrap();
+        let m = bench("submit+recv INT4", || {
+            engine.infer(&sample, ReqPrecision::Int4).unwrap();
+        });
+        report(&m);
+        println!("  {}", engine.metrics().summary());
+        engine.shutdown().unwrap();
+    }
+}

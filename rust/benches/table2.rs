@@ -1,0 +1,21 @@
+//! Bench E2 — regenerate Table II: cycle-simulate the array on real
+//! artifact networks and price the system.
+//!
+//!     cargo bench --bench table2
+
+use lspine::reports::table2::{measure_proposed, table2_report};
+use lspine::runtime::ArtifactStore;
+
+fn main() {
+    let store = ArtifactStore::open("artifacts")
+        .expect("run `make artifacts` first");
+    let data = store.load_test_set().expect("test set");
+
+    for (model, bits) in [("mlp", 2u32), ("mlp", 8), ("convnet", 2)] {
+        let Ok(net) = store.load_network(model, "lspine", bits) else {
+            continue;
+        };
+        let m = measure_proposed(&net, &data, 32).expect("simulate");
+        println!("{}", table2_report(&m, &format!("{model} INT{bits}")));
+    }
+}

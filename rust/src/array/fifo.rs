@@ -1,0 +1,177 @@
+//! Ring FIFO — the spike/data transport of Fig. 1.
+//!
+//! Fixed-capacity circular buffer with occupancy statistics; the cycle
+//! simulator uses the high-water mark to size the hardware FIFO and the
+//! coordinator reuses it as its bounded request queue.
+
+/// Bounded ring buffer with push/pop accounting.
+#[derive(Debug, Clone)]
+pub struct RingFifo<T> {
+    buf: Vec<Option<T>>,
+    head: usize,
+    tail: usize,
+    len: usize,
+    pushes: u64,
+    rejects: u64,
+    high_water: usize,
+}
+
+impl<T> RingFifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Self {
+            buf: (0..capacity).map(|_| None).collect(),
+            head: 0,
+            tail: 0,
+            len: 0,
+            pushes: 0,
+            rejects: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    /// Push; returns the item back on overflow (backpressure signal).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            self.rejects += 1;
+            return Err(item);
+        }
+        self.buf[self.tail] = Some(item);
+        self.tail = (self.tail + 1) % self.buf.len();
+        self.len += 1;
+        self.pushes += 1;
+        self.high_water = self.high_water.max(self.len);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if self.is_empty() {
+            return None;
+        }
+        let item = self.buf[self.head].take();
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        item
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        if self.is_empty() {
+            None
+        } else {
+            self.buf[self.head].as_ref()
+        }
+    }
+
+    /// Total successful pushes.
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    /// Pushes rejected by backpressure.
+    pub fn rejects(&self) -> u64 {
+        self.rejects
+    }
+
+    /// Maximum occupancy observed.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Drain up to `n` items into `out`; returns the count drained.
+    pub fn drain_into(&mut self, n: usize, out: &mut Vec<T>) -> usize {
+        let take = n.min(self.len);
+        for _ in 0..take {
+            out.push(self.pop().unwrap());
+        }
+        take
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = RingFifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        assert!(f.is_full());
+        assert_eq!(f.push(99), Err(99));
+        assert_eq!(f.rejects(), 1);
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert!(f.is_empty());
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn wraparound() {
+        let mut f = RingFifo::new(3);
+        for round in 0..10 {
+            f.push(round * 2).unwrap();
+            f.push(round * 2 + 1).unwrap();
+            assert_eq!(f.pop(), Some(round * 2));
+            assert_eq!(f.pop(), Some(round * 2 + 1));
+        }
+        assert_eq!(f.pushes(), 20);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = RingFifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        for _ in 0..3 {
+            f.pop();
+        }
+        f.push(9).unwrap();
+        assert_eq!(f.high_water(), 5);
+    }
+
+    #[test]
+    fn drain() {
+        let mut f = RingFifo::new(8);
+        for i in 0..6 {
+            f.push(i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(f.drain_into(4, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.drain_into(10, &mut out), 2);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut f = RingFifo::new(2);
+        f.push("a").unwrap();
+        assert_eq!(f.peek(), Some(&"a"));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected() {
+        RingFifo::<u8>::new(0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Array geometry and layer-to-PE mapping.
+//!
+//! The paper's dataflow: neurons of the active layer are partitioned
+//! across the rows x cols PE grid (output-stationary — each PE keeps its
+//! slice of membrane potentials local across all timesteps = temporal
+//! reuse), while input spikes broadcast along rows and each PE streams
+//! only its own packed weight columns (spatial reuse).
+
+use crate::model::network::QuantNetwork;
+
+/// Grid geometry + clock of the accelerator instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrayConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Core clock in MHz (latency = cycles / clock).
+    pub clock_mhz: f64,
+    /// Per-PE weight scratchpad capacity (bits).
+    pub weight_spad_bits: u64,
+    /// Per-PE membrane scratchpad capacity (bits).
+    pub membrane_spad_bits: u64,
+}
+
+impl ArrayConfig {
+    /// The configuration whose system-level cost matches the paper's
+    /// Table II "Proposed" row (96 NCEs, see fpga::system).
+    pub fn paper() -> Self {
+        Self {
+            rows: 12,
+            cols: 8,
+            clock_mhz: 200.0,
+            weight_spad_bits: 8 * 1024 * 8, // 8 KiB per PE
+            membrane_spad_bits: 2 * 1024 * 8,
+        }
+    }
+
+    pub fn n_pe(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// How many output neurons of a layer tile onto one PE
+    /// (ceil split of n_out*positions over the grid).
+    pub fn tile_neurons(&self, total_neurons: u64) -> u64 {
+        total_neurons.div_ceil(self.n_pe() as u64)
+    }
+
+    /// Validate that every layer's working set fits the scratchpads.
+    pub fn check_fit(&self, net: &QuantNetwork) -> crate::Result<()> {
+        for (i, l) in net.layers.iter().enumerate() {
+            let tile_out = (l.n_out as u64).div_ceil(self.n_pe() as u64).max(1);
+            // weights for the tile: k_in rows x tile words
+            let tile_words =
+                tile_out.div_ceil(l.precision.fields_per_word() as u64).max(1);
+            let w_bits = l.k_in as u64 * tile_words * 32;
+            if w_bits > self.weight_spad_bits {
+                anyhow::bail!(
+                    "layer {i}: weight tile ({w_bits} bits) exceeds scratchpad"
+                );
+            }
+            let v_bits = tile_out * 32;
+            if v_bits > self.membrane_spad_bits {
+                anyhow::bail!("layer {i}: membrane tile exceeds scratchpad");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::{ArchDesc, QuantNetLayer};
+    use crate::nce::simd::{pack_row, Precision};
+
+    #[test]
+    fn paper_geometry() {
+        let c = ArrayConfig::paper();
+        assert_eq!(c.n_pe(), 96);
+        assert_eq!(c.tile_neurons(96), 1);
+        assert_eq!(c.tile_neurons(97), 2);
+        assert_eq!(c.tile_neurons(10), 1);
+    }
+
+    #[test]
+    fn fit_check() {
+        let c = ArrayConfig::paper();
+        let p = Precision::Int4;
+        let n_words = 128usize.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for _ in 0..256 {
+            packed.extend(pack_row(&vec![1i32; 128], p));
+        }
+        let net = QuantNetwork {
+            arch: ArchDesc::Mlp { sizes: vec![256, 128], timesteps: 16, leak_shift: 2 },
+            layers: vec![QuantNetLayer {
+                precision: p,
+                k_in: 256,
+                n_out: 128,
+                n_words,
+                scale: 1.0,
+                theta: 1,
+                packed,
+            }],
+        };
+        assert!(c.check_fit(&net).is_ok());
+
+        // absurdly small scratchpad must fail
+        let tiny = ArrayConfig { weight_spad_bits: 64, ..c };
+        assert!(tiny.check_fit(&net).is_err());
+    }
+}

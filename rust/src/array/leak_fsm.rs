@@ -1,0 +1,117 @@
+//! Leak FSM — the dedicated membrane-maintenance state machine of Fig. 1.
+//!
+//! Walks a membrane scratchpad slice applying the shift leak
+//! (`V -= V >> k`) one entry per cycle, overlapped with accumulation of
+//! the *next* layer in the paper's schedule. The simulator uses its cycle
+//! count; the unit test pins its arithmetic to the NCE's LIF leak.
+
+/// FSM states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeakState {
+    Idle,
+    Running { next: usize },
+    Done,
+}
+
+/// The leak engine over one membrane slice.
+#[derive(Debug)]
+pub struct LeakFsm {
+    state: LeakState,
+    leak_shift: u32,
+    cycles: u64,
+}
+
+impl LeakFsm {
+    pub fn new(leak_shift: u32) -> Self {
+        Self { state: LeakState::Idle, leak_shift, cycles: 0 }
+    }
+
+    pub fn state(&self) -> LeakState {
+        self.state
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Begin a pass over `n` membrane entries.
+    pub fn start(&mut self) {
+        self.state = LeakState::Running { next: 0 };
+    }
+
+    /// One clock tick: leak one membrane entry. Returns true while busy.
+    pub fn tick(&mut self, membranes: &mut [i32]) -> bool {
+        match self.state {
+            LeakState::Running { next } if next < membranes.len() => {
+                let v = membranes[next];
+                membranes[next] = v - (v >> self.leak_shift);
+                self.cycles += 1;
+                self.state = if next + 1 == membranes.len() {
+                    LeakState::Done
+                } else {
+                    LeakState::Running { next: next + 1 }
+                };
+                true
+            }
+            LeakState::Running { .. } => {
+                self.state = LeakState::Done;
+                false
+            }
+            _ => false,
+        }
+    }
+
+    /// Run a whole pass to completion; returns cycles consumed.
+    pub fn run_pass(&mut self, membranes: &mut [i32]) -> u64 {
+        let before = self.cycles;
+        self.start();
+        while self.tick(membranes) {}
+        self.state = LeakState::Idle;
+        self.cycles - before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_applies_shift_leak() {
+        let mut fsm = LeakFsm::new(2);
+        let mut v = vec![8, -8, 3, 0, 100];
+        let cycles = fsm.run_pass(&mut v);
+        assert_eq!(cycles, 5);
+        // same arithmetic as nce::lif with I = 0
+        assert_eq!(v, vec![6, -6, 3, 0, 75]);
+    }
+
+    #[test]
+    fn state_machine_sequence() {
+        let mut fsm = LeakFsm::new(1);
+        assert_eq!(fsm.state(), LeakState::Idle);
+        let mut v = vec![4, 4];
+        fsm.start();
+        assert!(fsm.tick(&mut v));
+        assert!(matches!(fsm.state(), LeakState::Running { next: 1 } | LeakState::Done));
+        assert!(fsm.tick(&mut v));
+        assert_eq!(fsm.state(), LeakState::Done);
+        assert!(!fsm.tick(&mut v));
+        assert_eq!(v, vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_slice_zero_cycles() {
+        let mut fsm = LeakFsm::new(2);
+        let mut v: Vec<i32> = vec![];
+        assert_eq!(fsm.run_pass(&mut v), 0);
+    }
+
+    #[test]
+    fn cycles_accumulate_across_passes() {
+        let mut fsm = LeakFsm::new(2);
+        let mut v = vec![16; 10];
+        fsm.run_pass(&mut v);
+        fsm.run_pass(&mut v);
+        assert_eq!(fsm.total_cycles(), 20);
+    }
+}

@@ -1,0 +1,22 @@
+//! The 2D SIMD neuron-processing array — cycle-level simulator (Fig. 1).
+//!
+//! Models the system the paper builds around the NCE: a rows x cols grid
+//! of processing elements with local weight/membrane scratchpads, a ring
+//! FIFO moving spike packets between memory and compute, the leak FSM,
+//! and the spike counter. The simulator consumes the *measured* per-layer
+//! activity of a real inference (from [`crate::model::SnnEngine`]) and
+//! accounts cycles for the paper's dataflow — temporal reuse of membrane
+//! potentials, spatial reuse of weights, event-driven row skip — yielding
+//! the latency/utilization numbers behind Table II.
+
+pub mod fifo;
+pub mod grid;
+pub mod leak_fsm;
+pub mod scratchpad;
+pub mod sim;
+pub mod spike_counter;
+
+pub use fifo::RingFifo;
+pub use grid::ArrayConfig;
+pub use sim::{simulate_inference, CycleReport, LayerCycles};
+pub use spike_counter::SpikeCounter;

@@ -1,0 +1,110 @@
+//! Local scratchpad memories (weights / membrane / feature maps).
+//!
+//! Models capacity and access counting. At the system level scratchpads
+//! price in BRAM36 blocks, not LUTs (Table II); access counts feed the
+//! energy model (memory access energy dominates SNN inference — the
+//! paper's data-reuse argument is exactly about minimizing these).
+
+use crate::fpga::primitives::BRAM36_BITS;
+
+/// One scratchpad instance.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    name: &'static str,
+    capacity_bits: u64,
+    used_bits: u64,
+    reads: u64,
+    writes: u64,
+}
+
+impl Scratchpad {
+    pub fn new(name: &'static str, capacity_bits: u64) -> Self {
+        Self { name, capacity_bits, used_bits: 0, reads: 0, writes: 0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Reserve `bits` of the scratchpad; errors if it does not fit —
+    /// the mapper uses this to validate a layer tiling.
+    pub fn allocate(&mut self, bits: u64) -> crate::Result<()> {
+        if self.used_bits + bits > self.capacity_bits {
+            anyhow::bail!(
+                "{}: allocation of {bits} bits exceeds capacity ({} of {} used)",
+                self.name,
+                self.used_bits,
+                self.capacity_bits
+            );
+        }
+        self.used_bits += bits;
+        Ok(())
+    }
+
+    pub fn free_all(&mut self) {
+        self.used_bits = 0;
+    }
+
+    pub fn record_reads(&mut self, n: u64) {
+        self.reads += n;
+    }
+
+    pub fn record_writes(&mut self, n: u64) {
+        self.writes += n;
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    pub fn used_bits(&self) -> u64 {
+        self.used_bits
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_bits as f64 / self.capacity_bits as f64
+    }
+
+    /// BRAM36 blocks this scratchpad occupies on the FPGA.
+    pub fn bram36(&self) -> u64 {
+        self.capacity_bits.div_ceil(BRAM36_BITS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_respects_capacity() {
+        let mut s = Scratchpad::new("w", 1000);
+        s.allocate(600).unwrap();
+        s.allocate(400).unwrap();
+        assert!(s.allocate(1).is_err());
+        assert_eq!(s.used_bits(), 1000);
+        assert_eq!(s.utilization(), 1.0);
+        s.free_all();
+        assert_eq!(s.used_bits(), 0);
+    }
+
+    #[test]
+    fn access_counters() {
+        let mut s = Scratchpad::new("v", 512);
+        s.record_reads(10);
+        s.record_writes(3);
+        s.record_reads(5);
+        assert_eq!(s.reads(), 15);
+        assert_eq!(s.writes(), 3);
+    }
+
+    #[test]
+    fn bram_sizing() {
+        assert_eq!(Scratchpad::new("a", 36 * 1024).bram36(), 1);
+        assert_eq!(Scratchpad::new("b", 36 * 1024 + 1).bram36(), 2);
+        assert_eq!(Scratchpad::new("c", 10).bram36(), 1);
+    }
+}

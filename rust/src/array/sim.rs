@@ -1,0 +1,238 @@
+//! Cycle-level simulation of one inference on the 2D NCE array.
+//!
+//! Consumes the measured per-layer activity of a real inference
+//! ([`crate::model::engine::LayerStats`]) and accounts cycles under the
+//! paper's dataflow:
+//!
+//! - **accumulate**: every packed word streamed through a PE's SIMD adder
+//!   costs one cycle; total word traffic divides over the grid with a
+//!   load-balance efficiency factor;
+//! - **broadcast**: each active input row is issued once on the ring
+//!   (overlapped with accumulation; only its serialization tail counts);
+//! - **membrane maintenance**: the leak FSM walks each neuron once per
+//!   timestep, overlapped with the next layer's accumulation — only the
+//!   excess over accumulate time is visible;
+//! - **control**: a fixed RISC-V descriptor/setup/poll cost per layer
+//!   (validated against the rv32 co-simulation in `examples/riscv_demo`).
+
+use crate::model::engine::LayerStats;
+use crate::model::network::QuantNetwork;
+
+use super::grid::ArrayConfig;
+
+/// Tunable overheads of the cycle model.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOverheads {
+    /// Pipeline fill cycles per (layer, timestep).
+    pub pipeline_fill: u64,
+    /// RISC-V descriptor setup + completion poll per layer per inference.
+    pub riscv_per_layer: u64,
+    /// Fraction of ideal PE utilization achieved by the mapper.
+    pub balance_eff: f64,
+    /// Pixels encoded per cycle by the spike encoder.
+    pub encode_width: u64,
+}
+
+impl Default for SimOverheads {
+    fn default() -> Self {
+        Self {
+            pipeline_fill: 8,
+            riscv_per_layer: 120,
+            balance_eff: 0.85,
+            encode_width: 16,
+        }
+    }
+}
+
+/// Per-layer cycle breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCycles {
+    pub accumulate: u64,
+    pub membrane: u64,
+    pub broadcast_tail: u64,
+    pub control: u64,
+}
+
+impl LayerCycles {
+    pub fn total(&self) -> u64 {
+        // membrane overlaps accumulation; only its excess is visible
+        self.accumulate.max(self.membrane) + self.broadcast_tail + self.control
+    }
+}
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    pub layers: Vec<LayerCycles>,
+    pub encode_cycles: u64,
+    pub total_cycles: u64,
+    /// Mean PE utilization (ideal word traffic / (cycles x n_pe)).
+    pub utilization: f64,
+    /// Wall latency at the configured clock.
+    pub latency_ms: f64,
+}
+
+/// Simulate one inference from measured layer activity.
+pub fn simulate_inference(
+    net: &QuantNetwork,
+    cfg: &ArrayConfig,
+    ov: &SimOverheads,
+    stats: &[LayerStats],
+) -> crate::Result<CycleReport> {
+    cfg.check_fit(net)?;
+    if stats.len() != net.layers.len() {
+        anyhow::bail!("stats/layer count mismatch");
+    }
+    let n_pe = cfg.n_pe() as u64;
+    let t = net.arch.timesteps() as u64;
+    let mut layers = Vec::with_capacity(stats.len());
+    let mut ideal_words = 0u64;
+
+    // Input encoding: pixels / encode_width per timestep; overlaps the
+    // first layer after the first step, so only one step's worth counts.
+    let encode_cycles = (net.arch.input_dim() as u64).div_ceil(ov.encode_width);
+
+    for ls in stats {
+        // Word traffic divides across the grid (spatial weight reuse means
+        // each word is fetched once and used by all its lanes).
+        let acc_ideal = ls.words_touched as f64 / n_pe as f64;
+        let accumulate = (acc_ideal / ov.balance_eff).ceil() as u64
+            + ov.pipeline_fill * t;
+        // Leak FSM: every neuron of the layer, every timestep, 1/cycle/PE.
+        let neurons = ls.positions * ls.n_out;
+        let membrane = (neurons * t).div_ceil(n_pe);
+        // Ring serialization: issuing a/broadcasting each active row costs
+        // one slot; overlapped except the pipeline tail per step.
+        let broadcast_tail = t * (cfg.rows as u64);
+        let control = ov.riscv_per_layer;
+        ideal_words += ls.words_touched;
+        layers.push(LayerCycles { accumulate, membrane, broadcast_tail, control });
+    }
+
+    let total_cycles: u64 =
+        encode_cycles + layers.iter().map(|l| l.total()).sum::<u64>();
+    let utilization = ideal_words as f64 / (total_cycles as f64 * n_pe as f64);
+    let latency_ms = total_cycles as f64 / (cfg.clock_mhz * 1e3);
+    Ok(CycleReport {
+        layers,
+        encode_cycles,
+        total_cycles,
+        utilization,
+        latency_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::{ArchDesc, QuantNetLayer};
+    use crate::nce::simd::{pack_row, Precision};
+
+    fn net(bits: u32, n_out: usize) -> QuantNetwork {
+        let p = Precision::from_bits(bits).unwrap();
+        let n_words = n_out.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for _ in 0..64 {
+            packed.extend(pack_row(&vec![1i32; n_out], p));
+        }
+        QuantNetwork {
+            arch: ArchDesc::Mlp {
+                sizes: vec![64, n_out],
+                timesteps: 16,
+                leak_shift: 2,
+            },
+            layers: vec![QuantNetLayer {
+                precision: p,
+                k_in: 64,
+                n_out,
+                n_words,
+                scale: 1.0,
+                theta: 1,
+                packed,
+            }],
+        }
+    }
+
+    fn stats(words: u64, n_out: u64, n_words: u64) -> Vec<LayerStats> {
+        vec![LayerStats {
+            positions: 1,
+            active_rows: words / n_words.max(1),
+            words_touched: words,
+            spikes_emitted: 0,
+            n_out,
+            n_words,
+        }]
+    }
+
+    #[test]
+    fn more_activity_more_cycles() {
+        let n = net(4, 128);
+        let cfg = ArrayConfig::paper();
+        let ov = SimOverheads::default();
+        let lo = simulate_inference(&n, &cfg, &ov, &stats(1_000, 128, 16)).unwrap();
+        let hi = simulate_inference(&n, &cfg, &ov, &stats(100_000, 128, 16)).unwrap();
+        assert!(hi.total_cycles > lo.total_cycles);
+        assert!(hi.latency_ms > lo.latency_ms);
+    }
+
+    #[test]
+    fn int2_beats_int8_on_same_activity() {
+        // Same active rows: INT2 streams 4x fewer words than INT8 for the
+        // same n_out -> fewer cycles. This is the paper's SIMD speedup.
+        let cfg = ArrayConfig::paper();
+        let ov = SimOverheads::default();
+        let rows = 2000u64;
+        let n2 = net(2, 128);
+        let w2 = rows * n2.layers[0].n_words as u64;
+        let r2 =
+            simulate_inference(&n2, &cfg, &ov, &stats(w2, 128, 8)).unwrap();
+        let n8 = net(8, 128);
+        let w8 = rows * n8.layers[0].n_words as u64;
+        let r8 =
+            simulate_inference(&n8, &cfg, &ov, &stats(w8, 128, 32)).unwrap();
+        assert!(
+            r8.total_cycles > r2.total_cycles,
+            "INT8 {} !> INT2 {}",
+            r8.total_cycles,
+            r2.total_cycles
+        );
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let n = net(4, 128);
+        let cfg = ArrayConfig::paper();
+        let r = simulate_inference(
+            &n,
+            &cfg,
+            &SimOverheads::default(),
+            &stats(50_000, 128, 16),
+        )
+        .unwrap();
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{}", r.utilization);
+    }
+
+    #[test]
+    fn latency_scales_with_clock() {
+        let n = net(4, 128);
+        let ov = SimOverheads::default();
+        let fast = ArrayConfig { clock_mhz: 400.0, ..ArrayConfig::paper() };
+        let slow = ArrayConfig { clock_mhz: 100.0, ..ArrayConfig::paper() };
+        let rf = simulate_inference(&n, &fast, &ov, &stats(50_000, 128, 16)).unwrap();
+        let rs = simulate_inference(&n, &slow, &ov, &stats(50_000, 128, 16)).unwrap();
+        assert_eq!(rf.total_cycles, rs.total_cycles);
+        assert!((rs.latency_ms / rf.latency_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_mismatched_stats() {
+        let n = net(4, 128);
+        let r = simulate_inference(
+            &n,
+            &ArrayConfig::paper(),
+            &SimOverheads::default(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Spike counter — output population counter + argmax readout (Fig. 1).
+
+/// Saturating per-class spike counters with first-max readout.
+#[derive(Debug, Clone)]
+pub struct SpikeCounter {
+    counts: Vec<u32>,
+    saturation: u32,
+}
+
+impl SpikeCounter {
+    /// `width_bits` is the hardware counter width (saturating).
+    pub fn new(classes: usize, width_bits: u32) -> Self {
+        assert!(classes > 0 && width_bits > 0 && width_bits <= 32);
+        Self {
+            counts: vec![0; classes],
+            saturation: if width_bits == 32 {
+                u32::MAX
+            } else {
+                (1 << width_bits) - 1
+            },
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+    }
+
+    /// Accumulate one output spike plane (0/1 bytes).
+    pub fn accumulate(&mut self, spikes: &[u8]) {
+        debug_assert_eq!(spikes.len(), self.counts.len());
+        for (c, &s) in self.counts.iter_mut().zip(spikes) {
+            *c = (*c + s as u32).min(self.saturation);
+        }
+    }
+
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Winning class (first maximum, matching `np.argmax`).
+    pub fn argmax(&self) -> usize {
+        crate::model::engine::argmax(&self.counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_argmax() {
+        let mut c = SpikeCounter::new(4, 8);
+        c.accumulate(&[0, 1, 1, 0]);
+        c.accumulate(&[0, 1, 0, 0]);
+        c.accumulate(&[1, 0, 0, 0]);
+        assert_eq!(c.counts(), &[1, 2, 1, 0]);
+        assert_eq!(c.argmax(), 1);
+    }
+
+    #[test]
+    fn saturates_at_width() {
+        let mut c = SpikeCounter::new(1, 2); // saturates at 3
+        for _ in 0..10 {
+            c.accumulate(&[1]);
+        }
+        assert_eq!(c.counts(), &[3]);
+    }
+
+    #[test]
+    fn tie_goes_to_first() {
+        let mut c = SpikeCounter::new(3, 8);
+        c.accumulate(&[1, 1, 0]);
+        assert_eq!(c.argmax(), 0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = SpikeCounter::new(2, 8);
+        c.accumulate(&[1, 1]);
+        c.clear();
+        assert_eq!(c.counts(), &[0, 0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving metrics: throughput counters + log-bucketed latency histogram.
+
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram (1 us .. ~17 min), constant memory.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 31],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: [0; 31], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as u64).min(30) as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile (upper edge of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << (b + 1); // bucket upper edge
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub latency: LatencyHistogram,
+    /// Sum of batch sizes (mean batch = / batches).
+    pub batched_total: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { latency: LatencyHistogram::new(), ..Default::default() }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_total as f64 / self.batches as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} rejected={} \
+             latency mean={:.0}us p50<={}us p95<={}us p99<={}us max={}us",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.rejected,
+            self.latency.mean_us(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.95),
+            self.latency.quantile_us(0.99),
+            self.latency.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 100, 1000, 5000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        assert!(p50 <= p95);
+        assert!(h.max_us() == 10_000);
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn bucket_edges_contain_values() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        // p100 upper edge must be >= the recorded value
+        assert!(h.quantile_us(1.0) >= 100);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_mean_batch() {
+        let mut m = Metrics::new();
+        m.batches = 4;
+        m.batched_total = 10;
+        assert_eq!(m.mean_batch(), 2.5);
+        assert!(m.summary().contains("mean_batch=2.50"));
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 coordinator — the edge-serving engine around the accelerator.
+//!
+//! The paper's system serves real-time inference at the edge; this module
+//! is the production shell a deployment needs around the compute: an
+//! ingest queue with backpressure, a dynamic batcher (batch whatever
+//! arrived within a latency budget, pick the largest compiled batch
+//! size), a precision selector, worker threads owning the execution
+//! backends, and metrics.
+//!
+//! Two interchangeable backends execute batches:
+//! - **PJRT** ([`crate::runtime`]) — the AOT-compiled JAX/Pallas graph;
+//! - **Native** ([`crate::model::SnnEngine`]) — the bit-accurate integer
+//!   engine (identical outputs, asserted by integration tests).
+//!
+//! std threads + channels (tokio is unavailable offline); the hot path is
+//! allocation-light and the queue is the bounded [`crate::array::RingFifo`].
+
+pub mod batcher;
+pub mod firmware;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{LatencyHistogram, Metrics};
+pub use request::{InferRequest, InferResponse, Precision as ReqPrecision};
+pub use server::{Backend, ServerConfig, ServingEngine};

@@ -1,0 +1,87 @@
+//! Request/response types of the serving engine.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Requested execution precision. `Fp32` selects the float baseline
+/// graph (PJRT backend only); the integer widths run on either backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int2,
+    Int4,
+    Int8,
+    Fp32,
+}
+
+impl Precision {
+    /// Field width for the artifact lookup (0 = fp32 by convention).
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int2 => 2,
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Fp32 => 0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "int2" | "2" => Some(Precision::Int2),
+            "int4" | "4" => Some(Precision::Int4),
+            "int8" | "8" => Some(Precision::Int8),
+            "fp32" | "f32" => Some(Precision::Fp32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int2 => "INT2",
+            Precision::Int4 => "INT4",
+            Precision::Int8 => "INT8",
+            Precision::Fp32 => "FP32",
+        }
+    }
+}
+
+/// One inference request travelling through the engine.
+pub struct InferRequest {
+    pub id: u64,
+    /// u8 pixels, encoder domain (length = model input_dim).
+    pub pixels: Vec<u8>,
+    pub precision: Precision,
+    pub enqueued: Instant,
+    /// Completion channel (one response per request).
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// The engine's answer.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub prediction: usize,
+    pub counts: Vec<i32>,
+    /// Queue + batch + execute time.
+    pub latency_us: u64,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!(Precision::parse("int2"), Some(Precision::Int2));
+        assert_eq!(Precision::parse("4"), Some(Precision::Int4));
+        assert_eq!(Precision::parse("FP32"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("bf16"), None);
+    }
+
+    #[test]
+    fn bits_mapping() {
+        assert_eq!(Precision::Int2.bits(), 2);
+        assert_eq!(Precision::Fp32.bits(), 0);
+    }
+}

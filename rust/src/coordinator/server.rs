@@ -1,0 +1,326 @@
+//! The serving engine: ingest -> dynamic batcher -> backend -> reply.
+//!
+//! One worker thread owns the execution backend (the PJRT client is not
+//! Send-safe across concurrent use; confining it to its thread is both
+//! safe and cache-friendly). Callers submit through a cloneable handle
+//! and block on a per-request channel — a deliberately simple surface
+//! that an RPC front-end (or the examples) wraps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::model::SnnEngine;
+use crate::runtime::executor::{ExecutorPool, ModelKey};
+use crate::runtime::ArtifactStore;
+use crate::Result;
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse, Precision};
+
+/// Which engine executes batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO via PJRT (supports FP32 + all integer precisions).
+    Pjrt,
+    /// Bit-accurate rust integer engine (integer precisions only).
+    Native,
+}
+
+/// Serving engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub backend: Backend,
+    pub batcher: BatcherConfig,
+    /// Ingest queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            model: "mlp".into(),
+            backend: Backend::Pjrt,
+            batcher: BatcherConfig::default(),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+enum Msg {
+    Request(InferRequest),
+    Shutdown,
+}
+
+/// Cloneable client handle to a running engine.
+pub struct ServingEngine {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: AtomicU64,
+    input_dim: usize,
+    backend: Backend,
+}
+
+impl ServingEngine {
+    /// Start the engine (loads artifacts, spawns the worker).
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let input_dim = store.manifest().model(&cfg.model)?.arch.input_dim();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker_metrics = Arc::clone(&metrics);
+        let backend = cfg.backend;
+        let worker = std::thread::Builder::new()
+            .name("lspine-serve".into())
+            .spawn(move || worker_loop(cfg, store, rx, worker_metrics))?;
+        Ok(Self {
+            tx,
+            worker: Some(worker),
+            metrics,
+            next_id: AtomicU64::new(1),
+            input_dim,
+            backend,
+        })
+    }
+
+    /// Submit one request and block for its response.
+    pub fn infer(&self, pixels: &[u8], precision: Precision) -> Result<InferResponse> {
+        let rx = self.submit(pixels, precision)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine stopped"))
+    }
+
+    /// Submit without blocking; returns the response channel.
+    pub fn submit(
+        &self,
+        pixels: &[u8],
+        precision: Precision,
+    ) -> Result<mpsc::Receiver<InferResponse>> {
+        anyhow::ensure!(pixels.len() == self.input_dim, "bad input size");
+        anyhow::ensure!(
+            !(self.backend == Backend::Native && precision == Precision::Fp32),
+            "FP32 requires the PJRT backend"
+        );
+        let (reply, rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            pixels: pixels.to_vec(),
+            precision,
+            enqueued: Instant::now(),
+            reply,
+        };
+        self.tx
+            .send(Msg::Request(req))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: drains the queue, then joins the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Execution backends materialized inside the worker thread.
+enum Exec {
+    Pjrt(ExecutorPool),
+    Native(Vec<(u32, SnnEngine)>),
+}
+
+fn worker_loop(
+    cfg: ServerConfig,
+    store: ArtifactStore,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let mut exec = match cfg.backend {
+        Backend::Pjrt => Exec::Pjrt(ExecutorPool::new(store, &cfg.model)?),
+        Backend::Native => {
+            let mut engines = Vec::new();
+            for bits in [2u32, 4, 8] {
+                let net = store.load_network(&cfg.model, "lspine", bits)?;
+                engines.push((bits, SnnEngine::new(net)));
+            }
+            Exec::Native(engines)
+        }
+    };
+
+    let mut batcher = DynamicBatcher::new(cfg.batcher);
+    let mut pending = 0usize;
+    let mut shutting_down = false;
+
+    loop {
+        // 1. ingest (bounded block until the oldest batch deadline)
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(req)) => {
+                if pending >= cfg.queue_capacity {
+                    metrics.lock().unwrap().rejected += 1;
+                    // drop: the reply channel closing signals rejection
+                    continue;
+                }
+                pending += 1;
+                batcher.push(req);
+                // opportunistically drain whatever else is queued
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Request(r) => {
+                            if pending >= cfg.queue_capacity {
+                                metrics.lock().unwrap().rejected += 1;
+                            } else {
+                                pending += 1;
+                                batcher.push(r);
+                            }
+                        }
+                        Msg::Shutdown => shutting_down = true,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => shutting_down = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+
+        // 2. dispatch ready batches. Idle-dispatch policy (§Perf P1):
+        // once the ingest channel is drained, waiting out max_wait cannot
+        // grow any batch — dispatch partials immediately. The channel is
+        // re-drained after every executed batch (execution takes long
+        // enough for new arrivals to accumulate into the next batch).
+        loop {
+            let mut drained_empty = true;
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::Request(r) => {
+                        if pending >= cfg.queue_capacity {
+                            metrics.lock().unwrap().rejected += 1;
+                        } else {
+                            pending += 1;
+                            batcher.push(r);
+                        }
+                        drained_empty = false;
+                    }
+                    Msg::Shutdown => shutting_down = true,
+                }
+            }
+            let now = Instant::now();
+            let batch = if drained_empty || shutting_down {
+                batcher.next_batch_idle(now)
+            } else {
+                batcher.next_batch(now)
+            };
+            match batch {
+                Some((prec, batch)) => {
+                    pending -= batch.len();
+                    run_batch(&mut exec, prec, batch, &metrics)?;
+                }
+                // nothing ready on the strict policy but arrivals were
+                // seen this pass: loop once more — the re-drain will find
+                // the channel empty and the idle policy dispatches.
+                None if !drained_empty => continue,
+                None => break,
+            }
+        }
+
+        if shutting_down && batcher.pending() == 0 {
+            return Ok(());
+        }
+    }
+}
+
+fn run_batch(
+    exec: &mut Exec,
+    precision: Precision,
+    batch: Vec<InferRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let n = batch.len();
+    let results: Vec<(usize, Vec<i32>)> = match exec {
+        Exec::Pjrt(pool) => {
+            let b = pool.best_batch(precision.bits(), n)?;
+            let mut out = Vec::with_capacity(n);
+            // fixed-shape artifacts: run in chunks of the compiled batch
+            for chunk in batch.chunks(b.max(1)) {
+                let exe = pool.get(ModelKey { bits: precision.bits(), batch: b })?;
+                let rows: Vec<&[u8]> = chunk.iter().map(|r| r.pixels.as_slice()).collect();
+                let counts = exe.run_u8(&rows)?;
+                for c in counts {
+                    let pred = argmax_i32(&c);
+                    out.push((pred, c));
+                }
+            }
+            out
+        }
+        Exec::Native(engines) => {
+            let (_, engine) = engines
+                .iter_mut()
+                .find(|(b, _)| *b == precision.bits())
+                .ok_or_else(|| anyhow::anyhow!("no native engine for {precision:?}"))?;
+            batch
+                .iter()
+                .map(|r| {
+                    let counts: Vec<i32> =
+                        engine.infer(&r.pixels).iter().map(|&c| c as i32).collect();
+                    (argmax_i32(&counts), counts)
+                })
+                .collect()
+        }
+    };
+
+    let now = Instant::now();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.batched_total += n as u64;
+        m.requests += n as u64;
+        for req in &batch {
+            m.latency.record(now.duration_since(req.enqueued));
+        }
+    }
+    for (req, (pred, counts)) in batch.into_iter().zip(results) {
+        let latency_us = now.duration_since(req.enqueued).as_micros() as u64;
+        let _ = req.reply.send(InferResponse {
+            id: req.id,
+            prediction: pred,
+            counts,
+            latency_us,
+            batch_size: n,
+        });
+    }
+    Ok(())
+}
+
+fn argmax_i32(xs: &[i32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}

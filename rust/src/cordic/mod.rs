@@ -1,0 +1,221 @@
+//! Fixed-point CORDIC engine — the substrate of several Table I baselines.
+//!
+//! Q16.16 fixed-point CORDIC in circular, hyperbolic and linear modes.
+//! The CORDIC-based Izhikevich [20] and Hodgkin–Huxley [19] baseline
+//! neurons use it for the multiplications/exponentials their dynamics
+//! need; the fpga estimator costs one iteration slice per stage.
+
+/// Q16.16 fixed point.
+pub const FRAC_BITS: u32 = 16;
+pub const ONE: i64 = 1 << FRAC_BITS;
+
+/// Convert f64 -> Q16.16.
+pub fn to_fix(x: f64) -> i64 {
+    (x * ONE as f64).round() as i64
+}
+
+/// Convert Q16.16 -> f64.
+pub fn from_fix(x: i64) -> f64 {
+    x as f64 / ONE as f64
+}
+
+/// Fixed-point multiply (Q16.16 * Q16.16 -> Q16.16).
+#[inline]
+pub fn fmul(a: i64, b: i64) -> i64 {
+    (a * b) >> FRAC_BITS
+}
+
+/// atan(2^-i) table in Q16.16 (circular mode angles).
+fn atan_table(iters: usize) -> Vec<i64> {
+    (0..iters).map(|i| to_fix((2f64.powi(-(i as i32))).atan())).collect()
+}
+
+/// atanh(2^-i) table in Q16.16 for i >= 1 (hyperbolic mode angles).
+fn atanh_table(iters: usize) -> Vec<i64> {
+    (1..=iters).map(|i| to_fix((2f64.powi(-(i as i32))).atanh())).collect()
+}
+
+/// CORDIC circular gain K = prod sqrt(1 + 2^-2i).
+pub fn circular_gain(iters: usize) -> f64 {
+    (0..iters).map(|i| (1.0 + 2f64.powi(-2 * i as i32)).sqrt()).product()
+}
+
+/// Hyperbolic-mode iteration schedule: i = 1,2,3,4,4,5,...,13,13,...
+/// (indices 4, 13, 40, ... repeat once for convergence).
+fn hyperbolic_schedule(iters: usize) -> Vec<usize> {
+    let mut sched = Vec::with_capacity(iters);
+    let mut i = 1usize;
+    let mut next_repeat = 4usize;
+    while sched.len() < iters {
+        sched.push(i);
+        if i == next_repeat && sched.len() < iters {
+            sched.push(i);
+            next_repeat = next_repeat * 3 + 1;
+        }
+        i += 1;
+    }
+    sched
+}
+
+/// CORDIC hyperbolic gain over the standard repeat schedule.
+pub fn hyperbolic_gain(iters: usize) -> f64 {
+    hyperbolic_schedule(iters)
+        .iter()
+        .map(|&i| (1.0 - 2f64.powi(-2 * (i as i32))).sqrt())
+        .product()
+}
+
+/// Iterative CORDIC core. `iters` trades accuracy for delay — the paper's
+/// baselines report 16-24 stages.
+#[derive(Debug, Clone)]
+pub struct Cordic {
+    iters: usize,
+    atan: Vec<i64>,
+    atanh: Vec<i64>,
+    hyp_sched: Vec<usize>,
+    inv_gain_c: i64,
+    inv_gain_h: i64,
+}
+
+impl Cordic {
+    pub fn new(iters: usize) -> Self {
+        assert!((4..=30).contains(&iters), "iteration count out of range");
+        Self {
+            iters,
+            atan: atan_table(iters),
+            atanh: atanh_table(iters + 4),
+            hyp_sched: hyperbolic_schedule(iters),
+            inv_gain_c: to_fix(1.0 / circular_gain(iters)),
+            inv_gain_h: to_fix(1.0 / hyperbolic_gain(iters)),
+        }
+    }
+
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Circular rotation: returns (cos(theta), sin(theta)), |theta| <= ~1.74.
+    pub fn sin_cos(&self, theta: i64) -> (i64, i64) {
+        let mut x = self.inv_gain_c;
+        let mut y = 0i64;
+        let mut z = theta;
+        for i in 0..self.iters {
+            let d = if z >= 0 { 1 } else { -1 };
+            let (xs, ys) = (x >> i, y >> i);
+            let (nx, ny) = (x - d * ys, y + d * xs);
+            z -= d * self.atan[i];
+            x = nx;
+            y = ny;
+        }
+        (x, y)
+    }
+
+    /// Hyperbolic rotation -> (cosh, sinh); convergence |z| <~ 1.118.
+    pub fn sinh_cosh(&self, theta: i64) -> (i64, i64) {
+        let mut x = self.inv_gain_h;
+        let mut y = 0i64;
+        let mut z = theta;
+        for &i in &self.hyp_sched {
+            let d = if z >= 0 { 1 } else { -1 };
+            let (xs, ys) = (x >> i, y >> i);
+            let (nx, ny) = (x + d * ys, y + d * xs);
+            z -= d * self.atanh[i - 1];
+            x = nx;
+            y = ny;
+        }
+        (x, y)
+    }
+
+    /// exp(z) = cosh(z) + sinh(z) for |z| within hyperbolic convergence.
+    pub fn exp(&self, z: i64) -> i64 {
+        let (c, s) = self.sinh_cosh(z);
+        c + s
+    }
+
+    /// Multiply via CORDIC linear mode; used by the multiplier-less
+    /// baselines that replace DSP multipliers with shift-add stages.
+    /// Requires |b| < 2.0 (linear-mode convergence); scale accordingly.
+    pub fn mul(&self, a: i64, b: i64) -> i64 {
+        let mut y = 0i64;
+        let mut z = b;
+        for i in 0..self.iters {
+            let d = if z >= 0 { 1 } else { -1 };
+            y += d * (a >> i);
+            z -= d * (ONE >> i);
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_point_roundtrip() {
+        for x in [-2.5, -0.1, 0.0, 0.33, 1.0, 7.75] {
+            assert!((from_fix(to_fix(x)) - x).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fmul_works() {
+        assert!((from_fix(fmul(to_fix(1.5), to_fix(-2.0))) + 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sin_cos_accuracy() {
+        let c = Cordic::new(20);
+        for deg in (-80..=80).step_by(10) {
+            let th = (deg as f64).to_radians();
+            let (cos_f, sin_f) = c.sin_cos(to_fix(th));
+            assert!((from_fix(cos_f) - th.cos()).abs() < 1e-3, "deg={deg}");
+            assert!((from_fix(sin_f) - th.sin()).abs() < 1e-3, "deg={deg}");
+        }
+    }
+
+    #[test]
+    fn exp_accuracy() {
+        let c = Cordic::new(20);
+        for z in [-1.0, -0.5, 0.0, 0.25, 0.9] {
+            let got = from_fix(c.exp(to_fix(z)));
+            assert!((got - z.exp()).abs() < 5e-3, "z={z} got={got}");
+        }
+    }
+
+    #[test]
+    fn linear_mode_multiplies() {
+        let c = Cordic::new(20);
+        for (a, b) in [(0.5, 0.5), (1.25, -0.75), (-1.5, -1.9), (0.1, 1.99)] {
+            let got = from_fix(c.mul(to_fix(a), to_fix(b)));
+            assert!((got - a * b).abs() < 1e-3, "{a}*{b} got {got}");
+        }
+    }
+
+    #[test]
+    fn hyperbolic_schedule_repeats() {
+        assert_eq!(hyperbolic_schedule(6), vec![1, 2, 3, 4, 4, 5]);
+    }
+
+    #[test]
+    fn gains_match_reference() {
+        assert!((circular_gain(20) - 1.646760).abs() < 1e-4);
+        let g = hyperbolic_gain(20);
+        assert!((0.80..0.85).contains(&g), "{g}");
+    }
+
+    #[test]
+    #[should_panic(expected = "iteration count out of range")]
+    fn rejects_tiny_iteration_count() {
+        Cordic::new(2);
+    }
+
+    #[test]
+    fn accuracy_improves_with_iters() {
+        let coarse = Cordic::new(8);
+        let fine = Cordic::new(24);
+        let th = to_fix(0.7);
+        let e = |c: &Cordic| (from_fix(c.sin_cos(th).1) - 0.7f64.sin()).abs();
+        assert!(e(&fine) < e(&coarse));
+    }
+}

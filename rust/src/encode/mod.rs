@@ -1,0 +1,30 @@
+//! Spike encoders (the "Encoder" block of Fig. 1).
+//!
+//! Input images arrive as u8 pixels; the encoder turns them into binary
+//! spike trains over `T` timesteps. Three codings are provided:
+//!
+//! - [`RateEncoder`] — the deterministic accumulate-and-fire code used by
+//!   the AOT'd model (bit-exact mirror of `kernels/ref.py::encode_step_ref`
+//!   and `model.py::_encode_t`): after `t` steps exactly
+//!   `(x * t) >> 8` spikes have fired.
+//! - [`PoissonEncoder`] — classic stochastic rate code (reference /
+//!   robustness experiments; not used by the deployed graph).
+//! - [`TtfsEncoder`] — time-to-first-spike temporal code (one spike per
+//!   pixel, earlier = brighter); used in the encoder ablation bench.
+
+mod poisson;
+mod rate;
+mod ttfs;
+
+pub use poisson::PoissonEncoder;
+pub use rate::RateEncoder;
+pub use ttfs::TtfsEncoder;
+
+/// Common interface: fill `out` with the binary spike slice for step `t`.
+pub trait SpikeEncoder {
+    /// Encode timestep `t` (0-based) of `pixels` into `out` (0/1 bytes).
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]);
+
+    /// Total spikes this encoder will emit for one pixel over `t_steps`.
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32;
+}

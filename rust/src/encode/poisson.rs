@@ -1,0 +1,87 @@
+//! Poisson (Bernoulli-per-step) stochastic rate encoder.
+//!
+//! Classical SNN input coding: at each step a pixel fires with probability
+//! `x/256`. Used for the encoder ablation (EXPERIMENTS.md) and robustness
+//! tests — the deployed graph uses the deterministic [`super::RateEncoder`]
+//! so the PJRT and simulator paths stay bit-identical.
+
+use super::SpikeEncoder;
+
+/// Stochastic encoder with its own deterministic xorshift stream.
+#[derive(Debug, Clone)]
+pub struct PoissonEncoder {
+    state: u64,
+}
+
+impl PoissonEncoder {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    #[inline(always)]
+    fn next_u32(&mut self) -> u32 {
+        // xorshift64* — fast, deterministic, good enough for spike trains
+        self.state ^= self.state << 13;
+        self.state ^= self.state >> 7;
+        self.state ^= self.state << 17;
+        (self.state.wrapping_mul(0x2545F4914F6CDD1D) >> 32) as u32
+    }
+}
+
+impl SpikeEncoder for PoissonEncoder {
+    fn encode_step(&mut self, pixels: &[u8], _t: u32, out: &mut [u8]) {
+        debug_assert_eq!(pixels.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(pixels) {
+            // fire with prob x/256 (x=255 -> 255/256, matching the
+            // deterministic encoder's 15/16 duty at T=16 within 1 step)
+            *o = ((self.next_u32() & 0xFF) < x as u32) as u8;
+        }
+    }
+
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        // expectation, rounded — stochastic actuals vary around this
+        (pixel as u32 * t_steps + 128) >> 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_tracks_intensity() {
+        let mut enc = PoissonEncoder::new(42);
+        let pixels = vec![0u8, 64, 128, 255];
+        let mut counts = [0u32; 4];
+        let mut out = vec![0u8; 4];
+        let trials = 4096;
+        for t in 0..trials {
+            enc.encode_step(&pixels, t, &mut out);
+            for (c, &o) in counts.iter_mut().zip(&out) {
+                *c += o as u32;
+            }
+        }
+        assert_eq!(counts[0], 0);
+        let p = |c: u32| c as f64 / trials as f64;
+        assert!((p(counts[1]) - 0.25).abs() < 0.03, "{}", p(counts[1]));
+        assert!((p(counts[2]) - 0.50).abs() < 0.03, "{}", p(counts[2]));
+        assert!(p(counts[3]) > 0.95);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pixels: Vec<u8> = (0..128).collect();
+        let run = |seed| {
+            let mut e = PoissonEncoder::new(seed);
+            let mut out = vec![0u8; 128];
+            let mut all = Vec::new();
+            for t in 0..8 {
+                e.encode_step(&pixels, t, &mut out);
+                all.extend_from_slice(&out);
+            }
+            all
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

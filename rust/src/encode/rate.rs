@@ -1,0 +1,92 @@
+//! Deterministic accumulate-and-fire rate encoder — THE deployed coding.
+//!
+//! Contract (shared with the AOT graph, see DESIGN.md):
+//! cumulative spikes after `t` steps = `(x_u8 * t) >> 8`, so step `t`
+//! fires iff `((x*(t+1)) >> 8) - ((x*t) >> 8) == 1`. Spikes are spread
+//! evenly across the window and the code is integer-exact in both
+//! languages — the PJRT path and this encoder see identical trains.
+
+use super::SpikeEncoder;
+
+/// Stateless deterministic rate encoder.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RateEncoder;
+
+impl RateEncoder {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Spike for pixel `x` at step `t` (the scalar contract).
+    #[inline(always)]
+    pub fn spike_at(x: u8, t: u32) -> u8 {
+        let x = x as u32;
+        (((x * (t + 1)) >> 8) - ((x * t) >> 8)) as u8
+    }
+}
+
+impl SpikeEncoder for RateEncoder {
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+        debug_assert_eq!(pixels.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(pixels) {
+            *o = Self::spike_at(x, t);
+        }
+    }
+
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        (pixel as u32 * t_steps) >> 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_spikes_match_contract() {
+        let enc = RateEncoder::new();
+        for x in 0..=255u8 {
+            for t_steps in [1u32, 4, 8, 16, 32] {
+                let total: u32 =
+                    (0..t_steps).map(|t| RateEncoder::spike_at(x, t) as u32).sum();
+                assert_eq!(total, enc.expected_count(x, t_steps), "x={x} T={t_steps}");
+            }
+        }
+    }
+
+    #[test]
+    fn spikes_binary() {
+        for x in 0..=255u8 {
+            for t in 0..64 {
+                assert!(RateEncoder::spike_at(x, t) <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_never_fires_max_nearly_always() {
+        assert!((0..16).all(|t| RateEncoder::spike_at(0, t) == 0));
+        let total: u32 = (0..16).map(|t| RateEncoder::spike_at(255, t) as u32).sum();
+        assert_eq!(total, (255 * 16) >> 8); // 15 of 16 steps
+    }
+
+    #[test]
+    fn evenly_spread_not_bursty() {
+        // x=128 -> one spike every 2 steps, exactly alternating.
+        let train: Vec<u8> = (0..8).map(|t| RateEncoder::spike_at(128, t)).collect();
+        assert_eq!(train, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn vector_step_matches_scalar() {
+        let mut enc = RateEncoder::new();
+        let pixels: Vec<u8> = (0..=255).collect();
+        let mut out = vec![0u8; 256];
+        for t in 0..16 {
+            enc.encode_step(&pixels, t, &mut out);
+            for (i, &o) in out.iter().enumerate() {
+                assert_eq!(o, RateEncoder::spike_at(i as u8, t));
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Time-to-first-spike (TTFS) temporal encoder.
+//!
+//! Each pixel fires exactly once, at step `T-1 - floor(x*T/256)` — i.e.
+//! brighter pixels fire earlier. One spike per pixel gives the sparsest
+//! possible train (the paper's event-driven datapath benefits most here);
+//! accuracy typically drops versus rate coding, which the encoder
+//! ablation bench quantifies.
+
+use super::SpikeEncoder;
+
+/// Temporal one-spike encoder for a fixed window of `t_steps`.
+#[derive(Debug, Clone, Copy)]
+pub struct TtfsEncoder {
+    t_steps: u32,
+}
+
+impl TtfsEncoder {
+    pub fn new(t_steps: u32) -> Self {
+        assert!(t_steps > 0);
+        Self { t_steps }
+    }
+
+    /// The single step at which pixel `x` fires, or None for x == 0.
+    #[inline]
+    pub fn fire_step(&self, x: u8) -> Option<u32> {
+        if x == 0 {
+            return None;
+        }
+        let slot = (x as u32 * self.t_steps) >> 8; // 0..T
+        Some(self.t_steps - 1 - slot.min(self.t_steps - 1))
+    }
+}
+
+impl SpikeEncoder for TtfsEncoder {
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+        let me = *self;
+        for (o, &x) in out.iter_mut().zip(pixels) {
+            *o = (me.fire_step(x) == Some(t)) as u8;
+        }
+    }
+
+    fn expected_count(&self, pixel: u8, _t_steps: u32) -> u32 {
+        (pixel != 0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_spike_per_nonzero_pixel() {
+        let mut enc = TtfsEncoder::new(16);
+        let pixels: Vec<u8> = (0..=255).collect();
+        let mut total = vec![0u32; 256];
+        let mut out = vec![0u8; 256];
+        for t in 0..16 {
+            enc.encode_step(&pixels, t, &mut out);
+            for (tot, &o) in total.iter_mut().zip(&out) {
+                *tot += o as u32;
+            }
+        }
+        assert_eq!(total[0], 0);
+        assert!(total[1..].iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn brighter_fires_earlier() {
+        let enc = TtfsEncoder::new(16);
+        let t_bright = enc.fire_step(255).unwrap();
+        let t_mid = enc.fire_step(128).unwrap();
+        let t_dim = enc.fire_step(10).unwrap();
+        assert!(t_bright < t_mid && t_mid < t_dim);
+        assert_eq!(t_bright, 0);
+    }
+
+    #[test]
+    fn fire_step_in_window() {
+        for t_steps in [1u32, 4, 8, 16] {
+            let enc = TtfsEncoder::new(t_steps);
+            for x in 1..=255u8 {
+                let t = enc.fire_step(x).unwrap();
+                assert!(t < t_steps, "x={x} T={t_steps} t={t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-inference energy model + the §III-D energy comparison data (E5).
+//!
+//! Energy = power x latency for the system rows, plus a finer-grained
+//! event-level model (synaptic-op, membrane-update and memory-access
+//! energies) used by the ablation benches to attribute where the joules
+//! go — the paper's argument is that low-precision SIMD reduces both
+//! switching activity (narrower fields) and memory traffic (packed words).
+
+use crate::model::engine::InferStats;
+
+/// Reference energies reported in §III-D (J), in the paper's order.
+pub const REPORTED_ENERGY_J: &[(&str, f64)] = &[
+    ("TCAD'23 [23]", 1.12),
+    ("TVLSI'26 [34]", 0.80),
+    ("CORDIC H&H [19]", 28.06e-3),
+    ("CORDIC Izhikevich [20]", 5.04e-3),
+    ("TCAS-I'22 [24]", 2.96e-3),
+    ("IF/LIF FPGA [37]", 2.34e-3),
+    ("NC'20 [38]", 1.19e-3),
+    ("Access'22 [39]", 0.99e-3),
+    ("Minitaur [40]", 0.19e-3),
+    ("ISCAS'21 [41]", 0.10e-3),
+    ("AdEx IF [36]", 0.04e-3),
+];
+
+/// Event-level energy coefficients (pJ) on the Virtex-7 class fabric,
+/// scaled by field width: narrower fields toggle fewer bits per op.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// pJ per synaptic accumulate at 8-bit field width.
+    pub pj_per_synop_8b: f64,
+    /// pJ per membrane update (leak + threshold + reset).
+    pub pj_per_update: f64,
+    /// pJ per 32-bit scratchpad word access.
+    pub pj_per_word: f64,
+    /// Static power (W) integrated over the run.
+    pub static_w: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            pj_per_synop_8b: 1.1,
+            pj_per_update: 2.4,
+            pj_per_word: 6.0,
+            static_w: crate::fpga::system::STATIC_POWER_W,
+        }
+    }
+}
+
+/// Where one inference's energy went.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyBreakdown {
+    pub synaptic_j: f64,
+    pub membrane_j: f64,
+    pub memory_j: f64,
+    pub static_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.synaptic_j + self.membrane_j + self.memory_j + self.static_j
+    }
+}
+
+impl EnergyModel {
+    /// Attribute the energy of one inference from its measured stats.
+    ///
+    /// `bits` scales synaptic energy (a 2-bit accumulate toggles ~1/4 of
+    /// an 8-bit one's datapath); `neuron_updates` = neurons x timesteps;
+    /// `latency_s` integrates the static floor.
+    pub fn breakdown(
+        &self,
+        stats: &InferStats,
+        bits: u32,
+        neuron_updates: u64,
+        latency_s: f64,
+    ) -> EnergyBreakdown {
+        let field_scale = bits as f64 / 8.0;
+        // every streamed word carries 32/bits fields -> active synops
+        let lanes = (32 / bits) as u64;
+        let synops = stats.words_touched * lanes;
+        EnergyBreakdown {
+            synaptic_j: synops as f64 * self.pj_per_synop_8b * field_scale * 1e-12,
+            membrane_j: neuron_updates as f64 * self.pj_per_update * 1e-12,
+            memory_j: stats.words_touched as f64 * self.pj_per_word * 1e-12,
+            static_j: self.static_w * latency_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(words: u64) -> InferStats {
+        InferStats {
+            active_rows: words / 4,
+            words_touched: words,
+            spikes_emitted: 100,
+            dense_synops: words * 8,
+        }
+    }
+
+    #[test]
+    fn lower_precision_lower_energy_same_words() {
+        // At the same word traffic INT2 does 4x the synops of INT8 but
+        // each is 4x cheaper -> synaptic energy equal, memory equal;
+        // at the same *synop count* INT2 moves 4x fewer words -> wins.
+        let m = EnergyModel::default();
+        let e8 = m.breakdown(&stats(10_000), 8, 1000, 1e-3);
+        let e2_same_synops = m.breakdown(&stats(2_500), 2, 1000, 1e-3);
+        assert!(e2_same_synops.total_j() < e8.total_j());
+        assert!(e2_same_synops.memory_j < e8.memory_j);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = EnergyModel::default();
+        let b = m.breakdown(&stats(1000), 4, 500, 2e-3);
+        let sum = b.synaptic_j + b.membrane_j + b.memory_j + b.static_j;
+        assert!((b.total_j() - sum).abs() < 1e-18);
+        assert!(b.total_j() > 0.0);
+    }
+
+    #[test]
+    fn ours_beats_reported_neuron_energies() {
+        // our system-level inference energy (0.54 W x ~5 ms ~ 2.7 mJ)
+        // sits inside the span of the reported list: better than the
+        // J-class systems, comparable to the mJ-class neurons.
+        let ours = 0.54 * 4.83e-3;
+        let worst = REPORTED_ENERGY_J.iter().map(|&(_, e)| e).fold(0.0, f64::max);
+        assert!(ours < worst);
+        assert!(REPORTED_ENERGY_J.len() == 11);
+    }
+
+    #[test]
+    fn static_floor_scales_with_latency() {
+        let m = EnergyModel::default();
+        let short = m.breakdown(&stats(100), 8, 10, 1e-3);
+        let long = m.breakdown(&stats(100), 8, 10, 10e-3);
+        assert!(long.static_j > short.static_j * 9.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Neuron-level LUT/FF/delay/power estimation (Table I rows).
+
+use crate::nce::adder_tree::Structure;
+
+use super::primitives as p;
+
+/// One row of Table I (either paper-reported or model-estimated).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaRow {
+    pub luts: f64,
+    pub ffs: f64,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+}
+
+impl FpgaRow {
+    pub const fn new(luts: f64, ffs: f64, delay_ns: f64, power_mw: f64) -> Self {
+        Self { luts, ffs, delay_ns, power_mw }
+    }
+
+    /// Area-delay product (LUTs x ns) — the scalar the paper's
+    /// "lowest resource and latency" claim compresses to.
+    pub fn adp(&self) -> f64 {
+        self.luts * self.delay_ns
+    }
+}
+
+/// Price a neuron datapath from its primitive inventory.
+///
+/// `logic_levels` = LUT levels on the critical path; `activity` = mean
+/// switching activity relative to the proposed design (the single
+/// power-calibration knob, see module docs).
+pub fn estimate_neuron(s: &Structure, logic_levels: f64, activity: f64) -> FpgaRow {
+    let luts = s.full_adders as f64 * p::LUT_PER_FA
+        + s.mux2 as f64 * p::LUT_PER_MUX2
+        + s.comparator_bits as f64 * p::LUT_PER_CMP_BIT
+        + s.shifter_bits as f64 * p::LUT_PER_SHIFT_BIT
+        + s.rom_bits as f64 / p::ROM_BITS_PER_LUT;
+    let ffs = s.registers as f64;
+    let delay_ns = logic_levels * p::DELAY_PER_LEVEL_NS;
+    let power_mw = activity * (luts * p::MW_PER_LUT + ffs * p::MW_PER_FF);
+    FpgaRow { luts, ffs, delay_ns, power_mw }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(fa: usize, mux: usize, reg: usize, cmp: usize, sh: usize, rom: usize) -> Structure {
+        Structure {
+            full_adders: fa,
+            mux2: mux,
+            registers: reg,
+            comparator_bits: cmp,
+            shifter_bits: sh,
+            rom_bits: rom,
+        }
+    }
+
+    #[test]
+    fn pricing_formula() {
+        let row = estimate_neuron(&s(64, 694, 408, 32, 32, 0), 3.0, 1.0);
+        assert_eq!(row.luts, 64.0 + 347.0 + 16.0 + 32.0); // 459
+        assert_eq!(row.ffs, 408.0);
+        assert!((row.delay_ns - 0.39).abs() < 1e-9);
+        let want_p = 459.0 * 0.006 + 408.0 * 0.0035;
+        assert!((row.power_mw - want_p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_structure() {
+        let small = estimate_neuron(&s(32, 100, 64, 8, 8, 0), 3.0, 1.0);
+        let big = estimate_neuron(&s(64, 200, 128, 16, 16, 0), 3.0, 1.0);
+        assert!(big.luts > small.luts);
+        assert!(big.ffs > small.ffs);
+        assert!(big.power_mw > small.power_mw);
+    }
+
+    #[test]
+    fn rom_prices_in_lutram() {
+        let with_rom = estimate_neuron(&s(0, 0, 0, 0, 0, 3200), 1.0, 1.0);
+        assert_eq!(with_rom.luts, 100.0);
+    }
+
+    #[test]
+    fn adp_scalar() {
+        let r = FpgaRow::new(100.0, 50.0, 2.0, 1.0);
+        assert_eq!(r.adp(), 200.0);
+    }
+}

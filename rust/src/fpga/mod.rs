@@ -1,0 +1,23 @@
+//! FPGA resource/timing/power estimation — regenerates Tables I and II.
+//!
+//! The estimator is *structural*: a datapath is described as a primitive
+//! inventory ([`crate::nce::adder_tree::Structure`]) and priced with
+//! Virtex-7 primitive costs ([`primitives`]). Calibration policy
+//! (documented in DESIGN.md and EXPERIMENTS.md):
+//!
+//! - **LUT/FF**: derived from the inventory with fixed per-primitive
+//!   coefficients, calibrated once on the proposed NCE (459/408) and then
+//!   applied unchanged to every baseline — orderings and magnitudes are
+//!   emergent, not fitted per-row.
+//! - **Delay**: `logic_levels x LUT+routing delay (0.13 ns)`; levels come
+//!   from each design's critical-path description.
+//! - **Power**: `activity x (c_lut·LUTs + c_ff·FFs)`; the per-design
+//!   switching activity is the one free parameter (real toggle rates are
+//!   not derivable from structure), calibrated against reported power.
+
+pub mod estimate;
+pub mod primitives;
+pub mod system;
+
+pub use estimate::{estimate_neuron, FpgaRow};
+pub use system::{estimate_system, SystemConfig, SystemRow};

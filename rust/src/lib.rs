@@ -1,0 +1,50 @@
+//! # L-SPINE — Low-Precision SIMD Spiking Neural Compute Engine
+//!
+//! Full-stack reproduction of *L-SPINE: A Low-Precision SIMD Spiking Neural
+//! Compute Engine for Resource-efficient Edge Inference* (CS.AR 2026).
+//!
+//! The crate is the **Layer-3 coordinator + simulated accelerator** of the
+//! three-layer architecture described in `DESIGN.md`:
+//!
+//! - [`nce`] — bit-accurate model of the paper's multi-precision SIMD
+//!   neuron compute engine (Fig. 2): packed-word SIMD lanes, shift-add
+//!   multiplier-less LIF dynamics, the full-adder tree structure.
+//! - [`array`] — cycle-level simulator of the 2D NCE array, scratchpads,
+//!   ring FIFO, spike buffer, leak FSM and spike counter (Fig. 1).
+//! - [`riscv`] — the pico-rv32-class RV32I controller that orchestrates
+//!   layer execution over an MMIO bus.
+//! - [`encode`] — spike encoders (deterministic rate, Poisson, TTFS).
+//! - [`quant`] — the packing/quantization contract shared with the python
+//!   author path (`python/compile/`).
+//! - [`model`] — artifact loaders (LSPW weights / LSPD datasets / JSON
+//!   manifest) and the bit-accurate integer inference engine.
+//! - [`neurons`] + [`cordic`] — baseline neuron implementations used by
+//!   the paper's Table I comparison (CORDIC Izhikevich, Hodgkin–Huxley
+//!   variants, AdEx, ...).
+//! - [`fpga`] — structural LUT/FF/delay/power estimator (Virtex-7
+//!   primitive costs) that regenerates Tables I and II.
+//! - [`perf`] — CPU/GPU roofline models for the §III-D comparisons.
+//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas graphs
+//!   (HLO text artifacts; python never runs at inference time).
+//! - [`coordinator`] — the async edge-serving engine: request router,
+//!   dynamic batcher, timestep scheduler, sessions and metrics.
+//! - [`reports`] — regenerators for every table and figure in the paper.
+
+pub mod array;
+pub mod util;
+pub mod coordinator;
+pub mod cordic;
+pub mod encode;
+pub mod energy;
+pub mod fpga;
+pub mod model;
+pub mod nce;
+pub mod neurons;
+pub mod perf;
+pub mod quant;
+pub mod reports;
+pub mod riscv;
+pub mod runtime;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

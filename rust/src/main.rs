@@ -1,0 +1,282 @@
+//! `lspine` — CLI entrypoint of the L-SPINE reproduction.
+//!
+//! Subcommands:
+//!   serve     — run the serving engine on synthetic request traffic
+//!   eval      — evaluate a quantized artifact on the test set
+//!               (native engine, PJRT, or both with cross-check)
+//!   simulate  — cycle-simulate inference on the 2D NCE array
+//!   report    — regenerate the paper's tables and figures
+//!
+//! Examples:
+//!   lspine eval --model mlp --bits 4 --backend both
+//!   lspine simulate --model mlp --bits 2 --samples 32
+//!   lspine report --all
+//!   lspine serve --model mlp --bits 4 --requests 256 --concurrency 8
+
+use std::time::Instant;
+
+use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
+use lspine::model::SnnEngine;
+use lspine::reports;
+use lspine::runtime::executor::{ExecutorPool, ModelKey};
+use lspine::runtime::ArtifactStore;
+use lspine::util::cli::Args;
+
+const USAGE: &str = "\
+lspine <serve|eval|simulate|report> [options]
+  common:    --artifacts DIR (default: artifacts)  --model mlp|convnet
+  eval:      --bits 2|4|8  --scheme lspine|stbp|admm|trunc
+             --backend native|pjrt|both  --samples N
+  simulate:  --bits 2|4|8  --samples N
+  serve:     --bits 2|4|8  --backend native|pjrt  --requests N  --concurrency N
+  report:    --all | any of --table1 --table2 --fig4 --fig5 --energy --cpu-gpu
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> lspine::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        argv,
+        &[
+            "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
+            "requests=", "concurrency=", "all", "table1", "table2", "fig4",
+            "fig5", "energy", "cpu-gpu", "help",
+        ],
+    )?;
+    if args.has("help") || args.positional().is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args.positional()[0].as_str();
+    match cmd {
+        "eval" => cmd_eval(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        other => anyhow::bail!("unknown command {other:?}"),
+    }
+}
+
+fn cmd_eval(args: &Args) -> lspine::Result<()> {
+    let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+    let model = args.get_or("model", "mlp");
+    let bits = args.get_usize("bits", 4)? as u32;
+    let scheme = args.get_or("scheme", "lspine");
+    let backend = args.get_or("backend", "native");
+    let data = store.load_test_set()?;
+    let samples = args.get_usize("samples", data.n)?.min(data.n);
+
+    println!(
+        "eval: model={model} scheme={scheme} INT{bits} backend={backend} n={samples}"
+    );
+
+    let native_preds = if backend != "pjrt" {
+        let net = if scheme == "mixed" {
+            store.load_mixed_network(model)?
+        } else {
+            store.load_network(model, scheme, bits)?
+        };
+        let mut engine = SnnEngine::new(net);
+        let t0 = Instant::now();
+        let preds: Vec<usize> =
+            (0..samples).map(|i| engine.predict(data.sample(i))).collect();
+        let dt = t0.elapsed();
+        let acc = accuracy(&preds, &data, samples);
+        let st = engine.last_stats();
+        println!(
+            "  native: acc={:.2}%  {:.3} ms/sample  (event-driven: {:.1}% of dense synops)",
+            acc * 100.0,
+            dt.as_secs_f64() * 1e3 / samples as f64,
+            st.words_touched as f64 * engine.network().precision().fields_per_word() as f64
+                * 100.0
+                / st.dense_synops.max(1) as f64
+        );
+        Some(preds)
+    } else {
+        None
+    };
+
+    if backend != "native" {
+        anyhow::ensure!(
+            scheme == "lspine",
+            "PJRT artifacts exist only for the lspine scheme"
+        );
+        let mut pool = ExecutorPool::new(store, model)?;
+        let b = pool.best_batch(bits, 32)?;
+        let exe = pool.get(ModelKey { bits, batch: b })?;
+        let t0 = Instant::now();
+        let mut preds = Vec::with_capacity(samples);
+        for start in (0..samples).step_by(b) {
+            let end = (start + b).min(samples);
+            let rows: Vec<&[u8]> = (start..end).map(|i| data.sample(i)).collect();
+            preds.extend(exe.predict_u8(&rows)?);
+        }
+        let dt = t0.elapsed();
+        let acc = accuracy(&preds, &data, samples);
+        println!(
+            "  pjrt:   acc={:.2}%  {:.3} ms/sample (batch {b})",
+            acc * 100.0,
+            dt.as_secs_f64() * 1e3 / samples as f64
+        );
+        if let Some(native) = native_preds {
+            let agree = native.iter().zip(&preds).filter(|(a, b)| a == b).count();
+            println!("  cross-check: {agree}/{samples} predictions agree");
+            anyhow::ensure!(agree == samples, "backends disagree!");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> lspine::Result<()> {
+    use lspine::array::grid::ArrayConfig;
+    use lspine::array::sim::{simulate_inference, SimOverheads};
+
+    let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+    let model = args.get_or("model", "mlp");
+    let bits = args.get_usize("bits", 2)? as u32;
+    let samples = args.get_usize("samples", 16)?;
+    let data = store.load_test_set()?;
+    let net = store.load_network(model, "lspine", bits)?;
+    let cfg = ArrayConfig::paper();
+    let mut engine = SnnEngine::new(net.clone());
+
+    println!(
+        "simulate: {model} INT{bits} on {}x{} array @ {} MHz",
+        cfg.rows, cfg.cols, cfg.clock_mhz
+    );
+    let mut cyc = 0u64;
+    let mut lat = 0.0;
+    let mut util = 0.0;
+    let n = samples.min(data.n).max(1);
+    for i in 0..n {
+        engine.infer(data.sample(i));
+        let r = simulate_inference(
+            &net,
+            &cfg,
+            &SimOverheads::default(),
+            engine.last_layer_stats(),
+        )?;
+        cyc += r.total_cycles;
+        lat += r.latency_ms;
+        util += r.utilization;
+    }
+    println!(
+        "  mean over {n}: {} cycles, {:.4} ms, utilization {:.1}%",
+        cyc / n as u64,
+        lat / n as f64,
+        util / n as f64 * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> lspine::Result<()> {
+    let model = args.get_or("model", "mlp").to_string();
+    let bits = args.get_usize("bits", 4)?;
+    let backend = match args.get_or("backend", "pjrt") {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => anyhow::bail!("unknown backend {other:?}"),
+    };
+    let n_requests = args.get_usize("requests", 256)?;
+    let concurrency = args.get_usize("concurrency", 8)?.max(1);
+    let precision = ReqPrecision::parse(&bits.to_string())
+        .ok_or_else(|| anyhow::anyhow!("bad bits"))?;
+
+    let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+    let data = store.load_test_set()?;
+    let engine = ServingEngine::start(ServerConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        model: model.clone(),
+        backend,
+        ..Default::default()
+    })?;
+
+    println!(
+        "serve: {model} {} backend={backend:?} requests={n_requests} concurrency={concurrency}",
+        precision.name()
+    );
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    let mut inflight = Vec::new();
+    for i in 0..n_requests {
+        let idx = i % data.n;
+        inflight.push((idx, engine.submit(data.sample(idx), precision)?));
+        if inflight.len() >= concurrency {
+            let (idx, rx) = inflight.remove(0);
+            let resp = rx.recv().map_err(|_| anyhow::anyhow!("engine died"))?;
+            hits += (resp.prediction == data.labels[idx] as usize) as usize;
+        }
+    }
+    for (idx, rx) in inflight {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("engine died"))?;
+        hits += (resp.prediction == data.labels[idx] as usize) as usize;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "  {} req in {:.2} s = {:.1} req/s, accuracy {:.2}%",
+        n_requests,
+        dt.as_secs_f64(),
+        n_requests as f64 / dt.as_secs_f64(),
+        hits as f64 * 100.0 / n_requests as f64
+    );
+    println!("  {}", engine.metrics().summary());
+    engine.shutdown()
+}
+
+fn cmd_report(args: &Args) -> lspine::Result<()> {
+    let all = args.has("all");
+    let mut printed = false;
+    if all || args.has("table1") {
+        println!("{}", reports::table1_report());
+        printed = true;
+    }
+    if all || args.has("table2") {
+        let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+        let model = args.get_or("model", "mlp");
+        let net = store.load_network(model, "lspine", 2)?;
+        let data = store.load_test_set()?;
+        let m = reports::table2::measure_proposed(&net, &data, 16)?;
+        println!("{}", reports::table2_report(&m, model));
+        printed = true;
+    }
+    if all || args.has("fig4") {
+        let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+        for model in store.manifest().models.keys() {
+            println!("{}", reports::fig4_report(store.manifest(), model)?);
+        }
+        printed = true;
+    }
+    if all || args.has("fig5") {
+        let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+        println!("{}", reports::fig5_report(store.manifest())?);
+        printed = true;
+    }
+    if all || args.has("energy") {
+        println!("{}", reports::energy_report(0.54));
+        printed = true;
+    }
+    if all || args.has("cpu-gpu") {
+        println!("{}", reports::cpu_gpu_report());
+        printed = true;
+    }
+    if !printed {
+        anyhow::bail!("pick --all or at least one report flag");
+    }
+    Ok(())
+}
+
+fn accuracy(preds: &[usize], data: &lspine::model::io::Dataset, n: usize) -> f64 {
+    preds
+        .iter()
+        .zip(&data.labels[..n])
+        .filter(|(&p, &l)| p == l as usize)
+        .count() as f64
+        / n as f64
+}

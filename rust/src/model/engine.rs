@@ -1,0 +1,607 @@
+//! Bit-accurate integer SNN inference engine over the NCE datapath.
+//!
+//! Executes a [`QuantNetwork`] sample-by-sample with *exactly* the integer
+//! semantics of the AOT'd pallas graph (`python/compile/model.py`):
+//! deterministic rate encoding, per-layer LIF steps, im2col convolution
+//! (feature order `c*9 + ky*3 + kx`, SAME zero padding — pinned to
+//! `lax.conv_general_dilated_patches`), 2x2 max-pool (OR on binary
+//! spikes), and spike-count outputs. `rust/tests/integration.rs` asserts
+//! count-for-count equality against the PJRT execution of the HLO.
+//!
+//! All buffers are preallocated in [`SnnEngine::new`]; `infer` performs no
+//! heap allocation (the serving hot path budget — see EXPERIMENTS.md §Perf).
+
+use crate::encode::RateEncoder;
+use crate::nce::lif::LifParams;
+use crate::nce::NeuronComputeEngine;
+
+use super::network::{ArchDesc, QuantNetwork};
+
+/// Execution statistics of one inference (inputs to the energy model and
+/// cross-checks for the cycle simulator).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InferStats {
+    /// Input rows that carried a spike, summed over layers/steps/positions.
+    pub active_rows: u64,
+    /// Packed weight words streamed from the scratchpads.
+    pub words_touched: u64,
+    /// Total output spikes across all layers and steps.
+    pub spikes_emitted: u64,
+    /// Dense upper bound of synaptic ops (for sparsity accounting).
+    pub dense_synops: u64,
+}
+
+/// Per-layer activity aggregated over all timesteps of one inference —
+/// the workload description the cycle simulator schedules.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerStats {
+    /// Spatial positions the layer's dense step runs at (per timestep).
+    pub positions: u64,
+    /// Active (spiking) input rows, summed over steps and positions.
+    pub active_rows: u64,
+    /// Packed words streamed, summed over steps and positions.
+    pub words_touched: u64,
+    /// Output spikes, summed over steps and positions.
+    pub spikes_emitted: u64,
+    /// Output neurons per position.
+    pub n_out: u64,
+    /// Packed words per weight row.
+    pub n_words: u64,
+}
+
+/// Reusable single-sample inference engine (one engine per worker thread).
+#[derive(Debug, Clone)]
+pub struct SnnEngine {
+    net: QuantNetwork,
+    /// Per-layer i8 weight shadow, unpacked once at load (§Perf P3):
+    /// the functional hot path reads these; packed words remain the
+    /// storage/accounting model. INT2/4/8 all fit i8 exactly.
+    unpacked: Vec<Vec<i8>>,
+    /// Per-layer membrane state, flattened over spatial positions.
+    membranes: Vec<Vec<i32>>,
+    /// Per-layer output spike planes.
+    spike_bufs: Vec<Vec<u8>>,
+    /// Input spike plane (encoder output).
+    input_spikes: Vec<u8>,
+    /// im2col scratch for conv layers (max rows x 9*ch).
+    patch_buf: Vec<u8>,
+    /// Pool scratch (post-pool plane).
+    pool_buf: Vec<u8>,
+    /// Second pool scratch (stable copy feeding the next im2col).
+    pool_buf2: Vec<u8>,
+    /// Precomputed im2col gather tables for the two conv layers (§Perf P4).
+    im2col_tables: Vec<Vec<u32>>,
+    nce: NeuronComputeEngine,
+    counts: Vec<u32>,
+    stats: InferStats,
+    layer_stats: Vec<LayerStats>,
+}
+
+impl SnnEngine {
+    pub fn new(net: QuantNetwork) -> Self {
+        let (membranes, spike_bufs, patch_len, pool_len) = match &net.arch {
+            ArchDesc::Mlp { sizes, .. } => {
+                let m: Vec<Vec<i32>> =
+                    sizes[1..].iter().map(|&n| vec![0i32; n]).collect();
+                let s: Vec<Vec<u8>> =
+                    sizes[1..].iter().map(|&n| vec![0u8; n]).collect();
+                (m, s, 0, 0)
+            }
+            ArchDesc::Convnet { side, channels, classes, .. } => {
+                let (s1, s2) = (*side, side / 2);
+                let (c1, c2) = (channels[1], channels[2]);
+                let m = vec![
+                    vec![0i32; s1 * s1 * c1],
+                    vec![0i32; s2 * s2 * c2],
+                    vec![0i32; *classes],
+                ];
+                let s = vec![
+                    vec![0u8; s1 * s1 * c1],
+                    vec![0u8; s2 * s2 * c2],
+                    vec![0u8; *classes],
+                ];
+                // largest im2col plane: layer2 at side/2 with 9*c1 features
+                let patch = (s1 * s1 * 9 * channels[0]).max(s2 * s2 * 9 * c1);
+                let pool = s1 * s1 * c1; // pre-pool plane
+                (m, s, patch, pool)
+            }
+        };
+        let classes = net.arch.classes();
+        let input_dim = net.arch.input_dim();
+        // unpack each layer once; sign-extension semantics identical to
+        // the packed path (pinned by the nce tests)
+        let unpacked: Vec<Vec<i8>> = net
+            .layers
+            .iter()
+            .map(|l| {
+                let mut w = Vec::with_capacity(l.k_in * l.n_out);
+                for r in 0..l.k_in {
+                    let row = &l.packed[r * l.n_words..(r + 1) * l.n_words];
+                    for o in 0..l.n_out {
+                        let fields = l.precision.fields_per_word();
+                        w.push(crate::nce::simd::unpack_field(
+                            row[o / fields],
+                            l.precision,
+                            o % fields,
+                        ) as i8);
+                    }
+                }
+                w
+            })
+            .collect();
+        let im2col_tables = match &net.arch {
+            ArchDesc::Convnet { side, channels, .. } => vec![
+                im2col_table(*side, channels[0]),
+                im2col_table(side / 2, channels[1]),
+            ],
+            _ => Vec::new(),
+        };
+        Self {
+            net,
+            unpacked,
+            im2col_tables,
+            membranes,
+            spike_bufs,
+            input_spikes: vec![0u8; input_dim],
+            patch_buf: vec![0u8; patch_len],
+            pool_buf: vec![0u8; pool_len],
+            pool_buf2: vec![0u8; pool_len],
+            nce: NeuronComputeEngine::new(),
+            counts: vec![0u32; classes],
+            stats: InferStats::default(),
+            layer_stats: Vec::new(),
+        }
+    }
+
+    pub fn network(&self) -> &QuantNetwork {
+        &self.net
+    }
+
+    /// Stats of the most recent `infer` call.
+    pub fn last_stats(&self) -> InferStats {
+        self.stats
+    }
+
+    /// Per-layer activity of the most recent `infer` call (cycle-simulator
+    /// workload input).
+    pub fn last_layer_stats(&self) -> &[LayerStats] {
+        &self.layer_stats
+    }
+
+    /// Reset all membrane state (done automatically per `infer`).
+    pub fn reset(&mut self) {
+        for m in &mut self.membranes {
+            m.fill(0);
+        }
+    }
+
+    /// Run one sample (u8 pixels) through all timesteps; returns the
+    /// per-class spike counts. Argmax of the result is the prediction
+    /// (first maximum on ties — same rule as `np.argmax`).
+    pub fn infer(&mut self, pixels: &[u8]) -> &[u32] {
+        self.infer_steps(pixels, self.net.arch.timesteps())
+    }
+
+    /// Ablation variant: run only the first `timesteps` steps (early-exit
+    /// readout — the integer dynamics of a truncated run are exactly the
+    /// prefix of the full run, so accuracy-vs-T curves need no re-export).
+    pub fn infer_steps(&mut self, pixels: &[u8], timesteps: u32) -> &[u32] {
+        let mut enc = RateEncoder::new();
+        self.infer_with_encoder(pixels, timesteps, &mut enc)
+    }
+
+    /// Ablation variant: run with an arbitrary spike encoder (the
+    /// deployed coding is the deterministic rate code — this is how the
+    /// Poisson / TTFS comparisons in the ablation bench are produced).
+    pub fn infer_with_encoder(
+        &mut self,
+        pixels: &[u8],
+        timesteps: u32,
+        encoder: &mut dyn crate::encode::SpikeEncoder,
+    ) -> &[u32] {
+        assert_eq!(pixels.len(), self.net.arch.input_dim(), "bad input size");
+        assert!(timesteps <= self.net.arch.timesteps(), "beyond trained T");
+        self.reset();
+        self.counts.fill(0);
+        self.stats = InferStats::default();
+        self.stats.dense_synops =
+            self.net.arch.synops_per_step() * self.net.arch.timesteps() as u64;
+        let positions = self.net.arch.layer_positions();
+        self.layer_stats = self
+            .net
+            .layers
+            .iter()
+            .zip(&positions)
+            .map(|(l, &pos)| LayerStats {
+                positions: pos as u64,
+                n_out: l.n_out as u64,
+                n_words: l.n_words as u64,
+                ..Default::default()
+            })
+            .collect();
+
+        for t in 0..timesteps {
+            encoder.encode_step(pixels, t, &mut self.input_spikes);
+            match self.net.arch {
+                ArchDesc::Mlp { .. } => self.step_mlp(),
+                ArchDesc::Convnet { .. } => self.step_conv(),
+            }
+            let last = self.spike_bufs.last().unwrap();
+            for (c, &s) in self.counts.iter_mut().zip(last.iter()) {
+                *c += s as u32;
+            }
+        }
+        &self.counts
+    }
+
+    /// Argmax prediction for one sample.
+    pub fn predict(&mut self, pixels: &[u8]) -> usize {
+        self.infer(pixels);
+        argmax(&self.counts)
+    }
+
+    fn step_mlp(&mut self) {
+        let leak = self.net.arch.leak_shift();
+        let n_layers = self.net.layers.len();
+        for i in 0..n_layers {
+            let layer = &self.net.layers[i];
+            let params = LifParams::new(layer.theta, leak);
+            // split borrows: input spikes come from the previous plane
+            let (prev, rest) = if i == 0 {
+                (&self.input_spikes[..], &mut self.spike_bufs[..])
+            } else {
+                let (a, b) = self.spike_bufs.split_at_mut(i);
+                (&a[i - 1][..], b)
+            };
+            let out = &mut rest[0][..]; // == spike_bufs[i]
+            self.nce.step_unpacked(
+                prev,
+                &self.unpacked[i],
+                layer.n_words,
+                &mut self.membranes[i],
+                out,
+                params,
+            );
+            let spikes = out.iter().filter(|&&s| s != 0).count() as u64;
+            self.stats.active_rows += self.nce.last_active_rows() as u64;
+            self.stats.words_touched += self.nce.last_words_touched() as u64;
+            self.stats.spikes_emitted += spikes;
+            let ls = &mut self.layer_stats[i];
+            ls.active_rows += self.nce.last_active_rows() as u64;
+            ls.words_touched += self.nce.last_words_touched() as u64;
+            ls.spikes_emitted += spikes;
+        }
+    }
+
+    fn step_conv(&mut self) {
+        let (side, channels, classes) = match &self.net.arch {
+            ArchDesc::Convnet { side, channels, classes, .. } => {
+                (*side, channels.clone(), *classes)
+            }
+            _ => unreachable!(),
+        };
+        let leak = self.net.arch.leak_shift();
+        let (c0, c1, c2) = (channels[0], channels[1], channels[2]);
+        let s2 = side / 2;
+        let s4 = side / 4;
+
+        // ---- conv1: input plane [side,side,c0] -> spikes [side,side,c1]
+        im2col_gather(&self.input_spikes, &self.im2col_tables[0], &mut self.patch_buf);
+        self.lif_conv_layer(0, side * side, 9 * c0, leak);
+
+        // ---- pool1 (OR): [side,side,c1] -> pool_buf [s2,s2,c1]
+        maxpool2(&self.spike_bufs[0], side, c1, &mut self.pool_buf);
+
+        // ---- conv2 over pooled plane [s2,s2,c1] -> [s2,s2,c2]
+        self.pool_buf2[..s2 * s2 * c1].copy_from_slice(&self.pool_buf[..s2 * s2 * c1]);
+        im2col_gather(
+            &self.pool_buf2[..s2 * s2 * c1],
+            &self.im2col_tables[1],
+            &mut self.patch_buf,
+        );
+        self.lif_conv_layer(1, s2 * s2, 9 * c1, leak);
+
+        // ---- pool2 (OR): [s2,s2,c2] -> [s4,s4,c2] == fc input
+        maxpool2(&self.spike_bufs[1], s2, c2, &mut self.pool_buf);
+        let fc_in = s4 * s4 * c2;
+        let _ = classes;
+
+        // ---- fc
+        let layer = &self.net.layers[2];
+        let params = LifParams::new(layer.theta, leak);
+        self.nce.step_unpacked(
+            &self.pool_buf[..fc_in],
+            &self.unpacked[2],
+            layer.n_words,
+            &mut self.membranes[2],
+            &mut self.spike_bufs[2],
+            params,
+        );
+        let spikes = self.spike_bufs[2].iter().filter(|&&s| s != 0).count() as u64;
+        self.stats.active_rows += self.nce.last_active_rows() as u64;
+        self.stats.words_touched += self.nce.last_words_touched() as u64;
+        self.stats.spikes_emitted += spikes;
+        let ls = &mut self.layer_stats[2];
+        ls.active_rows += self.nce.last_active_rows() as u64;
+        ls.words_touched += self.nce.last_words_touched() as u64;
+        ls.spikes_emitted += spikes;
+    }
+
+    /// Run LIF layer `idx` over `positions` rows of `row_k` patch inputs.
+    fn lif_conv_layer(&mut self, idx: usize, positions: usize, row_k: usize, leak: u32) {
+        let layer = &self.net.layers[idx];
+        debug_assert_eq!(layer.k_in, row_k);
+        let n = layer.n_out;
+        let params = LifParams::new(layer.theta, leak);
+        let mut active = 0u64;
+        let mut words = 0u64;
+        let mut spikes = 0u64;
+        for pos in 0..positions {
+            let row = &self.patch_buf[pos * row_k..(pos + 1) * row_k];
+            let v = &mut self.membranes[idx][pos * n..(pos + 1) * n];
+            let out = &mut self.spike_bufs[idx][pos * n..(pos + 1) * n];
+            self.nce.step_unpacked(
+                row,
+                &self.unpacked[idx],
+                layer.n_words,
+                v,
+                out,
+                params,
+            );
+            active += self.nce.last_active_rows() as u64;
+            words += self.nce.last_words_touched() as u64;
+            spikes += out.iter().filter(|&&s| s != 0).count() as u64;
+        }
+        self.stats.active_rows += active;
+        self.stats.words_touched += words;
+        self.stats.spikes_emitted += spikes;
+        let ls = &mut self.layer_stats[idx];
+        ls.active_rows += active;
+        ls.words_touched += words;
+        ls.spikes_emitted += spikes;
+    }
+
+    /// Evaluate top-1 accuracy over a loaded LSPD dataset.
+    pub fn accuracy(&mut self, data: &super::io::Dataset) -> f64 {
+        let mut hits = 0usize;
+        for i in 0..data.n {
+            if self.predict(data.sample(i)) == data.labels[i] as usize {
+                hits += 1;
+            }
+        }
+        hits as f64 / data.n as f64
+    }
+}
+
+/// First-maximum argmax (ties resolve to the lowest index, like numpy).
+pub fn argmax(xs: &[u32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// im2col for 3x3 SAME convolution on a channel-last plane.
+///
+/// Input `[side, side, ch]` (row-major y, x, c); output rows are spatial
+/// positions (y*side + x), each row `9*ch` features ordered
+/// `c*9 + ky*3 + kx` — pinned to `lax.conv_general_dilated_patches`.
+pub fn im2col(plane: &[u8], side: usize, ch: usize, out: &mut [u8]) {
+    let row_k = 9 * ch;
+    debug_assert!(out.len() >= side * side * row_k);
+    debug_assert_eq!(plane.len(), side * side * ch);
+    for y in 0..side {
+        for x in 0..side {
+            let row = &mut out[(y * side + x) * row_k..(y * side + x + 1) * row_k];
+            for c in 0..ch {
+                for ky in 0..3usize {
+                    let sy = y as isize + ky as isize - 1;
+                    for kx in 0..3usize {
+                        let sx = x as isize + kx as isize - 1;
+                        let v = if sy >= 0
+                            && sy < side as isize
+                            && sx >= 0
+                            && sx < side as isize
+                        {
+                            plane[(sy as usize * side + sx as usize) * ch + c]
+                        } else {
+                            0
+                        };
+                        row[c * 9 + ky * 3 + kx] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Precomputed im2col gather table: `table[pos*9*ch + f]` is the source
+/// index into the plane, or `u32::MAX` for zero padding (§Perf P4 — the
+/// border tests move out of the per-timestep loop into construction).
+pub fn im2col_table(side: usize, ch: usize) -> Vec<u32> {
+    let row_k = 9 * ch;
+    let mut table = vec![u32::MAX; side * side * row_k];
+    for y in 0..side {
+        for x in 0..side {
+            let base = (y * side + x) * row_k;
+            for c in 0..ch {
+                for ky in 0..3usize {
+                    let sy = y as isize + ky as isize - 1;
+                    for kx in 0..3usize {
+                        let sx = x as isize + kx as isize - 1;
+                        if sy >= 0 && sy < side as isize && sx >= 0 && sx < side as isize
+                        {
+                            table[base + c * 9 + ky * 3 + kx] =
+                                ((sy as usize * side + sx as usize) * ch + c) as u32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    table
+}
+
+/// Table-driven im2col: one flat gather, no border branches.
+pub fn im2col_gather(plane: &[u8], table: &[u32], out: &mut [u8]) {
+    for (o, &idx) in out.iter_mut().zip(table) {
+        *o = if idx == u32::MAX { 0 } else { plane[idx as usize] };
+    }
+}
+
+/// 2x2 max pool (OR on binary spikes), channel-last.
+/// `[side, side, ch]` -> `[side/2, side/2, ch]`.
+pub fn maxpool2(plane: &[u8], side: usize, ch: usize, out: &mut [u8]) {
+    let half = side / 2;
+    debug_assert!(out.len() >= half * half * ch);
+    for y in 0..half {
+        for x in 0..half {
+            for c in 0..ch {
+                let p = |yy: usize, xx: usize| plane[(yy * side + xx) * ch + c];
+                let m = p(2 * y, 2 * x)
+                    .max(p(2 * y, 2 * x + 1))
+                    .max(p(2 * y + 1, 2 * x))
+                    .max(p(2 * y + 1, 2 * x + 1));
+                out[(y * half + x) * ch + c] = m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::QuantNetLayer;
+    use crate::nce::simd::{pack_row, Precision};
+
+    fn dense_layer(
+        k: usize,
+        n: usize,
+        p: Precision,
+        f: impl Fn(usize, usize) -> i32,
+        theta: i32,
+    ) -> QuantNetLayer {
+        let mut packed = Vec::new();
+        let n_words = n.div_ceil(p.fields_per_word());
+        for j in 0..k {
+            let row: Vec<i32> = (0..n).map(|o| f(j, o)).collect();
+            packed.extend(pack_row(&row, p));
+        }
+        QuantNetLayer {
+            precision: p,
+            k_in: k,
+            n_out: n,
+            n_words,
+            scale: 1.0,
+            theta,
+            packed,
+        }
+    }
+
+    fn tiny_mlp() -> QuantNetwork {
+        let arch = ArchDesc::Mlp { sizes: vec![4, 3, 2], timesteps: 4, leak_shift: 2 };
+        let l0 = dense_layer(4, 3, Precision::Int4, |j, o| ((j + o) % 3) as i32, 2);
+        let l1 = dense_layer(3, 2, Precision::Int4, |j, o| j as i32 - o as i32, 1);
+        QuantNetwork { arch, layers: vec![l0, l1] }
+    }
+
+    #[test]
+    fn mlp_inference_runs_and_is_deterministic() {
+        let mut e = SnnEngine::new(tiny_mlp());
+        let a = e.infer(&[255, 128, 0, 200]).to_vec();
+        let b = e.infer(&[255, 128, 0, 200]).to_vec();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&c| c <= 4)); // bounded by timesteps
+    }
+
+    #[test]
+    fn stats_populated() {
+        let mut e = SnnEngine::new(tiny_mlp());
+        e.infer(&[255, 255, 255, 255]);
+        let s = e.last_stats();
+        assert!(s.active_rows > 0);
+        assert!(s.dense_synops > 0);
+        assert!(s.words_touched >= s.active_rows); // >= 1 word per row
+    }
+
+    #[test]
+    fn zero_input_zero_spikes() {
+        let mut e = SnnEngine::new(tiny_mlp());
+        let counts = e.infer(&[0, 0, 0, 0]).to_vec();
+        assert!(counts.iter().all(|&c| c == 0));
+        assert_eq!(e.last_stats().active_rows, 0);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1, 3, 3, 2]), 1);
+        assert_eq!(argmax(&[5]), 0);
+        assert_eq!(argmax(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn im2col_matches_python_ordering() {
+        // mirror of the python pin: 4x4, 2 channels, value 100c + 10y + x
+        // (values here clipped to u8; use small side to stay in range)
+        let side = 4;
+        let ch = 2;
+        let mut plane = vec![0u8; side * side * ch];
+        for c in 0..ch {
+            for y in 0..side {
+                for x in 0..side {
+                    plane[(y * side + x) * ch + c] = (100 * c + 10 * y + x) as u8;
+                }
+            }
+        }
+        let mut out = vec![0u8; side * side * 9 * ch];
+        im2col(&plane, side, ch, &mut out);
+        let row = &out[(1 * side + 1) * 18..(1 * side + 1 + 1) * 18];
+        // expected from python: [0,1,2,10,11,12,20,21,22,100,...,122]
+        assert_eq!(
+            row,
+            &[0, 1, 2, 10, 11, 12, 20, 21, 22, 100, 101, 102, 110, 111, 112, 120, 121, 122]
+        );
+    }
+
+    #[test]
+    fn im2col_gather_matches_direct() {
+        // §Perf P4 table-driven gather == the branchy reference
+        for (side, ch) in [(4usize, 2usize), (8, 1), (8, 16), (16, 1)] {
+            let plane: Vec<u8> =
+                (0..side * side * ch).map(|i| (i * 37 % 251) as u8).collect();
+            let mut a = vec![0u8; side * side * 9 * ch];
+            let mut b = vec![0u8; side * side * 9 * ch];
+            im2col(&plane, side, ch, &mut a);
+            let table = im2col_table(side, ch);
+            im2col_gather(&plane, &table, &mut b);
+            assert_eq!(a, b, "side={side} ch={ch}");
+        }
+    }
+
+    #[test]
+    fn im2col_zero_pads_borders() {
+        let side = 3;
+        let plane = vec![1u8; side * side];
+        let mut out = vec![0u8; side * side * 9];
+        im2col(&plane, side, 1, &mut out);
+        // top-left position: ky=0 and kx=0 taps out of range -> 0
+        let row = &out[0..9];
+        assert_eq!(row, &[0, 0, 0, 0, 1, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn maxpool_is_or() {
+        let plane = vec![
+            0, 1, 0, 0, //
+            0, 0, 0, 0, //
+            1, 1, 0, 0, //
+            1, 1, 0, 0,
+        ];
+        let mut out = vec![0u8; 4];
+        maxpool2(&plane, 4, 1, &mut out);
+        assert_eq!(out, vec![1, 0, 1, 0]);
+    }
+}

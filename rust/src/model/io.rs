@@ -1,0 +1,505 @@
+//! Binary artifact readers — LSPW weights, LSPD datasets, JSON manifest.
+//!
+//! Formats are defined by `python/compile/model.py` (write side); this is
+//! the read side. All integers little-endian. Readers validate magics,
+//! versions and payload sizes and fail loudly on mismatch.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::nce::simd::Precision;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::network::{ArchDesc, QuantNetLayer, QuantNetwork};
+
+const WEIGHTS_MAGIC: &[u8; 4] = b"LSPW";
+const DATASET_MAGIC: &[u8; 4] = b"LSPD";
+const FORMAT_VERSION: u32 = 1;
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            anyhow::bail!("truncated artifact: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+}
+
+/// Load an LSPW packed-weights file into a [`QuantNetwork`].
+///
+/// The arch description comes from the manifest; the loader validates the
+/// weight shapes against it via [`QuantNetwork::validate`].
+pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwork> {
+    let blob = std::fs::read(&path)?;
+    let mut c = Cursor::new(&blob);
+    if c.bytes(4)? != WEIGHTS_MAGIC {
+        anyhow::bail!("{}: not an LSPW file", path.as_ref().display());
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        anyhow::bail!("unsupported LSPW version {version}");
+    }
+    let n_layers = c.u32()? as usize;
+    let timesteps = c.u32()?;
+    let leak_shift = c.u32()?;
+    if timesteps != arch.timesteps() || leak_shift != arch.leak_shift() {
+        anyhow::bail!(
+            "weights T={timesteps}/k={leak_shift} disagree with arch T={}/k={}",
+            arch.timesteps(),
+            arch.leak_shift()
+        );
+    }
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let bits = c.u32()?;
+        let k_in = c.u32()? as usize;
+        let n_out = c.u32()? as usize;
+        let n_words = c.u32()? as usize;
+        let scale = c.f32()?;
+        let theta = c.i32()?;
+        let precision = Precision::from_bits(bits)
+            .ok_or_else(|| anyhow::anyhow!("bad field width {bits}"))?;
+        let payload = c.bytes(k_in * n_words * 4)?;
+        let packed: Vec<u32> = payload
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        if theta < 1 {
+            anyhow::bail!("non-positive folded threshold {theta}");
+        }
+        layers.push(QuantNetLayer {
+            precision,
+            k_in,
+            n_out,
+            n_words,
+            scale,
+            theta,
+            packed,
+        });
+    }
+    if c.pos != blob.len() {
+        anyhow::bail!("trailing bytes in LSPW file");
+    }
+    let net = QuantNetwork { arch, layers };
+    net.validate()?;
+    Ok(net)
+}
+
+/// A loaded LSPD dataset: u8 pixels (encoder input) + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// Row-major `[n][dim]` u8 pixels — exactly what the encoder consumes.
+    pub pixels: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn sample(&self, i: usize) -> &[u8] {
+        &self.pixels[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// Load an LSPD dataset file.
+pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
+    let blob = std::fs::read(&path)?;
+    let mut c = Cursor::new(&blob);
+    if c.bytes(4)? != DATASET_MAGIC {
+        anyhow::bail!("{}: not an LSPD file", path.as_ref().display());
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        anyhow::bail!("unsupported LSPD version {version}");
+    }
+    let n = c.u32()? as usize;
+    let dim = c.u32()? as usize;
+    let classes = c.u32()? as usize;
+    let pixels = c.bytes(n * dim)?.to_vec();
+    let labels = c.bytes(n)?.to_vec();
+    if c.pos != blob.len() {
+        anyhow::bail!("trailing bytes in LSPD file");
+    }
+    if labels.iter().any(|&l| l as usize >= classes) {
+        anyhow::bail!("label out of range");
+    }
+    Ok(Dataset { n, dim, classes, pixels, labels })
+}
+
+// ---------------------------------------------------------------------
+// Manifest (JSON)
+// ---------------------------------------------------------------------
+
+/// Per-(scheme, bits) quantization record (Fig. 4 / Fig. 5 source data).
+#[derive(Debug, Clone)]
+pub struct QuantEntry {
+    pub accuracy: f64,
+    pub memory_bits: u64,
+    pub weights: String,
+    pub scales: Vec<f32>,
+    pub thetas: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainingInfo {
+    pub steps: u32,
+    pub loss_curve: Vec<f64>,
+    pub fp32_train_acc: f64,
+    pub fp32_test_acc: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fp32Info {
+    pub memory_bits: u64,
+    /// batch size -> HLO artifact file name
+    pub hlo: BTreeMap<usize, String>,
+}
+
+/// Layer-adaptive precision artifact (the paper's future-work feature).
+#[derive(Debug, Clone)]
+pub struct MixedEntry {
+    pub bits_per_layer: Vec<u32>,
+    pub accuracy: f64,
+    pub memory_bits: u64,
+    pub weights: String,
+    /// batch size -> HLO artifact file name
+    pub hlo: BTreeMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub arch: ArchDesc,
+    pub training: TrainingInfo,
+    pub fp32: Fp32Info,
+    /// scheme -> bits -> entry
+    pub quant: BTreeMap<String, BTreeMap<u32, QuantEntry>>,
+    /// bits -> batch size -> HLO artifact file name
+    pub hlo: BTreeMap<u32, BTreeMap<usize, String>>,
+    /// Layer-adaptive precision artifact, when exported.
+    pub mixed: Option<MixedEntry>,
+}
+
+impl ModelEntry {
+    pub fn quant_entry(&self, scheme: &str, bits: u32) -> Result<&QuantEntry> {
+        self.quant
+            .get(scheme)
+            .and_then(|m| m.get(&bits))
+            .ok_or_else(|| anyhow::anyhow!("no quant entry for {scheme}/INT{bits}"))
+    }
+
+    pub fn hlo_file(&self, bits: u32, batch: usize) -> Result<&str> {
+        self.hlo
+            .get(&bits)
+            .and_then(|m| m.get(&batch))
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no HLO artifact for INT{bits} batch {batch}"))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub file: String,
+    pub n_test: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+}
+
+/// The artifact manifest — everything the runtime needs to find/load.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u32,
+    pub dataset: DatasetInfo,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let format_version = v.req("format_version")?.as_u64().unwrap_or(0) as u32;
+        let d = v.req("dataset")?;
+        let dataset = DatasetInfo {
+            file: d.req("file")?.as_str().unwrap_or_default().to_string(),
+            n_test: d.req("n_test")?.as_u64().unwrap_or(0) as usize,
+            input_dim: d.req("input_dim")?.as_u64().unwrap_or(0) as usize,
+            classes: d.req("classes")?.as_u64().unwrap_or(0) as usize,
+        };
+        let mut models = BTreeMap::new();
+        for (name, entry) in v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), Self::model_from_json(entry)?);
+        }
+        Ok(Manifest { format_version, dataset, models })
+    }
+
+    fn model_from_json(v: &Value) -> Result<ModelEntry> {
+        let arch = ArchDesc::from_json(v.req("arch")?)?;
+        let t = v.req("training")?;
+        let training = TrainingInfo {
+            steps: t.req("steps")?.as_u64().unwrap_or(0) as u32,
+            loss_curve: t
+                .req("loss_curve")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .collect(),
+            fp32_train_acc: t.req("fp32_train_acc")?.as_f64().unwrap_or(0.0),
+            fp32_test_acc: t.req("fp32_test_acc")?.as_f64().unwrap_or(0.0),
+        };
+        let f = v.req("fp32")?;
+        let mut fp32_hlo = BTreeMap::new();
+        if let Some(m) = f.req("hlo")?.as_obj() {
+            for (b, file) in m {
+                fp32_hlo.insert(
+                    b.parse::<usize>()?,
+                    file.as_str().unwrap_or_default().to_string(),
+                );
+            }
+        }
+        let fp32 = Fp32Info {
+            memory_bits: f.req("memory_bits")?.as_u64().unwrap_or(0),
+            hlo: fp32_hlo,
+        };
+        let mut quant = BTreeMap::new();
+        if let Some(schemes) = v.req("quant")?.as_obj() {
+            for (scheme, per_bits) in schemes {
+                let mut inner = BTreeMap::new();
+                for (bits, e) in per_bits.as_obj().into_iter().flatten() {
+                    inner.insert(
+                        bits.parse::<u32>()?,
+                        QuantEntry {
+                            accuracy: e.req("accuracy")?.as_f64().unwrap_or(0.0),
+                            memory_bits: e.req("memory_bits")?.as_u64().unwrap_or(0),
+                            weights: e
+                                .req("weights")?
+                                .as_str()
+                                .unwrap_or_default()
+                                .to_string(),
+                            scales: e
+                                .req("scales")?
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|x| x.as_f64().map(|f| f as f32))
+                                .collect(),
+                            thetas: e
+                                .req("thetas")?
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|x| x.as_i64().map(|i| i as i32))
+                                .collect(),
+                        },
+                    );
+                }
+                quant.insert(scheme.clone(), inner);
+            }
+        }
+        let mut hlo = BTreeMap::new();
+        if let Some(per_prec) = v.req("hlo")?.as_obj() {
+            for (prec, per_batch) in per_prec {
+                let bits: u32 = prec
+                    .strip_prefix("int")
+                    .ok_or_else(|| anyhow::anyhow!("bad hlo key {prec:?}"))?
+                    .parse()?;
+                let mut inner = BTreeMap::new();
+                for (b, file) in per_batch.as_obj().into_iter().flatten() {
+                    inner.insert(
+                        b.parse::<usize>()?,
+                        file.as_str().unwrap_or_default().to_string(),
+                    );
+                }
+                hlo.insert(bits, inner);
+            }
+        }
+        let mixed = match v.get("mixed") {
+            Some(m) => {
+                let mut mhlo = BTreeMap::new();
+                for (b, file) in m.req("hlo")?.as_obj().into_iter().flatten() {
+                    mhlo.insert(
+                        b.parse::<usize>()?,
+                        file.as_str().unwrap_or_default().to_string(),
+                    );
+                }
+                Some(MixedEntry {
+                    bits_per_layer: m
+                        .req("bits_per_layer")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_u64().map(|b| b as u32))
+                        .collect(),
+                    accuracy: m.req("accuracy")?.as_f64().unwrap_or(0.0),
+                    memory_bits: m.req("memory_bits")?.as_u64().unwrap_or(0),
+                    weights: m
+                        .req("weights")?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    hlo: mhlo,
+                })
+            }
+            None => None,
+        };
+        Ok(ModelEntry { arch, training, fp32, quant, hlo, mixed })
+    }
+}
+
+/// Load and validate `manifest.json` from the artifacts directory.
+pub fn load_manifest(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+    let path = artifacts_dir.as_ref().join("manifest.json");
+    let s = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!("{}: {e} (run `make artifacts` first)", path.display())
+    })?;
+    let m = Manifest::from_json(&json::parse(&s)?)?;
+    if m.format_version != FORMAT_VERSION {
+        anyhow::bail!("unsupported manifest version {}", m.format_version);
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_lspw(layers: &[(u32, u32, u32, u32, f32, i32, Vec<u32>)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(WEIGHTS_MAGIC);
+        for v in [FORMAT_VERSION, layers.len() as u32, 16, 2] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for (bits, k, n, nw, scale, theta, words) in layers {
+            for v in [*bits, *k, *n, *nw] {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            b.extend_from_slice(&scale.to_le_bytes());
+            b.extend_from_slice(&theta.to_le_bytes());
+            for w in words {
+                b.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    fn tiny_arch() -> ArchDesc {
+        ArchDesc::Mlp { sizes: vec![2, 4], timesteps: 16, leak_shift: 2 }
+    }
+
+    #[test]
+    fn lspw_roundtrip() {
+        let dir = std::env::temp_dir().join("lspine_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.w.bin");
+        // 2 inputs x 4 outputs INT8 -> 1 word per row
+        let blob = write_lspw(&[(8, 2, 4, 1, 0.5, 2, vec![0x04030201, 0x7F00FF80])]);
+        std::fs::write(&p, blob).unwrap();
+        let net = load_weights(&p, tiny_arch()).unwrap();
+        assert_eq!(net.layers.len(), 1);
+        let l = &net.layers[0];
+        assert_eq!((l.k_in, l.n_out, l.n_words), (2, 4, 1));
+        assert_eq!(l.scale, 0.5);
+        assert_eq!(l.theta, 2);
+        assert_eq!(l.packed, vec![0x04030201, 0x7F00FF80]);
+        assert_eq!(net.memory_bits(), 64);
+    }
+
+    #[test]
+    fn lspw_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("lspine_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load_weights(&p, tiny_arch()).is_err());
+    }
+
+    #[test]
+    fn lspw_rejects_truncated() {
+        let dir = std::env::temp_dir().join("lspine_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.bin");
+        let mut blob = write_lspw(&[(8, 2, 4, 1, 0.5, 2, vec![1, 2])]);
+        blob.truncate(blob.len() - 3);
+        std::fs::write(&p, blob).unwrap();
+        assert!(load_weights(&p, tiny_arch()).is_err());
+    }
+
+    #[test]
+    fn lspw_rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("lspine_io_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shape.bin");
+        // arch expects (2,4) but file says (3,4)
+        let blob = write_lspw(&[(8, 3, 4, 1, 0.5, 2, vec![1, 2, 3])]);
+        std::fs::write(&p, blob).unwrap();
+        assert!(load_weights(&p, tiny_arch()).is_err());
+    }
+
+    #[test]
+    fn lspd_roundtrip() {
+        let dir = std::env::temp_dir().join("lspine_io_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.bin");
+        let mut b = Vec::new();
+        b.extend_from_slice(DATASET_MAGIC);
+        for v in [FORMAT_VERSION, 2u32, 3, 10] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&[1, 2, 3, 4, 5, 6]); // pixels
+        b.extend_from_slice(&[7, 9]); // labels
+        std::fs::write(&p, b).unwrap();
+        let d = load_dataset(&p).unwrap();
+        assert_eq!((d.n, d.dim, d.classes), (2, 3, 10));
+        assert_eq!(d.sample(1), &[4, 5, 6]);
+        assert_eq!(d.labels, vec![7, 9]);
+    }
+
+    #[test]
+    fn lspd_rejects_bad_label() {
+        let dir = std::env::temp_dir().join("lspine_io_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dl.bin");
+        let mut b = Vec::new();
+        b.extend_from_slice(DATASET_MAGIC);
+        for v in [FORMAT_VERSION, 1u32, 1, 4] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(0);
+        b.push(4); // label 4 >= classes 4
+        std::fs::write(&p, b).unwrap();
+        assert!(load_dataset(&p).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Quantized SNN models: artifact loaders + the integer inference engine.
+//!
+//! - [`io`] — binary readers for the python-exported artifacts:
+//!   LSPW packed weights, LSPD test datasets, and the JSON manifest.
+//! - [`network`] — the architecture description (MLP / ConvNet) shared
+//!   with `python/compile/snn.py`.
+//! - [`engine`] — bit-accurate integer inference over [`crate::nce`];
+//!   produces spike counts identical to the pallas/PJRT path (asserted by
+//!   `rust/tests/integration.rs`).
+
+pub mod engine;
+pub mod io;
+pub mod network;
+
+pub use engine::SnnEngine;
+pub use io::{load_dataset, load_manifest, load_weights, Dataset, Manifest};
+pub use network::{ArchDesc, QuantNetwork, QuantNetLayer};

@@ -1,0 +1,265 @@
+//! Network descriptions — the rust twin of `python/compile/snn.py` archs.
+
+use crate::nce::simd::Precision;
+use crate::util::json::Value;
+
+/// Architecture topology, parsed from the manifest's `arch` entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArchDesc {
+    /// Fully-connected LIF stack; `sizes` includes input and output dims.
+    Mlp {
+        sizes: Vec<usize>,
+        timesteps: u32,
+        leak_shift: u32,
+    },
+    /// conv3x3 -> pool2 -> conv3x3 -> pool2 -> fc (all layers LIF).
+    Convnet {
+        side: usize,
+        channels: Vec<usize>,
+        classes: usize,
+        timesteps: u32,
+        leak_shift: u32,
+    },
+}
+
+impl ArchDesc {
+    /// Parse the manifest's tagged `arch` object (`{"kind": "mlp", ...}`).
+    pub fn from_json(v: &Value) -> crate::Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default();
+        let u = |key: &str| -> crate::Result<u64> {
+            v.req(key)?
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("arch.{key} not an integer"))
+        };
+        let list = |key: &str| -> crate::Result<Vec<usize>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("arch.{key} not a list"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|n| n as usize)
+                        .ok_or_else(|| anyhow::anyhow!("arch.{key} element"))
+                })
+                .collect()
+        };
+        match kind {
+            "mlp" => Ok(ArchDesc::Mlp {
+                sizes: list("sizes")?,
+                timesteps: u("timesteps")? as u32,
+                leak_shift: u("leak_shift")? as u32,
+            }),
+            "convnet" => Ok(ArchDesc::Convnet {
+                side: u("side")? as usize,
+                channels: list("channels")?,
+                classes: u("classes")? as usize,
+                timesteps: u("timesteps")? as u32,
+                leak_shift: u("leak_shift")? as u32,
+            }),
+            other => anyhow::bail!("unknown arch kind {other:?}"),
+        }
+    }
+
+    pub fn timesteps(&self) -> u32 {
+        match self {
+            ArchDesc::Mlp { timesteps, .. } => *timesteps,
+            ArchDesc::Convnet { timesteps, .. } => *timesteps,
+        }
+    }
+
+    pub fn leak_shift(&self) -> u32 {
+        match self {
+            ArchDesc::Mlp { leak_shift, .. } => *leak_shift,
+            ArchDesc::Convnet { leak_shift, .. } => *leak_shift,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match self {
+            ArchDesc::Mlp { sizes, .. } => sizes[0],
+            ArchDesc::Convnet { side, channels, .. } => side * side * channels[0],
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            ArchDesc::Mlp { sizes, .. } => *sizes.last().unwrap(),
+            ArchDesc::Convnet { classes, .. } => *classes,
+        }
+    }
+
+    /// Expected per-layer (k_in, n_out) shapes; used to validate LSPW files.
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        match self {
+            ArchDesc::Mlp { sizes, .. } => {
+                sizes.windows(2).map(|w| (w[0], w[1])).collect()
+            }
+            ArchDesc::Convnet { side, channels, classes, .. } => {
+                let fc_in = (side / 4) * (side / 4) * channels[2];
+                vec![
+                    (9 * channels[0], channels[1]),
+                    (9 * channels[1], channels[2]),
+                    (fc_in, *classes),
+                ]
+            }
+        }
+    }
+
+    /// Total neurons (membrane words) — the V-scratchpad footprint.
+    pub fn total_neurons(&self) -> usize {
+        match self {
+            ArchDesc::Mlp { sizes, .. } => sizes[1..].iter().sum(),
+            ArchDesc::Convnet { side, channels, classes, .. } => {
+                side * side * channels[1]
+                    + (side / 2) * (side / 2) * channels[2]
+                    + classes
+            }
+        }
+    }
+
+    /// Synaptic operations per timestep assuming dense activity
+    /// (upper bound; the event-driven engine does less).
+    pub fn synops_per_step(&self) -> u64 {
+        self.layer_shapes()
+            .iter()
+            .zip(self.layer_positions())
+            .map(|(&(k, n), pos)| (k * n * pos) as u64)
+            .sum()
+    }
+
+    /// Spatial positions each layer's dense step runs at (1 for fc,
+    /// H*W for conv layers mapped through im2col).
+    pub fn layer_positions(&self) -> Vec<usize> {
+        match self {
+            ArchDesc::Mlp { sizes, .. } => vec![1; sizes.len() - 1],
+            ArchDesc::Convnet { side, .. } => {
+                vec![side * side, (side / 2) * (side / 2), 1]
+            }
+        }
+    }
+}
+
+/// One loaded layer: packed weights + folded integer parameters.
+#[derive(Debug, Clone)]
+pub struct QuantNetLayer {
+    pub precision: Precision,
+    pub k_in: usize,
+    pub n_out: usize,
+    pub n_words: usize,
+    pub scale: f32,
+    pub theta: i32,
+    /// Row-major `[k_in][n_words]` storage words.
+    pub packed: Vec<u32>,
+}
+
+impl QuantNetLayer {
+    /// Packed storage footprint in bits (what Fig. 4's x-axis measures).
+    pub fn memory_bits(&self) -> usize {
+        self.packed.len() * 32
+    }
+}
+
+/// A complete quantized network ready for the engine or the simulator.
+#[derive(Debug, Clone)]
+pub struct QuantNetwork {
+    pub arch: ArchDesc,
+    pub layers: Vec<QuantNetLayer>,
+}
+
+impl QuantNetwork {
+    pub fn memory_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.memory_bits()).sum()
+    }
+
+    /// Uniform precision of the network (all artifacts are uniform today;
+    /// layer-adaptive precision is the paper's future-work knob).
+    pub fn precision(&self) -> Precision {
+        self.layers[0].precision
+    }
+
+    /// Validate layer shapes against the architecture description.
+    pub fn validate(&self) -> crate::Result<()> {
+        let shapes = self.arch.layer_shapes();
+        if shapes.len() != self.layers.len() {
+            anyhow::bail!(
+                "layer count mismatch: arch {} vs weights {}",
+                shapes.len(),
+                self.layers.len()
+            );
+        }
+        for (i, (l, &(k, n))) in self.layers.iter().zip(&shapes).enumerate() {
+            if l.k_in != k || l.n_out != n {
+                anyhow::bail!(
+                    "layer {i} shape mismatch: arch ({k},{n}) vs weights ({},{})",
+                    l.k_in,
+                    l.n_out
+                );
+            }
+            let expect_words = n.div_ceil(l.precision.fields_per_word());
+            if l.n_words != expect_words {
+                anyhow::bail!("layer {i} word count mismatch");
+            }
+            if l.packed.len() != l.k_in * l.n_words {
+                anyhow::bail!("layer {i} payload size mismatch");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp() -> ArchDesc {
+        ArchDesc::Mlp { sizes: vec![256, 128, 64, 10], timesteps: 16, leak_shift: 2 }
+    }
+
+    fn conv() -> ArchDesc {
+        ArchDesc::Convnet {
+            side: 16,
+            channels: vec![1, 8, 16],
+            classes: 10,
+            timesteps: 16,
+            leak_shift: 2,
+        }
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        assert_eq!(mlp().layer_shapes(), vec![(256, 128), (128, 64), (64, 10)]);
+        assert_eq!(mlp().input_dim(), 256);
+        assert_eq!(mlp().classes(), 10);
+        assert_eq!(mlp().total_neurons(), 202);
+    }
+
+    #[test]
+    fn conv_shapes() {
+        assert_eq!(conv().layer_shapes(), vec![(9, 8), (72, 16), (256, 10)]);
+        assert_eq!(conv().input_dim(), 256);
+        assert_eq!(conv().total_neurons(), 16 * 16 * 8 + 8 * 8 * 16 + 10);
+        assert_eq!(conv().layer_positions(), vec![256, 64, 1]);
+    }
+
+    #[test]
+    fn synops() {
+        // mlp: 256*128 + 128*64 + 64*10 = 41600 per step
+        assert_eq!(mlp().synops_per_step(), 41600);
+    }
+
+    #[test]
+    fn arch_json_roundtrip() {
+        let j = r#"{"kind":"mlp","sizes":[256,128,64,10],"timesteps":16,"leak_shift":2}"#;
+        let a = ArchDesc::from_json(&crate::util::json::parse(j).unwrap()).unwrap();
+        assert_eq!(a, mlp());
+        let j2 = r#"{"kind":"convnet","side":16,"channels":[1,8,16],"classes":10,"timesteps":16,"leak_shift":2}"#;
+        let a2 = ArchDesc::from_json(&crate::util::json::parse(j2).unwrap()).unwrap();
+        assert_eq!(a2, conv());
+    }
+
+    #[test]
+    fn arch_json_rejects_bad_kind() {
+        let j = r#"{"kind":"resnet","timesteps":16,"leak_shift":2}"#;
+        assert!(ArchDesc::from_json(&crate::util::json::parse(j).unwrap()).is_err());
+    }
+}

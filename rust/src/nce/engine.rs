@@ -1,0 +1,193 @@
+//! The Neuron Compute Engine — one PE of the 2D array.
+//!
+//! Bundles the SIMD accumulation datapath, the multiplier-less LIF unit
+//! and the local accumulator scratch into the unit the array simulator
+//! schedules and the fpga estimator costs. Functionally it is a thin,
+//! allocation-free wrapper over [`super::lif::lif_step_row`].
+
+use super::adder_tree::{SimdAdder, Structure};
+use super::lif::{lif_step_row, lif_step_row_unpacked, LifParams};
+use super::simd::Precision;
+
+/// One neuron compute engine (NCE) instance.
+///
+/// The engine is stateless across layers — membrane state lives in the
+/// caller's scratchpad (temporal reuse, per the paper's dataflow) — but it
+/// owns its accumulator scratch so the hot loop never allocates.
+#[derive(Debug, Clone)]
+pub struct NeuronComputeEngine {
+    acc: Vec<i32>,
+    /// Cycle cost accounting for the last `step` (array simulator input).
+    last_active_rows: usize,
+    last_words_touched: usize,
+}
+
+impl Default for NeuronComputeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NeuronComputeEngine {
+    pub fn new() -> Self {
+        Self {
+            acc: Vec::new(),
+            last_active_rows: 0,
+            last_words_touched: 0,
+        }
+    }
+
+    /// One timestep of a tile of `v.len()` neurons with `spikes_in` inputs.
+    ///
+    /// `packed_w` is row-major `[k_in][n_words]` as stored in the LSPW
+    /// artifact. Spike outputs are written to `out_spikes`; membrane `v`
+    /// updates in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        spikes_in: &[u8],
+        packed_w: &[u32],
+        n_words: usize,
+        precision: Precision,
+        v: &mut [i32],
+        out_spikes: &mut [u8],
+        params: LifParams,
+    ) {
+        if self.acc.len() < v.len() {
+            self.acc.resize(v.len(), 0);
+        }
+        self.last_active_rows = spikes_in.iter().filter(|&&s| s != 0).count();
+        self.last_words_touched = self.last_active_rows * n_words;
+        lif_step_row(
+            spikes_in, packed_w, n_words, precision, v, out_spikes, params,
+            &mut self.acc,
+        );
+    }
+
+    /// Fast-path variant of [`step`](Self::step) over a pre-unpacked i8
+    /// weight shadow (§Perf P3). `n_words` is only used for the streamed-
+    /// word accounting — identical to what the packed path would touch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_unpacked(
+        &mut self,
+        spikes_in: &[u8],
+        w_i8: &[i8],
+        n_words: usize,
+        v: &mut [i32],
+        out_spikes: &mut [u8],
+        params: LifParams,
+    ) {
+        if self.acc.len() < v.len() {
+            self.acc.resize(v.len(), 0);
+        }
+        self.last_active_rows = spikes_in.iter().filter(|&&s| s != 0).count();
+        self.last_words_touched = self.last_active_rows * n_words;
+        lif_step_row_unpacked(
+            spikes_in,
+            w_i8,
+            v.len(),
+            v,
+            out_spikes,
+            params,
+            &mut self.acc,
+        );
+    }
+
+    /// Input rows that actually carried a spike in the last step
+    /// (event-driven work; the rest were skipped).
+    pub fn last_active_rows(&self) -> usize {
+        self.last_active_rows
+    }
+
+    /// Packed words streamed from the weight scratchpad in the last step.
+    pub fn last_words_touched(&self) -> usize {
+        self.last_words_touched
+    }
+
+    /// Primitive inventory of ONE NCE — the "Proposed" row of Table I.
+    ///
+    /// Composition (Fig. 2):
+    /// - the 32-bit reconfigurable SIMD adder (accumulate stage),
+    /// - a second 32-bit adder slice for the membrane update (V - leak + I),
+    /// - the leak barrel shifter (5-stage, 32-bit, but only the fixed
+    ///   shift taps are wired: 32 bits x 1 stage),
+    /// - the threshold comparator (32-bit) and reset subtractor sharing
+    ///   the membrane adder (mux-steered),
+    /// - membrane + accumulator + pipeline registers,
+    /// - precision-control steering muxes.
+    pub fn structure() -> Structure {
+        let adder = SimdAdder::new().structure(); // accumulate stage
+        let membrane_adder = SimdAdder::new().structure(); // V update / reset
+        let extra = Structure {
+            full_adders: 0,
+            // PC steering + unpack field-select network + reset mux
+            mux2: 64 + 32 + 32,
+            // membrane(32) + accumulator(32) + spike/ctrl pipeline(8)
+            registers: 32 + 32 + 8,
+            comparator_bits: 32,
+            shifter_bits: 32,
+            rom_bits: 0,
+        };
+        adder.add(&membrane_adder).add(&extra)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nce::simd::pack_row;
+
+    #[test]
+    fn engine_step_smoke() {
+        let p = Precision::Int4;
+        // 3 inputs x 4 outputs, all weights +2
+        let mut packed = Vec::new();
+        for _ in 0..3 {
+            packed.extend(pack_row(&[2, 2, 2, 2], p));
+        }
+        let n_words = 1;
+        let mut v = vec![0i32; 4];
+        let mut out = vec![0u8; 4];
+        let mut nce = NeuronComputeEngine::new();
+        nce.step(
+            &[1, 0, 1],
+            &packed,
+            n_words,
+            p,
+            &mut v,
+            &mut out,
+            LifParams::new(4, 2),
+        );
+        // I = 2+2 = 4 >= theta 4 -> all fire, reset to 0
+        assert_eq!(out, vec![1, 1, 1, 1]);
+        assert_eq!(v, vec![0, 0, 0, 0]);
+        assert_eq!(nce.last_active_rows(), 2);
+        assert_eq!(nce.last_words_touched(), 2);
+    }
+
+    #[test]
+    fn structure_is_stable() {
+        let s = NeuronComputeEngine::structure();
+        // Pin the inventory: Table I's "Proposed" row derives from this.
+        assert_eq!(s.full_adders, 64);
+        assert_eq!(s.mux2, 16 + 16 + 128);
+        assert_eq!(s.registers, 32 + 32 + 72);
+        assert_eq!(s.comparator_bits, 32);
+        assert_eq!(s.shifter_bits, 32);
+    }
+
+    #[test]
+    fn no_reallocation_across_steps() {
+        let p = Precision::Int2;
+        let packed = pack_row(&[1; 16], p);
+        let mut v = vec![0i32; 16];
+        let mut out = vec![0u8; 16];
+        let mut nce = NeuronComputeEngine::new();
+        nce.step(&[1], &packed, 1, p, &mut v, &mut out, LifParams::new(1, 2));
+        let cap = nce.acc.capacity();
+        for _ in 0..10 {
+            nce.step(&[1], &packed, 1, p, &mut v, &mut out, LifParams::new(1, 2));
+        }
+        assert_eq!(nce.acc.capacity(), cap);
+    }
+}

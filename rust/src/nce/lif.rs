@@ -1,0 +1,336 @@
+//! Integer LIF dynamics — the multiplier-less neuron of the paper.
+//!
+//! Exact mirror of `python/compile/kernels/ref.py::lif_step_ref` (and hence
+//! of the pallas kernel): all arithmetic is `i32`, the leak is an
+//! *arithmetic* right shift, threshold is a `>=` comparator, reset is by
+//! subtraction. No multiplier appears anywhere on the datapath — spike
+//! gating is a select, the `theta * spike` below is `spike ∈ {0,1}` i.e. a
+//! conditional subtract in hardware.
+
+use super::simd::{unpack_field, Precision};
+
+/// Static per-layer neuron parameters (folded integer domain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LifParams {
+    /// Integer firing threshold (folded from theta_fp / weight scale).
+    pub theta: i32,
+    /// Leak = `V >> leak_shift` subtracted each step (decay 1 - 2^-k).
+    pub leak_shift: u32,
+}
+
+impl LifParams {
+    pub fn new(theta: i32, leak_shift: u32) -> Self {
+        assert!(theta >= 1, "threshold must be positive");
+        assert!(leak_shift < 31, "leak shift out of range");
+        Self { theta, leak_shift }
+    }
+}
+
+/// One LIF update for a single neuron: returns (spike, v_next).
+#[inline(always)]
+pub fn lif_update(v: i32, i_syn: i32, p: LifParams) -> (bool, i32) {
+    let v_new = v - (v >> p.leak_shift) + i_syn;
+    let fired = v_new >= p.theta;
+    (fired, if fired { v_new - p.theta } else { v_new })
+}
+
+/// One timestep for a row of `n_out` neurons fed by binary `spikes_in`.
+///
+/// `packed_w` is row-major `[k_in][n_words]` — the same layout the LSPW
+/// artifact stores and the pallas kernel consumes. `v` holds the membrane
+/// potentials and is updated in place; `out_spikes` receives 0/1.
+///
+/// The inner loop is the paper's dataflow: for every *input* spike the
+/// weight row is streamed word-by-word and each word's fields accumulate
+/// in parallel (the SIMD lanes). Zero input spikes skip the row entirely —
+/// event-driven execution, the source of SNN efficiency.
+pub fn lif_step_row(
+    spikes_in: &[u8],
+    packed_w: &[u32],
+    n_words: usize,
+    precision: Precision,
+    v: &mut [i32],
+    out_spikes: &mut [u8],
+    p: LifParams,
+    acc: &mut [i32],
+) {
+    let n_out = v.len();
+    debug_assert_eq!(out_spikes.len(), n_out);
+    debug_assert_eq!(packed_w.len(), spikes_in.len() * n_words);
+    debug_assert!(acc.len() >= n_out);
+
+    let fields = precision.fields_per_word();
+    acc[..n_out].fill(0);
+
+    // Synaptic accumulation: event-driven over input spikes.
+    for (j, &s) in spikes_in.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        let row = &packed_w[j * n_words..(j + 1) * n_words];
+        accumulate_row(row, precision, fields, &mut acc[..n_out]);
+    }
+
+    // Membrane update + threshold + reset per neuron.
+    for o in 0..n_out {
+        let (fired, v_next) = lif_update(v[o], acc[o], p);
+        v[o] = v_next;
+        out_spikes[o] = fired as u8;
+    }
+}
+
+/// One timestep for a row of neurons from a pre-unpacked i8 weight shadow.
+///
+/// §Perf P3: the functional engine unpacks each layer's packed words once
+/// (at load time) into an i8 matrix — modelling the unpacked operand bus
+/// that feeds the adder lanes — so the per-event inner loop is a widening
+/// `i8 -> i32` add that LLVM auto-vectorizes. Packed words remain the
+/// storage model: artifacts, scratchpad sizing and the cycle/energy
+/// accounting all still count packed words. Bit-exact with
+/// [`lif_step_row`] (asserted by tests + the engine's load-time check).
+#[allow(clippy::too_many_arguments)]
+pub fn lif_step_row_unpacked(
+    spikes_in: &[u8],
+    w_i8: &[i8],
+    n_out: usize,
+    v: &mut [i32],
+    out_spikes: &mut [u8],
+    p: LifParams,
+    acc: &mut [i32],
+) {
+    debug_assert_eq!(v.len(), n_out);
+    debug_assert_eq!(w_i8.len(), spikes_in.len() * n_out);
+    acc[..n_out].fill(0);
+    for (j, &s) in spikes_in.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        let row = &w_i8[j * n_out..(j + 1) * n_out];
+        for (slot, &w) in acc[..n_out].iter_mut().zip(row) {
+            *slot += w as i32;
+        }
+    }
+    for o in 0..n_out {
+        let (fired, v_next) = lif_update(v[o], acc[o], p);
+        v[o] = v_next;
+        out_spikes[o] = fired as u8;
+    }
+}
+
+/// Accumulate one packed weight row into `acc` (unpack + add, SIMD lanes).
+#[inline]
+fn accumulate_row(row: &[u32], precision: Precision, fields: usize, acc: &mut [i32]) {
+    let n_out = acc.len();
+    match precision {
+        // Specialized unpack loops: the per-word field walk is the hot
+        // path of the whole simulator (see EXPERIMENTS.md §Perf).
+        Precision::Int2 => accumulate_row_p::<2>(row, fields, acc),
+        Precision::Int4 => accumulate_row_p::<4>(row, fields, acc),
+        Precision::Int8 => accumulate_row_p::<8>(row, fields, acc),
+    }
+    let _ = n_out;
+}
+
+#[inline]
+fn accumulate_row_p<const B: u32>(row: &[u32], fields: usize, acc: &mut [i32]) {
+    let n_out = acc.len();
+    let sign = 1u32 << (B - 1);
+    let mask = (1u32 << B) - 1;
+
+    // §Perf P2: split full words from the ragged tail so the hot loop has
+    // a compile-time trip count (`fields` is constant for a given B) and
+    // no per-word `min` — lets LLVM fully unroll the field walk.
+    let full_words = n_out / fields;
+    let (full, tail_acc) = acc.split_at_mut(full_words * fields);
+    for (word_idx, chunk) in full.chunks_exact_mut(fields).enumerate() {
+        let mut w = row[word_idx];
+        for slot in chunk {
+            let f = w & mask;
+            *slot += ((f ^ sign) as i32).wrapping_sub(sign as i32);
+            w >>= B;
+        }
+    }
+    if !tail_acc.is_empty() {
+        let mut w = row[full_words];
+        for slot in tail_acc {
+            let f = w & mask;
+            *slot += ((f ^ sign) as i32).wrapping_sub(sign as i32);
+            w >>= B;
+        }
+    }
+    let _ = unpack_field; // keep the scalar helper referenced for docs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nce::simd::pack_row;
+
+    fn pack_matrix(w: &[Vec<i32>], p: Precision) -> (Vec<u32>, usize) {
+        let n_words = w[0].len().div_ceil(p.fields_per_word());
+        let mut out = Vec::new();
+        for row in w {
+            out.extend(pack_row(row, p));
+        }
+        (out, n_words)
+    }
+
+    /// Dense reference (no packing, no event-driven skip) for cross-check.
+    fn lif_step_dense(
+        spikes: &[u8],
+        w: &[Vec<i32>],
+        v: &mut [i32],
+        p: LifParams,
+    ) -> Vec<u8> {
+        let n = v.len();
+        let mut out = vec![0u8; n];
+        for o in 0..n {
+            let mut i_syn = 0i32;
+            for (j, &s) in spikes.iter().enumerate() {
+                if s != 0 {
+                    i_syn += w[j][o];
+                }
+            }
+            let (fired, v2) = lif_update(v[o], i_syn, p);
+            v[o] = v2;
+            out[o] = fired as u8;
+        }
+        out
+    }
+
+    #[test]
+    fn leak_is_arithmetic_shift() {
+        let p = LifParams::new(100, 2);
+        // v=8: 8 - 2 = 6 ; v=-8: -8 - (-2) = -6 ; v=-5: -5 - (-2) = -3
+        assert_eq!(lif_update(8, 0, p), (false, 6));
+        assert_eq!(lif_update(-8, 0, p), (false, -6));
+        assert_eq!(lif_update(-5, 0, p), (false, -3));
+    }
+
+    #[test]
+    fn threshold_boundary_fires() {
+        let p = LifParams::new(5, 2);
+        let (fired, v) = lif_update(0, 5, p);
+        assert!(fired);
+        assert_eq!(v, 0); // reset by subtraction
+    }
+
+    #[test]
+    fn reset_keeps_excess() {
+        let p = LifParams::new(5, 2);
+        let (fired, v) = lif_update(0, 13, p);
+        assert!(fired);
+        assert_eq!(v, 8); // 13 - 5: may fire again next step
+    }
+
+    #[test]
+    fn row_step_matches_dense_reference() {
+        // deterministic LCG so the test needs no rand dependency here
+        let mut state = 0x2545F491u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (state >> 33) as u32
+        };
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            for (k, n) in [(1usize, 1usize), (9, 8), (37, 23), (64, 10)] {
+                let w: Vec<Vec<i32>> = (0..k)
+                    .map(|_| {
+                        (0..n)
+                            .map(|_| lo + (next() as i32).rem_euclid(hi - lo + 1))
+                            .collect()
+                    })
+                    .collect();
+                let (packed, n_words) = pack_matrix(&w, p);
+                let spikes: Vec<u8> = (0..k).map(|_| (next() % 2) as u8).collect();
+                let v0: Vec<i32> =
+                    (0..n).map(|_| (next() as i32).rem_euclid(100) - 50).collect();
+
+                let params = LifParams::new(7, 2);
+                let mut v_a = v0.clone();
+                let mut out_a = vec![0u8; n];
+                let mut acc = vec![0i32; n];
+                lif_step_row(
+                    &spikes, &packed, n_words, p, &mut v_a, &mut out_a, params,
+                    &mut acc,
+                );
+
+                let mut v_b = v0.clone();
+                let out_b = lif_step_dense(&spikes, &w, &mut v_b, params);
+                assert_eq!(out_a, out_b, "{} k={k} n={n}", p.name());
+                assert_eq!(v_a, v_b, "{} k={k} n={n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn unpacked_path_matches_packed() {
+        // §Perf P3 fast path == packed reference, across precisions/shapes
+        let mut state = 0xABCDEF12u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(7);
+            (state >> 33) as u32
+        };
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            for (k, n) in [(1usize, 1usize), (9, 16), (144, 32), (64, 10)] {
+                let w: Vec<Vec<i32>> = (0..k)
+                    .map(|_| {
+                        (0..n)
+                            .map(|_| lo + (next() as i32).rem_euclid(hi - lo + 1))
+                            .collect()
+                    })
+                    .collect();
+                let (packed, n_words) = pack_matrix(&w, p);
+                let w_i8: Vec<i8> =
+                    w.iter().flatten().map(|&x| x as i8).collect();
+                let spikes: Vec<u8> = (0..k).map(|_| (next() % 2) as u8).collect();
+                let v0: Vec<i32> =
+                    (0..n).map(|_| (next() as i32).rem_euclid(120) - 60).collect();
+                let params = LifParams::new(9, 2);
+
+                let mut v_a = v0.clone();
+                let mut out_a = vec![0u8; n];
+                let mut acc = vec![0i32; n];
+                lif_step_row(
+                    &spikes, &packed, n_words, p, &mut v_a, &mut out_a, params,
+                    &mut acc,
+                );
+                let mut v_b = v0.clone();
+                let mut out_b = vec![0u8; n];
+                lif_step_row_unpacked(
+                    &spikes, &w_i8, n, &mut v_b, &mut out_b, params, &mut acc,
+                );
+                assert_eq!(out_a, out_b, "{} k={k} n={n}", p.name());
+                assert_eq!(v_a, v_b, "{} k={k} n={n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn no_spikes_only_leak() {
+        let p = Precision::Int8;
+        let packed = pack_row(&[7, 7, 7, 7], p);
+        let mut v = vec![8, -8, 3, 0];
+        let mut out = vec![0u8; 4];
+        let mut acc = vec![0i32; 4];
+        lif_step_row(
+            &[0, 0],
+            &[packed.clone(), packed].concat(),
+            1,
+            p,
+            &mut v,
+            &mut out,
+            LifParams::new(100, 2),
+            &mut acc,
+        );
+        assert_eq!(out, vec![0, 0, 0, 0]);
+        assert_eq!(v, vec![6, -6, 3, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "threshold must be positive")]
+    fn rejects_nonpositive_theta() {
+        LifParams::new(0, 2);
+    }
+}

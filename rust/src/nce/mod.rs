@@ -1,0 +1,26 @@
+//! Neuron Compute Engine — bit-accurate model of the paper's Fig. 2 datapath.
+//!
+//! The NCE is the computational backbone of L-SPINE: a single datapath that
+//! reconfigures between 16x INT2, 4x INT4 and 1x INT8 *compute* lanes
+//! (precision control `PC`), fed from 32-bit packed weight words, with a
+//! multiplier-less LIF neuron (shift leak, comparator threshold,
+//! reset-by-subtraction) fused behind the accumulator.
+//!
+//! Submodules:
+//! - [`simd`] — the packed-word storage contract (mirrors
+//!   `python/compile/kernels/packed.py` exactly; golden vectors pin them).
+//! - [`lif`] — the integer LIF dynamics (mirrors `kernels/ref.py`).
+//! - [`adder_tree`] — gate-level structural model of the reconfigurable
+//!   full-adder hierarchy; used for bit-exact cross-checks *and* as the
+//!   netlist the [`crate::fpga`] estimator costs.
+//! - [`engine`] — the row-level NCE: one `step()` == one timestep of one
+//!   neuron tile, the unit the [`crate::array`] simulator schedules.
+
+pub mod adder_tree;
+pub mod engine;
+pub mod lif;
+pub mod simd;
+
+pub use engine::NeuronComputeEngine;
+pub use lif::{lif_step_row, LifParams};
+pub use simd::{pack_row, sign_extend, unpack_word, Precision};

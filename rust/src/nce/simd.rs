@@ -1,0 +1,221 @@
+//! Packed SIMD storage words — the bit-level contract of the datapath.
+//!
+//! Signed fields of width `b` in {2, 4, 8} are stored two's-complement at
+//! bit offset `b*i` of a little-endian `u32`, `32/b` fields per word. This
+//! must match `python/compile/kernels/packed.py` bit-for-bit: the golden
+//! vectors below are asserted by both test suites.
+
+/// Precision mode of the unified datapath (the paper's `PC` signal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// 2-bit fields, 16 storage fields / word, 16 parallel compute lanes.
+    Int2,
+    /// 4-bit fields, 8 storage fields / word, 4 parallel compute lanes.
+    Int4,
+    /// 8-bit fields, 4 storage fields / word, 1 compute lane.
+    Int8,
+}
+
+impl Precision {
+    /// Field width in bits.
+    pub const fn bits(self) -> u32 {
+        match self {
+            Precision::Int2 => 2,
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+        }
+    }
+
+    /// Storage fields per 32-bit word.
+    pub const fn fields_per_word(self) -> usize {
+        (32 / self.bits()) as usize
+    }
+
+    /// Parallel *compute* lanes of the paper's SIMD engine (16x/4x/1x).
+    /// Storage density and compute parallelism differ for INT4/INT8
+    /// because the adder hierarchy pairs fields across sub-words.
+    pub const fn compute_lanes(self) -> usize {
+        match self {
+            Precision::Int2 => 16,
+            Precision::Int4 => 4,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// Two's-complement value range `(qmin, qmax)` of one field.
+    pub const fn qrange(self) -> (i32, i32) {
+        let b = self.bits();
+        (-(1 << (b - 1)), (1 << (b - 1)) - 1)
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Self> {
+        match bits {
+            2 => Some(Precision::Int2),
+            4 => Some(Precision::Int4),
+            8 => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Precision::Int2 => "INT2",
+            Precision::Int4 => "INT4",
+            Precision::Int8 => "INT8",
+        }
+    }
+}
+
+/// Sign-extend a `bits`-wide field (in the low bits of `field`) to i32.
+///
+/// Hardware form: xor with the sign bit then subtract it — two gates per
+/// lane, no multiplier, matching the python `(f ^ s) - s` contract.
+#[inline(always)]
+pub const fn sign_extend(field: u32, bits: u32) -> i32 {
+    let sign = 1u32 << (bits - 1);
+    ((field ^ sign) as i32).wrapping_sub(sign as i32)
+}
+
+/// Unpack all fields of one storage word into `out` (length >= fields).
+#[inline]
+pub fn unpack_word(word: u32, p: Precision, out: &mut [i32]) {
+    let b = p.bits();
+    let mask = if b == 32 { u32::MAX } else { (1u32 << b) - 1 };
+    for (i, slot) in out.iter_mut().enumerate().take(p.fields_per_word()) {
+        *slot = sign_extend((word >> (b * i as u32)) & mask, b);
+    }
+}
+
+/// Unpack field `i` of a storage word.
+#[inline(always)]
+pub fn unpack_field(word: u32, p: Precision, i: usize) -> i32 {
+    let b = p.bits();
+    let mask = (1u32 << b) - 1;
+    sign_extend((word >> (b * i as u32)) & mask, b)
+}
+
+/// Pack a row of signed values into storage words (zero-padded tail).
+///
+/// # Panics
+/// Panics if any value is outside the precision's two's-complement range —
+/// out-of-range fields would silently alias, so this is a hard contract.
+pub fn pack_row(values: &[i32], p: Precision) -> Vec<u32> {
+    let (lo, hi) = p.qrange();
+    let fields = p.fields_per_word();
+    let b = p.bits();
+    let mask = (1u32 << b) - 1;
+    let n_words = values.len().div_ceil(fields);
+    let mut words = vec![0u32; n_words];
+    for (j, &v) in values.iter().enumerate() {
+        assert!(
+            (lo..=hi).contains(&v),
+            "value {v} out of {} range [{lo}, {hi}]",
+            p.name()
+        );
+        let field = (v as u32) & mask;
+        words[j / fields] |= field << (b * (j % fields) as u32);
+    }
+    words
+}
+
+/// Unpack `n` values from a row of storage words.
+pub fn unpack_row(words: &[u32], p: Precision, n: usize) -> Vec<i32> {
+    let fields = p.fields_per_word();
+    let mut out = Vec::with_capacity(n);
+    for j in 0..n {
+        out.push(unpack_field(words[j / fields], p, j % fields));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_counts() {
+        assert_eq!(Precision::Int2.fields_per_word(), 16);
+        assert_eq!(Precision::Int4.fields_per_word(), 8);
+        assert_eq!(Precision::Int8.fields_per_word(), 4);
+        assert_eq!(Precision::Int2.compute_lanes(), 16);
+        assert_eq!(Precision::Int4.compute_lanes(), 4);
+        assert_eq!(Precision::Int8.compute_lanes(), 1);
+    }
+
+    #[test]
+    fn qranges() {
+        assert_eq!(Precision::Int2.qrange(), (-2, 1));
+        assert_eq!(Precision::Int4.qrange(), (-8, 7));
+        assert_eq!(Precision::Int8.qrange(), (-128, 127));
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend(0b01, 2), 1);
+        assert_eq!(sign_extend(0b10, 2), -2);
+        assert_eq!(sign_extend(0b11, 2), -1);
+        assert_eq!(sign_extend(0x7F, 8), 127);
+        assert_eq!(sign_extend(0x80, 8), -128);
+        assert_eq!(sign_extend(0xFF, 8), -1);
+    }
+
+    /// Golden vectors — identical to python/tests/test_packed.py::GOLDEN.
+    /// Any change here must change there too.
+    #[test]
+    fn golden_vectors() {
+        let row2: Vec<i32> = [-2, -1, 0, 1].repeat(4);
+        assert_eq!(pack_row(&row2, Precision::Int2), vec![0x4E4E4E4E]);
+
+        let row4 = [-8, -1, 0, 7, 3, -4, 1, 2];
+        assert_eq!(pack_row(&row4, Precision::Int4), vec![0x21C370F8]);
+
+        let row8 = [-128, -1, 0, 127];
+        assert_eq!(pack_row(&row8, Precision::Int8), vec![0x7F00FF80]);
+
+        let row8b = [1, 2, 3, 4, 5];
+        assert_eq!(
+            pack_row(&row8b, Precision::Int8),
+            vec![0x04030201, 0x00000005]
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_precisions() {
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            // exhaustive over the field range, at several row lengths
+            for n in [1usize, 3, 16, 17, 33] {
+                let vals: Vec<i32> =
+                    (0..n).map(|j| lo + (j as i32 % (hi - lo + 1))).collect();
+                let words = pack_row(&vals, p);
+                assert_eq!(unpack_row(&words, p, n), vals, "{} n={n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn padding_fields_zero() {
+        let words = pack_row(&[-1, 2, -3], Precision::Int8);
+        assert_eq!(words.len(), 1);
+        assert_eq!((words[0] >> 24) & 0xFF, 0);
+        assert_eq!(unpack_row(&words, Precision::Int8, 4)[3], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of INT2 range")]
+    fn pack_rejects_out_of_range() {
+        pack_row(&[2], Precision::Int2);
+    }
+
+    #[test]
+    fn unpack_word_bulk_matches_field() {
+        let w = 0xDEADBEEFu32;
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let mut bulk = vec![0i32; p.fields_per_word()];
+            unpack_word(w, p, &mut bulk);
+            for (i, &v) in bulk.iter().enumerate() {
+                assert_eq!(v, unpack_field(w, p, i));
+            }
+        }
+    }
+}

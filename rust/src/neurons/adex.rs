@@ -1,0 +1,160 @@
+//! Adaptive-exponential integrate-and-fire (AdEx) — the CORDIC AEx-IF
+//! baseline of [36] (used in the §III-D energy comparison).
+//!
+//! Dynamics (Brette & Gerstner 2005), Q16.16, Euler dt = 0.1 ms:
+//!     C dV/dt = -gL (V - EL) + gL ΔT exp((V - VT)/ΔT) - w + I
+//!     τw dw/dt = a (V - EL) - w
+//!     spike: V >= 0  =>  V <- Vr, w <- w + b
+
+use crate::cordic::{fmul, from_fix, to_fix, Cordic};
+
+use super::SpikingNeuron;
+
+#[allow(dead_code)]
+const C_M: f64 = 1.0; // normalized capacitance
+const G_L: f64 = 0.3;
+const E_L: f64 = -70.0;
+const V_T: f64 = -50.0;
+const DELTA_T: f64 = 2.0;
+#[allow(dead_code)]
+const TAU_W: f64 = 30.0;
+const V_RESET: f64 = -58.0;
+#[allow(dead_code)]
+const DT: f64 = 0.1;
+
+/// AdEx neuron with CORDIC-computed exponential.
+#[derive(Debug, Clone)]
+pub struct AdexCordic {
+    cordic: Cordic,
+    a: f64,
+    b: f64,
+    v: i64,
+    w: i64,
+    /// Delta-sigma charge accumulators (see `neurons::hh` for why fixed-
+    /// point Euler needs them).
+    acc_v: i64,
+    acc_w: i64,
+}
+
+impl AdexCordic {
+    pub fn new(a: f64, b: f64, iters: usize) -> Self {
+        let mut n = Self {
+            cordic: Cordic::new(iters),
+            a,
+            b,
+            v: 0,
+            w: 0,
+            acc_v: 0,
+            acc_w: 0,
+        };
+        n.reset();
+        n
+    }
+
+    /// Tonic-firing parameter set.
+    pub fn tonic() -> Self {
+        Self::new(0.0, 1.0, 16)
+    }
+
+    /// Adapting parameter set (spike-frequency adaptation via b).
+    pub fn adapting() -> Self {
+        Self::new(0.02, 6.0, 16)
+    }
+
+    pub fn v_mv(&self) -> f64 {
+        from_fix(self.v)
+    }
+
+    /// exp(z) with range reduction into CORDIC convergence. The upper
+    /// clamp bounds the hardware datapath but must stay high enough that
+    /// the regenerative current still diverges (clamping near the
+    /// threshold creates a spurious equilibrium and the neuron stalls).
+    fn exp(&self, z: i64) -> i64 {
+        let z = z.clamp(to_fix(-8.0), to_fix(8.0));
+        let ln2 = to_fix(std::f64::consts::LN_2);
+        let k = z.div_euclid(ln2);
+        let r = z - k * ln2;
+        let e = self.cordic.exp(r);
+        if k >= 0 {
+            e << k
+        } else {
+            e >> (-k)
+        }
+    }
+}
+
+impl SpikingNeuron for AdexCordic {
+    fn step(&mut self, i_syn: i64) -> bool {
+        let (v, w) = (self.v, self.w);
+        let exp_term = fmul(
+            to_fix(G_L * DELTA_T),
+            self.exp(fmul(v - to_fix(V_T), to_fix(1.0 / DELTA_T))),
+        );
+        // delta-sigma integration: DT/C = 0.1 = 1/10, DT/tau_w = 1/300
+        let raw_v = -fmul(to_fix(G_L), v - to_fix(E_L)) + exp_term - w + i_syn;
+        self.acc_v += raw_v;
+        let dv = self.acc_v / 10;
+        self.acc_v -= dv * 10;
+        let raw_w = fmul(to_fix(self.a), v - to_fix(E_L)) - w;
+        self.acc_w += raw_w;
+        let dw = self.acc_w / 300;
+        self.acc_w -= dw * 300;
+        self.v = v + dv;
+        self.w = w + dw;
+        if self.v >= to_fix(0.0) {
+            self.v = to_fix(V_RESET);
+            self.w += to_fix(self.b);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v = to_fix(E_L);
+        self.w = 0;
+        self.acc_v = 0;
+        self.acc_w = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "CORDIC AdEx IF"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neurons::count_spikes;
+
+    #[test]
+    fn rest_is_stable() {
+        let mut n = AdexCordic::tonic();
+        for _ in 0..5000 {
+            n.step(0);
+        }
+        assert!((n.v_mv() - E_L).abs() < 2.0, "v={}", n.v_mv());
+    }
+
+    #[test]
+    fn tonic_firing_under_drive() {
+        let mut n = AdexCordic::tonic();
+        let spikes = count_spikes(&mut n, to_fix(8.0), 5000); // 500 ms
+        assert!(spikes >= 3, "spikes={spikes}");
+    }
+
+    #[test]
+    fn adaptation_slows_firing() {
+        let i = to_fix(8.0);
+        let tonic = count_spikes(&mut AdexCordic::tonic(), i, 5000);
+        let adapt = count_spikes(&mut AdexCordic::adapting(), i, 5000);
+        assert!(adapt < tonic, "adapting {adapt} !< tonic {tonic}");
+    }
+
+    #[test]
+    fn rheobase_exists() {
+        // tiny current must not fire; strong current must
+        assert_eq!(count_spikes(&mut AdexCordic::tonic(), to_fix(1.0), 5000), 0);
+        assert!(count_spikes(&mut AdexCordic::tonic(), to_fix(20.0), 5000) > 5);
+    }
+}

@@ -1,0 +1,391 @@
+//! Hodgkin–Huxley baselines — CORDIC [19], base-2 multiplier-less [43],
+//! and RAM-table [43] rate-function backends.
+//!
+//! Classic HH membrane dynamics in Q16.16 fixed point (Euler, dt = 0.01 ms):
+//!     C dV/dt = I - gNa m^3 h (V - ENa) - gK n^4 (V - EK) - gL (V - EL)
+//! with the usual alpha/beta gating rates. The three Table I variants
+//! differ only in how `exp()` is realized — exactly the axis the cited
+//! designs explore:
+//!
+//! - [`ExpBackend::Cordic`]     — hyperbolic CORDIC with range reduction
+//! - [`ExpBackend::Base2`]      — shift-add base-2 approximation
+//!   (multiplier-less, per [19]'s base-2 functions / [43])
+//! - [`ExpBackend::RamTable`]   — 1024-entry lookup with clamping
+
+use crate::cordic::{fmul, from_fix, to_fix, Cordic, FRAC_BITS, ONE};
+
+use super::SpikingNeuron;
+
+/// Fixed-point divide (Q16.16).
+#[inline]
+fn fdiv(a: i64, b: i64) -> i64 {
+    debug_assert!(b != 0);
+    (a << FRAC_BITS) / b
+}
+
+/// How the rate functions' exponentials are computed.
+#[derive(Debug, Clone)]
+pub enum ExpBackend {
+    Cordic(Cordic),
+    Base2,
+    RamTable(Vec<i64>),
+}
+
+impl ExpBackend {
+    pub fn ram(entries: usize) -> Self {
+        // table over z in [-12, 0]; index = (-z) * (entries/12)
+        let tab = (0..entries)
+            .map(|i| to_fix((-(i as f64) * 12.0 / entries as f64).exp()))
+            .collect();
+        ExpBackend::RamTable(tab)
+    }
+
+    /// exp(z) for z <= 0 (the HH rate functions only need decaying exps;
+    /// positive args are clamped — they only occur past the singularity
+    /// guards).
+    pub fn exp_neg(&self, z: i64) -> i64 {
+        let z = z.min(0).max(to_fix(-12.0));
+        match self {
+            ExpBackend::Cordic(c) => {
+                // range-reduce: z = -k ln2 + r, r in (-ln2/2, ln2/2]
+                let ln2 = to_fix(std::f64::consts::LN_2);
+                let k = ((-z) + ln2 / 2) / ln2;
+                let r = z + k * ln2;
+                let e = c.exp(r);
+                e >> k
+            }
+            ExpBackend::Base2 => {
+                // z*log2(e) via shift-add: log2e ≈ 1 + 1/2 - 1/16 + 1/256
+                let zl = z + (z >> 1) - (z >> 4) + (z >> 8);
+                let neg = -zl; // >= 0
+                let k = neg >> FRAC_BITS; // integer part
+                let f = neg & (ONE - 1); // fraction in [0,1)
+                // 2^-f ≈ 1 - f*ln2 + (f*ln2)^2/2, shift-add form:
+                // ln2 ≈ 1/2 + 3/16 + 1/128
+                let fl = (f >> 1) + (f >> 3) + (f >> 4) + (f >> 7);
+                let sq = fmul(fl, fl) >> 1;
+                let frac = ONE - fl + sq;
+                frac >> k
+            }
+            ExpBackend::RamTable(tab) => {
+                let idx = ((-z) as i128 * tab.len() as i128 / to_fix(12.0) as i128)
+                    as usize;
+                tab[idx.min(tab.len() - 1)]
+            }
+        }
+    }
+
+    /// exp(z) for either sign: positive arguments (which occur below the
+    /// resting potential in the decaying rate terms) use
+    /// `exp(p) = 1/exp(-p)` so every backend still only stores the
+    /// negative-argument table/approximation. Clamped to |z| <= 8.
+    pub fn exp_signed(&self, z: i64) -> i64 {
+        if z <= 0 {
+            self.exp_neg(z)
+        } else {
+            let e = self.exp_neg(-z.min(to_fix(8.0)));
+            ((ONE as i128 * ONE as i128) / e.max(1) as i128) as i64
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            ExpBackend::Cordic(_) => "Iterative CORDIC H&H",
+            ExpBackend::Base2 => "Multiplier-less H&H",
+            ExpBackend::RamTable(_) => "RAM H&H",
+        }
+    }
+}
+
+/// Q16.16 Hodgkin–Huxley neuron with a pluggable exp backend.
+///
+/// Integration uses a delta-sigma charge accumulator per state variable:
+/// the raw derivative (before the small dt scaling) accumulates at full
+/// Q16.16 precision and only whole dv quanta move the state. Without
+/// this, `fmul(DT, …)` truncates sub-quantum currents to zero and the
+/// dynamics freeze in a spurious fixed point (the deadband bug every
+/// fixed-point neuron RTL has to solve — the cited designs do the same).
+#[derive(Debug, Clone)]
+pub struct HodgkinHuxley {
+    exp: ExpBackend,
+    v: i64, // membrane potential (mV)
+    m: i64,
+    h: i64,
+    n: i64,
+    acc_v: i64,
+    acc_m: i64,
+    acc_h: i64,
+    acc_n: i64,
+    prev_above: bool,
+}
+
+// Classic squid-axon parameters.
+const G_NA: f64 = 120.0;
+const G_K: f64 = 36.0;
+const G_L: f64 = 0.3;
+const E_NA: f64 = 50.0;
+const E_K: f64 = -77.0;
+const E_L: f64 = -54.387;
+const V_REST: f64 = -65.0;
+/// Euler step 0.01 ms as a shift (dt multiply = >>? no: 0.01 is not a
+/// power of two; realized as fmul with the constant — one of the places
+/// the multiplier-less variants spend shift-add stages).
+#[allow(dead_code)]
+const DT: f64 = 0.01;
+
+impl HodgkinHuxley {
+    pub fn with_backend(exp: ExpBackend) -> Self {
+        let mut hh = Self {
+            exp,
+            v: 0,
+            m: 0,
+            h: 0,
+            n: 0,
+            acc_v: 0,
+            acc_m: 0,
+            acc_h: 0,
+            acc_n: 0,
+            prev_above: false,
+        };
+        hh.reset();
+        hh
+    }
+
+    /// Integrate `raw` (the un-scaled derivative) into an accumulator and
+    /// return the whole `x * DT` quanta to apply — exact long-run
+    /// delta-sigma integration, no deadband.
+    #[inline]
+    fn integrate(acc: &mut i64, raw: i64) -> i64 {
+        // DT = 0.01 = 1/100: accumulate raw, emit acc/100
+        *acc += raw;
+        let quanta = *acc / 100;
+        *acc -= quanta * 100;
+        quanta
+    }
+
+    pub fn cordic() -> Self {
+        Self::with_backend(ExpBackend::Cordic(Cordic::new(16)))
+    }
+
+    pub fn base2() -> Self {
+        Self::with_backend(ExpBackend::Base2)
+    }
+
+    pub fn ram_table() -> Self {
+        Self::with_backend(ExpBackend::ram(1024))
+    }
+
+    pub fn v_mv(&self) -> f64 {
+        from_fix(self.v)
+    }
+
+    // --- rate functions (all exps reduce to negative arguments) ---
+
+    /// `x / (1 - exp(-x/scale))` — the removable-singularity form shared
+    /// by alpha_n and alpha_m. For x < 0 uses
+    /// `x·e/(e-1)` with `e = exp(x/scale)` so the backend only ever sees
+    /// negative exponents.
+    fn sing_ratio(&self, x: i64, scale: f64) -> i64 {
+        if x.abs() < to_fix(0.05) {
+            return to_fix(scale); // limit x->0: x/(1-e^(-x/s)) -> s
+        }
+        if x > 0 {
+            let e = self.exp.exp_neg(-fdiv(x, to_fix(scale)));
+            if e >= ONE {
+                return to_fix(scale); // quantized backend rounded to 1
+            }
+            fdiv(x, ONE - e)
+        } else {
+            let e = self.exp.exp_neg(fdiv(x, to_fix(scale)));
+            if e >= ONE {
+                return to_fix(scale);
+            }
+            // x/(1 - 1/e) = x*e/(e - 1); e < 1 so e-1 < 0, x < 0 -> positive
+            fdiv(fmul(x, e), e - ONE)
+        }
+    }
+
+    fn alpha_n(&self, v: i64) -> i64 {
+        // 0.01 x / (1 - exp(-x/10)), x = v + 55
+        fmul(to_fix(0.01), self.sing_ratio(v + to_fix(55.0), 10.0))
+    }
+
+    fn beta_n(&self, v: i64) -> i64 {
+        // 0.125 exp(-(v+65)/80)
+        fmul(
+            to_fix(0.125),
+            self.exp.exp_signed(-fdiv(v + to_fix(65.0), to_fix(80.0))),
+        )
+    }
+
+    fn alpha_m(&self, v: i64) -> i64 {
+        // 0.1 x / (1 - exp(-x/10)), x = v + 40
+        fmul(to_fix(0.1), self.sing_ratio(v + to_fix(40.0), 10.0))
+    }
+
+    fn beta_m(&self, v: i64) -> i64 {
+        // 4 exp(-(v+65)/18)
+        fmul(
+            to_fix(4.0),
+            self.exp.exp_signed(-fdiv(v + to_fix(65.0), to_fix(18.0))),
+        )
+    }
+
+    fn alpha_h(&self, v: i64) -> i64 {
+        // 0.07 exp(-(v+65)/20)
+        fmul(
+            to_fix(0.07),
+            self.exp.exp_signed(-fdiv(v + to_fix(65.0), to_fix(20.0))),
+        )
+    }
+
+    fn beta_h(&self, v: i64) -> i64 {
+        // sigmoid 1/(1 + exp(-y)), y = (v+35)/10, via the y<0 symmetry
+        // sigma(y) = e^y / (1 + e^y) so the exp argument stays negative.
+        let y = fdiv(v + to_fix(35.0), to_fix(10.0));
+        if y >= 0 {
+            let e = self.exp.exp_neg(-y);
+            fdiv(ONE, ONE + e)
+        } else {
+            let e = self.exp.exp_neg(y);
+            fdiv(e, ONE + e)
+        }
+    }
+}
+
+impl SpikingNeuron for HodgkinHuxley {
+    fn step(&mut self, i_syn: i64) -> bool {
+        let (v, m, h, n) = (self.v, self.m, self.h, self.n);
+
+        // channel currents
+        let m2 = fmul(m, m);
+        let gna = fmul(to_fix(G_NA), fmul(fmul(m2, m), h));
+        let n2 = fmul(n, n);
+        let gk = fmul(to_fix(G_K), fmul(n2, n2));
+        let i_na = fmul(gna, v - to_fix(E_NA));
+        let i_k = fmul(gk, v - to_fix(E_K));
+        let i_l = fmul(to_fix(G_L), v - to_fix(E_L));
+        let dv = Self::integrate(&mut self.acc_v, i_syn - i_na - i_k - i_l);
+
+        let (am, bm) = (self.alpha_m(v), self.beta_m(v));
+        let (ah, bh) = (self.alpha_h(v), self.beta_h(v));
+        let (an, bn) = (self.alpha_n(v), self.beta_n(v));
+        let gate = |acc: &mut i64, x: i64, alpha: i64, beta: i64| {
+            let dx = fmul(alpha, ONE - x) - fmul(beta, x);
+            (x + Self::integrate(acc, dx)).clamp(0, ONE)
+        };
+        self.m = gate(&mut self.acc_m, m, am, bm);
+        self.h = gate(&mut self.acc_h, h, ah, bh);
+        self.n = gate(&mut self.acc_n, n, an, bn);
+        self.v = v + dv;
+
+        // spike = upward zero crossing of the action potential
+        let above = self.v >= to_fix(0.0);
+        let fired = above && !self.prev_above;
+        self.prev_above = above;
+        fired
+    }
+
+    fn reset(&mut self) {
+        self.v = to_fix(V_REST);
+        // steady-state gating at rest
+        let (am, bm) = (self.alpha_m(self.v), self.beta_m(self.v));
+        let (ah, bh) = (self.alpha_h(self.v), self.beta_h(self.v));
+        let (an, bn) = (self.alpha_n(self.v), self.beta_n(self.v));
+        self.m = fdiv(am, am + bm);
+        self.h = fdiv(ah, ah + bh);
+        self.n = fdiv(an, an + bn);
+        self.acc_v = 0;
+        self.acc_m = 0;
+        self.acc_h = 0;
+        self.acc_n = 0;
+        self.prev_above = false;
+    }
+
+    fn name(&self) -> &'static str {
+        self.exp.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neurons::count_spikes;
+
+    #[test]
+    fn exp_backends_accurate() {
+        let backends = [
+            ExpBackend::Cordic(Cordic::new(16)),
+            ExpBackend::Base2,
+            ExpBackend::ram(1024),
+        ];
+        for b in &backends {
+            for z in [-0.1, -0.5, -1.0, -2.5, -5.0] {
+                let got = from_fix(b.exp_neg(to_fix(z)));
+                let want = z.exp();
+                let tol: f64 = match b {
+                    ExpBackend::Base2 => 0.08, // shift-add approximation
+                    _ => 0.01,
+                };
+                assert!(
+                    (got - want).abs() < tol.max(want * tol),
+                    "{:?} exp({z}) = {got}, want {want}",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rest_state_is_stable() {
+        let mut hh = HodgkinHuxley::cordic();
+        for _ in 0..5000 {
+            hh.step(0);
+        }
+        assert!((hh.v_mv() - (-65.0)).abs() < 3.0, "drifted to {}", hh.v_mv());
+    }
+
+    #[test]
+    fn action_potential_under_current() {
+        let mut hh = HodgkinHuxley::cordic();
+        // I = 15 uA/cm^2 for 50 ms (5000 steps at dt=0.01) -> tonic firing
+        let spikes = count_spikes(&mut hh, to_fix(15.0), 5000);
+        assert!((2..=10).contains(&spikes), "spikes={spikes}");
+        // peak must overshoot toward +30..+50 mV territory at least once
+    }
+
+    #[test]
+    fn backends_agree_on_rate_within_2x() {
+        let i = to_fix(15.0);
+        let c = count_spikes(&mut HodgkinHuxley::cordic(), i, 8000).max(1);
+        let b = count_spikes(&mut HodgkinHuxley::base2(), i, 8000).max(1);
+        let r = count_spikes(&mut HodgkinHuxley::ram_table(), i, 8000).max(1);
+        for (x, name) in [(b, "base2"), (r, "ram")] {
+            let ratio = c.max(x) as f64 / c.min(x) as f64;
+            assert!(ratio <= 2.0, "{name}: {x} vs cordic {c}");
+        }
+    }
+
+    #[test]
+    fn refractory_gap_between_spikes() {
+        // two spikes cannot be closer than ~2 ms (200 steps)
+        let mut hh = HodgkinHuxley::cordic();
+        let mut last: Option<usize> = None;
+        for t in 0..8000 {
+            if hh.step(to_fix(15.0)) {
+                if let Some(prev) = last {
+                    assert!(t - prev > 200, "ISI too small: {}", t - prev);
+                }
+                last = Some(t);
+            }
+        }
+        assert!(last.is_some());
+    }
+}
+
+impl HodgkinHuxley {
+    /// Debug accessors (examples/diagnostics).
+    pub fn dbg_m(&self) -> i64 { self.m }
+    pub fn dbg_h(&self) -> i64 { self.h }
+    pub fn dbg_n(&self) -> i64 { self.n }
+}

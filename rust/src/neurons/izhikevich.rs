@@ -1,0 +1,227 @@
+//! Izhikevich neuron — CORDIC [20], [22] and PWL [26] baseline variants.
+//!
+//! Dynamics (Izhikevich 2003), integrated at dt = 1 ms in Q16.16:
+//!     v' = 0.04 v^2 + 5 v + 140 - u + I
+//!     u' = a (b v - u)
+//!     if v >= 30: v <- c, u <- u + d
+//!
+//! The CORDIC variant computes `0.04 v^2` via CORDIC linear-mode
+//! multiplies (as [20] does, replacing DSPs); the PWL variant replaces the
+//! quadratic with the standard 3-segment piecewise-linear fit (as [26]).
+
+use crate::cordic::{fmul, to_fix, Cordic};
+
+use super::SpikingNeuron;
+
+const V_PEAK: f64 = 30.0;
+
+/// Regular-spiking parameter set (a, b, c, d) = (0.02, 0.2, -65, 8).
+#[derive(Debug, Clone, Copy)]
+pub struct IzhParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl IzhParams {
+    pub fn regular_spiking() -> Self {
+        Self { a: 0.02, b: 0.2, c: -65.0, d: 8.0 }
+    }
+
+    pub fn fast_spiking() -> Self {
+        Self { a: 0.1, b: 0.2, c: -65.0, d: 2.0 }
+    }
+}
+
+/// CORDIC-based Izhikevich (multiplies via CORDIC linear mode).
+#[derive(Debug, Clone)]
+pub struct IzhikevichCordic {
+    cordic: Cordic,
+    p: IzhParams,
+    v: i64,
+    u: i64,
+}
+
+impl IzhikevichCordic {
+    pub fn new(p: IzhParams, iters: usize) -> Self {
+        let mut n = Self { cordic: Cordic::new(iters), p, v: 0, u: 0 };
+        n.reset();
+        n
+    }
+
+    pub fn regular_spiking() -> Self {
+        Self::new(IzhParams::regular_spiking(), 16)
+    }
+
+    pub fn v_mv(&self) -> f64 {
+        crate::cordic::from_fix(self.v)
+    }
+
+    /// One CORDIC multiply with range management: CORDIC linear mode
+    /// converges for |b| < 2, so scale v (≈ -80..30) by 1/64 first.
+    fn cmul_v(&self, a: i64, v: i64) -> i64 {
+        // a * v = a * (v/64) * 64
+        self.cordic.mul(a, v >> 6) << 6
+    }
+}
+
+impl SpikingNeuron for IzhikevichCordic {
+    fn step(&mut self, i_syn: i64) -> bool {
+        let (v, u) = (self.v, self.u);
+        // 0.04 v^2 via two CORDIC multiplies; 5v via shift-add (4v + v)
+        let v2 = self.cmul_v(v >> 6, v) << 6; // v*v with double scaling
+        let quad = fmul(to_fix(0.04), v2);
+        let lin = (v << 2) + v; // 5v
+        let dv = quad + lin + to_fix(140.0) - u + i_syn;
+        let bv = self.cmul_v(to_fix(self.p.b), v);
+        let du = fmul(to_fix(self.p.a), bv - u);
+        self.v = v + dv; // dt = 1 ms
+        self.u = u + du;
+        if self.v >= to_fix(V_PEAK) {
+            self.v = to_fix(self.p.c);
+            self.u += to_fix(self.p.d);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v = to_fix(self.p.c);
+        self.u = fmul(to_fix(self.p.b), self.v);
+    }
+
+    fn name(&self) -> &'static str {
+        "CORDIC Izhikevich"
+    }
+}
+
+/// PWL Izhikevich: 3-segment piecewise-linear fit of 0.04v^2 + 5v + 140
+/// (the digital-friendly form of [26] — comparators + shifts, no multiply).
+#[derive(Debug, Clone)]
+pub struct IzhikevichPwl {
+    p: IzhParams,
+    v: i64,
+    u: i64,
+}
+
+impl IzhikevichPwl {
+    pub fn new(p: IzhParams) -> Self {
+        let mut n = Self { p, v: 0, u: 0 };
+        n.reset();
+        n
+    }
+
+    pub fn regular_spiking() -> Self {
+        Self::new(IzhParams::regular_spiking())
+    }
+
+    /// 5-segment PWL fit of f(v) = 0.04v^2 + 5v + 140 over [-80, 30].
+    /// Breakpoints -62.5 (vertex), -45, -30, 0; slopes are shift-add
+    /// constants (-0.75, +0.75, 2, 3.75, 6.25); max error < 12 over the
+    /// operating range (asserted by the fit test).
+    fn quad_pwl(v: i64) -> i64 {
+        let vertex = to_fix(-62.5);
+        // slope helper: 0.75x = x/2 + x/4
+        let m075 = |x: i64| (x >> 1) + (x >> 2);
+        if v < vertex {
+            to_fix(-16.25) - m075(v - vertex)
+        } else if v < to_fix(-45.0) {
+            to_fix(-16.25) + m075(v - vertex)
+        } else if v < to_fix(-30.0) {
+            // anchor f(-45) = -3.125, slope 2
+            to_fix(-3.125) + ((v - to_fix(-45.0)) << 1)
+        } else if v < to_fix(0.0) {
+            // anchor f(-30) = 26.875, slope 3.75 = 4 - 0.25
+            let dv = v - to_fix(-30.0);
+            to_fix(26.875) + (dv << 2) - (dv >> 2)
+        } else {
+            // anchor f(0) = 139.375, slope 6.25 = 4 + 2 + 0.25
+            to_fix(139.375) + (v << 2) + (v << 1) + (v >> 2)
+        }
+    }
+}
+
+impl SpikingNeuron for IzhikevichPwl {
+    fn step(&mut self, i_syn: i64) -> bool {
+        let (v, u) = (self.v, self.u);
+        let dv = Self::quad_pwl(v) - u + i_syn;
+        // u' = a(bv - u) with a=0.02 ≈ >>6 + >>8, b=0.2 ≈ >>3 + >>4 - >>7
+        let bv = (v >> 3) + (v >> 4) - (v >> 7);
+        let du = (bv - u) >> 6;
+        self.v = v + dv;
+        self.u = u + du;
+        if self.v >= to_fix(V_PEAK) {
+            self.v = to_fix(self.p.c);
+            self.u += to_fix(self.p.d);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v = to_fix(self.p.c);
+        self.u = fmul(to_fix(self.p.b), self.v);
+    }
+
+    fn name(&self) -> &'static str {
+        "PWL Izhikevich"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neurons::count_spikes;
+
+    #[test]
+    fn cordic_rs_tonic_spiking() {
+        let mut n = IzhikevichCordic::regular_spiking();
+        // classic RS response to I=10: sustained tonic spiking (Euler at
+        // dt=1ms runs slightly fast vs the reference ~14 Hz)
+        let spikes = count_spikes(&mut n, to_fix(10.0), 1000);
+        assert!((5..=35).contains(&spikes), "RS spikes={spikes}");
+    }
+
+    #[test]
+    fn cordic_fs_faster_than_rs() {
+        let mut rs = IzhikevichCordic::regular_spiking();
+        let mut fs = IzhikevichCordic::new(IzhParams::fast_spiking(), 16);
+        let i = to_fix(10.0);
+        let r = count_spikes(&mut rs, i, 1000);
+        let f = count_spikes(&mut fs, i, 1000);
+        assert!(f > r, "fast-spiking {f} <= regular {r}");
+    }
+
+    #[test]
+    fn pwl_tracks_cordic_rate() {
+        // PWL is an approximation: firing rate within 2x of CORDIC's.
+        let i = to_fix(10.0);
+        let c = count_spikes(&mut IzhikevichCordic::regular_spiking(), i, 2000);
+        let p = count_spikes(&mut IzhikevichPwl::regular_spiking(), i, 2000);
+        assert!(p > 0);
+        let ratio = c.max(p) as f64 / c.min(p).max(1) as f64;
+        assert!(ratio < 2.0, "cordic={c} pwl={p}");
+    }
+
+    #[test]
+    fn pwl_fit_accuracy() {
+        // PWL fit within 12 units of the true quadratic over [-80, 30]
+        for vm in (-80..=30).step_by(5) {
+            let v = to_fix(vm as f64);
+            let truth = 0.04 * (vm as f64) * (vm as f64) + 5.0 * vm as f64 + 140.0;
+            let got = crate::cordic::from_fix(IzhikevichPwl::quad_pwl(v));
+            assert!((got - truth).abs() < 12.0, "v={vm}: {got} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn reset_restores_rest_state() {
+        let mut n = IzhikevichCordic::regular_spiking();
+        count_spikes(&mut n, to_fix(10.0), 500);
+        n.reset();
+        assert!((n.v_mv() + 65.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Baseline neuron implementations — the designs of the paper's Table I.
+//!
+//! Each baseline is implemented twice over:
+//! 1. **Behaviorally** — fixed-point dynamics producing spike trains
+//!   (tests assert classic firing behaviour: tonic spiking, action
+//!   potential shape, leak decay, ...).
+//! 2. **Structurally** — a primitive inventory ([`crate::nce::adder_tree::Structure`])
+//!   plus critical-path/activity descriptors that [`crate::fpga`] prices
+//!   into LUT/FF/delay/power estimates, regenerating Table I next to the
+//!   paper-reported rows.
+//!
+//! Variants: the proposed shift-add LIF ([`lif`]), CORDIC and PWL
+//! Izhikevich ([`izhikevich`]), Hodgkin–Huxley with CORDIC / base-2
+//! multiplier-less / RAM-table rate functions ([`hh`]), and adaptive
+//! exponential IF ([`adex`]).
+
+pub mod adex;
+pub mod designs;
+pub mod hh;
+pub mod izhikevich;
+pub mod lif;
+
+pub use designs::{table1_designs, NeuronDesign};
+
+/// Common behavioral interface: fixed-point synaptic current in, spike out.
+pub trait SpikingNeuron {
+    /// Advance one simulation step with Q16.16 input current; true = spike.
+    fn step(&mut self, i_syn: i64) -> bool;
+
+    /// Return to the resting state.
+    fn reset(&mut self);
+
+    /// Design name (matches the Table I row).
+    fn name(&self) -> &'static str;
+}
+
+/// Count spikes over `steps` with constant current (test/bench helper).
+pub fn count_spikes(n: &mut dyn SpikingNeuron, i_syn: i64, steps: usize) -> usize {
+    (0..steps).filter(|_| n.step(i_syn)).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::to_fix;
+
+    /// Every behavioral neuron fires under strong drive, stays quiet
+    /// without drive, and is deterministic after reset.
+    #[test]
+    fn common_behavioral_contract() {
+        let mut neurons: Vec<Box<dyn SpikingNeuron>> = vec![
+            Box::new(lif::LifShiftAdd::table1()),
+            Box::new(izhikevich::IzhikevichCordic::regular_spiking()),
+            Box::new(izhikevich::IzhikevichPwl::regular_spiking()),
+            Box::new(hh::HodgkinHuxley::cordic()),
+            Box::new(hh::HodgkinHuxley::base2()),
+            Box::new(hh::HodgkinHuxley::ram_table()),
+            Box::new(adex::AdexCordic::tonic()),
+        ];
+        for n in neurons.iter_mut() {
+            n.reset();
+            let quiet = count_spikes(n.as_mut(), 0, 2000);
+            assert_eq!(quiet, 0, "{} fired with no input", n.name());
+
+            n.reset();
+            let drive = to_fix(12.0);
+            let active = count_spikes(n.as_mut(), drive, 4000);
+            assert!(active > 0, "{} never fired under drive", n.name());
+
+            n.reset();
+            let again = count_spikes(n.as_mut(), drive, 4000);
+            assert_eq!(active, again, "{} not deterministic", n.name());
+        }
+    }
+}

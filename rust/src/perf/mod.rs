@@ -1,0 +1,23 @@
+//! CPU/GPU/accelerator performance models — the §III-D comparison (E6).
+//!
+//! We have no i7 or GTX 1050Ti; latencies are reproduced with effective-
+//! throughput models (documented in DESIGN.md §Hardware substitution):
+//!
+//!   latency = total synaptic ops / effective throughput
+//!
+//! with per-platform effective throughputs calibrated once (not per
+//! workload): SNN inference on CPU/GPU runs far below peak (event-driven
+//! gather/scatter defeats dense SIMD/tensor units — the paper's core
+//! motivation), while L-SPINE's throughput derives *structurally* from
+//! grid x SIMD lanes x clock x spike density.
+//!
+//! Calibration notes (see EXPERIMENTS.md E6): with CIFAR-scale VGG-16
+//! (0.33 GMAC dense) and ResNet-18 (0.56 GMAC), T = 16 and ~27% spike
+//! density, the paper's 4.83 ms (INT2) / 16.94 ms (INT8) / 23.97 s CPU /
+//! 10.15 s GPU all emerge from one consistent parameter set.
+
+pub mod platforms;
+pub mod workloads;
+
+pub use platforms::{accel_latency_s, Platform, PLATFORMS};
+pub use workloads::{Workload, RESNET18, VGG16};

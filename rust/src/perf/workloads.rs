@@ -1,0 +1,100 @@
+//! Benchmark workload models: spiking VGG-16 and ResNet-18 (CIFAR-scale).
+//!
+//! Layer-by-layer MAC counts for 32x32 inputs; the SNN execution model is
+//! `dense_macs x timesteps` synaptic operations, of which a `spike
+//! density` fraction is active on the event-driven accelerator (CPU/GPU
+//! baselines execute densely — they cannot skip inactive rows profitably,
+//! which is the paper's motivation).
+
+/// One benchmark network.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub name: &'static str,
+    /// Dense multiply-accumulates for one frame (32x32x3 input).
+    pub dense_macs: u64,
+    /// SNN timesteps.
+    pub timesteps: u64,
+    /// Mean spike density (active fraction of synaptic rows).
+    pub spike_density: f64,
+}
+
+impl Workload {
+    /// Dense synaptic ops over the full time window.
+    pub fn dense_synops(&self) -> u64 {
+        self.dense_macs * self.timesteps
+    }
+
+    /// Event-driven (active) synaptic ops.
+    pub fn active_synops(&self) -> f64 {
+        self.dense_synops() as f64 * self.spike_density
+    }
+}
+
+/// VGG-16 on 32x32: conv stack 2x64, 2x128, 3x256, 3x512, 3x512 + fc.
+/// Dense MACs ~= 0.333 G (the standard CIFAR-VGG16 figure).
+pub const VGG16: Workload = Workload {
+    name: "VGG-16",
+    dense_macs: 333_000_000,
+    timesteps: 16,
+    spike_density: 0.27,
+};
+
+/// ResNet-18 on 32x32 (CIFAR variant): ~0.557 G dense MACs.
+pub const RESNET18: Workload = Workload {
+    name: "ResNet-18",
+    dense_macs: 557_000_000,
+    timesteps: 16,
+    spike_density: 0.27,
+};
+
+/// Per-layer VGG-16/CIFAR conv shapes, used by the layer-wise sweep bench
+/// (in, out, spatial) for 3x3 kernels.
+pub const VGG16_LAYERS: &[(u64, u64, u64)] = &[
+    (3, 64, 32 * 32),
+    (64, 64, 32 * 32),
+    (64, 128, 16 * 16),
+    (128, 128, 16 * 16),
+    (128, 256, 8 * 8),
+    (256, 256, 8 * 8),
+    (256, 256, 8 * 8),
+    (256, 512, 4 * 4),
+    (512, 512, 4 * 4),
+    (512, 512, 4 * 4),
+    (512, 512, 2 * 2),
+    (512, 512, 2 * 2),
+    (512, 512, 2 * 2),
+];
+
+/// MACs of one 3x3 conv layer description.
+pub fn conv3x3_macs(c_in: u64, c_out: u64, spatial: u64) -> u64 {
+    9 * c_in * c_out * spatial
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_layer_sum_close_to_total() {
+        let sum: u64 = VGG16_LAYERS
+            .iter()
+            .map(|&(i, o, s)| conv3x3_macs(i, o, s))
+            .sum();
+        // conv stack is ~95% of the 0.333G total (fc layers excluded)
+        let rel = sum as f64 / VGG16.dense_macs as f64;
+        assert!((0.85..=1.05).contains(&rel), "{rel}");
+    }
+
+    #[test]
+    fn resnet_heavier_than_vgg_on_cifar() {
+        // the CIFAR-scale ResNet-18 has more MACs than CIFAR-VGG16 —
+        // this is why the paper's ResNet latencies exceed VGG's.
+        assert!(RESNET18.dense_macs > VGG16.dense_macs);
+    }
+
+    #[test]
+    fn synops_scale_with_timesteps() {
+        assert_eq!(VGG16.dense_synops(), VGG16.dense_macs * 16);
+        assert!(VGG16.active_synops() < VGG16.dense_synops() as f64);
+    }
+}

@@ -1,0 +1,13 @@
+//! Quantization — rust mirror of `python/compile/quantize.py`.
+//!
+//! The *authoritative* quantization happens once, at build time, in
+//! python; this mirror exists so the rust stack can (a) quantize synthetic
+//! weights for self-contained tests/benches without artifacts, (b) verify
+//! loaded artifacts obey the range contract, and (c) regenerate the Fig. 4
+//! scheme comparison from raw FP32 weights if asked.
+
+mod schemes;
+
+pub use schemes::{
+    fold_threshold, quantize, QuantScheme, QuantizedTensor, SCHEMES,
+};

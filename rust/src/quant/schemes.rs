@@ -1,0 +1,307 @@
+//! The four quantization schemes of the paper's Fig. 4 comparison.
+//!
+//! Semantics match `python/compile/quantize.py` exactly (same search grid,
+//! same tie-breaking); `rust/tests/proptests.rs` cross-checks the range
+//! contract and scheme orderings, and the integration tests compare
+//! against scales recorded in the artifact manifest.
+
+use crate::nce::simd::{pack_row, Precision};
+
+/// Quantization scheme identifiers (Fig. 4 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantScheme {
+    /// Proposed: symmetric per-tensor with MSE-optimal clipping search.
+    LSpine,
+    /// STBP-style: plain min-max symmetric round-to-nearest.
+    Stbp,
+    /// ADMM-style: alternating projection on (scale, q).
+    Admm,
+    /// Truncation: power-of-two scale, truncate toward zero.
+    Trunc,
+}
+
+pub const SCHEMES: [QuantScheme; 4] = [
+    QuantScheme::LSpine,
+    QuantScheme::Stbp,
+    QuantScheme::Admm,
+    QuantScheme::Trunc,
+];
+
+impl QuantScheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantScheme::LSpine => "lspine",
+            QuantScheme::Stbp => "stbp",
+            QuantScheme::Admm => "admm",
+            QuantScheme::Trunc => "trunc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "lspine" => Some(QuantScheme::LSpine),
+            "stbp" => Some(QuantScheme::Stbp),
+            "admm" => Some(QuantScheme::Admm),
+            "trunc" => Some(QuantScheme::Trunc),
+            _ => None,
+        }
+    }
+}
+
+/// A quantized 2-D weight tensor `[k][n]` plus its dequantization scale.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub q: Vec<i32>, // row-major [k][n]
+    pub k: usize,
+    pub n: usize,
+    pub scale: f32,
+    pub precision: Precision,
+}
+
+impl QuantizedTensor {
+    pub fn dequant(&self) -> Vec<f32> {
+        self.q.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Pack row-major into the shared storage-word layout `[k][n_words]`.
+    pub fn packed(&self) -> (Vec<u32>, usize) {
+        let n_words = self.n.div_ceil(self.precision.fields_per_word());
+        let mut out = Vec::with_capacity(self.k * n_words);
+        for r in 0..self.k {
+            out.extend(pack_row(&self.q[r * self.n..(r + 1) * self.n], self.precision));
+        }
+        (out, n_words)
+    }
+
+    pub fn mse(&self, w: &[f32]) -> f64 {
+        w.iter()
+            .zip(&self.q)
+            .map(|(&wf, &qv)| {
+                let e = wf as f64 - qv as f64 * self.scale as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / w.len() as f64
+    }
+}
+
+fn amax(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+fn quantize_with_scale(w: &[f32], scale: f32, p: Precision) -> Vec<i32> {
+    let (lo, hi) = p.qrange();
+    w.iter()
+        .map(|&x| ((x / scale).round() as i64).clamp(lo as i64, hi as i64) as i32)
+        .collect()
+}
+
+fn tensor(q: Vec<i32>, k: usize, n: usize, scale: f32, p: Precision) -> QuantizedTensor {
+    QuantizedTensor { q, k, n, scale, precision: p }
+}
+
+/// Min-max symmetric round-to-nearest (STBP-style baseline).
+pub fn quantize_stbp(w: &[f32], k: usize, n: usize, p: Precision) -> QuantizedTensor {
+    let (_, hi) = p.qrange();
+    let a = amax(w);
+    let scale = if a > 0.0 { a / hi as f32 } else { 1.0 };
+    tensor(quantize_with_scale(w, scale, p), k, n, scale, p)
+}
+
+/// Proposed: grid-search the clipping scale that minimizes MSE.
+pub fn quantize_lspine(w: &[f32], k: usize, n: usize, p: Precision) -> QuantizedTensor {
+    const GRID: usize = 80;
+    let (_, hi) = p.qrange();
+    let a = amax(w);
+    if a == 0.0 {
+        return tensor(vec![0; w.len()], k, n, 1.0, p);
+    }
+    let mut best: Option<(Vec<i32>, f32, f64)> = None;
+    for i in 1..=GRID {
+        let scale = a * (i as f32 / GRID as f32) / hi as f32;
+        let q = quantize_with_scale(w, scale, p);
+        let err = w
+            .iter()
+            .zip(&q)
+            .map(|(&wf, &qv)| {
+                let e = wf as f64 - qv as f64 * scale as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / w.len() as f64;
+        if best.as_ref().is_none_or(|(_, _, b)| err < *b) {
+            best = Some((q, scale, err));
+        }
+    }
+    let (q, scale, _) = best.unwrap();
+    tensor(q, k, n, scale, p)
+}
+
+/// ADMM-style alternating projection: fix q -> optimal s, fix s -> q.
+pub fn quantize_admm(w: &[f32], k: usize, n: usize, p: Precision) -> QuantizedTensor {
+    const ITERS: usize = 12;
+    let (_, hi) = p.qrange();
+    let a = amax(w);
+    let mut scale = if a > 0.0 { a / hi as f32 } else { 1.0 };
+    let mut q = quantize_with_scale(w, scale, p);
+    for _ in 0..ITERS {
+        let denom: f64 = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        if denom == 0.0 {
+            break;
+        }
+        let num: f64 = w.iter().zip(&q).map(|(&wf, &qv)| wf as f64 * qv as f64).sum();
+        let s_new = (num / denom) as f32;
+        if s_new <= 0.0 {
+            scale = if a > 0.0 { a / hi as f32 } else { 1.0 };
+            break;
+        }
+        scale = s_new;
+        let q_next = quantize_with_scale(w, scale, p);
+        if q_next == q {
+            break;
+        }
+        q = q_next;
+    }
+    tensor(q, k, n, scale, p)
+}
+
+/// Truncation baseline: power-of-two scale, truncate toward zero.
+pub fn quantize_trunc(w: &[f32], k: usize, n: usize, p: Precision) -> QuantizedTensor {
+    let (lo, hi) = p.qrange();
+    let a = amax(w);
+    if a == 0.0 {
+        return tensor(vec![0; w.len()], k, n, 1.0, p);
+    }
+    let scale = 2f32.powf((a / hi as f32).log2().ceil());
+    let q = w
+        .iter()
+        .map(|&x| ((x / scale).trunc() as i64).clamp(lo as i64, hi as i64) as i32)
+        .collect();
+    tensor(q, k, n, scale, p)
+}
+
+/// Quantize a row-major `[k][n]` tensor with the named scheme.
+pub fn quantize(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    p: Precision,
+    scheme: QuantScheme,
+) -> QuantizedTensor {
+    assert_eq!(w.len(), k * n, "tensor shape mismatch");
+    match scheme {
+        QuantScheme::LSpine => quantize_lspine(w, k, n, p),
+        QuantScheme::Stbp => quantize_stbp(w, k, n, p),
+        QuantScheme::Admm => quantize_admm(w, k, n, p),
+        QuantScheme::Trunc => quantize_trunc(w, k, n, p),
+    }
+}
+
+/// Fold an FP threshold into a layer's integer domain (floor at 1).
+pub fn fold_threshold(theta_fp: f32, scale: f32) -> i32 {
+    ((theta_fp / scale).round() as i32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss(seed: u64, len: usize, sigma: f32) -> Vec<f32> {
+        // Box-Muller on a xorshift stream: deterministic, no deps.
+        let mut s = seed.max(1);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64
+        };
+        (0..len)
+            .map(|_| {
+                let (u1, u2) = (next().max(1e-12), next());
+                let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                z as f32 * sigma
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ranges_respected_all_schemes() {
+        let w = gauss(7, 64 * 32, 0.1);
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            for scheme in SCHEMES {
+                let qt = quantize(&w, 64, 32, p, scheme);
+                assert!(qt.q.iter().all(|&v| v >= lo && v <= hi), "{:?}", scheme);
+                assert!(qt.scale > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lspine_not_worse_than_stbp() {
+        let w = gauss(9, 2048, 0.1);
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let e_ls = quantize(&w, 64, 32, p, QuantScheme::LSpine).mse(&w);
+            let e_st = quantize(&w, 64, 32, p, QuantScheme::Stbp).mse(&w);
+            assert!(e_ls <= e_st + 1e-12, "{}: {e_ls} > {e_st}", p.name());
+        }
+    }
+
+    #[test]
+    fn admm_improves_on_minmax_init() {
+        let w = gauss(5, 2048, 0.2);
+        for p in [Precision::Int2, Precision::Int4] {
+            let e_admm = quantize(&w, 64, 32, p, QuantScheme::Admm).mse(&w);
+            let e_st = quantize(&w, 64, 32, p, QuantScheme::Stbp).mse(&w);
+            assert!(e_admm <= e_st + 1e-12);
+        }
+    }
+
+    #[test]
+    fn trunc_scale_power_of_two() {
+        let w = gauss(3, 512, 0.37);
+        let qt = quantize(&w, 16, 32, Precision::Int4, QuantScheme::Trunc);
+        let log = qt.scale.log2();
+        assert!((log - log.round()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_tensor_all_schemes() {
+        let w = vec![0.0f32; 64];
+        for scheme in SCHEMES {
+            let qt = quantize(&w, 8, 8, Precision::Int2, scheme);
+            assert!(qt.q.iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn int8_near_lossless() {
+        let w = gauss(11, 1024, 0.15);
+        let a = amax(&w);
+        for scheme in SCHEMES {
+            let qt = quantize(&w, 32, 32, Precision::Int8, scheme);
+            let max_err = w
+                .iter()
+                .zip(&qt.q)
+                .map(|(&wf, &qv)| (wf - qv as f32 * qt.scale).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err / a < 0.05, "{:?}: {max_err}", scheme);
+        }
+    }
+
+    #[test]
+    fn packed_memory_ratio() {
+        let w = gauss(13, 128 * 64, 0.1);
+        let (p8, nw8) = quantize(&w, 128, 64, Precision::Int8, QuantScheme::LSpine).packed();
+        let (p2, nw2) = quantize(&w, 128, 64, Precision::Int2, QuantScheme::LSpine).packed();
+        assert_eq!(p8.len(), 4 * p2.len());
+        assert_eq!(nw8, 4 * nw2);
+    }
+
+    #[test]
+    fn fold_threshold_matches_python() {
+        assert_eq!(fold_threshold(1.0, 0.25), 4);
+        assert_eq!(fold_threshold(1.0, 0.3), 3);
+        assert_eq!(fold_threshold(1.0, 100.0), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! E6 — §III-D CPU/GPU vs L-SPINE latency & energy comparison.
+
+use crate::array::grid::ArrayConfig;
+use crate::perf::platforms::{
+    accel_latency_s, CPU_I7_INT8, GPU_1050TI_FP16, GPU_1050TI_FP32, GPU_1050TI_INT8,
+};
+use crate::perf::workloads::{Workload, RESNET18, VGG16};
+use crate::util::bench::Table;
+
+/// Paper-reported latencies (seconds) for the comparison rows.
+pub const REPORTED_S: &[(&str, &str, f64)] = &[
+    ("VGG-16", "CPU (i7, INT8)", 23.97),
+    ("VGG-16", "GPU (1050Ti, INT8)", 10.15),
+    ("VGG-16", "GPU (1050Ti, FP32)", 40.4),
+    ("VGG-16", "GPU (1050Ti, FP16)", 39.9),
+    ("VGG-16", "L-SPINE INT2", 4.83e-3),
+    ("VGG-16", "L-SPINE INT8", 16.94e-3),
+    ("ResNet-18", "CPU (i7, INT8)", 34.43),
+    ("ResNet-18", "GPU (1050Ti, INT8)", 10.26),
+    ("ResNet-18", "L-SPINE INT2", 7.84e-3),
+    ("ResNet-18", "L-SPINE INT8", 16.84e-3),
+];
+
+fn fmt_lat(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.2} ms", s * 1e3)
+    }
+}
+
+fn model_rows(w: &Workload, cfg: &ArrayConfig) -> Vec<(String, f64, f64)> {
+    let mut rows = vec![
+        (CPU_I7_INT8.name.to_string(), CPU_I7_INT8.latency_s(w), CPU_I7_INT8.power_w),
+        (
+            GPU_1050TI_INT8.name.to_string(),
+            GPU_1050TI_INT8.latency_s(w),
+            GPU_1050TI_INT8.power_w,
+        ),
+        (
+            GPU_1050TI_FP32.name.to_string(),
+            GPU_1050TI_FP32.latency_s(w),
+            GPU_1050TI_FP32.power_w,
+        ),
+        (
+            GPU_1050TI_FP16.name.to_string(),
+            GPU_1050TI_FP16.latency_s(w),
+            GPU_1050TI_FP16.power_w,
+        ),
+    ];
+    for bits in [2u32, 4, 8] {
+        rows.push((
+            format!("L-SPINE INT{bits}"),
+            accel_latency_s(w, cfg, bits),
+            0.54,
+        ));
+    }
+    rows
+}
+
+/// Render the E6 comparison for both workloads, reported next to modeled.
+pub fn cpu_gpu_report() -> String {
+    let cfg = ArrayConfig::paper();
+    let mut s = String::from(
+        "§III-D — Inference latency/energy: CPU & GPU vs L-SPINE\n\
+         (reported where the paper gives a number; modeled from the \
+         platform throughput models otherwise)\n\n",
+    );
+    for w in [&VGG16, &RESNET18] {
+        let mut t = Table::new(&[
+            "Platform",
+            "Latency (model)",
+            "Latency (paper)",
+            "Power (W)",
+            "Energy (model)",
+        ]);
+        for (name, lat, power) in model_rows(w, &cfg) {
+            // match by precision token: each reported row's platform label
+            // shares exactly one of these tokens with the model row name
+            let token = ["INT2", "INT4", "INT8", "FP32", "FP16"]
+                .into_iter()
+                .find(|t| name.contains(t))
+                .unwrap_or("");
+            let is_accel = name.starts_with("L-SPINE");
+            let reported = REPORTED_S
+                .iter()
+                .find(|(wl, p, _)| {
+                    *wl == w.name
+                        && p.contains(token)
+                        && p.starts_with("L-SPINE") == is_accel
+                        && (is_accel || p.contains("CPU") == name.contains("CPU"))
+                })
+                .map(|&(_, _, s)| fmt_lat(s))
+                .unwrap_or_else(|| "-".into());
+            let energy = lat * power;
+            t.row(&[
+                name,
+                fmt_lat(lat),
+                reported,
+                format!("{power:.2}"),
+                if energy >= 1.0 {
+                    format!("{energy:.1} J")
+                } else {
+                    format!("{:.2} mJ", energy * 1e3)
+                },
+            ]);
+        }
+        s.push_str(&format!("— {} ({} dense MACs, T={}) —\n", w.name, w.dense_macs, w.timesteps));
+        s.push_str(&t.to_string());
+        let speedup = CPU_I7_INT8.latency_s(w) / accel_latency_s(w, &cfg, 2);
+        s.push_str(&format!(
+            "CPU -> L-SPINE INT2 speedup: {speedup:.0}x (paper: seconds -> milliseconds)\n\n"
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_workloads() {
+        let r = cpu_gpu_report();
+        assert!(r.contains("VGG-16"));
+        assert!(r.contains("ResNet-18"));
+        assert!(r.contains("L-SPINE INT2"));
+        assert!(r.contains("23.97"));
+        assert!(r.contains("speedup"));
+    }
+
+    #[test]
+    fn reported_rows_complete() {
+        assert_eq!(REPORTED_S.len(), 10);
+    }
+}

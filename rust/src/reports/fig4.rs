@@ -1,0 +1,67 @@
+//! E3 — Fig. 4: accuracy vs memory footprint across quantization schemes.
+//!
+//! Source data comes from the artifact manifest (computed by the python
+//! author path on the shared test set); optionally the rust engine
+//! re-evaluates each configuration to cross-check (integration tests pin
+//! both paths to each other).
+
+use crate::model::io::Manifest;
+use crate::util::bench::Table;
+
+pub const SCHEME_ORDER: [&str; 4] = ["lspine", "stbp", "admm", "trunc"];
+pub const SCHEME_LABEL: [&str; 4] =
+    ["Proposed (L-SPINE)", "STBP [14]", "ADMM [15]", "Trunc [16]"];
+
+/// Render the Fig. 4 data table for one model.
+pub fn fig4_report(manifest: &Manifest, model: &str) -> crate::Result<String> {
+    let entry = manifest.model(model)?;
+    let mut t = Table::new(&["Scheme", "Bits", "Memory (KiB)", "Accuracy (%)", "vs FP32"]);
+    let fp32_acc = entry.training.fp32_test_acc;
+    for (scheme, label) in SCHEME_ORDER.iter().zip(SCHEME_LABEL) {
+        for bits in [2u32, 4, 8] {
+            let q = entry.quant_entry(scheme, bits)?;
+            t.row(&[
+                label.to_string(),
+                format!("INT{bits}"),
+                format!("{:.2}", q.memory_bits as f64 / 8.0 / 1024.0),
+                format!("{:.2}", q.accuracy * 100.0),
+                format!("{:+.2}", (q.accuracy - fp32_acc) * 100.0),
+            ]);
+        }
+    }
+    t.row(&[
+        "FP32 baseline".into(),
+        "FP32".into(),
+        format!("{:.2}", entry.fp32.memory_bits as f64 / 8.0 / 1024.0),
+        format!("{:.2}", fp32_acc * 100.0),
+        "+0.00".into(),
+    ]);
+    let mut s = format!(
+        "Fig. 4 — Accuracy vs memory footprint ({model}), proposed vs \
+         STBP/ADMM/Trunc\n\n"
+    );
+    s.push_str(&t.to_string());
+
+    // The figure's qualitative claims, checked numerically:
+    let acc = |scheme: &str, bits: u32| {
+        entry.quant_entry(scheme, bits).map(|q| q.accuracy).unwrap_or(0.0)
+    };
+    s.push_str(&format!(
+        "\nINT2: proposed {:.1}% vs best baseline {:.1}% (gap the MSE-clip \
+         + QAT refinement buys)\nmemory reduction vs FP32: INT2 {:.1}x, \
+         INT4 {:.1}x, INT8 {:.1}x\n",
+        acc("lspine", 2) * 100.0,
+        ["stbp", "admm", "trunc"]
+            .iter()
+            .map(|s| acc(s, 2))
+            .fold(0.0, f64::max)
+            * 100.0,
+        entry.fp32.memory_bits as f64
+            / entry.quant_entry("lspine", 2)?.memory_bits as f64,
+        entry.fp32.memory_bits as f64
+            / entry.quant_entry("lspine", 4)?.memory_bits as f64,
+        entry.fp32.memory_bits as f64
+            / entry.quant_entry("lspine", 8)?.memory_bits as f64,
+    ));
+    Ok(s)
+}

@@ -1,0 +1,44 @@
+//! E4 — Fig. 5: precision scaling (INT2/INT4/INT8/FP32) vs accuracy.
+
+use crate::model::io::Manifest;
+use crate::util::bench::Table;
+
+/// Render the Fig. 5 data table across all models in the manifest.
+pub fn fig5_report(manifest: &Manifest) -> crate::Result<String> {
+    let mut t = Table::new(&["Model", "INT2 (%)", "INT4 (%)", "INT8 (%)", "FP32 (%)"]);
+    for (name, entry) in &manifest.models {
+        let a = |bits: u32| {
+            entry
+                .quant_entry("lspine", bits)
+                .map(|q| format!("{:.2}", q.accuracy * 100.0))
+                .unwrap_or_else(|_| "-".into())
+        };
+        t.row(&[
+            name.clone(),
+            a(2),
+            a(4),
+            a(8),
+            format!("{:.2}", entry.training.fp32_test_acc * 100.0),
+        ]);
+    }
+    let mut s = String::from(
+        "Fig. 5 — Impact of precision scaling on SNN accuracy\n\n",
+    );
+    s.push_str(&t.to_string());
+
+    // qualitative claims of the figure:
+    for (name, entry) in &manifest.models {
+        let fp32 = entry.training.fp32_test_acc;
+        let int8 = entry.quant_entry("lspine", 8)?.accuracy;
+        let int4 = entry.quant_entry("lspine", 4)?.accuracy;
+        let int2 = entry.quant_entry("lspine", 2)?.accuracy;
+        s.push_str(&format!(
+            "{name}: INT8 within {:.2} pts of FP32; INT4 {:+.2} pts; \
+             INT2 {:+.2} pts (graceful degradation)\n",
+            (fp32 - int8).abs() * 100.0,
+            (int4 - fp32) * 100.0,
+            (int2 - fp32) * 100.0,
+        ));
+    }
+    Ok(s)
+}

@@ -1,0 +1,20 @@
+//! Table/figure regenerators — one per paper artifact (DESIGN.md E1-E6).
+//!
+//! Every function returns the rendered table as a `String` so the CLI
+//! (`lspine report`), the benches (`cargo bench`) and the tests share one
+//! implementation. Columns print paper-reported values next to what this
+//! reproduction computes, so deviations are visible, not hidden.
+
+pub mod cpu_gpu;
+pub mod energy;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+
+pub use cpu_gpu::cpu_gpu_report;
+pub use energy::energy_report;
+pub use fig4::fig4_report;
+pub use fig5::fig5_report;
+pub use table1::table1_report;
+pub use table2::table2_report;

@@ -1,0 +1,158 @@
+//! E2 — Table II: system-level accelerator comparison (17 rows).
+//!
+//! Reference rows are the paper's reported numbers; the "Proposed" row is
+//! *computed*: area from the structural system model, latency from the
+//! cycle simulator running the requested artifact network on its measured
+//! activity, power from the utilization-scaled power model.
+
+use crate::array::grid::ArrayConfig;
+use crate::array::sim::{simulate_inference, SimOverheads};
+use crate::fpga::system::{estimate_system, SystemConfig};
+use crate::model::io::Dataset;
+use crate::model::{QuantNetwork, SnnEngine};
+use crate::util::bench::Table;
+
+/// Paper-reported reference rows: (design, LUTs K, FFs K, latency ms, W).
+pub const REPORTED_ROWS: &[(&str, f64, f64, f64, f64)] = &[
+    ("TVLSI'26 [34]", 118.6, 57.8, 5.04, 1.85),
+    ("TRETS'23 [32]", 115.0, 115.0, 21.46, 2.10),
+    ("TCAD'23 [23]", 170.4, 113.2, 7.38, 2.40),
+    ("Iterative CORDIC H&H [19]", 157.0, 30.8, 20.50, 1.95),
+    ("Multiplier-less H&H [43]", 359.2, 190.0, 31.54, 4.20),
+    ("RAM H&H [43]", 317.3, 104.0, 35.60, 3.85),
+    ("TCAD'23 (MLP) [23]", 18.94, 24.35, 6.0, 1.18),
+    ("CORDIC Izhikevich [20]", 66.0, 17.68, 9.29, 1.05),
+    ("TCAS-I'22 [24]", 213.0, 352.0, 6.68, 2.95),
+    ("IF-1 [37]", 102.5, 166.7, 11.4, 1.365),
+    ("LIF-1 [37]", 104.1, 169.2, 12.7, 1.43),
+    ("IF-2 [37]", 92.6, 159.0, 11.4, 1.365),
+    ("LIF-2 [37]", 93.7, 161.4, 12.1, 1.43),
+    ("NC'20 [38]", 140.5, 81.5, 56.8, 4.6),
+    ("Access'22 [39]", 43.2, 36.8, 32.2, 6.95),
+];
+
+/// Paper-reported "Proposed" row.
+pub const REPORTED_PROPOSED: (&str, f64, f64, f64, f64) =
+    ("Proposed (paper)", 46.37, 30.4, 2.38, 0.54);
+
+/// Measured data for the computed row.
+pub struct Table2Measurement {
+    pub luts_k: f64,
+    pub ffs_k: f64,
+    pub latency_ms: f64,
+    pub power_w: f64,
+    pub utilization: f64,
+}
+
+/// Run the cycle simulator over `samples` test inputs and price the
+/// system — the computed "Proposed" row.
+pub fn measure_proposed(
+    net: &QuantNetwork,
+    data: &Dataset,
+    samples: usize,
+) -> crate::Result<Table2Measurement> {
+    let cfg = ArrayConfig::paper();
+    let ov = SimOverheads::default();
+    let mut engine = SnnEngine::new(net.clone());
+    let mut total_ms = 0.0;
+    let mut total_util = 0.0;
+    let n = samples.min(data.n).max(1);
+    for i in 0..n {
+        engine.infer(data.sample(i));
+        let report = simulate_inference(net, &cfg, &ov, engine.last_layer_stats())?;
+        total_ms += report.latency_ms;
+        total_util += report.utilization;
+    }
+    let latency_ms = total_ms / n as f64;
+    let utilization = total_util / n as f64;
+    let sys = estimate_system(
+        &SystemConfig { array: cfg, utilization },
+        latency_ms,
+    );
+    Ok(Table2Measurement {
+        luts_k: sys.luts_k,
+        ffs_k: sys.ffs_k,
+        latency_ms,
+        power_w: sys.power_w,
+        utilization,
+    })
+}
+
+/// Render Table II with the computed proposed row appended.
+pub fn table2_report(m: &Table2Measurement, workload: &str) -> String {
+    let mut t = Table::new(&["Design", "LUTs (K)", "FFs (K)", "Latency (ms)", "Power (W)"]);
+    for &(name, l, f, lat, p) in REPORTED_ROWS {
+        t.row(&[
+            name.to_string(),
+            format!("{l:.2}"),
+            format!("{f:.2}"),
+            format!("{lat:.2}"),
+            format!("{p:.2}"),
+        ]);
+    }
+    let (pn, pl, pf, plat, pp) = REPORTED_PROPOSED;
+    t.row(&[
+        pn.to_string(),
+        format!("{pl:.2}"),
+        format!("{pf:.2}"),
+        format!("{plat:.2}"),
+        format!("{pp:.2}"),
+    ]);
+    t.row(&[
+        format!("Proposed (measured, {workload})"),
+        format!("{:.2}", m.luts_k),
+        format!("{:.2}", m.ffs_k),
+        format!("{:.3}", m.latency_ms),
+        format!("{:.2}", m.power_w),
+    ]);
+    let mut s = String::from(
+        "Table II — System-level comparison (VC707)\n\
+         (reference rows as reported; final row computed by this \
+         reproduction's cycle simulator + structural model)\n\n",
+    );
+    s.push_str(&t.to_string());
+    s.push_str(&format!(
+        "\nmeasured mean PE utilization: {:.1}%  (latency differs from the \
+         paper's 2.38 ms because the simulated workload is our {}-scale \
+         network, not the paper's benchmark)\n",
+        m.utilization * 100.0,
+        workload
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_rows_complete() {
+        // 15 reference rows + paper-proposed = 16; +measured = 17 printed
+        assert_eq!(REPORTED_ROWS.len(), 15);
+    }
+
+    #[test]
+    fn report_renders_with_synthetic_measurement() {
+        let m = Table2Measurement {
+            luts_k: 46.4,
+            ffs_k: 30.4,
+            latency_ms: 0.05,
+            power_w: 0.5,
+            utilization: 0.4,
+        };
+        let r = table2_report(&m, "mlp");
+        assert!(r.contains("Proposed (paper)"));
+        assert!(r.contains("Proposed (measured, mlp)"));
+        assert!(r.contains("46.37"));
+        assert_eq!(r.matches('\n').count() > 18, true);
+    }
+
+    #[test]
+    fn proposed_reported_beats_all_on_latency_and_power() {
+        let (_, _, _, lat, p) = REPORTED_PROPOSED;
+        for &(name, _, _, l, pw) in REPORTED_ROWS {
+            assert!(lat < l, "{name} latency");
+            assert!(p < pw, "{name} power");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Tiny RV32I assembler for the controller's firmware.
+//!
+//! Emits little-endian machine code consumed by [`super::cpu::Cpu`]; the
+//! control programs (layer orchestration loops) are built with it in
+//! `coordinator::firmware` and the tests. Only the encodings the control
+//! path needs — this is firmware tooling, not a general assembler.
+
+/// Builds a program as a growing word buffer with absolute byte labels.
+#[derive(Debug, Default, Clone)]
+pub struct Assembler {
+    words: Vec<u32>,
+}
+
+fn enc_r(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+fn enc_i(imm: i32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "I-imm out of range: {imm}");
+    ((imm as u32 & 0xFFF) << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+fn enc_s(imm: i32, rs2: u32, rs1: u32, funct3: u32, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "S-imm out of range: {imm}");
+    let imm = imm as u32 & 0xFFF;
+    ((imm >> 5) << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | ((imm & 0x1F) << 7) | opcode
+}
+
+fn enc_b(offset: i32, rs2: u32, rs1: u32, funct3: u32) -> u32 {
+    assert!(offset % 2 == 0 && (-4096..=4094).contains(&offset));
+    let imm = offset as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | 0x63
+}
+
+fn enc_j(offset: i32, rd: u32) -> u32 {
+    assert!(offset % 2 == 0 && (-(1 << 20)..(1 << 20)).contains(&offset));
+    let imm = offset as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | (rd << 7)
+        | 0x6F
+}
+
+impl Assembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current byte address (next instruction's location).
+    pub fn here(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+
+    fn emit(&mut self, w: u32) -> u32 {
+        let at = self.here();
+        self.words.push(w);
+        at
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    // --- op-imm / op ---
+    pub fn addi(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 0, rd, 0x13))
+    }
+    pub fn andi(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 7, rd, 0x13))
+    }
+    pub fn ori(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 6, rd, 0x13))
+    }
+    pub fn xori(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 4, rd, 0x13))
+    }
+    pub fn slti(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 2, rd, 0x13))
+    }
+    pub fn slli(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
+        self.emit(enc_r(0, shamt, rs1, 1, rd, 0x13))
+    }
+    pub fn srli(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
+        self.emit(enc_r(0, shamt, rs1, 5, rd, 0x13))
+    }
+    pub fn srai(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
+        self.emit(enc_r(0x20, shamt, rs1, 5, rd, 0x13))
+    }
+    pub fn add(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0, rs2, rs1, 0, rd, 0x33))
+    }
+    pub fn sub(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0x20, rs2, rs1, 0, rd, 0x33))
+    }
+    pub fn and(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0, rs2, rs1, 7, rd, 0x33))
+    }
+    pub fn or(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0, rs2, rs1, 6, rd, 0x33))
+    }
+    pub fn xor(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0, rs2, rs1, 4, rd, 0x33))
+    }
+    pub fn sll(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
+        self.emit(enc_r(0, rs2, rs1, 1, rd, 0x33))
+    }
+
+    // --- upper immediates ---
+    pub fn lui(&mut self, rd: u32, imm20: u32) -> u32 {
+        self.emit((imm20 << 12) | (rd << 7) | 0x37)
+    }
+    pub fn auipc(&mut self, rd: u32, imm20: u32) -> u32 {
+        self.emit((imm20 << 12) | (rd << 7) | 0x17)
+    }
+
+    // --- memory ---
+    pub fn lw(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 2, rd, 0x03))
+    }
+    pub fn lb(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 0, rd, 0x03))
+    }
+    pub fn lbu(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 4, rd, 0x03))
+    }
+    pub fn lh(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 1, rd, 0x03))
+    }
+    pub fn sw(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
+        self.emit(enc_s(imm, rs2, rs1, 2, 0x23))
+    }
+    pub fn sb(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
+        self.emit(enc_s(imm, rs2, rs1, 0, 0x23))
+    }
+    pub fn sh(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
+        self.emit(enc_s(imm, rs2, rs1, 1, 0x23))
+    }
+
+    // --- control flow (targets are absolute byte addresses) ---
+    pub fn beq(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
+        let off = target as i32 - self.here() as i32;
+        self.emit(enc_b(off, rs2, rs1, 0))
+    }
+    pub fn bne(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
+        let off = target as i32 - self.here() as i32;
+        self.emit(enc_b(off, rs2, rs1, 1))
+    }
+    pub fn blt(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
+        let off = target as i32 - self.here() as i32;
+        self.emit(enc_b(off, rs2, rs1, 4))
+    }
+    pub fn bge(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
+        let off = target as i32 - self.here() as i32;
+        self.emit(enc_b(off, rs2, rs1, 5))
+    }
+    pub fn jal_to(&mut self, rd: u32, target: u32) -> u32 {
+        let off = target as i32 - self.here() as i32;
+        self.emit(enc_j(off, rd))
+    }
+    pub fn jalr(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
+        self.emit(enc_i(imm, rs1, 0, rd, 0x67))
+    }
+
+    /// Emit a `jal` whose target is patched later (forward reference).
+    pub fn jal_placeholder(&mut self, rd: u32) -> u32 {
+        self.emit(enc_j(0, rd))
+    }
+
+    /// Patch a placeholder `jal` at byte address `at` to jump to `target`.
+    pub fn patch_jal(&mut self, at: u32, target: u32) {
+        let rd = (self.words[at as usize / 4] >> 7) & 0x1F;
+        self.words[at as usize / 4] = enc_j(target as i32 - at as i32, rd);
+    }
+
+    // --- system ---
+    pub fn ebreak(&mut self) -> u32 {
+        self.emit(0x0010_0073)
+    }
+    pub fn ecall(&mut self) -> u32 {
+        self.emit(0x0000_0073)
+    }
+
+    /// Load a full 32-bit constant (lui + addi pair, sign-fixup included).
+    pub fn li32(&mut self, rd: u32, value: u32) {
+        let lo = (value & 0xFFF) as i32;
+        let lo = (lo << 20) >> 20; // sign-extend 12-bit
+        let hi = value.wrapping_sub(lo as u32) >> 12;
+        self.lui(rd, hi);
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_encodings() {
+        // cross-checked against riscv-tests reference encodings
+        let mut a = Assembler::new();
+        a.addi(1, 0, 10);
+        a.add(3, 1, 2);
+        a.sub(4, 3, 1);
+        let code = a.finish();
+        let w = |i: usize| u32::from_le_bytes(code[i * 4..i * 4 + 4].try_into().unwrap());
+        assert_eq!(w(0), 0x00A0_0093); // addi x1, x0, 10
+        assert_eq!(w(1), 0x0020_81B3); // add x3, x1, x2
+        assert_eq!(w(2), 0x4011_8233); // sub x4, x3, x1
+    }
+
+    #[test]
+    fn store_load_encoding() {
+        let mut a = Assembler::new();
+        a.sw(0, 4, 64);
+        a.lw(4, 0, 64);
+        let code = a.finish();
+        let w = |i: usize| u32::from_le_bytes(code[i * 4..i * 4 + 4].try_into().unwrap());
+        assert_eq!(w(0), 0x0440_2023); // sw x4, 64(x0)
+        assert_eq!(w(1), 0x0400_2203); // lw x4, 64(x0)
+    }
+
+    #[test]
+    fn branch_offset_negative() {
+        let mut a = Assembler::new();
+        a.addi(1, 0, 1); // 0x0
+        let top = a.here(); // 0x4
+        a.addi(1, 1, 1); // 0x4
+        a.bne(1, 0, top); // 0x8, offset -4
+        let code = a.finish();
+        let w = u32::from_le_bytes(code[8..12].try_into().unwrap());
+        assert_eq!(w, 0xFE00_9EE3); // bne x1, x0, -4
+    }
+
+    #[test]
+    fn li32_roundtrip() {
+        use crate::riscv::bus::{ArrayDevice, Bus, Ram};
+        use crate::riscv::cpu::Cpu;
+        for value in [0u32, 1, 0xFFF, 0x1000, 0x4000_0000, 0xDEAD_BEEF, u32::MAX] {
+            let mut a = Assembler::new();
+            a.li32(5, value);
+            a.ebreak();
+            let mut ram = Ram::new(4096);
+            ram.load(0, &a.finish());
+            let mut bus = Bus::new(ram, ArrayDevice::new(vec![], vec![]));
+            let mut cpu = Cpu::new();
+            cpu.run(&mut bus, 10).unwrap();
+            assert_eq!(cpu.regs[5], value, "li32({value:#x})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "I-imm out of range")]
+    fn rejects_oversized_immediate() {
+        Assembler::new().addi(1, 0, 5000);
+    }
+}

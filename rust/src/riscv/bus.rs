@@ -1,0 +1,229 @@
+//! Memory bus: RAM + MMIO devices (the NCE array control registers).
+
+/// Word-addressable memory-mapped device.
+pub trait Device {
+    /// 32-bit read at a device-relative byte offset.
+    fn read(&mut self, offset: u32) -> u32;
+    /// 32-bit write at a device-relative byte offset.
+    fn write(&mut self, offset: u32, value: u32);
+}
+
+/// Plain RAM device.
+#[derive(Debug, Clone)]
+pub struct Ram {
+    bytes: Vec<u8>,
+}
+
+impl Ram {
+    pub fn new(size: usize) -> Self {
+        Self { bytes: vec![0; size] }
+    }
+
+    pub fn load(&mut self, addr: usize, data: &[u8]) {
+        self.bytes[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_u8(&self, addr: u32) -> u8 {
+        self.bytes[addr as usize]
+    }
+
+    pub fn write_u8(&mut self, addr: u32, v: u8) {
+        self.bytes[addr as usize] = v;
+    }
+
+    pub fn read_u32(&self, addr: u32) -> u32 {
+        let a = addr as usize;
+        u32::from_le_bytes(self.bytes[a..a + 4].try_into().unwrap())
+    }
+
+    pub fn write_u32(&mut self, addr: u32, v: u32) {
+        let a = addr as usize;
+        self.bytes[a..a + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+/// MMIO register map of the NCE array controller (device-relative).
+pub mod array_regs {
+    /// W: layer descriptor index to configure.
+    pub const LAYER_SEL: u32 = 0x00;
+    /// W: start the selected layer (value = timestep count).
+    pub const START: u32 = 0x04;
+    /// R: busy flag (1 while the array runs).
+    pub const BUSY: u32 = 0x08;
+    /// R: cycles consumed by the last layer run.
+    pub const CYCLES_LO: u32 = 0x0C;
+    pub const CYCLES_HI: u32 = 0x10;
+    /// R: spikes emitted by the last layer run.
+    pub const SPIKES: u32 = 0x14;
+}
+
+/// The NCE-array MMIO device used in co-simulation: completing a layer
+/// takes a programmed number of polls (modelling the real busy window).
+#[derive(Debug, Clone)]
+pub struct ArrayDevice {
+    /// Cycle cost of each layer (set by the testbench / simulator).
+    pub layer_cycles: Vec<u64>,
+    pub layer_spikes: Vec<u32>,
+    selected: usize,
+    busy_polls_left: u32,
+    /// busy-polls a layer stays busy per 1000 cycles of layer work.
+    polls_per_kcycle: u32,
+    last_cycles: u64,
+    last_spikes: u32,
+    pub starts: u32,
+}
+
+impl ArrayDevice {
+    pub fn new(layer_cycles: Vec<u64>, layer_spikes: Vec<u32>) -> Self {
+        Self {
+            layer_cycles,
+            layer_spikes,
+            selected: 0,
+            busy_polls_left: 0,
+            polls_per_kcycle: 2,
+            last_cycles: 0,
+            last_spikes: 0,
+            starts: 0,
+        }
+    }
+}
+
+impl Device for ArrayDevice {
+    fn read(&mut self, offset: u32) -> u32 {
+        match offset {
+            array_regs::BUSY => {
+                if self.busy_polls_left > 0 {
+                    self.busy_polls_left -= 1;
+                    1
+                } else {
+                    0
+                }
+            }
+            array_regs::CYCLES_LO => self.last_cycles as u32,
+            array_regs::CYCLES_HI => (self.last_cycles >> 32) as u32,
+            array_regs::SPIKES => self.last_spikes,
+            _ => 0,
+        }
+    }
+
+    fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            array_regs::LAYER_SEL => self.selected = value as usize,
+            array_regs::START => {
+                let _timesteps = value; // informational; cycle cost is per-layer
+                let cycles = self.layer_cycles.get(self.selected).copied().unwrap_or(0);
+                self.last_cycles = cycles;
+                self.last_spikes =
+                    self.layer_spikes.get(self.selected).copied().unwrap_or(0);
+                self.busy_polls_left =
+                    ((cycles / 1000) as u32 * self.polls_per_kcycle).max(1);
+                self.starts += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The system bus: RAM at 0x0000_0000, array MMIO at 0x4000_0000.
+pub struct Bus {
+    pub ram: Ram,
+    pub array: ArrayDevice,
+}
+
+pub const MMIO_BASE: u32 = 0x4000_0000;
+
+impl Bus {
+    pub fn new(ram: Ram, array: ArrayDevice) -> Self {
+        Self { ram, array }
+    }
+
+    pub fn read_u32(&mut self, addr: u32) -> u32 {
+        if addr >= MMIO_BASE {
+            self.array.read(addr - MMIO_BASE)
+        } else {
+            self.ram.read_u32(addr)
+        }
+    }
+
+    pub fn write_u32(&mut self, addr: u32, v: u32) {
+        if addr >= MMIO_BASE {
+            self.array.write(addr - MMIO_BASE, v);
+        } else {
+            self.ram.write_u32(addr, v);
+        }
+    }
+
+    pub fn read_u8(&mut self, addr: u32) -> u8 {
+        if addr >= MMIO_BASE {
+            (self.array.read(addr - MMIO_BASE) & 0xFF) as u8
+        } else {
+            self.ram.read_u8(addr)
+        }
+    }
+
+    pub fn write_u8(&mut self, addr: u32, v: u8) {
+        if addr >= MMIO_BASE {
+            self.array.write(addr - MMIO_BASE, v as u32);
+        } else {
+            self.ram.write_u8(addr, v);
+        }
+    }
+
+    pub fn read_u16(&mut self, addr: u32) -> u16 {
+        (self.read_u8(addr) as u16) | ((self.read_u8(addr + 1) as u16) << 8)
+    }
+
+    pub fn write_u16(&mut self, addr: u32, v: u16) {
+        self.write_u8(addr, (v & 0xFF) as u8);
+        self.write_u8(addr + 1, (v >> 8) as u8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ram_rw() {
+        let mut r = Ram::new(64);
+        r.write_u32(8, 0xDEADBEEF);
+        assert_eq!(r.read_u32(8), 0xDEADBEEF);
+        assert_eq!(r.read_u8(8), 0xEF); // little-endian
+        assert_eq!(r.read_u8(11), 0xDE);
+    }
+
+    #[test]
+    fn array_device_protocol() {
+        let mut d = ArrayDevice::new(vec![5000, 2000], vec![42, 7]);
+        d.write(array_regs::LAYER_SEL, 1);
+        d.write(array_regs::START, 16);
+        // busy for a few polls, then done
+        let mut polls = 0;
+        while d.read(array_regs::BUSY) == 1 {
+            polls += 1;
+            assert!(polls < 100);
+        }
+        assert!(polls >= 1);
+        assert_eq!(d.read(array_regs::CYCLES_LO), 2000);
+        assert_eq!(d.read(array_regs::SPIKES), 7);
+        assert_eq!(d.starts, 1);
+    }
+
+    #[test]
+    fn bus_routes_mmio() {
+        let mut bus = Bus::new(Ram::new(64), ArrayDevice::new(vec![100], vec![1]));
+        bus.write_u32(0, 7);
+        assert_eq!(bus.read_u32(0), 7);
+        bus.write_u32(MMIO_BASE + array_regs::LAYER_SEL, 0);
+        bus.write_u32(MMIO_BASE + array_regs::START, 1);
+        assert_eq!(bus.array.starts, 1);
+    }
+}

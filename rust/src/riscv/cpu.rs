@@ -1,0 +1,352 @@
+//! RV32I interpreter core (1 instruction / cycle, like pico-rv32's
+//! non-pipelined mode for the control-path subset we use).
+
+use super::bus::Bus;
+
+/// Execution traps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    /// `ebreak` — clean program completion in our convention.
+    Break,
+    /// `ecall` — host call (register a7 selects the function).
+    Ecall,
+    IllegalInstruction(u32),
+    MisalignedPc(u32),
+}
+
+/// The CPU state.
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    /// Retired instruction count (== cycles at CPI 1).
+    pub cycles: u64,
+}
+
+impl Default for Cpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Cpu {
+    pub fn new() -> Self {
+        Self { regs: [0; 32], pc: 0, cycles: 0 }
+    }
+
+    fn x(&self, r: u32) -> u32 {
+        self.regs[r as usize]
+    }
+
+    fn set_x(&mut self, r: u32, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Execute one instruction; `Ok(())` or a trap.
+    pub fn step(&mut self, bus: &mut Bus) -> Result<(), Trap> {
+        if self.pc % 4 != 0 {
+            return Err(Trap::MisalignedPc(self.pc));
+        }
+        let inst = bus.read_u32(self.pc);
+        let opcode = inst & 0x7F;
+        let rd = (inst >> 7) & 0x1F;
+        let funct3 = (inst >> 12) & 0x7;
+        let rs1 = (inst >> 15) & 0x1F;
+        let rs2 = (inst >> 20) & 0x1F;
+        let funct7 = inst >> 25;
+
+        let imm_i = (inst as i32) >> 20;
+        let imm_s = (((inst & 0xFE00_0000) as i32) >> 20) | (((inst >> 7) & 0x1F) as i32);
+        let imm_b = ((((inst >> 31) & 1) << 12)
+            | (((inst >> 7) & 1) << 11)
+            | (((inst >> 25) & 0x3F) << 5)
+            | (((inst >> 8) & 0xF) << 1)) as i32;
+        let imm_b = (imm_b << 19) >> 19; // sign-extend 13-bit
+        let imm_u = (inst & 0xFFFF_F000) as i32;
+        let imm_j = ((((inst >> 31) & 1) << 20)
+            | (((inst >> 12) & 0xFF) << 12)
+            | (((inst >> 20) & 1) << 11)
+            | (((inst >> 21) & 0x3FF) << 1)) as i32;
+        let imm_j = (imm_j << 11) >> 11; // sign-extend 21-bit
+
+        let mut next_pc = self.pc.wrapping_add(4);
+        match opcode {
+            0x37 => self.set_x(rd, imm_u as u32), // lui
+            0x17 => self.set_x(rd, self.pc.wrapping_add(imm_u as u32)), // auipc
+            0x6F => {
+                // jal
+                self.set_x(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm_j as u32);
+            }
+            0x67 => {
+                // jalr
+                let t = next_pc;
+                next_pc = self.x(rs1).wrapping_add(imm_i as u32) & !1;
+                self.set_x(rd, t);
+            }
+            0x63 => {
+                // branches
+                let (a, b) = (self.x(rs1), self.x(rs2));
+                let taken = match funct3 {
+                    0 => a == b,
+                    1 => a != b,
+                    4 => (a as i32) < (b as i32),
+                    5 => (a as i32) >= (b as i32),
+                    6 => a < b,
+                    7 => a >= b,
+                    _ => return Err(Trap::IllegalInstruction(inst)),
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm_b as u32);
+                }
+            }
+            0x03 => {
+                // loads
+                let addr = self.x(rs1).wrapping_add(imm_i as u32);
+                let v = match funct3 {
+                    0 => bus.read_u8(addr) as i8 as i32 as u32, // lb
+                    1 => bus.read_u16(addr) as i16 as i32 as u32, // lh
+                    2 => bus.read_u32(addr),                    // lw
+                    4 => bus.read_u8(addr) as u32,              // lbu
+                    5 => bus.read_u16(addr) as u32,             // lhu
+                    _ => return Err(Trap::IllegalInstruction(inst)),
+                };
+                self.set_x(rd, v);
+            }
+            0x23 => {
+                // stores
+                let addr = self.x(rs1).wrapping_add(imm_s as u32);
+                match funct3 {
+                    0 => bus.write_u8(addr, self.x(rs2) as u8),
+                    1 => bus.write_u16(addr, self.x(rs2) as u16),
+                    2 => bus.write_u32(addr, self.x(rs2)),
+                    _ => return Err(Trap::IllegalInstruction(inst)),
+                }
+            }
+            0x13 => {
+                // op-imm
+                let a = self.x(rs1);
+                let b = imm_i as u32;
+                let shamt = rs2;
+                let v = match funct3 {
+                    0 => a.wrapping_add(b),
+                    1 => a << shamt,
+                    2 => ((a as i32) < (b as i32)) as u32,
+                    3 => (a < b) as u32,
+                    4 => a ^ b,
+                    5 => {
+                        if funct7 & 0x20 != 0 {
+                            ((a as i32) >> shamt) as u32
+                        } else {
+                            a >> shamt
+                        }
+                    }
+                    6 => a | b,
+                    7 => a & b,
+                    _ => return Err(Trap::IllegalInstruction(inst)),
+                };
+                self.set_x(rd, v);
+            }
+            0x33 => {
+                // op
+                let (a, b) = (self.x(rs1), self.x(rs2));
+                let v = match (funct3, funct7) {
+                    (0, 0x00) => a.wrapping_add(b),
+                    (0, 0x20) => a.wrapping_sub(b),
+                    (1, 0x00) => a << (b & 31),
+                    (2, 0x00) => ((a as i32) < (b as i32)) as u32,
+                    (3, 0x00) => (a < b) as u32,
+                    (4, 0x00) => a ^ b,
+                    (5, 0x00) => a >> (b & 31),
+                    (5, 0x20) => ((a as i32) >> (b & 31)) as u32,
+                    (6, 0x00) => a | b,
+                    (7, 0x00) => a & b,
+                    _ => return Err(Trap::IllegalInstruction(inst)),
+                };
+                self.set_x(rd, v);
+            }
+            0x73 => {
+                self.cycles += 1;
+                self.pc = next_pc;
+                return Err(if imm_i == 1 { Trap::Break } else { Trap::Ecall });
+            }
+            _ => return Err(Trap::IllegalInstruction(inst)),
+        }
+        self.pc = next_pc;
+        self.cycles += 1;
+        Ok(())
+    }
+
+    /// Run until `ebreak` (or any trap / the step limit). Returns cycles.
+    pub fn run(&mut self, bus: &mut Bus, max_steps: u64) -> Result<u64, Trap> {
+        let start = self.cycles;
+        for _ in 0..max_steps {
+            match self.step(bus) {
+                Ok(()) => {}
+                Err(Trap::Break) => return Ok(self.cycles - start),
+                Err(t) => return Err(t),
+            }
+        }
+        Err(Trap::IllegalInstruction(0xFFFF_FFFF)) // step-limit runaway
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::asm::Assembler;
+    use crate::riscv::bus::{ArrayDevice, Ram};
+
+    fn make_bus(prog: &[u8]) -> Bus {
+        let mut ram = Ram::new(64 * 1024);
+        ram.load(0, prog);
+        Bus::new(ram, ArrayDevice::new(vec![1000], vec![5]))
+    }
+
+    #[test]
+    fn arithmetic_program() {
+        // x1 = 10; x2 = 32; x3 = x1 + x2; x4 = x3 - x1; mem[64] = x4
+        let mut a = Assembler::new();
+        a.addi(1, 0, 10);
+        a.addi(2, 0, 32);
+        a.add(3, 1, 2);
+        a.sub(4, 3, 1);
+        a.sw(0, 4, 64);
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 100).unwrap();
+        assert_eq!(cpu.regs[3], 42);
+        assert_eq!(bus.ram.read_u32(64), 32);
+    }
+
+    #[test]
+    fn branch_loop_sums() {
+        // sum 1..=5 via a loop
+        let mut a = Assembler::new();
+        a.addi(1, 0, 5); // counter
+        a.addi(2, 0, 0); // acc
+        let top = a.here();
+        a.add(2, 2, 1);
+        a.addi(1, 1, -1);
+        a.bne(1, 0, top);
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 100).unwrap();
+        assert_eq!(cpu.regs[2], 15);
+    }
+
+    #[test]
+    fn shifts_and_logic() {
+        let mut a = Assembler::new();
+        a.addi(1, 0, -8); // 0xFFFFFFF8
+        a.srai(2, 1, 2); // -2
+        a.srli(3, 1, 28); // 0xF
+        a.andi(4, 1, 0xF); // 8
+        a.xori(5, 3, 0x5); // 0xA
+        a.slli(6, 3, 4); // 0xF0
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 100).unwrap();
+        assert_eq!(cpu.regs[2] as i32, -2);
+        assert_eq!(cpu.regs[3], 0xF);
+        assert_eq!(cpu.regs[4], 8);
+        assert_eq!(cpu.regs[5], 0xA);
+        assert_eq!(cpu.regs[6], 0xF0);
+    }
+
+    #[test]
+    fn byte_halfword_memory() {
+        let mut a = Assembler::new();
+        a.addi(1, 0, -1); // 0xFFFFFFFF
+        a.sb(0, 1, 100);
+        a.lb(2, 0, 100); // -1 sign-extended
+        a.lbu(3, 0, 100); // 255
+        a.addi(4, 0, 0x7FF);
+        a.sh(0, 4, 104);
+        a.lh(5, 0, 104);
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 100).unwrap();
+        assert_eq!(cpu.regs[2], 0xFFFF_FFFF);
+        assert_eq!(cpu.regs[3], 255);
+        assert_eq!(cpu.regs[5], 0x7FF);
+    }
+
+    #[test]
+    fn jal_and_jalr_call_return() {
+        let mut a = Assembler::new();
+        a.addi(1, 0, 7);
+        let call = a.jal_placeholder(5); // x5 = link
+        a.ebreak();
+        // function: double x1 and return
+        let fn_addr = a.here();
+        a.add(1, 1, 1);
+        a.jalr(0, 5, 0);
+        a.patch_jal(call, fn_addr);
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 100).unwrap();
+        assert_eq!(cpu.regs[1], 14);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut a = Assembler::new();
+        a.addi(0, 0, 99);
+        a.add(1, 0, 0);
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 10).unwrap();
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[1], 0);
+    }
+
+    #[test]
+    fn illegal_instruction_traps() {
+        let mut bus = make_bus(&[0xFF, 0xFF, 0xFF, 0xFF]);
+        let mut cpu = Cpu::new();
+        assert!(matches!(
+            cpu.step(&mut bus),
+            Err(Trap::IllegalInstruction(_))
+        ));
+    }
+
+    #[test]
+    fn runaway_program_hits_step_limit() {
+        // infinite loop: jal x0, 0
+        let mut a = Assembler::new();
+        let top = a.here();
+        a.jal_to(0, top);
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        assert!(cpu.run(&mut bus, 50).is_err());
+    }
+
+    #[test]
+    fn mmio_poll_loop() {
+        use crate::riscv::bus::{array_regs, MMIO_BASE};
+        // select layer 0, start, poll BUSY until clear, read cycles
+        let mut a = Assembler::new();
+        a.lui(1, MMIO_BASE >> 12);
+        a.sw(1, 0, array_regs::LAYER_SEL as i32);
+        a.addi(2, 0, 16);
+        a.sw(1, 2, array_regs::START as i32);
+        let poll = a.here();
+        a.lw(3, 1, array_regs::BUSY as i32);
+        a.bne(3, 0, poll);
+        a.lw(4, 1, array_regs::CYCLES_LO as i32);
+        a.ebreak();
+        let mut bus = make_bus(&a.finish());
+        let mut cpu = Cpu::new();
+        let cycles = cpu.run(&mut bus, 1000).unwrap();
+        assert_eq!(cpu.regs[4], 1000); // ArrayDevice layer_cycles[0]
+        assert_eq!(bus.array.starts, 1);
+        assert!(cycles > 5); // setup + >=1 poll iterations
+    }
+}

@@ -1,0 +1,19 @@
+//! pico-rv32-class RISC-V controller (Fig. 1, left block).
+//!
+//! A compact RV32I interpreter standing in for the pico-rv32 soft core
+//! the paper integrates: it executes real control programs (assembled by
+//! [`asm`]) that program layer descriptors over MMIO, start the NCE array
+//! and poll for completion. The cycle cost of this orchestration is what
+//! `array::sim` charges as `riscv_per_layer`; `examples/riscv_demo.rs`
+//! co-simulates the controller against the array device to validate it.
+//!
+//! Subset: full RV32I base integer ISA (no CSRs, no fences, no
+//! compressed) — the subset the control path actually uses.
+
+pub mod asm;
+pub mod bus;
+pub mod cpu;
+
+pub use asm::Assembler;
+pub use bus::{ArrayDevice, Bus, Ram};
+pub use cpu::{Cpu, Trap};

@@ -1,0 +1,94 @@
+//! Artifact store: manifest + lazily loaded weights/datasets/HLO text.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::io::{self, Dataset, Manifest};
+use crate::model::network::QuantNetwork;
+use crate::Result;
+
+/// Root handle over an `artifacts/` directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Open an artifacts directory (validates the manifest).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = io::load_manifest(&dir)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Conventional location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the packed weights of (model, scheme, bits).
+    pub fn load_network(
+        &self,
+        model: &str,
+        scheme: &str,
+        bits: u32,
+    ) -> Result<QuantNetwork> {
+        let entry = self.manifest.model(model)?;
+        let q = entry.quant_entry(scheme, bits)?;
+        io::load_weights(self.dir.join(&q.weights), entry.arch.clone())
+    }
+
+    /// Load the layer-adaptive (mixed-precision) network, if exported.
+    pub fn load_mixed_network(&self, model: &str) -> Result<QuantNetwork> {
+        let entry = self.manifest.model(model)?;
+        let m = entry
+            .mixed
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no mixed artifact for {model}"))?;
+        io::load_weights(self.dir.join(&m.weights), entry.arch.clone())
+    }
+
+    /// Load the shared test dataset.
+    pub fn load_test_set(&self) -> Result<Dataset> {
+        io::load_dataset(self.dir.join(&self.manifest.dataset.file))
+    }
+
+    /// Path of the HLO text artifact for (model, bits, batch).
+    pub fn hlo_path(&self, model: &str, bits: u32, batch: usize) -> Result<PathBuf> {
+        let entry = self.manifest.model(model)?;
+        Ok(self.dir.join(entry.hlo_file(bits, batch)?))
+    }
+
+    /// Path of the FP32 HLO artifact for (model, batch).
+    pub fn fp32_hlo_path(&self, model: &str, batch: usize) -> Result<PathBuf> {
+        let entry = self.manifest.model(model)?;
+        let file = entry
+            .fp32
+            .hlo
+            .get(&batch)
+            .ok_or_else(|| anyhow::anyhow!("no fp32 HLO at batch {batch}"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Batch sizes with compiled artifacts for (model, bits), ascending.
+    /// `bits = 0` queries the FP32 baseline artifacts.
+    pub fn available_batches(&self, model: &str, bits: u32) -> Result<Vec<usize>> {
+        let entry = self.manifest.model(model)?;
+        if bits == 0 {
+            return Ok(entry.fp32.hlo.keys().copied().collect());
+        }
+        Ok(entry
+            .hlo
+            .get(&bits)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default())
+    }
+}

@@ -1,0 +1,178 @@
+//! PJRT executor: compile-once, execute-many model runners.
+//!
+//! One [`ModelExecutor`] wraps one compiled (model, precision, batch)
+//! artifact. The AOT graphs take `f32[B, input_dim]` (pixel intensities
+//! in [0,1]) and return a 1-tuple of `i32[B, classes]` spike counts —
+//! `return_tuple=True` at lowering, unwrapped with `to_tuple1` here.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+use super::artifact::ArtifactStore;
+
+/// Identifies one compiled executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelKey {
+    /// 0 encodes FP32; otherwise the integer field width.
+    pub bits: u32,
+    pub batch: usize,
+}
+
+/// A compiled, ready-to-execute model graph.
+pub struct ModelExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// FP32 baseline graphs emit f32 spike-count logits; integer graphs
+    /// emit exact i32 counts.
+    pub float_output: bool,
+}
+
+impl ModelExecutor {
+    /// Compile the HLO text at `path` on `client`.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        path: &std::path::Path,
+        input_dim: usize,
+        classes: usize,
+        batch: usize,
+        float_output: bool,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Self { exe, input_dim, classes, batch, float_output })
+    }
+
+    /// Run one batch of pixel rows (u8, encoder domain) -> spike counts
+    /// `[batch][classes]`. Short batches are zero-padded; only `rows`
+    /// results are returned.
+    pub fn run_u8(&self, samples: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(samples.len() <= self.batch, "batch overflow");
+        let rows = samples.len();
+        let mut x = vec![0f32; self.batch * self.input_dim];
+        for (r, s) in samples.iter().enumerate() {
+            anyhow::ensure!(s.len() == self.input_dim, "bad sample dim");
+            for (d, &px) in s.iter().enumerate() {
+                // exact inverse of the u8 quantization in the graph:
+                // round(px/255 * 255) == px, so numerics match bit-exactly
+                x[r * self.input_dim + d] = px as f32 / 255.0;
+            }
+        }
+        let lit = xla::Literal::vec1(&x)
+            .reshape(&[self.batch as i64, self.input_dim as i64])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("{e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let counts: Vec<i32> = if self.float_output {
+            // FP32 logits are float spike counts; round for the common API
+            out.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .into_iter()
+                .map(|f| f.round() as i32)
+                .collect()
+        } else {
+            out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?
+        };
+        anyhow::ensure!(counts.len() == self.batch * self.classes, "bad output size");
+        Ok(counts
+            .chunks_exact(self.classes)
+            .take(rows)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+
+    /// Argmax predictions for a batch.
+    pub fn predict_u8(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
+        Ok(self
+            .run_u8(samples)?
+            .into_iter()
+            .map(|c| {
+                let mut best = 0;
+                for (i, &v) in c.iter().enumerate().skip(1) {
+                    if v > c[best] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect())
+    }
+}
+
+/// Cache of compiled executables for one model across (bits, batch).
+pub struct ExecutorPool {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    model: String,
+    input_dim: usize,
+    classes: usize,
+    pool: BTreeMap<ModelKey, ModelExecutor>,
+}
+
+impl ExecutorPool {
+    pub fn new(store: ArtifactStore, model: &str) -> Result<Self> {
+        let entry = store.manifest().model(model)?;
+        let input_dim = entry.arch.input_dim();
+        let classes = entry.arch.classes();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Self {
+            client,
+            store,
+            model: model.to_string(),
+            input_dim,
+            classes,
+            pool: BTreeMap::new(),
+        })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Get (compiling on first use) the executor for (bits, batch).
+    /// `bits = 0` selects the FP32 baseline graph.
+    pub fn get(&mut self, key: ModelKey) -> Result<&ModelExecutor> {
+        if !self.pool.contains_key(&key) {
+            let path = if key.bits == 0 {
+                self.store.fp32_hlo_path(&self.model, key.batch)?
+            } else {
+                self.store.hlo_path(&self.model, key.bits, key.batch)?
+            };
+            let exe = ModelExecutor::compile(
+                &self.client,
+                &path,
+                self.input_dim,
+                self.classes,
+                key.batch,
+                key.bits == 0,
+            )?;
+            self.pool.insert(key, exe);
+        }
+        Ok(&self.pool[&key])
+    }
+
+    /// Largest compiled batch size <= `want` (for the dynamic batcher).
+    pub fn best_batch(&self, bits: u32, want: usize) -> Result<usize> {
+        let batches = self.store.available_batches(&self.model, bits)?;
+        batches
+            .iter()
+            .rev()
+            .find(|&&b| b <= want.max(1))
+            .or_else(|| batches.first())
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no artifacts for INT{bits}"))
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas graphs.
+//!
+//! Python never runs at inference time: `make artifacts` lowered every
+//! (model, precision, batch) combination to HLO *text* (the interchange
+//! format xla_extension 0.5.1 accepts — serialized jax>=0.5 protos are
+//! rejected for their 64-bit instruction ids); this module compiles those
+//! artifacts once on the PJRT CPU client and executes them from the
+//! serving hot path.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::ArtifactStore;
+pub use executor::{ModelExecutor, ModelKey};

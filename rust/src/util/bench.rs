@@ -1,0 +1,184 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! The `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup, fixed repetition budget, median/p10/p90 wall-clock
+//! statistics, and aligned table printing shared by all paper-table
+//! regenerators.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Measure `f` (one logical iteration per call).
+///
+/// Runs `warmup` unmeasured calls, then samples until `budget` elapses or
+/// `max_samples` is reached (whichever first), with at least 5 samples.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_cfg(name, Duration::from_millis(800), 3, 200, &mut f)
+}
+
+/// Fully-parameterized variant.
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    warmup: usize,
+    max_samples: usize,
+    f: &mut F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < budget || samples.len() < 5) && samples.len() < max_samples
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Measurement {
+        name: name.to_string(),
+        median: q(0.5),
+        p10: q(0.1),
+        p90: q(0.9),
+        iters: samples.len(),
+    }
+}
+
+/// Human duration: picks ns/us/ms/s.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Print a measurement in the shared one-line format.
+pub fn report(m: &Measurement) {
+    println!(
+        "  {:<44} median {:>12}   p10 {:>12}   p90 {:>12}   ({} samples)",
+        m.name,
+        fmt_duration(m.median),
+        fmt_duration(m.p10),
+        fmt_duration(m.p90),
+        m.iters
+    );
+}
+
+/// Aligned text table used by every paper-table regenerator.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, (c, w)) in cells.iter().zip(widths).enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{c:<w$}", w = w));
+            }
+            out.push('\n');
+        };
+        line(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let m = bench_cfg(
+            "noop",
+            Duration::from_millis(10),
+            2,
+            50,
+            &mut || n += 1,
+        );
+        assert!(m.iters >= 5);
+        assert!(n as usize >= m.iters); // warmup + samples
+        assert!(m.p10 <= m.median && m.median <= m.p90);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00 s");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["xxx".into(), "y".into()]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a    "));
+        assert!(lines[2].starts_with("xxx  "));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+}

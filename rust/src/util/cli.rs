@@ -1,0 +1,123 @@
+//! Minimal flag parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Unknown flags are an error; `--help` is the caller's responsibility.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: flags, key-values, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `known` lists accepted option names (without `--`); options taking a
+    /// value are written `"name="`, boolean switches just `"name"`.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known: &[&str],
+    ) -> anyhow::Result<Self> {
+        let takes_value = |name: &str| known.contains(&&*format!("{name}="));
+        let is_switch = |name: &str| known.contains(&name);
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if takes_value(&name) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                    };
+                    out.flags.insert(name, v);
+                } else if is_switch(&name) {
+                    if inline.is_some() {
+                        anyhow::bail!("--{name} takes no value");
+                    }
+                    out.flags.insert(name, String::from("true"));
+                } else {
+                    anyhow::bail!("unknown option --{name}");
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            argv(&["serve", "--model", "mlp", "--bits=4", "--verbose"]),
+            &["model=", "bits=", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["serve".to_string()]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get("bits"), Some("4"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("bits", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(argv(&["--nope"]), &["model="]).is_err());
+    }
+
+    #[test]
+    fn value_required() {
+        assert!(Args::parse(argv(&["--model"]), &["model="]).is_err());
+    }
+
+    #[test]
+    fn switch_takes_no_value() {
+        assert!(Args::parse(argv(&["--verbose=yes"]), &["verbose"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]), &["bits="]).unwrap();
+        assert_eq!(a.get_or("bits", "8"), "8");
+        assert_eq!(a.get_usize("bits", 8).unwrap(), 8);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small in-tree replacements for crates unavailable in this offline
+//! environment (serde_json, clap, criterion, proptest, rand).
+//!
+//! - [`json`] — a strict recursive-descent JSON parser + writer used for
+//!   the artifact manifest and report output.
+//! - [`rng`] — xorshift64* PRNG (deterministic, seedable) shared by the
+//!   Poisson encoder, synthetic workload generators and property tests.
+//! - [`bench`] — the micro-benchmark harness the `cargo bench` targets
+//!   use: warmup, repetitions, median/p10/p90 reporting.
+//! - [`cli`] — tiny flag parser for the `lspine` binary and examples.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,243 @@
+//! Property tests (hand-rolled: proptest is unavailable offline).
+//!
+//! Each property runs a few hundred randomized cases from the crate's
+//! deterministic RNG — failures print the seed so any case replays.
+
+use lspine::array::RingFifo;
+use lspine::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use lspine::coordinator::request::{InferRequest, Precision};
+use lspine::nce::adder_tree::{lanewise_add_ref, SimdAdder};
+use lspine::nce::lif::{lif_step_row, LifParams};
+use lspine::nce::simd::{pack_row, unpack_row, Precision as SimdPrec};
+use lspine::quant::{quantize, QuantScheme, SCHEMES};
+use lspine::util::json;
+use lspine::util::rng::Rng;
+
+const PRECISIONS: [SimdPrec; 3] = [SimdPrec::Int2, SimdPrec::Int4, SimdPrec::Int8];
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed + 1);
+        let p = PRECISIONS[(seed % 3) as usize];
+        let (lo, hi) = p.qrange();
+        let n = 1 + rng.below(64) as usize;
+        let vals: Vec<i32> =
+            (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
+        let words = pack_row(&vals, p);
+        assert_eq!(unpack_row(&words, p, n), vals, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_lif_row_matches_dense() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed * 7 + 3);
+        let p = PRECISIONS[(seed % 3) as usize];
+        let (lo, hi) = p.qrange();
+        let k = 1 + rng.below(48) as usize;
+        let n = 1 + rng.below(40) as usize;
+        let theta = 1 + rng.below(60) as i32;
+        let leak = 1 + rng.below(6) as u32;
+
+        let w: Vec<Vec<i32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect())
+            .collect();
+        let n_words = n.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for row in &w {
+            packed.extend(pack_row(row, p));
+        }
+        let spikes: Vec<u8> = (0..k).map(|_| (rng.below(2)) as u8).collect();
+        let v0: Vec<i32> = (0..n).map(|_| rng.range_i64(-200, 200) as i32).collect();
+
+        let params = LifParams::new(theta, leak);
+        let mut v_fast = v0.clone();
+        let mut out_fast = vec![0u8; n];
+        let mut acc = vec![0i32; n];
+        lif_step_row(&spikes, &packed, n_words, p, &mut v_fast, &mut out_fast, params, &mut acc);
+
+        // dense reference
+        let mut v_ref = v0;
+        let mut out_ref = vec![0u8; n];
+        for o in 0..n {
+            let mut i_syn = 0i32;
+            for (j, &s) in spikes.iter().enumerate() {
+                if s != 0 {
+                    i_syn += w[j][o];
+                }
+            }
+            let v_new = v_ref[o] - (v_ref[o] >> leak) + i_syn;
+            let fired = v_new >= theta;
+            v_ref[o] = if fired { v_new - theta } else { v_new };
+            out_ref[o] = fired as u8;
+        }
+        assert_eq!(out_fast, out_ref, "seed={seed}");
+        assert_eq!(v_fast, v_ref, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_gate_level_adder_matches_lanewise() {
+    let adder = SimdAdder::new();
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 11);
+        let p = PRECISIONS[(seed % 3) as usize];
+        let a = rng.next_u32();
+        let b = rng.next_u32();
+        assert_eq!(
+            adder.add(a, b, p),
+            lanewise_add_ref(a, b, p),
+            "seed={seed} a={a:#x} b={b:#x}"
+        );
+    }
+}
+
+#[test]
+fn prop_quantizers_respect_range_and_scale_positive() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed * 13 + 5);
+        let k = 4 + rng.below(24) as usize;
+        let n = 4 + rng.below(24) as usize;
+        let sigma = 0.01 + rng.f64() * 2.0;
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.gauss() * sigma) as f32).collect();
+        for p in PRECISIONS {
+            let (lo, hi) = p.qrange();
+            for scheme in SCHEMES {
+                let qt = quantize(&w, k, n, p, scheme);
+                assert!(qt.scale > 0.0, "seed={seed} {scheme:?}");
+                assert!(
+                    qt.q.iter().all(|&v| v >= lo && v <= hi),
+                    "seed={seed} {scheme:?} {p:?}"
+                );
+                // packing the result must always succeed
+                let (words, n_words) = qt.packed();
+                assert_eq!(words.len(), k * n_words);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lspine_mse_never_worse_than_stbp() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed + 777);
+        let w: Vec<f32> = (0..512).map(|_| (rng.gauss() * 0.2) as f32).collect();
+        for p in PRECISIONS {
+            let ls = quantize(&w, 16, 32, p, QuantScheme::LSpine).mse(&w);
+            let st = quantize(&w, 16, 32, p, QuantScheme::Stbp).mse(&w);
+            assert!(ls <= st + 1e-12, "seed={seed} {p:?}: {ls} > {st}");
+        }
+    }
+}
+
+#[test]
+fn prop_fifo_behaves_like_vecdeque() {
+    use std::collections::VecDeque;
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed + 21);
+        let cap = 1 + rng.below(16) as usize;
+        let mut fifo = RingFifo::new(cap);
+        let mut model: VecDeque<u32> = VecDeque::new();
+        for _ in 0..500 {
+            if rng.below(2) == 0 {
+                let v = rng.next_u32();
+                let pushed = fifo.push(v).is_ok();
+                if model.len() < cap {
+                    assert!(pushed, "seed={seed}");
+                    model.push_back(v);
+                } else {
+                    assert!(!pushed, "seed={seed}");
+                }
+            } else {
+                assert_eq!(fifo.pop(), model.pop_front(), "seed={seed}");
+            }
+            assert_eq!(fifo.len(), model.len());
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use lspine::util::json::Value;
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::Num((rng.range_i64(-1_000_000, 1_000_000)) as f64),
+            3 => Value::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+            4 => Value::Arr(
+                (0..rng.below(5)).map(|_| random_value(rng, depth + 1)).collect(),
+            ),
+            _ => Value::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed + 31);
+        let v = random_value(&mut rng, 0);
+        let text = v.to_json();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed={seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed + 41);
+        let max_batch = 1 + rng.below(8) as usize;
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(0), // everything always ready
+        });
+        let t0 = Instant::now();
+        let n = 1 + rng.below(60);
+        let mut sent_ids = Vec::new();
+        for id in 0..n {
+            let precision = match rng.below(3) {
+                0 => Precision::Int2,
+                1 => Precision::Int4,
+                _ => Precision::Int8,
+            };
+            let (tx, _rx) = mpsc::channel();
+            b.push(InferRequest {
+                id,
+                pixels: vec![],
+                precision,
+                enqueued: t0,
+                reply: tx,
+            });
+            sent_ids.push(id);
+        }
+        let mut got_ids = Vec::new();
+        while let Some((p, batch)) = b.next_batch(Instant::now()) {
+            assert!(batch.len() <= max_batch, "seed={seed}");
+            assert!(batch.iter().all(|r| r.precision == p), "seed={seed}");
+            got_ids.extend(batch.iter().map(|r| r.id));
+        }
+        got_ids.sort_unstable();
+        assert_eq!(got_ids, sent_ids, "seed={seed}: requests lost or duplicated");
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+#[test]
+fn prop_encoder_total_spikes_monotone_in_intensity() {
+    use lspine::encode::RateEncoder;
+    // total spike count is monotone non-decreasing in pixel value
+    for t_steps in [4u32, 8, 16, 32] {
+        let mut prev = 0u32;
+        for x in 0..=255u8 {
+            let total: u32 =
+                (0..t_steps).map(|t| RateEncoder::spike_at(x, t) as u32).sum();
+            assert!(total >= prev, "x={x} T={t_steps}");
+            prev = total;
+        }
+    }
+}
