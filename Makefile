@@ -1,0 +1,34 @@
+# L-SPINE reproduction — top-level targets.
+#
+# The rust crate is fully hermetic: `make test` needs no python and no
+# network. `make artifacts` forges deterministic synthetic artifacts via
+# the in-tree generator (lspine::forge); the python author path
+# (python/compile) remains the way to produce *trained* artifacts when a
+# jax environment is available.
+
+CARGO := cargo
+
+.PHONY: all build test artifacts bench clean
+
+all: build
+
+build:
+	cd rust && $(CARGO) build --release
+
+# Tier-1 verify: build + the full hermetic test suite.
+test:
+	cd rust && $(CARGO) build --release && $(CARGO) test -q
+
+# Forge-backed artifacts (written to rust/artifacts, the path the CLI,
+# benches and examples resolve when run from rust/).
+artifacts:
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+
+# Hermetic benches; both print BENCH_JSON lines for trajectory tracking.
+bench:
+	cd rust && $(CARGO) bench --bench hotpath
+	cd rust && $(CARGO) bench --bench ablation
+
+clean:
+	cd rust && $(CARGO) clean
+	rm -rf rust/artifacts

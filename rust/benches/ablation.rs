@@ -3,11 +3,16 @@
 //!
 //!     cargo bench --bench ablation
 //!
+//! Fully hermetic: all artifacts come from `lspine::forge` (no python,
+//! no `make artifacts`). Headline numbers of every section also print as
+//! stable `BENCH_JSON {...}` lines for BENCH_*.json trajectory tracking.
+//!
 //! A1 layer-adaptive precision vs uniform (accuracy / memory / latency)
 //! A2 timestep sweep (accuracy vs T — latency is linear in T)
 //! A3 encoder ablation (deterministic rate vs Poisson vs TTFS)
 //! A4 array geometry sweep (PE count vs latency/utilization)
 //! A5 batching policy (max_wait vs throughput and p50, native backend)
+//! A6 packed-weight fault injection (accuracy cliff per precision)
 
 use std::time::Duration;
 
@@ -16,14 +21,18 @@ use lspine::array::sim::{simulate_inference, SimOverheads};
 use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::encode::{PoissonEncoder, RateEncoder, TtfsEncoder};
+use lspine::forge;
 use lspine::model::SnnEngine;
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::Table;
+use lspine::util::bench::{emit_json_scalar, Table};
+
+const SUITE: &str = "ablation";
 
 fn main() {
-    let store = ArtifactStore::open("artifacts").expect("run `make artifacts`");
+    let dir = forge::ensure_artifacts().expect("forge artifacts");
+    let store = ArtifactStore::open(&dir).expect("forge artifacts load");
     let data = store.load_test_set().expect("test set");
-    let n = 256.min(data.n);
+    let n = 64.min(data.n);
 
     // ---------- A1: layer-adaptive precision ----------
     println!("A1 — layer-adaptive precision (paper §IV future work)\n");
@@ -50,13 +59,24 @@ fn main() {
                         .unwrap();
                 lat += r.latency_ms * 1e3;
             }
+            let acc = hits as f64 / n as f64;
+            let lat_us = lat / n as f64;
             t.row(&[
                 model.to_string(),
-                label,
-                format!("{:.2}", hits as f64 * 100.0 / n as f64),
+                label.clone(),
+                format!("{:.2}", acc * 100.0),
                 format!("{:.2}", net.memory_bits() as f64 / 8.0 / 1024.0),
-                format!("{:.1}", lat / n as f64),
+                format!("{lat_us:.1}"),
             ]);
+            emit_json_scalar(
+                SUITE,
+                &format!("a1 {model} {label}"),
+                &[
+                    ("accuracy", acc),
+                    ("memory_bits", net.memory_bits() as f64),
+                    ("sim_latency_us", lat_us),
+                ],
+            );
         };
         for bits in [8u32, 4, 2] {
             row(
@@ -86,7 +106,9 @@ fn main() {
             let pred = lspine::model::engine::argmax(&counts);
             hits += (pred == data.labels[i] as usize) as usize;
         }
-        t2.row(&[steps.to_string(), format!("{:.2}", hits as f64 * 100.0 / n as f64)]);
+        let acc = hits as f64 / n as f64;
+        t2.row(&[steps.to_string(), format!("{:.2}", acc * 100.0)]);
+        emit_json_scalar(SUITE, &format!("a2 T={steps}"), &[("accuracy", acc)]);
     }
     t2.print();
 
@@ -104,11 +126,18 @@ fn main() {
             hits += (pred == data.labels[i] as usize) as usize;
             spikes += engine.last_layer_stats()[0].active_rows;
         }
+        let acc = hits as f64 / n as f64;
+        let spikes_per_sample = spikes as f64 / n as f64;
         t3.row(&[
             name.to_string(),
-            format!("{:.2}", hits as f64 * 100.0 / n as f64),
-            format!("{:.0}", spikes as f64 / n as f64),
+            format!("{:.2}", acc * 100.0),
+            format!("{spikes_per_sample:.0}"),
         ]);
+        emit_json_scalar(
+            SUITE,
+            &format!("a3 {name}"),
+            &[("accuracy", acc), ("input_spikes_per_sample", spikes_per_sample)],
+        );
     };
     run("deterministic rate (deployed)", &mut RateEncoder::new());
     run("Poisson", &mut PoissonEncoder::new(42));
@@ -131,6 +160,14 @@ fn main() {
             format!("{:.2}", rep.latency_ms * 1e3),
             format!("{:.1}", rep.utilization * 100.0),
         ]);
+        emit_json_scalar(
+            SUITE,
+            &format!("a4 grid {r}x{c}"),
+            &[
+                ("latency_us", rep.latency_ms * 1e3),
+                ("utilization", rep.utilization),
+            ],
+        );
     }
     t4.print();
     println!("(diminishing returns past the point where per-step overheads dominate — why the paper stops at ~100 PEs)");
@@ -140,6 +177,7 @@ fn main() {
     let mut t5 = Table::new(&["max_wait", "throughput (req/s)", "p50 (us)", "mean batch"]);
     for wait_ms in [0u64, 1, 2, 8] {
         let engine = ServingEngine::start(ServerConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
             model: "mlp".into(),
             backend: Backend::Native,
             batcher: BatcherConfig {
@@ -169,6 +207,15 @@ fn main() {
             format!("{}", m.latency.quantile_us(0.5)),
             format!("{:.1}", m.mean_batch()),
         ]);
+        emit_json_scalar(
+            SUITE,
+            &format!("a5 max_wait={wait_ms}ms"),
+            &[
+                ("req_per_s", total as f64 / dt),
+                ("p50_us", m.latency.quantile_us(0.5) as f64),
+                ("mean_batch", m.mean_batch()),
+            ],
+        );
         engine.shutdown().unwrap();
     }
     t5.print();
@@ -180,9 +227,8 @@ fn main() {
     // accuracy cliff per precision. Narrow fields degrade more gently:
     // one flipped bit corrupts one INT2 field by at most 2 quanta but an
     // INT8 field by up to 128.
-    println!("\nA6 — packed-weight fault injection (mlp, 128 samples)\n");
+    println!("\nA6 — packed-weight fault injection (mlp, {n} samples)\n");
     let mut t6 = Table::new(&["BER", "INT2 acc (%)", "INT4 acc (%)", "INT8 acc (%)"]);
-    let n6 = 128.min(data.n);
     for ber in [0.0f64, 1e-5, 1e-4, 1e-3] {
         let mut cells = vec![format!("{ber:.0e}")];
         for bits in [2u32, 4, 8] {
@@ -196,18 +242,22 @@ fn main() {
                         }
                     }
                 }
-                // clamp corrupted fields back into range by re-packing?
-                // no — hardware faults do not respect ranges; feed as-is.
+                // hardware faults do not respect quantization ranges;
+                // corrupted fields are fed to the engine as-is
             }
-            // bypass validate(): corrupted fields are still valid 2's-
-            // complement fields, only their values changed
             let mut engine = SnnEngine::new(net);
             let mut hits = 0;
-            for i in 0..n6 {
+            for i in 0..n {
                 hits += (engine.predict(data.sample(i)) == data.labels[i] as usize)
                     as usize;
             }
-            cells.push(format!("{:.2}", hits as f64 * 100.0 / n6 as f64));
+            let acc = hits as f64 / n as f64;
+            cells.push(format!("{:.2}", acc * 100.0));
+            emit_json_scalar(
+                SUITE,
+                &format!("a6 ber={ber:.0e} int{bits}"),
+                &[("accuracy", acc)],
+            );
         }
         t6.row(&cells);
     }

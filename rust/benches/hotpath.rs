@@ -2,20 +2,28 @@
 //!
 //!     cargo bench --bench hotpath
 //!
+//! Fully hermetic: end-to-end benches run over `lspine::forge` artifacts,
+//! so no python and no `make artifacts` are needed. Besides the human
+//! table, every measurement prints a stable `BENCH_JSON {...}` line
+//! (util::bench::emit_json) for BENCH_*.json trajectory tracking.
+//!
 //! Measures the layers the EXPERIMENTS.md §Perf log optimizes:
 //! - packed-row accumulation (the L3 simulator's inner loop)
 //! - full LIF layer step at each precision
-//! - end-to-end native inference
-//! - serving-engine round trip (batcher + channel overhead)
+//! - end-to-end native inference (mlp INT2/4/8 + convnet INT4)
 //! - cycle-simulator throughput
+//! - serving-engine round trip (batcher + channel overhead)
 
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
+use lspine::forge;
 use lspine::model::SnnEngine;
 use lspine::nce::lif::{lif_step_row, LifParams};
 use lspine::nce::simd::{pack_row, Precision};
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::{bench, report};
+use lspine::util::bench::{bench, emit_json, report};
 use lspine::util::rng::Rng;
+
+const SUITE: &str = "hotpath";
 
 fn main() {
     let mut rng = Rng::new(7);
@@ -44,22 +52,20 @@ fn main() {
         });
         // derive synops/s for the §Perf log
         let synops = (spikes.iter().filter(|&&s| s != 0).count() * n) as f64;
-        println!(
-            "    -> {:.1} M synops/s",
-            synops / m.per_iter_ns() * 1e3
-        );
+        let msynops_per_s = synops / m.per_iter_ns() * 1e3;
+        println!("    -> {msynops_per_s:.1} M synops/s");
         report(&m);
+        emit_json(SUITE, &m, &[("msynops_per_s", msynops_per_s)]);
     }
 
-    let Ok(store) = ArtifactStore::open("artifacts") else {
-        println!("(artifacts missing — run `make artifacts` for the e2e benches)");
-        return;
-    };
+    // --- forge-backed end-to-end benches (hermetic, no python) ---
+    let dir = forge::ensure_artifacts().expect("forge artifacts");
+    let store = ArtifactStore::open(&dir).expect("forge artifacts load");
     let data = store.load_test_set().expect("test set");
     let sample = data.sample(0).to_vec();
 
     // --- end-to-end native inference ---
-    println!("native end-to-end inference:");
+    println!("native end-to-end inference (forge artifacts):");
     for (model, bits) in [("mlp", 2u32), ("mlp", 4), ("mlp", 8), ("convnet", 4)] {
         let net = store.load_network(model, "lspine", bits).unwrap();
         let mut engine = SnnEngine::new(net);
@@ -67,6 +73,15 @@ fn main() {
             engine.infer(&sample);
         });
         report(&m);
+        let st = engine.last_stats();
+        emit_json(
+            SUITE,
+            &m,
+            &[
+                ("words_touched", st.words_touched as f64),
+                ("spikes_emitted", st.spikes_emitted as f64),
+            ],
+        );
     }
 
     // --- cycle simulator throughput ---
@@ -84,12 +99,22 @@ fn main() {
             simulate_inference(&net, &cfg, &ov, &stats).unwrap();
         });
         report(&m);
+        let r = simulate_inference(&net, &cfg, &ov, &stats).unwrap();
+        emit_json(
+            SUITE,
+            &m,
+            &[
+                ("sim_total_cycles", r.total_cycles as f64),
+                ("sim_utilization", r.utilization),
+            ],
+        );
     }
 
     // --- serving round trip (native backend isolates coordinator cost) ---
     println!("serving engine round trip (native backend):");
     {
         let engine = ServingEngine::start(ServerConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
             model: "mlp".into(),
             backend: Backend::Native,
             ..Default::default()
@@ -99,7 +124,16 @@ fn main() {
             engine.infer(&sample, ReqPrecision::Int4).unwrap();
         });
         report(&m);
-        println!("  {}", engine.metrics().summary());
+        let metrics = engine.metrics();
+        emit_json(
+            SUITE,
+            &m,
+            &[
+                ("mean_batch", metrics.mean_batch()),
+                ("p50_us", metrics.latency.quantile_us(0.5) as f64),
+            ],
+        );
+        println!("  {}", metrics.summary());
         engine.shutdown().unwrap();
     }
 }

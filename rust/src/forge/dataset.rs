@@ -1,0 +1,249 @@
+//! LSPD write side + manifest builder + artifact-directory orchestration.
+//!
+//! LSPD format (little-endian, inverse of [`crate::model::io::load_dataset`]):
+//!
+//! ```text
+//! magic "LSPD" | u32 version | u32 n | u32 dim | u32 classes
+//! u8 pixels[n * dim] | u8 labels[n]
+//! ```
+//!
+//! The manifest mirrors what `python/compile/model.py` exports, minus the
+//! HLO entries (PJRT graphs cannot be produced offline; the `hlo` maps
+//! are present but empty, which the loaders accept).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::model::io::{Dataset, DATASET_MAGIC, FORMAT_VERSION};
+use crate::model::network::{ArchDesc, QuantNetwork};
+use crate::model::SnnEngine;
+use crate::quant::{QuantScheme, SCHEMES};
+use crate::util::json::Value;
+use crate::Result;
+
+use super::{
+    convnet_arch, mixed_network, mlp_arch, pixels, quantized_network, weights, ForgeConfig,
+    PRECISIONS,
+};
+
+/// Serialize a dataset to LSPD bytes.
+pub fn lspd_bytes(data: &Dataset) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(DATASET_MAGIC);
+    for v in [FORMAT_VERSION, data.n as u32, data.dim as u32, data.classes as u32] {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&data.pixels);
+    b.extend_from_slice(&data.labels);
+    b
+}
+
+/// Write a dataset as an LSPD file.
+pub fn write_lspd(path: &Path, data: &Dataset) -> Result<()> {
+    std::fs::write(path, lspd_bytes(data))?;
+    Ok(())
+}
+
+// --- tiny Value builders -------------------------------------------------
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+fn arch_json(arch: &ArchDesc) -> Value {
+    match arch {
+        ArchDesc::Mlp { sizes, timesteps, leak_shift } => obj(vec![
+            ("kind", Value::Str("mlp".into())),
+            ("sizes", Value::Arr(sizes.iter().map(|&s| num(s as f64)).collect())),
+            ("timesteps", num(*timesteps as f64)),
+            ("leak_shift", num(*leak_shift as f64)),
+        ]),
+        ArchDesc::Convnet { side, channels, classes, timesteps, leak_shift } => obj(vec![
+            ("kind", Value::Str("convnet".into())),
+            ("side", num(*side as f64)),
+            ("channels", Value::Arr(channels.iter().map(|&c| num(c as f64)).collect())),
+            ("classes", num(*classes as f64)),
+            ("timesteps", num(*timesteps as f64)),
+            ("leak_shift", num(*leak_shift as f64)),
+        ]),
+    }
+}
+
+fn quant_entry_json(net: &QuantNetwork, accuracy: f64, file: &str) -> Value {
+    obj(vec![
+        ("accuracy", num(accuracy)),
+        ("memory_bits", num(net.memory_bits() as f64)),
+        ("weights", Value::Str(file.to_string())),
+        (
+            "scales",
+            Value::Arr(net.layers.iter().map(|l| num(l.scale as f64)).collect()),
+        ),
+        (
+            "thetas",
+            Value::Arr(net.layers.iter().map(|l| num(l.theta as f64)).collect()),
+        ),
+    ])
+}
+
+fn measure_accuracy(net: &QuantNetwork, data: &Dataset) -> f64 {
+    SnnEngine::new(net.clone()).accuracy(data)
+}
+
+/// Forge the complete artifacts directory: dataset, 2 models x 4 schemes
+/// x 3 precisions of LSPW weights, one mixed-precision LSPW per model,
+/// and the manifest tying it all together.
+pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let arches = [("mlp", mlp_arch()), ("convnet", convnet_arch())];
+    let input_dim = arches[0].1.input_dim();
+    let classes = arches[0].1.classes();
+    anyhow::ensure!(
+        arches.iter().all(|(_, a)| a.input_dim() == input_dim && a.classes() == classes),
+        "forge archs must share one dataset shape"
+    );
+
+    // Dataset: random pixels; labels = the INT8/lspine MLP teacher's
+    // argmax predictions (so that configuration scores exactly 1.0 and
+    // everything else records deterministic agreement with it).
+    let pix = pixels(cfg.seed, cfg.n_test, input_dim);
+    let teacher = quantized_network(
+        &arches[0].1,
+        cfg.seed,
+        "mlp",
+        QuantScheme::LSpine,
+        crate::nce::simd::Precision::Int8,
+    );
+    let mut teacher_engine = SnnEngine::new(teacher);
+    let labels: Vec<u8> = (0..cfg.n_test)
+        .map(|i| teacher_engine.predict(&pix[i * input_dim..(i + 1) * input_dim]) as u8)
+        .collect();
+    let data = Dataset {
+        n: cfg.n_test,
+        dim: input_dim,
+        classes,
+        pixels: pix,
+        labels,
+    };
+    let dataset_file = "dataset.lspd";
+    write_lspd(&dir.join(dataset_file), &data)?;
+
+    let mut models = BTreeMap::new();
+    for (name, arch) in &arches {
+        let mut fp32_acc = 0.0;
+        let mut quant_json: BTreeMap<String, Value> = BTreeMap::new();
+        for scheme in SCHEMES {
+            let mut per_bits: BTreeMap<String, Value> = BTreeMap::new();
+            for p in PRECISIONS {
+                let net = quantized_network(arch, cfg.seed, name, scheme, p);
+                let file = format!("{name}_{}_int{}.lspw", scheme.name(), p.bits());
+                weights::write_lspw(&dir.join(&file), &net)?;
+                let acc = measure_accuracy(&net, &data);
+                if scheme == QuantScheme::LSpine && p == crate::nce::simd::Precision::Int8 {
+                    // stand-in for the (untrainable-offline) FP32 oracle
+                    fp32_acc = acc;
+                }
+                per_bits.insert(p.bits().to_string(), quant_entry_json(&net, acc, &file));
+            }
+            quant_json.insert(scheme.name().to_string(), Value::Obj(per_bits));
+        }
+
+        let (mixed_net, bits_per_layer) = mixed_network(arch, cfg.seed, name);
+        let mixed_file = format!("{name}_mixed.lspw");
+        weights::write_lspw(&dir.join(&mixed_file), &mixed_net)?;
+        let mixed_acc = measure_accuracy(&mixed_net, &data);
+        let mixed_json = obj(vec![
+            (
+                "bits_per_layer",
+                Value::Arr(bits_per_layer.iter().map(|&b| num(b as f64)).collect()),
+            ),
+            ("accuracy", num(mixed_acc)),
+            ("memory_bits", num(mixed_net.memory_bits() as f64)),
+            ("weights", Value::Str(mixed_file)),
+            ("hlo", Value::Obj(BTreeMap::new())),
+        ]);
+
+        let fp32_bits: u64 =
+            arch.layer_shapes().iter().map(|&(k, n)| (k * n * 32) as u64).sum();
+        let model_json = obj(vec![
+            ("arch", arch_json(arch)),
+            (
+                "training",
+                obj(vec![
+                    ("steps", num(0.0)),
+                    ("loss_curve", Value::Arr(Vec::new())),
+                    ("fp32_train_acc", num(fp32_acc)),
+                    ("fp32_test_acc", num(fp32_acc)),
+                ]),
+            ),
+            (
+                "fp32",
+                obj(vec![
+                    ("memory_bits", num(fp32_bits as f64)),
+                    ("hlo", Value::Obj(BTreeMap::new())),
+                ]),
+            ),
+            ("quant", Value::Obj(quant_json)),
+            ("hlo", Value::Obj(BTreeMap::new())),
+            ("mixed", mixed_json),
+        ]);
+        models.insert(name.to_string(), model_json);
+    }
+
+    let manifest = obj(vec![
+        ("format_version", num(FORMAT_VERSION as f64)),
+        (
+            "dataset",
+            obj(vec![
+                ("file", Value::Str(dataset_file.to_string())),
+                ("n_test", num(cfg.n_test as f64)),
+                ("input_dim", num(input_dim as f64)),
+                ("classes", num(classes as f64)),
+            ]),
+        ),
+        ("models", Value::Obj(models)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_json())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::io::load_dataset;
+
+    #[test]
+    fn lspd_roundtrips_through_the_loader() {
+        let dir = std::env::temp_dir().join("lspine_forge_lspd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = Dataset {
+            n: 3,
+            dim: 4,
+            classes: 10,
+            pixels: vec![9, 8, 7, 6, 5, 4, 3, 2, 1, 0, 255, 128],
+            labels: vec![1, 0, 9],
+        };
+        let p = dir.join("d.lspd");
+        write_lspd(&p, &data).unwrap();
+        let back = load_dataset(&p).unwrap();
+        assert_eq!((back.n, back.dim, back.classes), (3, 4, 10));
+        assert_eq!(back.pixels, data.pixels);
+        assert_eq!(back.labels, data.labels);
+        assert_eq!(back.sample(2), &[1, 0, 255, 128]);
+    }
+
+    #[test]
+    fn arch_json_roundtrips_through_parser() {
+        for arch in [mlp_arch(), convnet_arch()] {
+            let v = arch_json(&arch);
+            let back = ArchDesc::from_json(&v).unwrap();
+            assert_eq!(back, arch);
+            // and survives a text round trip
+            let reparsed = crate::util::json::parse(&v.to_json()).unwrap();
+            assert_eq!(ArchDesc::from_json(&reparsed).unwrap(), arch);
+        }
+    }
+}

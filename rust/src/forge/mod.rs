@@ -1,0 +1,357 @@
+//! Hermetic artifact forge — seed-deterministic synthetic LSPW weights,
+//! LSPD datasets and a JSON manifest, byte-compatible with the loaders in
+//! [`crate::model::io`] and [`crate::runtime::artifact`].
+//!
+//! The python author path (`python/compile/`) trains real models and
+//! exports artifacts; nothing in an offline rust-only environment can run
+//! it. The forge replaces it for testing/bench purposes: every artifact
+//! kind the loaders understand (both `mlp` and `convnet` archs, all four
+//! quantization schemes of [`crate::quant`], all three precisions, the
+//! layer-adaptive *mixed* network, the shared test dataset and the
+//! manifest) is generated in-process from the crate's deterministic
+//! xorshift RNG. Same seed → identical bytes, across runs and platforms:
+//! all randomness flows through [`crate::util::rng::Rng`], float weights
+//! are derived with IEEE-exact f64 arithmetic, and accuracies recorded in
+//! the manifest are *measured* by [`crate::model::SnnEngine`] on the
+//! forged dataset — so manifest-vs-recomputation checks are exact, not
+//! approximate.
+//!
+//! Labels are defined by construction: the argmax predictions of the
+//! INT8/lspine-quantized MLP (the "teacher"), so that network scores
+//! accuracy 1.0 and every other (model, scheme, precision) records its
+//! deterministic agreement with the teacher.
+//!
+//! Layout: this module holds the generators and orchestration;
+//! [`weights`] is the LSPW write side; [`dataset`] is the LSPD write side
+//! plus the manifest builder. The conformance suite
+//! (`rust/tests/conformance.rs`) additionally uses the `golden_*`
+//! constants below, which are replicated bit-for-bit by
+//! `tools/gen_goldens.py` to produce the checked-in vectors under
+//! `rust/tests/golden/`. Any change to the generators here MUST bump
+//! [`FORGE_VERSION`] and regenerate the goldens.
+
+pub mod dataset;
+pub mod weights;
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use crate::model::network::{ArchDesc, QuantNetLayer, QuantNetwork};
+use crate::nce::simd::{pack_row, Precision};
+use crate::quant::{self, QuantScheme};
+use crate::util::rng::Rng;
+use crate::Result;
+
+pub use dataset::write_lspd;
+pub use weights::{layer_from_tensor, write_lspw};
+
+/// Bump when any generator changes (keys the cached artifact directory
+/// and the golden-vector contract).
+pub const FORGE_VERSION: u32 = 1;
+
+/// Default seed of the canonical forge artifacts.
+pub const DEFAULT_SEED: u64 = 0x5EED_1517;
+
+/// Seed of the golden-vector networks (see `tools/gen_goldens.py`).
+pub const GOLDEN_SEED: u64 = 0x600D_5EED;
+
+/// Amplitude of the synthetic uniform float weights.
+pub const WEIGHT_AMP: f64 = 0.25;
+
+/// The three precisions of the paper's unified datapath.
+pub const PRECISIONS: [Precision; 3] = [Precision::Int2, Precision::Int4, Precision::Int8];
+
+/// Forge configuration.
+#[derive(Debug, Clone)]
+pub struct ForgeConfig {
+    pub seed: u64,
+    /// Test-set size (kept small: manifest accuracies are measured live).
+    pub n_test: usize,
+}
+
+impl Default for ForgeConfig {
+    fn default() -> Self {
+        Self { seed: DEFAULT_SEED, n_test: 64 }
+    }
+}
+
+/// The forged MLP architecture (shares the dataset's 16x16 input).
+pub fn mlp_arch() -> ArchDesc {
+    ArchDesc::Mlp { sizes: vec![256, 64, 10], timesteps: 16, leak_shift: 2 }
+}
+
+/// The forged ConvNet architecture (16x16x1 input, conv-pool-conv-pool-fc).
+pub fn convnet_arch() -> ArchDesc {
+    ArchDesc::Convnet {
+        side: 16,
+        channels: vec![1, 4, 8],
+        classes: 10,
+        timesteps: 16,
+        leak_shift: 2,
+    }
+}
+
+/// Small architectures used by the golden conformance vectors.
+pub fn golden_mlp_arch() -> ArchDesc {
+    ArchDesc::Mlp { sizes: vec![24, 16, 10], timesteps: 8, leak_shift: 2 }
+}
+
+pub fn golden_convnet_arch() -> ArchDesc {
+    ArchDesc::Convnet {
+        side: 8,
+        channels: vec![1, 3, 5],
+        classes: 10,
+        timesteps: 8,
+        leak_shift: 2,
+    }
+}
+
+/// Integer threshold of the golden raw networks, per precision.
+pub const fn golden_theta(p: Precision) -> i32 {
+    match p {
+        Precision::Int2 => 4,
+        Precision::Int4 => 12,
+        Precision::Int8 => 80,
+    }
+}
+
+/// Derive a per-(tag, layer) RNG seed from the forge seed.
+///
+/// FNV-1a over the tag bytes, mixed with the seed and layer index. This
+/// exact function is replicated in `tools/gen_goldens.py`.
+pub fn layer_seed(seed: u64, tag: &str, layer: usize) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in tag.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h ^= seed;
+    h = h.wrapping_mul(FNV_PRIME);
+    h ^= (layer as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    h.wrapping_mul(FNV_PRIME)
+}
+
+/// Deterministic uniform float weights in `[-WEIGHT_AMP, WEIGHT_AMP)`.
+///
+/// Only IEEE +/-/* on f64 and an exact f64→f32 rounding — every step is
+/// bit-reproducible in any IEEE-754 language (no libm involved).
+pub fn float_weights(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| ((rng.f64() * 2.0 - 1.0) * WEIGHT_AMP) as f32).collect()
+}
+
+/// FP-domain firing threshold for a layer with `k_in` inputs
+/// (scales with the RMS of the accumulated synaptic current).
+pub fn theta_fp(k_in: usize) -> f32 {
+    0.5f32 * WEIGHT_AMP as f32 * (k_in as f32).sqrt()
+}
+
+/// Deterministic u8 test pixels (`n` samples x `dim`).
+pub fn pixels(seed: u64, n: usize, dim: usize) -> Vec<u8> {
+    let mut rng = Rng::new(layer_seed(seed, "pixels", 0));
+    (0..n * dim).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Build a quantized network: synthetic float weights per layer →
+/// the requested scheme/precision → packed LSPW-layout layers.
+pub fn quantized_network(
+    arch: &ArchDesc,
+    seed: u64,
+    tag: &str,
+    scheme: QuantScheme,
+    p: Precision,
+) -> QuantNetwork {
+    let layers = arch
+        .layer_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(k, n))| {
+            let w = float_weights(layer_seed(seed, tag, i), k * n);
+            let qt = quant::quantize(&w, k, n, p, scheme);
+            layer_from_tensor(&qt, theta_fp(k))
+        })
+        .collect();
+    let net = QuantNetwork { arch: arch.clone(), layers };
+    debug_assert!(net.validate().is_ok());
+    net
+}
+
+/// Layer-adaptive precision network (the paper's future-work knob):
+/// layers cycle INT8 → INT4 → INT2. Returns the net and its
+/// bits-per-layer vector (recorded in the manifest's `mixed` entry).
+pub fn mixed_network(arch: &ArchDesc, seed: u64, tag: &str) -> (QuantNetwork, Vec<u32>) {
+    let cycle = [Precision::Int8, Precision::Int4, Precision::Int2];
+    let mut bits = Vec::new();
+    let layers = arch
+        .layer_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(k, n))| {
+            let p = cycle[i % cycle.len()];
+            bits.push(p.bits());
+            let w = float_weights(layer_seed(seed, tag, i), k * n);
+            let qt = quant::quantize(&w, k, n, p, QuantScheme::LSpine);
+            layer_from_tensor(&qt, theta_fp(k))
+        })
+        .collect();
+    let net = QuantNetwork { arch: arch.clone(), layers };
+    debug_assert!(net.validate().is_ok());
+    (net, bits)
+}
+
+/// Integer-mode network: quantized values drawn directly from the RNG
+/// (uniform over the precision's range), scale fixed at 1.0. This is the
+/// all-integer path the golden engine vectors pin — no float arithmetic
+/// anywhere between the seed and the spike counts.
+pub fn raw_network(arch: &ArchDesc, seed: u64, p: Precision, theta: i32) -> QuantNetwork {
+    let (lo, hi) = p.qrange();
+    let layers = arch
+        .layer_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(k, n))| {
+            let mut rng = Rng::new(layer_seed(seed, "raw", i) ^ p.bits() as u64);
+            let n_words = n.div_ceil(p.fields_per_word());
+            let mut packed = Vec::with_capacity(k * n_words);
+            for _ in 0..k {
+                let row: Vec<i32> =
+                    (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
+                packed.extend(pack_row(&row, p));
+            }
+            QuantNetLayer { precision: p, k_in: k, n_out: n, n_words, scale: 1.0, theta, packed }
+        })
+        .collect();
+    let net = QuantNetwork { arch: arch.clone(), layers };
+    debug_assert!(net.validate().is_ok());
+    net
+}
+
+/// Forge a complete artifacts directory (dataset + all weight files +
+/// manifest) — the hermetic replacement for `make artifacts`' python path.
+pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
+    dataset::write_artifacts(dir, cfg)
+}
+
+/// Forge (once per process; cached across processes via a versioned
+/// directory in the system temp dir) the default artifacts and return
+/// their location. Tests and benches use this instead of requiring
+/// `make artifacts` to have run.
+pub fn ensure_artifacts() -> Result<PathBuf> {
+    static DIR: OnceLock<std::result::Result<PathBuf, String>> = OnceLock::new();
+    match DIR.get_or_init(|| build_default_artifacts().map_err(|e| e.to_string())) {
+        Ok(p) => Ok(p.clone()),
+        Err(e) => Err(anyhow::anyhow!("forge failed: {e}")),
+    }
+}
+
+fn build_default_artifacts() -> Result<PathBuf> {
+    let cfg = ForgeConfig::default();
+    // The cache key carries every ForgeConfig knob; generator-semantics
+    // changes must still bump FORGE_VERSION (see module docs).
+    let key = format!("v{FORGE_VERSION}-{:016x}-n{}", cfg.seed, cfg.n_test);
+    let canonical = std::env::temp_dir().join(format!("lspine-forge-{key}"));
+    if canonical.join("manifest.json").exists() {
+        return Ok(canonical);
+    }
+    // Write to a process-unique scratch dir, then publish with a rename
+    // so concurrent test binaries never observe a half-written store.
+    let scratch = std::env::temp_dir()
+        .join(format!("lspine-forge-{key}-pid{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch)?;
+    write_artifacts(&scratch, &cfg)?;
+    match std::fs::rename(&scratch, &canonical) {
+        Ok(()) => Ok(canonical),
+        // Lost the publish race: artifacts are deterministic, so a
+        // complete canonical copy is interchangeable.
+        Err(_) if canonical.join("manifest.json").exists() => {
+            let _ = std::fs::remove_dir_all(&scratch);
+            Ok(canonical)
+        }
+        // A stale manifest-less canonical dir is in the way: clear it
+        // and retry the publish once; else serve from the scratch dir.
+        Err(_) => {
+            let _ = std::fs::remove_dir_all(&canonical);
+            match std::fs::rename(&scratch, &canonical) {
+                Ok(()) => Ok(canonical),
+                Err(_) if canonical.join("manifest.json").exists() => {
+                    let _ = std::fs::remove_dir_all(&scratch);
+                    Ok(canonical)
+                }
+                Err(_) => Ok(scratch),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SnnEngine;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = float_weights(layer_seed(7, "t", 0), 64);
+        let b = float_weights(layer_seed(7, "t", 0), 64);
+        assert_eq!(a, b);
+        let c = float_weights(layer_seed(8, "t", 0), 64);
+        assert_ne!(a, c);
+        assert_ne!(layer_seed(7, "t", 0), layer_seed(7, "t", 1));
+        assert_ne!(layer_seed(7, "t", 0), layer_seed(7, "u", 0));
+    }
+
+    #[test]
+    fn weights_within_amplitude() {
+        let w = float_weights(layer_seed(3, "amp", 0), 4096);
+        assert!(w.iter().all(|&x| (-0.25..=0.25).contains(&x)));
+        // not degenerate
+        assert!(w.iter().any(|&x| x > 0.1) && w.iter().any(|&x| x < -0.1));
+    }
+
+    #[test]
+    fn quantized_networks_validate_for_all_schemes_and_precisions() {
+        for arch in [mlp_arch(), convnet_arch()] {
+            for scheme in crate::quant::SCHEMES {
+                for p in PRECISIONS {
+                    let net = quantized_network(&arch, 1, "v", scheme, p);
+                    net.validate().unwrap();
+                    assert_eq!(net.precision(), p);
+                    assert!(net.layers.iter().all(|l| l.theta >= 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn raw_networks_validate_and_infer() {
+        for arch in [golden_mlp_arch(), golden_convnet_arch()] {
+            for p in PRECISIONS {
+                let net = raw_network(&arch, GOLDEN_SEED, p, golden_theta(p));
+                net.validate().unwrap();
+                let dim = arch.input_dim();
+                let pix = pixels(GOLDEN_SEED, 1, dim);
+                let mut e = SnnEngine::new(net);
+                let counts = e.infer(&pix).to_vec();
+                assert_eq!(counts.len(), arch.classes());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_network_cycles_precisions() {
+        let (net, bits) = mixed_network(&convnet_arch(), 5, "m");
+        assert_eq!(bits, vec![8, 4, 2]);
+        assert_eq!(
+            net.layers.iter().map(|l| l.precision.bits()).collect::<Vec<_>>(),
+            bits
+        );
+    }
+
+    #[test]
+    fn pixels_deterministic_and_full_range() {
+        let a = pixels(1, 4, 256);
+        assert_eq!(a, pixels(1, 4, 256));
+        assert!(a.iter().any(|&x| x > 200) && a.iter().any(|&x| x < 50));
+    }
+}

@@ -1,0 +1,132 @@
+//! LSPW write side — the exact inverse of [`crate::model::io::load_weights`].
+//!
+//! Format (all integers little-endian, mirroring `python/compile/model.py`):
+//!
+//! ```text
+//! magic "LSPW" | u32 version | u32 n_layers | u32 timesteps | u32 leak_shift
+//! per layer: u32 bits | u32 k_in | u32 n_out | u32 n_words
+//!            f32 scale | i32 theta | u32 packed[k_in * n_words]
+//! ```
+
+use std::path::Path;
+
+use crate::model::io::{FORMAT_VERSION, WEIGHTS_MAGIC};
+use crate::model::network::{QuantNetLayer, QuantNetwork};
+use crate::quant::{fold_threshold, QuantizedTensor};
+use crate::Result;
+
+/// Turn a quantized tensor into a loaded-layer twin: pack the rows into
+/// storage words and fold the FP threshold into the integer domain.
+pub fn layer_from_tensor(qt: &QuantizedTensor, theta_fp: f32) -> QuantNetLayer {
+    let (packed, n_words) = qt.packed();
+    QuantNetLayer {
+        precision: qt.precision,
+        k_in: qt.k,
+        n_out: qt.n,
+        n_words,
+        scale: qt.scale,
+        theta: fold_threshold(theta_fp, qt.scale),
+        packed,
+    }
+}
+
+/// Serialize a network to LSPW bytes.
+pub fn lspw_bytes(net: &QuantNetwork) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(WEIGHTS_MAGIC);
+    for v in [
+        FORMAT_VERSION,
+        net.layers.len() as u32,
+        net.arch.timesteps(),
+        net.arch.leak_shift(),
+    ] {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    for l in &net.layers {
+        for v in [l.precision.bits(), l.k_in as u32, l.n_out as u32, l.n_words as u32] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&l.scale.to_le_bytes());
+        b.extend_from_slice(&l.theta.to_le_bytes());
+        for w in &l.packed {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    b
+}
+
+/// Write a network as an LSPW file.
+pub fn write_lspw(path: &Path, net: &QuantNetwork) -> Result<()> {
+    net.validate()?;
+    std::fs::write(path, lspw_bytes(net))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forge::{self, PRECISIONS};
+    use crate::model::io::load_weights;
+    use crate::quant::QuantScheme;
+
+    /// The round-trip contract: write side ∘ read side == identity, for
+    /// every scheme × precision and both archs.
+    #[test]
+    fn lspw_roundtrips_through_the_loader() {
+        let dir = std::env::temp_dir().join("lspine_forge_lspw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (tag, arch) in
+            [("mlp", forge::golden_mlp_arch()), ("conv", forge::golden_convnet_arch())]
+        {
+            for p in PRECISIONS {
+                let net = forge::quantized_network(&arch, 11, tag, QuantScheme::LSpine, p);
+                let path = dir.join(format!("{tag}_{}.lspw", p.bits()));
+                write_lspw(&path, &net).unwrap();
+                let back = load_weights(&path, arch.clone()).unwrap();
+                assert_eq!(back.layers.len(), net.layers.len());
+                for (a, b) in back.layers.iter().zip(&net.layers) {
+                    assert_eq!(a.precision, b.precision);
+                    assert_eq!((a.k_in, a.n_out, a.n_words), (b.k_in, b.n_out, b.n_words));
+                    assert_eq!(a.scale.to_bits(), b.scale.to_bits());
+                    assert_eq!(a.theta, b.theta);
+                    assert_eq!(a.packed, b.packed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_roundtrips() {
+        let dir = std::env::temp_dir().join("lspine_forge_lspw_mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let arch = forge::golden_convnet_arch();
+        let (net, bits) = forge::mixed_network(&arch, 13, "mx");
+        let path = dir.join("mixed.lspw");
+        write_lspw(&path, &net).unwrap();
+        let back = load_weights(&path, arch).unwrap();
+        assert_eq!(
+            back.layers.iter().map(|l| l.precision.bits()).collect::<Vec<_>>(),
+            bits
+        );
+    }
+
+    #[test]
+    fn bytes_are_deterministic() {
+        let arch = forge::golden_mlp_arch();
+        let a = lspw_bytes(&forge::quantized_network(
+            &arch,
+            7,
+            "d",
+            QuantScheme::Stbp,
+            crate::nce::simd::Precision::Int4,
+        ));
+        let b = lspw_bytes(&forge::quantized_network(
+            &arch,
+            7,
+            "d",
+            QuantScheme::Stbp,
+            crate::nce::simd::Precision::Int4,
+        ));
+        assert_eq!(a, b);
+    }
+}

@@ -18,6 +18,10 @@
 //!   author path (`python/compile/`).
 //! - [`model`] — artifact loaders (LSPW weights / LSPD datasets / JSON
 //!   manifest) and the bit-accurate integer inference engine.
+//! - [`forge`] — hermetic, seed-deterministic artifact generator (the
+//!   write side of the LSPW/LSPD/manifest contract): synthetic weights,
+//!   datasets and manifests so tests and benches run without the python
+//!   author path. See DESIGN.md §Testing.
 //! - [`neurons`] + [`cordic`] — baseline neuron implementations used by
 //!   the paper's Table I comparison (CORDIC Izhikevich, Hodgkin–Huxley
 //!   variants, AdEx, ...).
@@ -36,6 +40,7 @@ pub mod coordinator;
 pub mod cordic;
 pub mod encode;
 pub mod energy;
+pub mod forge;
 pub mod fpga;
 pub mod model;
 pub mod nce;

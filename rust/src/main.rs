@@ -1,6 +1,7 @@
 //! `lspine` — CLI entrypoint of the L-SPINE reproduction.
 //!
 //! Subcommands:
+//!   forge     — generate hermetic synthetic artifacts (no python needed)
 //!   serve     — run the serving engine on synthetic request traffic
 //!   eval      — evaluate a quantized artifact on the test set
 //!               (native engine, PJRT, or both with cross-check)
@@ -8,6 +9,7 @@
 //!   report    — regenerate the paper's tables and figures
 //!
 //! Examples:
+//!   lspine forge --out artifacts
 //!   lspine eval --model mlp --bits 4 --backend both
 //!   lspine simulate --model mlp --bits 2 --samples 32
 //!   lspine report --all
@@ -23,8 +25,9 @@ use lspine::runtime::ArtifactStore;
 use lspine::util::cli::Args;
 
 const USAGE: &str = "\
-lspine <serve|eval|simulate|report> [options]
+lspine <forge|serve|eval|simulate|report> [options]
   common:    --artifacts DIR (default: artifacts)  --model mlp|convnet
+  forge:     --out DIR (default: artifacts)  --seed N
   eval:      --bits 2|4|8  --scheme lspine|stbp|admm|trunc
              --backend native|pjrt|both  --samples N
   simulate:  --bits 2|4|8  --samples N
@@ -46,8 +49,8 @@ fn run() -> lspine::Result<()> {
         argv,
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
-            "requests=", "concurrency=", "all", "table1", "table2", "fig4",
-            "fig5", "energy", "cpu-gpu", "help",
+            "requests=", "concurrency=", "out=", "seed=", "all", "table1",
+            "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
     if args.has("help") || args.positional().is_empty() {
@@ -56,12 +59,32 @@ fn run() -> lspine::Result<()> {
     }
     let cmd = args.positional()[0].as_str();
     match cmd {
+        "forge" => cmd_forge(&args),
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         other => anyhow::bail!("unknown command {other:?}"),
     }
+}
+
+fn cmd_forge(args: &Args) -> lspine::Result<()> {
+    let out = args.get_or("out", "artifacts");
+    let seed = match args.get("seed") {
+        None => lspine::forge::DEFAULT_SEED,
+        // accept both decimal and the 0x-prefixed form the tool prints
+        Some(s) => match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+            Some(hex) => u64::from_str_radix(hex, 16)?,
+            None => s.parse::<u64>()?,
+        },
+    };
+    let cfg = lspine::forge::ForgeConfig { seed, ..Default::default() };
+    lspine::forge::write_artifacts(std::path::Path::new(out), &cfg)?;
+    println!(
+        "forged hermetic artifacts into {out}/ (seed {seed:#x}, {} test samples)",
+        cfg.n_test
+    );
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> lspine::Result<()> {

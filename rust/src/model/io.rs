@@ -13,9 +13,11 @@ use crate::Result;
 
 use super::network::{ArchDesc, QuantNetLayer, QuantNetwork};
 
-const WEIGHTS_MAGIC: &[u8; 4] = b"LSPW";
-const DATASET_MAGIC: &[u8; 4] = b"LSPD";
-const FORMAT_VERSION: u32 = 1;
+// Shared with the write side in `crate::forge` — one definition keeps
+// reader and writer in lockstep across version bumps.
+pub(crate) const WEIGHTS_MAGIC: &[u8; 4] = b"LSPW";
+pub(crate) const DATASET_MAGIC: &[u8; 4] = b"LSPD";
+pub(crate) const FORMAT_VERSION: u32 = 1;
 
 struct Cursor<'a> {
     buf: &'a [u8],

@@ -129,7 +129,11 @@ pub fn quantize_lspine(w: &[f32], k: usize, n: usize, p: Precision) -> Quantized
             })
             .sum::<f64>()
             / w.len() as f64;
-        if best.as_ref().is_none_or(|(_, _, b)| err < *b) {
+        let improved = match best.as_ref() {
+            None => true,
+            Some((_, _, b)) => err < *b,
+        };
+        if improved {
             best = Some((q, scale, err));
         }
     }

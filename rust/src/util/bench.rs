@@ -75,6 +75,39 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Emit one machine-readable result line for trajectory tracking.
+///
+/// Every bench prints `BENCH_JSON {...}` lines with a stable schema
+/// (`suite`, `name`, `iters`, `median_ns`, `p10_ns`, `p90_ns` + any
+/// caller-supplied numeric fields); downstream tooling greps the prefix
+/// and collects the JSON into `BENCH_*.json` files.
+pub fn emit_json(suite: &str, m: &Measurement, extra: &[(&str, f64)]) {
+    use super::json::Value;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("suite".to_string(), Value::Str(suite.to_string()));
+    obj.insert("name".to_string(), Value::Str(m.name.clone()));
+    obj.insert("iters".to_string(), Value::Num(m.iters as f64));
+    obj.insert("median_ns".to_string(), Value::Num(m.median.as_nanos() as f64));
+    obj.insert("p10_ns".to_string(), Value::Num(m.p10.as_nanos() as f64));
+    obj.insert("p90_ns".to_string(), Value::Num(m.p90.as_nanos() as f64));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), Value::Num(*v));
+    }
+    println!("BENCH_JSON {}", Value::Obj(obj).to_json());
+}
+
+/// Like [`emit_json`] but for scalar (non-timing) results.
+pub fn emit_json_scalar(suite: &str, name: &str, fields: &[(&str, f64)]) {
+    use super::json::Value;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("suite".to_string(), Value::Str(suite.to_string()));
+    obj.insert("name".to_string(), Value::Str(name.to_string()));
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), Value::Num(*v));
+    }
+    println!("BENCH_JSON {}", Value::Obj(obj).to_json());
+}
+
 /// Print a measurement in the shared one-line format.
 pub fn report(m: &Measurement) {
     println!(

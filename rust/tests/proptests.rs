@@ -8,7 +8,7 @@ use lspine::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use lspine::coordinator::request::{InferRequest, Precision};
 use lspine::nce::adder_tree::{lanewise_add_ref, SimdAdder};
 use lspine::nce::lif::{lif_step_row, LifParams};
-use lspine::nce::simd::{pack_row, unpack_row, Precision as SimdPrec};
+use lspine::nce::simd::{pack_row, sign_extend, unpack_row, Precision as SimdPrec};
 use lspine::quant::{quantize, QuantScheme, SCHEMES};
 use lspine::util::json;
 use lspine::util::rng::Rng;
@@ -26,6 +26,80 @@ fn prop_pack_unpack_roundtrip() {
             (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
         let words = pack_row(&vals, p);
         assert_eq!(unpack_row(&words, p, n), vals, "seed={seed}");
+    }
+}
+
+/// Two's-complement extremes of every field width survive sign
+/// extension: INT2 {-2, 1}, INT4 {-8, 7}, INT8 {-128, 127}, plus the
+/// all-ones (-1) pattern.
+#[test]
+fn sign_extend_boundary_values() {
+    assert_eq!(sign_extend(0b10, 2), -2);
+    assert_eq!(sign_extend(0b01, 2), 1);
+    assert_eq!(sign_extend(0b11, 2), -1);
+    assert_eq!(sign_extend(0x8, 4), -8);
+    assert_eq!(sign_extend(0x7, 4), 7);
+    assert_eq!(sign_extend(0xF, 4), -1);
+    assert_eq!(sign_extend(0x80, 8), -128);
+    assert_eq!(sign_extend(0x7F, 8), 127);
+    assert_eq!(sign_extend(0xFF, 8), -1);
+    // zero is zero at every width
+    for bits in [2, 4, 8] {
+        assert_eq!(sign_extend(0, bits), 0);
+    }
+}
+
+/// Boundary-valued rows (alternating qmin/qmax) round-trip through
+/// pack/unpack at full-word and ragged lengths, and padded tail fields
+/// stay zero.
+#[test]
+fn prop_pack_unpack_boundary_rows_and_ragged_tails() {
+    for p in PRECISIONS {
+        let (lo, hi) = p.qrange();
+        let fields = p.fields_per_word();
+        // lengths straddling the word boundary: 1, f-1, f, f+1, 2f-1, 2f+3
+        for n in [1, fields - 1, fields, fields + 1, 2 * fields - 1, 2 * fields + 3] {
+            let n = n.max(1);
+            let vals: Vec<i32> =
+                (0..n).map(|j| if j % 2 == 0 { lo } else { hi }).collect();
+            let words = pack_row(&vals, p);
+            assert_eq!(words.len(), n.div_ceil(fields), "{} n={n}", p.name());
+            assert_eq!(unpack_row(&words, p, n), vals, "{} n={n}", p.name());
+            // every padded tail field must read back zero
+            let padded = words.len() * fields;
+            let full = unpack_row(&words, p, padded);
+            assert!(
+                full[n..].iter().all(|&v| v == 0),
+                "{} n={n}: nonzero padding",
+                p.name()
+            );
+        }
+    }
+}
+
+/// Randomized pack→unpack round-trip pinned on ragged tails: n is drawn
+/// to never be a multiple of fields_per_word, so the tail path of both
+/// pack_row and unpack_row is always exercised.
+#[test]
+fn prop_pack_unpack_roundtrip_ragged_randomized() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 0xBEEF);
+        let p = PRECISIONS[(seed % 3) as usize];
+        let fields = p.fields_per_word();
+        let (lo, hi) = p.qrange();
+        // 1..3 full words plus a ragged remainder in 1..fields
+        let n = fields * (1 + rng.below(3) as usize) + 1 + rng.below(fields as u64 - 1) as usize;
+        assert_ne!(n % fields, 0);
+        let vals: Vec<i32> =
+            (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
+        let words = pack_row(&vals, p);
+        assert_eq!(words.len(), n / fields + 1, "seed={seed}");
+        assert_eq!(unpack_row(&words, p, n), vals, "seed={seed}");
+        // tail fields beyond n are zero-padded
+        let last = words[words.len() - 1];
+        let used = n % fields;
+        let b = p.bits();
+        assert_eq!(last >> (b * used as u32), 0, "seed={seed}: dirty padding");
     }
 }
 

@@ -1,0 +1,129 @@
+//! Hand-rolled, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the (small) subset of anyhow's surface the workspace actually
+//! uses: [`Error`], [`Result`], the `anyhow!` / `bail!` / `ensure!`
+//! macros, and the blanket `From<E: std::error::Error>` conversion that
+//! makes `?` work on std errors. Messages are eagerly rendered to a
+//! `String` (source chains are flattened with `: ` separators), which is
+//! all the callers ever observe via `Display`/`Debug`.
+
+use std::fmt;
+
+/// A flattened, eagerly-rendered error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The same coherence trick the real anyhow uses: `Error` deliberately
+// does NOT implement `std::error::Error`, so this blanket impl does not
+// overlap the reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        Ok(s.parse::<u32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert!(f(3).is_err());
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn bare_ensure() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x != 0);
+            Ok(())
+        }
+        assert!(f(0).is_err());
+        assert!(f(1).is_ok());
+    }
+}
