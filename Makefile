@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench clean
+.PHONY: all build test artifacts bench bench-json bench-smoke clean
 
 all: build
 
@@ -28,6 +28,26 @@ artifacts:
 bench:
 	cd rust && $(CARGO) bench --bench hotpath
 	cd rust && $(CARGO) bench --bench ablation
+
+# Run both benches and collect their BENCH_JSON lines into the
+# trajectory files at the repo root (one JSON object per line).
+# Compare two runs with: tools/bench_diff.py OLD.json BENCH_hotpath.json
+# (fails on a >15% msynops_per_s regression).
+# (plain redirects, not `| tee`, so a failing bench fails the target)
+bench-json:
+	cd rust && $(CARGO) bench --bench hotpath > ../.bench_hotpath.out || (cat ../.bench_hotpath.out; exit 1)
+	cat .bench_hotpath.out
+	sed -n 's/^BENCH_JSON //p' .bench_hotpath.out > BENCH_hotpath.json
+	rm -f .bench_hotpath.out
+	cd rust && $(CARGO) bench --bench ablation > ../.bench_ablation.out || (cat ../.bench_ablation.out; exit 1)
+	cat .bench_ablation.out
+	sed -n 's/^BENCH_JSON //p' .bench_ablation.out > BENCH_ablation.json
+	rm -f .bench_ablation.out
+	@echo "wrote BENCH_hotpath.json + BENCH_ablation.json"
+
+# CI smoke: single-iteration benches, still emitting every BENCH_JSON line.
+bench-smoke:
+	$(MAKE) bench-json LSPINE_BENCH_ITERS=1
 
 clean:
 	cd rust && $(CARGO) clean

@@ -24,7 +24,7 @@ use lspine::encode::{PoissonEncoder, RateEncoder, TtfsEncoder};
 use lspine::forge;
 use lspine::model::SnnEngine;
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::{emit_json_scalar, Table};
+use lspine::util::bench::{emit_json_scalar, sample_count, Table};
 
 const SUITE: &str = "ablation";
 
@@ -32,7 +32,9 @@ fn main() {
     let dir = forge::ensure_artifacts().expect("forge artifacts");
     let store = ArtifactStore::open(&dir).expect("forge artifacts load");
     let data = store.load_test_set().expect("test set");
-    let n = 64.min(data.n);
+    // full evaluation normally; a handful of samples under the CI smoke
+    // knob (LSPINE_BENCH_ITERS) — every section still runs and emits
+    let n = sample_count(64, 4).min(data.n);
 
     // ---------- A1: layer-adaptive precision ----------
     println!("A1 — layer-adaptive precision (paper §IV future work)\n");
@@ -188,7 +190,7 @@ fn main() {
         })
         .unwrap();
         let t0 = std::time::Instant::now();
-        let total = 256usize;
+        let total = sample_count(256, 16);
         let mut inflight = Vec::new();
         for i in 0..total {
             inflight.push(engine.submit(data.sample(i % data.n), ReqPrecision::Int4).unwrap());

@@ -1,26 +1,33 @@
 //! Hot-path microbenchmarks — the §Perf working set.
 //!
-//!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath          # full run
+//!     make bench-json                      # run + collect BENCH_*.json
+//!     LSPINE_BENCH_ITERS=1 cargo bench --bench hotpath   # CI smoke
 //!
 //! Fully hermetic: end-to-end benches run over `lspine::forge` artifacts,
 //! so no python and no `make artifacts` are needed. Besides the human
 //! table, every measurement prints a stable `BENCH_JSON {...}` line
-//! (util::bench::emit_json) for BENCH_*.json trajectory tracking.
+//! (util::bench::emit_json) for BENCH_*.json trajectory tracking
+//! (`tools/bench_diff.py` compares two collected runs).
 //!
 //! Measures the layers the EXPERIMENTS.md §Perf log optimizes:
-//! - packed-row accumulation (the L3 simulator's inner loop)
-//! - full LIF layer step at each precision
-//! - end-to-end native inference (mlp INT2/4/8 + convnet INT4)
+//! - the LIF layer step on bit-packed spike planes (§Perf P5 — the
+//!   `lif_step_row` entries, production kernel), plus the packed-word
+//!   storage path for reference
+//! - full end-to-end native inference (mlp INT2/4/8 + convnet INT4)
 //! - cycle-simulator throughput
-//! - serving-engine round trip (batcher + channel overhead)
+//! - serving-engine round trip (batcher + channel overhead) and the
+//!   sharded-pool throughput sweep over workers=1/2/4 (§Perf P6)
 
+use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::forge;
 use lspine::model::SnnEngine;
-use lspine::nce::lif::{lif_step_row, LifParams};
-use lspine::nce::simd::{pack_row, Precision};
+use lspine::nce::lif::{lif_step_plane_unpacked, lif_step_row, AccScratch, LifParams};
+use lspine::nce::simd::{pack_row, unpack_row, Precision};
+use lspine::nce::SpikePlane;
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::{bench, emit_json, report};
+use lspine::util::bench::{bench, emit_json, emit_json_scalar, report, sample_count};
 use lspine::util::rng::Rng;
 
 const SUITE: &str = "hotpath";
@@ -28,8 +35,12 @@ const SUITE: &str = "hotpath";
 fn main() {
     let mut rng = Rng::new(7);
 
-    // --- packed-row LIF step at each precision, serving-scale layer ---
-    println!("LIF layer step (k=256 inputs, n=128 neurons):");
+    // --- LIF layer step at each precision, serving-scale layer ---
+    // The measured kernel is the production path (§Perf P5): bit-packed
+    // input spike plane + i8 weight shadow + precision-matched narrow
+    // block accumulators. The packed-storage-word path is reported too,
+    // under its own name, for the storage-model reference.
+    println!("LIF layer step (k=256 inputs, n=128 neurons, 30% density):");
     for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
         let (lo, hi) = p.qrange();
         let k = 256usize;
@@ -41,21 +52,52 @@ fn main() {
                 (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
             packed.extend(pack_row(&row, p));
         }
+        let w_i8: Vec<i8> = (0..k)
+            .flat_map(|j| {
+                unpack_row(&packed[j * n_words..(j + 1) * n_words], p, n)
+                    .into_iter()
+                    .map(|x| x as i8)
+            })
+            .collect();
         let mut spikes = vec![0u8; k];
         rng.fill_spikes(0.3, &mut spikes);
+        let plane = SpikePlane::from_u8(&spikes);
+        let synops = (plane.count_ones() as usize * n) as f64;
         let mut v = vec![0i32; n];
-        let mut out = vec![0u8; n];
-        let mut acc = vec![0i32; n];
+        let mut out = SpikePlane::flat(n);
+        let mut scratch = AccScratch::new();
         let params = LifParams::new(40, 2);
+
         let m = bench(&format!("lif_step_row {}", p.name()), || {
-            lif_step_row(&spikes, &packed, n_words, p, &mut v, &mut out, params, &mut acc);
+            lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v,
+                out.words_mut(),
+                params,
+                &mut scratch,
+            );
         });
-        // derive synops/s for the §Perf log
-        let synops = (spikes.iter().filter(|&&s| s != 0).count() * n) as f64;
         let msynops_per_s = synops / m.per_iter_ns() * 1e3;
         println!("    -> {msynops_per_s:.1} M synops/s");
         report(&m);
         emit_json(SUITE, &m, &[("msynops_per_s", msynops_per_s)]);
+
+        // storage-model reference: packed u32 words, u8 spikes (pre-P5)
+        let mut v2 = vec![0i32; n];
+        let mut out2 = vec![0u8; n];
+        let mut acc = vec![0i32; n];
+        let m2 = bench(&format!("lif_step_row_packed {}", p.name()), || {
+            lif_step_row(
+                &spikes, &packed, n_words, p, &mut v2, &mut out2, params, &mut acc,
+            );
+        });
+        let packed_msynops = synops / m2.per_iter_ns() * 1e3;
+        report(&m2);
+        emit_json(SUITE, &m2, &[("msynops_per_s", packed_msynops)]);
     }
 
     // --- forge-backed end-to-end benches (hermetic, no python) ---
@@ -111,12 +153,13 @@ fn main() {
     }
 
     // --- serving round trip (native backend isolates coordinator cost) ---
-    println!("serving engine round trip (native backend):");
+    println!("serving engine round trip (native backend, 1 worker):");
     {
         let engine = ServingEngine::start(ServerConfig {
             artifacts_dir: dir.to_string_lossy().into_owned(),
             model: "mlp".into(),
             backend: Backend::Native,
+            workers: 1,
             ..Default::default()
         })
         .unwrap();
@@ -135,5 +178,67 @@ fn main() {
         );
         println!("  {}", metrics.summary());
         engine.shutdown().unwrap();
+    }
+
+    // --- sharded-pool throughput sweep (§Perf P6) ---
+    // Offered load: `concurrency` requests in flight over the heavier
+    // convnet model, so per-request compute dominates dispatch cost and
+    // the workers=1..4 trend shows the pool scaling.
+    println!("serving throughput vs workers (native backend, convnet INT4):");
+    {
+        let total = sample_count(256, 16);
+        let concurrency = 32usize;
+        for workers in [1usize, 2, 4] {
+            let engine = ServingEngine::start(ServerConfig {
+                artifacts_dir: dir.to_string_lossy().into_owned(),
+                model: "convnet".into(),
+                backend: Backend::Native,
+                workers,
+                batcher: BatcherConfig::default(),
+                ..Default::default()
+            })
+            .unwrap();
+            // warm the whole pool: round-robin dealing spreads these
+            // across every shard, so all engines are constructed (and
+            // first batches executed) before timing starts
+            let warm: Vec<_> = (0..workers * 2)
+                .map(|_| engine.submit(&sample, ReqPrecision::Int4).unwrap())
+                .collect();
+            for rx in warm {
+                rx.recv().unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let mut inflight = Vec::new();
+            for i in 0..total {
+                inflight
+                    .push(engine.submit(data.sample(i % data.n), ReqPrecision::Int4).unwrap());
+                if inflight.len() >= concurrency {
+                    inflight.remove(0).recv().unwrap();
+                }
+            }
+            for rx in inflight {
+                rx.recv().unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let req_per_s = total as f64 / dt;
+            let m = engine.metrics();
+            println!(
+                "  workers={workers}: {req_per_s:.0} req/s  p50<={}us p99<={}us mean_batch={:.1}",
+                m.latency.quantile_us(0.5),
+                m.latency.quantile_us(0.99),
+                m.mean_batch()
+            );
+            emit_json_scalar(
+                SUITE,
+                &format!("serve throughput workers={workers}"),
+                &[
+                    ("req_per_s", req_per_s),
+                    ("p50_us", m.latency.quantile_us(0.5) as f64),
+                    ("p99_us", m.latency.quantile_us(0.99) as f64),
+                    ("mean_batch", m.mean_batch()),
+                ],
+            );
+            engine.shutdown().unwrap();
+        }
     }
 }

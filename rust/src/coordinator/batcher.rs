@@ -62,7 +62,7 @@ impl DynamicBatcher {
     /// Ready = a full batch is available, or the oldest request of some
     /// precision has waited past `max_wait`.
     pub fn next_batch(&mut self, now: Instant) -> Option<(Precision, Vec<InferRequest>)> {
-        self.next_batch_inner(now, false)
+        self.next_batch_inner(now, false, self.cfg.max_batch)
     }
 
     /// Like [`next_batch`](Self::next_batch) but with the *idle-dispatch*
@@ -72,13 +72,27 @@ impl DynamicBatcher {
     /// This is the §Perf P1 optimization: single-client round-trip p50
     /// dropped ~10x (see EXPERIMENTS.md §Perf).
     pub fn next_batch_idle(&mut self, now: Instant) -> Option<(Precision, Vec<InferRequest>)> {
-        self.next_batch_inner(now, true)
+        self.next_batch_inner(now, true, self.cfg.max_batch)
+    }
+
+    /// Idle dispatch with a caller-imposed size cap: the sharded pool
+    /// caps each batch at `ceil(pending / workers)` so one burst splits
+    /// across all execution workers instead of serializing on the first
+    /// (round-robin alone cannot parallelize a single large batch).
+    pub fn next_batch_idle_capped(
+        &mut self,
+        now: Instant,
+        cap: usize,
+    ) -> Option<(Precision, Vec<InferRequest>)> {
+        let cap = cap.max(1).min(self.cfg.max_batch.max(1));
+        self.next_batch_inner(now, true, cap)
     }
 
     fn next_batch_inner(
         &mut self,
         now: Instant,
         idle: bool,
+        cap: usize,
     ) -> Option<(Precision, Vec<InferRequest>)> {
         // full batches first (throughput), then expired partials (latency)
         let mut candidate: Option<usize> = None;
@@ -100,7 +114,7 @@ impl DynamicBatcher {
         }
         let i = candidate?;
         let (prec, q) = &mut self.queues[i];
-        let take = q.len().min(self.cfg.max_batch);
+        let take = q.len().min(cap);
         let batch: Vec<InferRequest> = q.drain(..take).collect();
         self.formed_batches += 1;
         self.batched_requests += batch.len() as u64;
@@ -187,6 +201,28 @@ mod tests {
         }
         let (_, batch) = b.next_batch(t0).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn capped_idle_dispatch_splits_bursts() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_secs(10),
+        });
+        let t0 = Instant::now();
+        for i in 0..8 {
+            b.push(req(i, Precision::Int4, t0));
+        }
+        // cap 3 -> batches of 3, 3, 2 (FIFO preserved), regardless of wait
+        let sizes: Vec<usize> = std::iter::from_fn(|| {
+            b.next_batch_idle_capped(t0, 3).map(|(_, batch)| batch.len())
+        })
+        .collect();
+        assert_eq!(sizes, vec![3, 3, 2]);
+        // cap is clamped to at least 1 and at most max_batch
+        b.push(req(9, Precision::Int2, t0));
+        let (_, one) = b.next_batch_idle_capped(t0, 0).unwrap();
+        assert_eq!(one.len(), 1);
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Serving metrics: throughput counters + log-bucketed latency histogram.
+//!
+//! The sharded pool keeps one `Metrics` per worker (no cross-worker lock
+//! contention on the hot path); [`Metrics::merge`] folds them into the
+//! aggregate view the `metrics()` accessor and `summary()` report.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Log2-bucketed latency histogram (1 us .. ~17 min), constant memory.
 #[derive(Debug, Clone)]
@@ -29,6 +33,16 @@ impl LatencyHistogram {
         self.count += 1;
         self.sum_us += us;
         self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold another histogram into this one (bucket-wise).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
     }
 
     pub fn count(&self) -> u64 {
@@ -63,8 +77,8 @@ impl LatencyHistogram {
     }
 }
 
-/// Aggregate serving metrics.
-#[derive(Debug, Clone, Default)]
+/// Aggregate serving metrics (one per worker; merged on read).
+#[derive(Debug, Clone)]
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
@@ -72,11 +86,38 @@ pub struct Metrics {
     pub latency: LatencyHistogram,
     /// Sum of batch sizes (mean batch = / batches).
     pub batched_total: u64,
+    /// When this metrics object started observing (requests/sec base).
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self { latency: LatencyHistogram::new(), ..Default::default() }
+        Self {
+            requests: 0,
+            batches: 0,
+            rejected: 0,
+            latency: LatencyHistogram::new(),
+            batched_total: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Fold another worker's metrics into this one. The observation
+    /// window extends to the earliest `started` so requests/sec stays a
+    /// wall-clock rate, not a per-worker sum.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.batched_total += other.batched_total;
+        self.latency.merge(&other.latency);
+        self.started = self.started.min(other.started);
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -86,11 +127,26 @@ impl Metrics {
         self.batched_total as f64 / self.batches as f64
     }
 
+    /// Seconds this metrics object has been observing.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Completed requests per second over the observation window.
+    pub fn req_per_s(&self) -> f64 {
+        let dt = self.elapsed_secs();
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / dt
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.2} rejected={} \
+            "requests={} ({:.0} req/s) batches={} mean_batch={:.2} rejected={} \
              latency mean={:.0}us p50<={}us p95<={}us p99<={}us max={}us",
             self.requests,
+            self.req_per_s(),
             self.batches,
             self.mean_batch(),
             self.rejected,
@@ -143,5 +199,50 @@ mod tests {
         m.batched_total = 10;
         assert_eq!(m.mean_batch(), 2.5);
         assert!(m.summary().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn summary_reports_scaling_signals() {
+        let m = Metrics::new();
+        let s = m.summary();
+        assert!(s.contains("req/s"), "{s}");
+        assert!(s.contains("p50<="), "{s}");
+        assert!(s.contains("p99<="), "{s}");
+    }
+
+    #[test]
+    fn histogram_merge_is_bucketwise_sum() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for us in [10u64, 100, 1000] {
+            a.record(Duration::from_micros(us));
+        }
+        for us in [20u64, 20_000] {
+            b.record(Duration::from_micros(us));
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 5);
+        assert_eq!(merged.max_us(), 20_000);
+        assert!(merged.mean_us() > a.mean_us());
+        assert!(merged.quantile_us(1.0) >= 20_000);
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters() {
+        let mut a = Metrics::new();
+        a.requests = 3;
+        a.batches = 2;
+        a.batched_total = 3;
+        let mut b = Metrics::new();
+        b.requests = 5;
+        b.batches = 1;
+        b.batched_total = 5;
+        b.rejected = 1;
+        a.merge(&b);
+        assert_eq!(a.requests, 8);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.batched_total, 8);
+        assert_eq!(a.rejected, 1);
     }
 }

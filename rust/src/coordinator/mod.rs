@@ -12,6 +12,11 @@
 //! - **Native** ([`crate::model::SnnEngine`]) — the bit-accurate integer
 //!   engine (identical outputs, asserted by integration tests).
 //!
+//! Execution is sharded (§Perf P6): a dispatcher thread owns ingest and
+//! the batcher, and `ServerConfig::workers` execution threads each own a
+//! full backend; ready batches are dealt round-robin (size-capped so
+//! bursts split across the pool) and per-worker metrics merge on read.
+//!
 //! std threads + channels (tokio is unavailable offline); the hot path is
 //! allocation-light and the queue is the bounded [`crate::array::RingFifo`].
 
@@ -24,4 +29,4 @@ pub mod server;
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use request::{InferRequest, InferResponse, Precision as ReqPrecision};
-pub use server::{Backend, ServerConfig, ServingEngine};
+pub use server::{default_workers, Backend, ServerConfig, ServingEngine};

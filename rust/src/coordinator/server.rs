@@ -1,12 +1,18 @@
-//! The serving engine: ingest -> dynamic batcher -> backend -> reply.
+//! The serving engine: ingest -> dynamic batcher -> sharded workers -> reply.
 //!
-//! One worker thread owns the execution backend (the PJRT client is not
-//! Send-safe across concurrent use; confining it to its thread is both
-//! safe and cache-friendly). Callers submit through a cloneable handle
-//! and block on a per-request channel — a deliberately simple surface
-//! that an RPC front-end (or the examples) wraps.
+//! One *dispatcher* thread owns ingest and the dynamic batcher; `workers`
+//! *execution* threads each own a full backend instance (one `SnnEngine`
+//! set, or one PJRT pool — neither is Send-safe across concurrent use, so
+//! confining each to its thread is both safe and cache-friendly). Ready
+//! batches are dealt round-robin across workers, capped at
+//! `ceil(pending / workers)` under the idle policy so a single burst
+//! spreads over every core instead of serializing on one (§Perf P6).
+//! Each worker records into its own [`Metrics`]; `metrics()` merges.
+//! Callers submit through a cloneable handle and block on a per-request
+//! channel — a deliberately simple surface that an RPC front-end (or the
+//! examples) wraps.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -30,6 +36,11 @@ pub enum Backend {
     Native,
 }
 
+/// Default worker count: one execution shard per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Serving engine configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -39,6 +50,9 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// Ingest queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
+    /// Execution workers, each owning a full backend (defaults to the
+    /// number of available cores; clamped to >= 1 at start).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +63,7 @@ impl Default for ServerConfig {
             backend: Backend::Pjrt,
             batcher: BatcherConfig::default(),
             queue_capacity: 1024,
+            workers: default_workers(),
         }
     }
 }
@@ -61,28 +76,61 @@ enum Msg {
 /// Cloneable client handle to a running engine.
 pub struct ServingEngine {
     tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<Result<()>>>,
-    metrics: Arc<Mutex<Metrics>>,
+    dispatcher: Option<JoinHandle<Result<()>>>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    metrics: Vec<Arc<Mutex<Metrics>>>,
     next_id: AtomicU64,
     input_dim: usize,
     backend: Backend,
 }
 
 impl ServingEngine {
-    /// Start the engine (loads artifacts, spawns the worker).
+    /// Start the engine: spawns the dispatcher and one execution worker
+    /// per `cfg.workers`, each loading its own backend from the artifacts.
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
         let input_dim = store.manifest().model(&cfg.model)?.arch.input_dim();
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker_metrics = Arc::clone(&metrics);
+        drop(store);
         let backend = cfg.backend;
-        let worker = std::thread::Builder::new()
-            .name("lspine-serve".into())
-            .spawn(move || worker_loop(cfg, store, rx, worker_metrics))?;
+        let n_workers = cfg.workers.max(1);
+
+        let mut metrics = Vec::with_capacity(n_workers + 1);
+        // slot 0 belongs to the dispatcher (rejection accounting)
+        metrics.push(Arc::new(Mutex::new(Metrics::new())));
+
+        // requests dealt to workers but not yet executed: the dispatcher
+        // counts these toward queue_capacity so sharding does not turn
+        // the bounded ingest queue into unbounded per-worker backlogs
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        let mut worker_txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let m = Arc::new(Mutex::new(Metrics::new()));
+            metrics.push(Arc::clone(&m));
+            let (btx, brx) = mpsc::channel::<(Precision, Vec<InferRequest>)>();
+            worker_txs.push(btx);
+            let wcfg = cfg.clone();
+            let fl = Arc::clone(&in_flight);
+            let handle = std::thread::Builder::new()
+                .name(format!("lspine-exec-{w}"))
+                .spawn(move || exec_worker_loop(wcfg, brx, m, fl))?;
+            workers.push(handle);
+        }
+
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let dispatcher_metrics = Arc::clone(&metrics[0]);
+        let dcfg = cfg;
+        let dispatcher = std::thread::Builder::new()
+            .name("lspine-dispatch".into())
+            .spawn(move || {
+                dispatcher_loop(dcfg, rx, worker_txs, dispatcher_metrics, in_flight)
+            })?;
+
         Ok(Self {
             tx,
-            worker: Some(worker),
+            dispatcher: Some(dispatcher),
+            workers,
             metrics,
             next_id: AtomicU64::new(1),
             input_dim,
@@ -121,56 +169,97 @@ impl ServingEngine {
         Ok(rx)
     }
 
+    /// Merged view over the dispatcher's and every worker's metrics.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        let mut merged = self.metrics[0].lock().unwrap().clone();
+        for m in &self.metrics[1..] {
+            merged.merge(&m.lock().unwrap());
+        }
+        merged
     }
 
-    /// Graceful shutdown: drains the queue, then joins the worker.
+    /// Graceful shutdown: drains the queue, then joins every thread and
+    /// surfaces the first error (e.g. a worker whose backend failed).
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut note = |res: std::thread::Result<Result<()>>, who: &str| {
+            let err = match res {
+                Ok(Ok(())) => return,
+                Ok(Err(e)) => e,
+                Err(_) => anyhow::anyhow!("{who} panicked"),
+            };
+            if first_err.is_none() {
+                first_err = Some(err);
+            }
+        };
+        if let Some(d) = self.dispatcher.take() {
+            note(d.join(), "dispatcher");
         }
-        Ok(())
+        for w in self.workers.drain(..) {
+            note(w.join(), "worker");
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
 impl Drop for ServingEngine {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// Execution backends materialized inside the worker thread.
-enum Exec {
-    Pjrt(ExecutorPool),
-    Native(Vec<(u32, SnnEngine)>),
-}
-
-fn worker_loop(
+/// Ingest + batch formation + round-robin dealing to the workers.
+fn dispatcher_loop(
     cfg: ServerConfig,
-    store: ArtifactStore,
     rx: mpsc::Receiver<Msg>,
+    worker_txs: Vec<mpsc::Sender<(Precision, Vec<InferRequest>)>>,
     metrics: Arc<Mutex<Metrics>>,
+    in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
-    let mut exec = match cfg.backend {
-        Backend::Pjrt => Exec::Pjrt(ExecutorPool::new(store, &cfg.model)?),
-        Backend::Native => {
-            let mut engines = Vec::new();
-            for bits in [2u32, 4, 8] {
-                let net = store.load_network(&cfg.model, "lspine", bits)?;
-                engines.push((bits, SnnEngine::new(net)));
-            }
-            Exec::Native(engines)
-        }
-    };
-
+    let n_workers = worker_txs.len();
+    // a worker whose channel closed (backend failed) is skipped; batches
+    // routed to a dead worker drop their reply senders, which callers
+    // observe as a closed response channel rather than a hang
+    let mut alive = vec![true; n_workers];
+    let mut next_worker = 0usize;
     let mut batcher = DynamicBatcher::new(cfg.batcher);
     let mut pending = 0usize;
     let mut shutting_down = false;
+
+    let dispatch_in_flight = Arc::clone(&in_flight);
+    let mut dispatch = |prec: Precision,
+                        batch: Vec<InferRequest>,
+                        next_worker: &mut usize,
+                        alive: &mut Vec<bool>| {
+        let mut item = (prec, batch);
+        for _ in 0..n_workers {
+            let w = *next_worker;
+            *next_worker = (w + 1) % n_workers;
+            if !alive[w] {
+                continue;
+            }
+            match worker_txs[w].send(item) {
+                Ok(()) => return,
+                Err(mpsc::SendError(back)) => {
+                    alive[w] = false;
+                    item = back;
+                }
+            }
+        }
+        // all workers dead: dropping the batch closes its reply channels;
+        // give its capacity back so ingest keeps rejecting cleanly
+        dispatch_in_flight.fetch_sub(item.1.len(), Ordering::Relaxed);
+    };
 
     loop {
         // 1. ingest (bounded block until the oldest batch deadline)
@@ -180,7 +269,7 @@ fn worker_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(req)) => {
-                if pending >= cfg.queue_capacity {
+                if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
                     metrics.lock().unwrap().rejected += 1;
                     // drop: the reply channel closing signals rejection
                     continue;
@@ -191,7 +280,7 @@ fn worker_loop(
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Request(r) => {
-                            if pending >= cfg.queue_capacity {
+                            if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
                                 metrics.lock().unwrap().rejected += 1;
                             } else {
                                 pending += 1;
@@ -209,15 +298,16 @@ fn worker_loop(
 
         // 2. dispatch ready batches. Idle-dispatch policy (§Perf P1):
         // once the ingest channel is drained, waiting out max_wait cannot
-        // grow any batch — dispatch partials immediately. The channel is
-        // re-drained after every executed batch (execution takes long
-        // enough for new arrivals to accumulate into the next batch).
+        // grow any batch — dispatch partials immediately, split into at
+        // most `ceil(pending / workers)`-sized pieces so the whole pool
+        // participates (§Perf P6). The channel is re-drained after every
+        // dispatch (new arrivals accumulate into the next batch).
         loop {
             let mut drained_empty = true;
             while let Ok(msg) = rx.try_recv() {
                 match msg {
                     Msg::Request(r) => {
-                        if pending >= cfg.queue_capacity {
+                        if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
                             metrics.lock().unwrap().rejected += 1;
                         } else {
                             pending += 1;
@@ -230,14 +320,16 @@ fn worker_loop(
             }
             let now = Instant::now();
             let batch = if drained_empty || shutting_down {
-                batcher.next_batch_idle(now)
+                let cap = batcher.pending().div_ceil(n_workers).max(1);
+                batcher.next_batch_idle_capped(now, cap)
             } else {
                 batcher.next_batch(now)
             };
             match batch {
                 Some((prec, batch)) => {
                     pending -= batch.len();
-                    run_batch(&mut exec, prec, batch, &metrics)?;
+                    in_flight.fetch_add(batch.len(), Ordering::Relaxed);
+                    dispatch(prec, batch, &mut next_worker, &mut alive);
                 }
                 // nothing ready on the strict policy but arrivals were
                 // seen this pass: loop once more — the re-drain will find
@@ -248,9 +340,48 @@ fn worker_loop(
         }
 
         if shutting_down && batcher.pending() == 0 {
+            // closing the worker channels (drop of worker_txs) stops the
+            // workers after they drain their queues
             return Ok(());
         }
     }
+}
+
+/// One execution worker: builds its own backend, then runs dealt batches
+/// until the dispatcher closes the channel.
+fn exec_worker_loop(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<(Precision, Vec<InferRequest>)>,
+    metrics: Arc<Mutex<Metrics>>,
+    in_flight: Arc<AtomicUsize>,
+) -> Result<()> {
+    let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let mut exec = match cfg.backend {
+        Backend::Pjrt => Exec::Pjrt(ExecutorPool::new(store, &cfg.model)?),
+        Backend::Native => {
+            let mut engines = Vec::new();
+            for bits in [2u32, 4, 8] {
+                let net = store.load_network(&cfg.model, "lspine", bits)?;
+                engines.push((bits, SnnEngine::new(net)));
+            }
+            Exec::Native(engines)
+        }
+    };
+    while let Ok((prec, batch)) = rx.recv() {
+        let n = batch.len();
+        let res = run_batch(&mut exec, prec, batch, &metrics);
+        // decrement even on error so a dying worker does not leak
+        // capacity for the batches it already consumed
+        in_flight.fetch_sub(n, Ordering::Relaxed);
+        res?;
+    }
+    Ok(())
+}
+
+/// Execution backends materialized inside each worker thread.
+enum Exec {
+    Pjrt(ExecutorPool),
+    Native(Vec<(u32, SnnEngine)>),
 }
 
 fn run_batch(

@@ -20,11 +20,44 @@ pub use poisson::PoissonEncoder;
 pub use rate::RateEncoder;
 pub use ttfs::TtfsEncoder;
 
+use crate::nce::SpikePlane;
+
 /// Common interface: fill `out` with the binary spike slice for step `t`.
 pub trait SpikeEncoder {
     /// Encode timestep `t` (0-based) of `pixels` into `out` (0/1 bytes).
     fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]);
 
+    /// Encode timestep `t` directly into a bit-packed spike plane (the
+    /// engine's input format — §Perf P5). Implementations must emit the
+    /// same train as [`encode_step`](Self::encode_step), bit for bit, in
+    /// the same pixel order (stateful encoders advance identically).
+    fn encode_step_plane(&mut self, pixels: &[u8], t: u32, out: &mut SpikePlane);
+
     /// Total spikes this encoder will emit for one pixel over `t_steps`.
     fn expected_count(&self, pixel: u8, t_steps: u32) -> u32;
+}
+
+#[cfg(test)]
+mod plane_tests {
+    use super::*;
+
+    /// Every encoder's plane path must equal its byte path bit-for-bit
+    /// (separate instances so stateful RNG streams stay aligned).
+    fn check_plane_equals_bytes<E: SpikeEncoder>(mut by_bytes: E, mut by_plane: E) {
+        let pixels: Vec<u8> = (0..=255u32).map(|x| (x * 37 % 256) as u8).collect();
+        let mut bytes = vec![0u8; pixels.len()];
+        let mut plane = SpikePlane::flat(pixels.len());
+        for t in 0..16 {
+            by_bytes.encode_step(&pixels, t, &mut bytes);
+            by_plane.encode_step_plane(&pixels, t, &mut plane);
+            assert_eq!(plane.to_u8(), bytes, "t={t}");
+        }
+    }
+
+    #[test]
+    fn plane_and_byte_trains_identical() {
+        check_plane_equals_bytes(RateEncoder::new(), RateEncoder::new());
+        check_plane_equals_bytes(PoissonEncoder::new(7), PoissonEncoder::new(7));
+        check_plane_equals_bytes(TtfsEncoder::new(16), TtfsEncoder::new(16));
+    }
 }

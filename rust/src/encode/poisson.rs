@@ -38,6 +38,18 @@ impl SpikeEncoder for PoissonEncoder {
         }
     }
 
+    fn encode_step_plane(
+        &mut self,
+        pixels: &[u8],
+        _t: u32,
+        out: &mut crate::nce::SpikePlane,
+    ) {
+        debug_assert_eq!(pixels.len(), out.len());
+        // same pixel order as the byte path, so the RNG stream (and
+        // therefore the train) is identical between the two formats
+        out.fill_from_fn(|j| (self.next_u32() & 0xFF) < pixels[j] as u32);
+    }
+
     fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
         // expectation, rounded — stochastic actuals vary around this
         (pixel as u32 * t_steps + 128) >> 8

@@ -33,6 +33,16 @@ impl SpikeEncoder for RateEncoder {
         }
     }
 
+    fn encode_step_plane(
+        &mut self,
+        pixels: &[u8],
+        t: u32,
+        out: &mut crate::nce::SpikePlane,
+    ) {
+        debug_assert_eq!(pixels.len(), out.len());
+        out.fill_from_fn(|j| Self::spike_at(pixels[j], t) != 0);
+    }
+
     fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
         (pixel as u32 * t_steps) >> 8
     }

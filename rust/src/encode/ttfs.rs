@@ -39,6 +39,17 @@ impl SpikeEncoder for TtfsEncoder {
         }
     }
 
+    fn encode_step_plane(
+        &mut self,
+        pixels: &[u8],
+        t: u32,
+        out: &mut crate::nce::SpikePlane,
+    ) {
+        debug_assert_eq!(pixels.len(), out.len());
+        let me = *self;
+        out.fill_from_fn(|j| me.fire_step(pixels[j]) == Some(t));
+    }
+
     fn expected_count(&self, pixel: u8, _t_steps: u32) -> u32 {
         (pixel != 0) as u32
     }

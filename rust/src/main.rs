@@ -32,6 +32,7 @@ lspine <forge|serve|eval|simulate|report> [options]
              --backend native|pjrt|both  --samples N
   simulate:  --bits 2|4|8  --samples N
   serve:     --bits 2|4|8  --backend native|pjrt  --requests N  --concurrency N
+             --workers N (default: available cores)
   report:    --all | any of --table1 --table2 --fig4 --fig5 --energy --cpu-gpu
 ";
 
@@ -49,8 +50,8 @@ fn run() -> lspine::Result<()> {
         argv,
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
-            "requests=", "concurrency=", "out=", "seed=", "all", "table1",
-            "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
+            "requests=", "concurrency=", "workers=", "out=", "seed=", "all",
+            "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
     if args.has("help") || args.positional().is_empty() {
@@ -209,6 +210,9 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
     };
     let n_requests = args.get_usize("requests", 256)?;
     let concurrency = args.get_usize("concurrency", 8)?.max(1);
+    let workers = args
+        .get_usize("workers", lspine::coordinator::default_workers())?
+        .max(1);
     let precision = ReqPrecision::parse(&bits.to_string())
         .ok_or_else(|| anyhow::anyhow!("bad bits"))?;
 
@@ -218,11 +222,13 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
         model: model.clone(),
         backend,
+        workers,
         ..Default::default()
     })?;
 
     println!(
-        "serve: {model} {} backend={backend:?} requests={n_requests} concurrency={concurrency}",
+        "serve: {model} {} backend={backend:?} requests={n_requests} \
+         concurrency={concurrency} workers={workers}",
         precision.name()
     );
     let t0 = Instant::now();

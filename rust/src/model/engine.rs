@@ -10,9 +10,17 @@
 //!
 //! All buffers are preallocated in [`SnnEngine::new`]; `infer` performs no
 //! heap allocation (the serving hot path budget — see EXPERIMENTS.md §Perf).
+//!
+//! Spikes are stored bit-packed (§Perf P5): every spike buffer is a
+//! [`SpikePlane`] (one bit per neuron), so the event-driven scan skips 64
+//! silent inputs per instruction, the 2x2 max-pool is a word-wide OR and
+//! im2col is a bit gather over the §Perf P4 tables. The u8 `im2col` /
+//! `maxpool2` helpers below remain as the byte-domain references the
+//! proptests pin the plane kernels against.
 
 use crate::encode::RateEncoder;
 use crate::nce::lif::LifParams;
+use crate::nce::spikeplane::{gather_plane, maxpool2_plane, SpikePlane};
 use crate::nce::NeuronComputeEngine;
 
 use super::network::{ArchDesc, QuantNetwork};
@@ -59,17 +67,17 @@ pub struct SnnEngine {
     unpacked: Vec<Vec<i8>>,
     /// Per-layer membrane state, flattened over spatial positions.
     membranes: Vec<Vec<i32>>,
-    /// Per-layer output spike planes.
-    spike_bufs: Vec<Vec<u8>>,
-    /// Input spike plane (encoder output).
-    input_spikes: Vec<u8>,
-    /// im2col scratch for conv layers (max rows x 9*ch).
-    patch_buf: Vec<u8>,
-    /// Pool scratch (post-pool plane).
-    pool_buf: Vec<u8>,
-    /// Second pool scratch (stable copy feeding the next im2col).
-    pool_buf2: Vec<u8>,
-    /// Precomputed im2col gather tables for the two conv layers (§Perf P4).
+    /// Per-layer output spike planes (bit-packed; conv layers use
+    /// word-aligned per-position blocks, the fc/MLP layers are flat).
+    spike_bufs: Vec<SpikePlane>,
+    /// Input spike plane (encoder output), flat.
+    input_spikes: SpikePlane,
+    /// Per-conv-layer im2col patch planes (grid: positions x 9*ch bits).
+    patch_bufs: Vec<SpikePlane>,
+    /// Post-pool planes (flat — the layout the next gather / fc reads).
+    pool_bufs: Vec<SpikePlane>,
+    /// Precomputed im2col gather tables for the two conv layers (§Perf
+    /// P4); entries are bit indices into the (flat) source plane.
     im2col_tables: Vec<Vec<u32>>,
     nce: NeuronComputeEngine,
     counts: Vec<u32>,
@@ -79,30 +87,39 @@ pub struct SnnEngine {
 
 impl SnnEngine {
     pub fn new(net: QuantNetwork) -> Self {
-        let (membranes, spike_bufs, patch_len, pool_len) = match &net.arch {
+        let (membranes, spike_bufs, patch_bufs, pool_bufs) = match &net.arch {
             ArchDesc::Mlp { sizes, .. } => {
                 let m: Vec<Vec<i32>> =
                     sizes[1..].iter().map(|&n| vec![0i32; n]).collect();
-                let s: Vec<Vec<u8>> =
-                    sizes[1..].iter().map(|&n| vec![0u8; n]).collect();
-                (m, s, 0, 0)
+                let s: Vec<SpikePlane> =
+                    sizes[1..].iter().map(|&n| SpikePlane::flat(n)).collect();
+                (m, s, Vec::new(), Vec::new())
             }
             ArchDesc::Convnet { side, channels, classes, .. } => {
-                let (s1, s2) = (*side, side / 2);
-                let (c1, c2) = (channels[1], channels[2]);
+                let (s1, s2, s4) = (*side, side / 2, side / 4);
+                let (c0, c1, c2) = (channels[0], channels[1], channels[2]);
                 let m = vec![
                     vec![0i32; s1 * s1 * c1],
                     vec![0i32; s2 * s2 * c2],
                     vec![0i32; *classes],
                 ];
+                // conv layers write word-aligned per-position blocks; the
+                // fc output is flat (its logical order is the class index)
                 let s = vec![
-                    vec![0u8; s1 * s1 * c1],
-                    vec![0u8; s2 * s2 * c2],
-                    vec![0u8; *classes],
+                    SpikePlane::grid(s1 * s1, c1),
+                    SpikePlane::grid(s2 * s2, c2),
+                    SpikePlane::flat(*classes),
                 ];
-                // largest im2col plane: layer2 at side/2 with 9*c1 features
-                let patch = (s1 * s1 * 9 * channels[0]).max(s2 * s2 * 9 * c1);
-                let pool = s1 * s1 * c1; // pre-pool plane
+                let patch = vec![
+                    SpikePlane::grid(s1 * s1, 9 * c0),
+                    SpikePlane::grid(s2 * s2, 9 * c1),
+                ];
+                // pool outputs are flat: the layout the following im2col
+                // gather tables and the fc event scan index directly
+                let pool = vec![
+                    SpikePlane::flat(s2 * s2 * c1),
+                    SpikePlane::flat(s4 * s4 * c2),
+                ];
                 (m, s, patch, pool)
             }
         };
@@ -142,10 +159,9 @@ impl SnnEngine {
             im2col_tables,
             membranes,
             spike_bufs,
-            input_spikes: vec![0u8; input_dim],
-            patch_buf: vec![0u8; patch_len],
-            pool_buf: vec![0u8; pool_len],
-            pool_buf2: vec![0u8; pool_len],
+            input_spikes: SpikePlane::flat(input_dim),
+            patch_bufs,
+            pool_bufs,
             nce: NeuronComputeEngine::new(),
             counts: vec![0u32; classes],
             stats: InferStats::default(),
@@ -221,15 +237,14 @@ impl SnnEngine {
             .collect();
 
         for t in 0..timesteps {
-            encoder.encode_step(pixels, t, &mut self.input_spikes);
+            encoder.encode_step_plane(pixels, t, &mut self.input_spikes);
             match self.net.arch {
                 ArchDesc::Mlp { .. } => self.step_mlp(),
                 ArchDesc::Convnet { .. } => self.step_conv(),
             }
             let last = self.spike_bufs.last().unwrap();
-            for (c, &s) in self.counts.iter_mut().zip(last.iter()) {
-                *c += s as u32;
-            }
+            let counts = &mut self.counts;
+            last.for_each_set(|c| counts[c] += 1);
         }
         &self.counts
     }
@@ -248,21 +263,23 @@ impl SnnEngine {
             let params = LifParams::new(layer.theta, leak);
             // split borrows: input spikes come from the previous plane
             let (prev, rest) = if i == 0 {
-                (&self.input_spikes[..], &mut self.spike_bufs[..])
+                (&self.input_spikes, &mut self.spike_bufs[..])
             } else {
                 let (a, b) = self.spike_bufs.split_at_mut(i);
-                (&a[i - 1][..], b)
+                (&a[i - 1], b)
             };
-            let out = &mut rest[0][..]; // == spike_bufs[i]
-            self.nce.step_unpacked(
-                prev,
+            let out = &mut rest[0]; // == spike_bufs[i]
+            self.nce.step_plane_unpacked(
+                prev.words(),
+                layer.k_in,
                 &self.unpacked[i],
                 layer.n_words,
+                layer.precision,
                 &mut self.membranes[i],
-                out,
+                out.words_mut(),
                 params,
             );
-            let spikes = out.iter().filter(|&&s| s != 0).count() as u64;
+            let spikes = out.count_ones();
             self.stats.active_rows += self.nce.last_active_rows() as u64;
             self.stats.words_touched += self.nce.last_words_touched() as u64;
             self.stats.spikes_emitted += spikes;
@@ -286,38 +303,43 @@ impl SnnEngine {
         let s4 = side / 4;
 
         // ---- conv1: input plane [side,side,c0] -> spikes [side,side,c1]
-        im2col_gather(&self.input_spikes, &self.im2col_tables[0], &mut self.patch_buf);
+        gather_plane(
+            self.input_spikes.words(),
+            &self.im2col_tables[0],
+            &mut self.patch_bufs[0],
+        );
         self.lif_conv_layer(0, side * side, 9 * c0, leak);
 
-        // ---- pool1 (OR): [side,side,c1] -> pool_buf [s2,s2,c1]
-        maxpool2(&self.spike_bufs[0], side, c1, &mut self.pool_buf);
+        // ---- pool1 (word-wide OR): [side,side,c1] -> flat [s2,s2,c1]
+        maxpool2_plane(&self.spike_bufs[0], side, c1, &mut self.pool_bufs[0]);
 
         // ---- conv2 over pooled plane [s2,s2,c1] -> [s2,s2,c2]
-        self.pool_buf2[..s2 * s2 * c1].copy_from_slice(&self.pool_buf[..s2 * s2 * c1]);
-        im2col_gather(
-            &self.pool_buf2[..s2 * s2 * c1],
+        gather_plane(
+            self.pool_bufs[0].words(),
             &self.im2col_tables[1],
-            &mut self.patch_buf,
+            &mut self.patch_bufs[1],
         );
         self.lif_conv_layer(1, s2 * s2, 9 * c1, leak);
 
-        // ---- pool2 (OR): [s2,s2,c2] -> [s4,s4,c2] == fc input
-        maxpool2(&self.spike_bufs[1], s2, c2, &mut self.pool_buf);
+        // ---- pool2 (word-wide OR): [s2,s2,c2] -> flat [s4,s4,c2]
+        maxpool2_plane(&self.spike_bufs[1], s2, c2, &mut self.pool_bufs[1]);
         let fc_in = s4 * s4 * c2;
         let _ = classes;
 
-        // ---- fc
+        // ---- fc (event scan straight over the flat pool plane)
         let layer = &self.net.layers[2];
         let params = LifParams::new(layer.theta, leak);
-        self.nce.step_unpacked(
-            &self.pool_buf[..fc_in],
+        self.nce.step_plane_unpacked(
+            self.pool_bufs[1].words(),
+            fc_in,
             &self.unpacked[2],
             layer.n_words,
+            layer.precision,
             &mut self.membranes[2],
-            &mut self.spike_bufs[2],
+            self.spike_bufs[2].words_mut(),
             params,
         );
-        let spikes = self.spike_bufs[2].iter().filter(|&&s| s != 0).count() as u64;
+        let spikes = self.spike_bufs[2].count_ones();
         self.stats.active_rows += self.nce.last_active_rows() as u64;
         self.stats.words_touched += self.nce.last_words_touched() as u64;
         self.stats.spikes_emitted += spikes;
@@ -327,7 +349,8 @@ impl SnnEngine {
         ls.spikes_emitted += spikes;
     }
 
-    /// Run LIF layer `idx` over `positions` rows of `row_k` patch inputs.
+    /// Run LIF layer `idx` over `positions` word-aligned patch rows of
+    /// `row_k` inputs each.
     fn lif_conv_layer(&mut self, idx: usize, positions: usize, row_k: usize, leak: u32) {
         let layer = &self.net.layers[idx];
         debug_assert_eq!(layer.k_in, row_k);
@@ -336,21 +359,27 @@ impl SnnEngine {
         let mut active = 0u64;
         let mut words = 0u64;
         let mut spikes = 0u64;
+        let patch = &self.patch_bufs[idx];
+        let w = &self.unpacked[idx];
+        let v_all = &mut self.membranes[idx];
+        let out_plane = &mut self.spike_bufs[idx];
+        let nce = &mut self.nce;
         for pos in 0..positions {
-            let row = &self.patch_buf[pos * row_k..(pos + 1) * row_k];
-            let v = &mut self.membranes[idx][pos * n..(pos + 1) * n];
-            let out = &mut self.spike_bufs[idx][pos * n..(pos + 1) * n];
-            self.nce.step_unpacked(
-                row,
-                &self.unpacked[idx],
+            let v = &mut v_all[pos * n..(pos + 1) * n];
+            let out = out_plane.pos_words_mut(pos);
+            nce.step_plane_unpacked(
+                patch.pos_words(pos),
+                row_k,
+                w,
                 layer.n_words,
+                layer.precision,
                 v,
                 out,
                 params,
             );
-            active += self.nce.last_active_rows() as u64;
-            words += self.nce.last_words_touched() as u64;
-            spikes += out.iter().filter(|&&s| s != 0).count() as u64;
+            active += nce.last_active_rows() as u64;
+            words += nce.last_words_touched() as u64;
+            spikes += out.iter().map(|x| x.count_ones() as u64).sum::<u64>();
         }
         self.stats.active_rows += active;
         self.stats.words_touched += words;

@@ -6,8 +6,12 @@
 //! allocation-free wrapper over [`super::lif::lif_step_row`].
 
 use super::adder_tree::{SimdAdder, Structure};
-use super::lif::{lif_step_row, lif_step_row_unpacked, LifParams};
+use super::lif::{
+    lif_step_plane, lif_step_plane_unpacked, lif_step_row, lif_step_row_unpacked,
+    AccScratch, LifParams,
+};
 use super::simd::Precision;
+use super::spikeplane;
 
 /// One neuron compute engine (NCE) instance.
 ///
@@ -17,6 +21,7 @@ use super::simd::Precision;
 #[derive(Debug, Clone)]
 pub struct NeuronComputeEngine {
     acc: Vec<i32>,
+    scratch: AccScratch,
     /// Cycle cost accounting for the last `step` (array simulator input).
     last_active_rows: usize,
     last_words_touched: usize,
@@ -32,6 +37,7 @@ impl NeuronComputeEngine {
     pub fn new() -> Self {
         Self {
             acc: Vec::new(),
+            scratch: AccScratch::new(),
             last_active_rows: 0,
             last_words_touched: 0,
         }
@@ -90,6 +96,62 @@ impl NeuronComputeEngine {
             out_spikes,
             params,
             &mut self.acc,
+        );
+    }
+
+    /// Plane-input variant of [`step`](Self::step): input spikes arrive
+    /// as a bit-packed word slice (one word-aligned block of a
+    /// [`super::SpikePlane`]), output spikes leave as bits (§Perf P5).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_plane(
+        &mut self,
+        in_words: &[u64],
+        k_in: usize,
+        packed_w: &[u32],
+        n_words: usize,
+        precision: Precision,
+        v: &mut [i32],
+        out_words: &mut [u64],
+        params: LifParams,
+    ) {
+        if self.acc.len() < v.len() {
+            self.acc.resize(v.len(), 0);
+        }
+        self.last_active_rows = spikeplane::count_ones(in_words) as usize;
+        self.last_words_touched = self.last_active_rows * n_words;
+        lif_step_plane(
+            in_words, k_in, packed_w, n_words, precision, v, out_words, params,
+            &mut self.acc,
+        );
+    }
+
+    /// Plane-input fast path over the pre-unpacked i8 weight shadow —
+    /// what the functional engine runs per layer step (§Perf P3 + P5).
+    /// `n_words` is only used for the streamed-word accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_plane_unpacked(
+        &mut self,
+        in_words: &[u64],
+        k_in: usize,
+        w_i8: &[i8],
+        n_words: usize,
+        precision: Precision,
+        v: &mut [i32],
+        out_words: &mut [u64],
+        params: LifParams,
+    ) {
+        self.last_active_rows = spikeplane::count_ones(in_words) as usize;
+        self.last_words_touched = self.last_active_rows * n_words;
+        lif_step_plane_unpacked(
+            in_words,
+            k_in,
+            w_i8,
+            v.len(),
+            precision,
+            v,
+            out_words,
+            params,
+            &mut self.scratch,
         );
     }
 

@@ -117,6 +117,195 @@ pub fn lif_step_row_unpacked(
     }
 }
 
+// ---------------------------------------------------------------------
+// Bit-packed spike-plane kernels (§Perf P5)
+// ---------------------------------------------------------------------
+
+/// Accumulator scratch for the plane kernels: a wide `i32` accumulator
+/// plus narrow block accumulators sized to the weight precision, so the
+/// inner add runs 16 (i8) or 8 (i16) lanes per 128-bit vector instead of
+/// the 4 lanes of a widening `i8 -> i32` add. Owned by the caller so the
+/// hot loop never allocates.
+#[derive(Debug, Clone, Default)]
+pub struct AccScratch {
+    acc32: Vec<i32>,
+    acc16: Vec<i16>,
+    acc8: Vec<i8>,
+}
+
+impl AccScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reserve(&mut self, n: usize) {
+        if self.acc32.len() < n {
+            self.acc32.resize(n, 0);
+            self.acc16.resize(n, 0);
+            self.acc8.resize(n, 0);
+        }
+    }
+}
+
+/// Rows an i8 block accumulator can absorb before it could overflow:
+/// `127 / qmax_abs` rows of fields bounded by the precision's range.
+/// INT2 (|w| <= 2) -> 63 rows; INT4 (|w| <= 8) -> 15 rows.
+const fn i8_block_rows(p: Precision) -> usize {
+    match p {
+        Precision::Int2 => 63,
+        Precision::Int4 => 15,
+        Precision::Int8 => 0, // uses the i16 block instead
+    }
+}
+
+/// Rows an i16 block accumulator absorbs for INT8 (|w| <= 128): 255 rows
+/// keep |sum| <= 32640 < i16::MAX.
+const I16_BLOCK_ROWS: usize = 255;
+
+/// One LIF timestep over a bit-packed spike word slice and the unpacked
+/// i8 weight shadow — the serving hot path (§Perf P5).
+///
+/// `in_words` is the input spike plane (or one word-aligned position
+/// block of a grid plane): bit `j` set means input row `j` spiked; bits
+/// at and beyond `k_in` must be zero. The event-driven scan advances by
+/// `trailing_zeros`, skipping 64 silent inputs per instruction. Active
+/// rows accumulate into a narrow block accumulator matched to
+/// `precision` (exact by the block-row bounds above), which spills into
+/// the `i32` accumulator; the final membrane update writes the output
+/// spikes as bits into `out_words` (`n_out` bits, upper padding zeroed).
+///
+/// Bit-exact with [`lif_step_row_unpacked`] and [`lif_step_row`] — the
+/// block sums are exact integer arithmetic, only wider-lane-count.
+#[allow(clippy::too_many_arguments)]
+pub fn lif_step_plane_unpacked(
+    in_words: &[u64],
+    k_in: usize,
+    w_i8: &[i8],
+    n_out: usize,
+    precision: Precision,
+    v: &mut [i32],
+    out_words: &mut [u64],
+    p: LifParams,
+    scratch: &mut AccScratch,
+) {
+    debug_assert_eq!(v.len(), n_out);
+    debug_assert_eq!(w_i8.len(), k_in * n_out);
+    debug_assert_eq!(out_words.len(), n_out.div_ceil(64).max(1));
+    scratch.reserve(n_out);
+    let acc32 = &mut scratch.acc32[..n_out];
+    acc32.fill(0);
+
+    let block_rows = i8_block_rows(precision);
+    if block_rows > 0 {
+        let acc8 = &mut scratch.acc8[..n_out];
+        acc8.fill(0);
+        let mut in_block = 0usize;
+        for_each_set_bit(in_words, |j| {
+            debug_assert!(j < k_in);
+            let row = &w_i8[j * n_out..(j + 1) * n_out];
+            for (a, &w) in acc8.iter_mut().zip(row) {
+                *a += w;
+            }
+            in_block += 1;
+            if in_block == block_rows {
+                for (s, a) in acc32.iter_mut().zip(acc8.iter_mut()) {
+                    *s += *a as i32;
+                    *a = 0;
+                }
+                in_block = 0;
+            }
+        });
+        if in_block > 0 {
+            for (s, &a) in acc32.iter_mut().zip(acc8.iter()) {
+                *s += a as i32;
+            }
+        }
+    } else {
+        let acc16 = &mut scratch.acc16[..n_out];
+        acc16.fill(0);
+        let mut in_block = 0usize;
+        for_each_set_bit(in_words, |j| {
+            debug_assert!(j < k_in);
+            let row = &w_i8[j * n_out..(j + 1) * n_out];
+            for (a, &w) in acc16.iter_mut().zip(row) {
+                *a += w as i16;
+            }
+            in_block += 1;
+            if in_block == I16_BLOCK_ROWS {
+                for (s, a) in acc32.iter_mut().zip(acc16.iter_mut()) {
+                    *s += *a as i32;
+                    *a = 0;
+                }
+                in_block = 0;
+            }
+        });
+        if in_block > 0 {
+            for (s, &a) in acc32.iter_mut().zip(acc16.iter()) {
+                *s += a as i32;
+            }
+        }
+    }
+
+    membrane_update_to_words(v, acc32, p, out_words);
+}
+
+/// Plane-input variant of [`lif_step_row`] over *packed* storage words —
+/// the storage-model reference for the plane path (conformance pin).
+#[allow(clippy::too_many_arguments)]
+pub fn lif_step_plane(
+    in_words: &[u64],
+    k_in: usize,
+    packed_w: &[u32],
+    n_words: usize,
+    precision: Precision,
+    v: &mut [i32],
+    out_words: &mut [u64],
+    p: LifParams,
+    acc: &mut [i32],
+) {
+    let n_out = v.len();
+    debug_assert_eq!(packed_w.len(), k_in * n_words);
+    debug_assert_eq!(out_words.len(), n_out.div_ceil(64).max(1));
+    debug_assert!(acc.len() >= n_out);
+    let fields = precision.fields_per_word();
+    acc[..n_out].fill(0);
+    for_each_set_bit(in_words, |j| {
+        debug_assert!(j < k_in);
+        let row = &packed_w[j * n_words..(j + 1) * n_words];
+        accumulate_row(row, precision, fields, &mut acc[..n_out]);
+    });
+    membrane_update_to_words(v, &acc[..n_out], p, out_words);
+}
+
+/// `trailing_zeros` scan over set bits of a word slice.
+#[inline]
+fn for_each_set_bit(words: &[u64], mut f: impl FnMut(usize)) {
+    for (wi, &w) in words.iter().enumerate() {
+        let mut w = w;
+        while w != 0 {
+            f(wi * 64 + w.trailing_zeros() as usize);
+            w &= w - 1;
+        }
+    }
+}
+
+/// Membrane update + threshold + reset, writing spikes as output bits.
+#[inline]
+fn membrane_update_to_words(v: &mut [i32], acc: &[i32], p: LifParams, out_words: &mut [u64]) {
+    let n = v.len();
+    for (wi, word) in out_words.iter_mut().enumerate() {
+        let lo = wi * 64;
+        let hi = (lo + 64).min(n);
+        let mut bits = 0u64;
+        for o in lo..hi {
+            let (fired, v_next) = lif_update(v[o], acc[o], p);
+            v[o] = v_next;
+            bits |= (fired as u64) << (o - lo);
+        }
+        *word = bits;
+    }
+}
+
 /// Accumulate one packed weight row into `acc` (unpack + add, SIMD lanes).
 #[inline]
 fn accumulate_row(row: &[u32], precision: Precision, fields: usize, acc: &mut [i32]) {
@@ -332,5 +521,109 @@ mod tests {
     #[should_panic(expected = "threshold must be positive")]
     fn rejects_nonpositive_theta() {
         LifParams::new(0, 2);
+    }
+
+    #[test]
+    fn plane_kernels_match_byte_kernels() {
+        use crate::nce::spikeplane::SpikePlane;
+        let mut state = 0x5EEDu64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(11);
+            (state >> 33) as u32
+        };
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            // k spans the narrow-block spill boundaries (63/15/255 rows)
+            for (k, n) in [(1usize, 1usize), (16, 65), (70, 33), (300, 50)] {
+                let w: Vec<Vec<i32>> = (0..k)
+                    .map(|_| {
+                        (0..n)
+                            .map(|_| lo + (next() as i32).rem_euclid(hi - lo + 1))
+                            .collect()
+                    })
+                    .collect();
+                let (packed, n_words) = pack_matrix(&w, p);
+                let w_i8: Vec<i8> = w.iter().flatten().map(|&x| x as i8).collect();
+                let spikes: Vec<u8> = (0..k).map(|_| (next() % 2) as u8).collect();
+                let plane = SpikePlane::from_u8(&spikes);
+                let v0: Vec<i32> =
+                    (0..n).map(|_| (next() as i32).rem_euclid(100) - 50).collect();
+                let params = LifParams::new(5, 2);
+
+                // byte reference
+                let mut v_ref = v0.clone();
+                let mut out_ref = vec![0u8; n];
+                let mut acc = vec![0i32; n];
+                lif_step_row(
+                    &spikes, &packed, n_words, p, &mut v_ref, &mut out_ref, params,
+                    &mut acc,
+                );
+
+                // packed plane kernel
+                let mut v_a = v0.clone();
+                let mut out_a = SpikePlane::flat(n);
+                lif_step_plane(
+                    plane.words(),
+                    k,
+                    &packed,
+                    n_words,
+                    p,
+                    &mut v_a,
+                    out_a.words_mut(),
+                    params,
+                    &mut acc,
+                );
+                assert_eq!(out_a.to_u8(), out_ref, "{} k={k} n={n}", p.name());
+                assert_eq!(v_a, v_ref, "{} k={k} n={n}", p.name());
+
+                // unpacked (production) plane kernel with narrow blocks
+                let mut v_b = v0.clone();
+                let mut out_b = SpikePlane::flat(n);
+                let mut scratch = AccScratch::new();
+                lif_step_plane_unpacked(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &mut v_b,
+                    out_b.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+                assert_eq!(out_b.to_u8(), out_ref, "{} k={k} n={n}", p.name());
+                assert_eq!(v_b, v_ref, "{} k={k} n={n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_block_bounds_never_overflow() {
+        // worst case: every input active, all weights at qmin, k beyond
+        // every spill boundary — the block accumulators must stay exact.
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            use crate::nce::spikeplane::SpikePlane;
+            let (lo, _) = p.qrange();
+            let (k, n) = (600usize, 7usize);
+            let w_i8 = vec![lo as i8; k * n];
+            let spikes = vec![1u8; k];
+            let plane = SpikePlane::from_u8(&spikes);
+            let mut v = vec![0i32; n];
+            let mut out = SpikePlane::flat(n);
+            let mut scratch = AccScratch::new();
+            lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v,
+                out.words_mut(),
+                LifParams::new(1, 2),
+                &mut scratch,
+            );
+            assert!(v.iter().all(|&x| x == lo * k as i32), "{}", p.name());
+            assert_eq!(out.count_ones(), 0);
+        }
     }
 }

@@ -9,6 +9,9 @@
 //! Submodules:
 //! - [`simd`] — the packed-word storage contract (mirrors
 //!   `python/compile/kernels/packed.py` exactly; golden vectors pin them).
+//! - [`spikeplane`] — bit-packed spike storage (one bit per neuron, 64
+//!   per word): `trailing_zeros` event scans, word-wide OR pooling and
+//!   bit-gather im2col (§Perf P5).
 //! - [`lif`] — the integer LIF dynamics (mirrors `kernels/ref.py`).
 //! - [`adder_tree`] — gate-level structural model of the reconfigurable
 //!   full-adder hierarchy; used for bit-exact cross-checks *and* as the
@@ -20,7 +23,9 @@ pub mod adder_tree;
 pub mod engine;
 pub mod lif;
 pub mod simd;
+pub mod spikeplane;
 
 pub use engine::NeuronComputeEngine;
 pub use lif::{lif_step_row, LifParams};
 pub use simd::{pack_row, sign_extend, unpack_word, Precision};
+pub use spikeplane::SpikePlane;

@@ -77,10 +77,21 @@ pub const fn sign_extend(field: u32, bits: u32) -> i32 {
 }
 
 /// Unpack all fields of one storage word into `out` (length >= fields).
+///
+/// `Precision::bits()` is always 2, 4 or 8, so the field mask never
+/// degenerates (a `b == 32` special case would be dead code).
+///
+/// ```
+/// use lspine::nce::simd::{unpack_word, Precision};
+/// // the INT4 golden word packing [-8, -1, 0, 7, 3, -4, 1, 2]
+/// let mut out = [0i32; 8];
+/// unpack_word(0x21C370F8, Precision::Int4, &mut out);
+/// assert_eq!(out, [-8, -1, 0, 7, 3, -4, 1, 2]);
+/// ```
 #[inline]
 pub fn unpack_word(word: u32, p: Precision, out: &mut [i32]) {
     let b = p.bits();
-    let mask = if b == 32 { u32::MAX } else { (1u32 << b) - 1 };
+    let mask = (1u32 << b) - 1;
     for (i, slot) in out.iter_mut().enumerate().take(p.fields_per_word()) {
         *slot = sign_extend((word >> (b * i as u32)) & mask, b);
     }

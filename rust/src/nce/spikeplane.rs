@@ -1,0 +1,366 @@
+//! Bit-packed spike planes — one bit per neuron, 64 neurons per word.
+//!
+//! The seed simulator stored every binary spike as a full `u8`; this module
+//! is the paper-faithful storage format (§Perf P5): spikes live one bit per
+//! neuron in little-endian `u64` words, so the event-driven scan skips 64
+//! silent neurons per `trailing_zeros` instruction, the 2x2 max-pool is a
+//! word-wide OR, and im2col becomes a bit gather over the §Perf P4 tables.
+//!
+//! # Layout
+//!
+//! A plane is a sequence of `positions` blocks of `bits_per_pos` bits, each
+//! block padded up to a whole number of words (`stride_words`), so every
+//! block starts word-aligned:
+//!
+//! - **flat** planes (`positions == 1`) hold one contiguous bit vector —
+//!   the layout of MLP layer planes, the encoder output and pool outputs;
+//! - **grid** planes hold one word-aligned block per spatial position —
+//!   the layout of conv-layer spike/patch planes, where the per-position
+//!   LIF step reads and writes whole words.
+//!
+//! Invariant: padding bits (beyond `bits_per_pos` inside a block) are
+//! always zero, so `count_ones` and the set-bit scans never need masking.
+
+/// Bit-packed binary spike storage (one bit per neuron).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikePlane {
+    words: Vec<u64>,
+    positions: usize,
+    bits_per_pos: usize,
+    stride_words: usize,
+}
+
+impl SpikePlane {
+    /// A flat plane of `n` bits (one position).
+    pub fn flat(n: usize) -> Self {
+        Self::grid(1, n)
+    }
+
+    /// A grid plane: `positions` word-aligned blocks of `bits_per_pos` bits.
+    pub fn grid(positions: usize, bits_per_pos: usize) -> Self {
+        let stride_words = bits_per_pos.div_ceil(64).max(1);
+        Self {
+            words: vec![0u64; positions * stride_words],
+            positions,
+            bits_per_pos,
+            stride_words,
+        }
+    }
+
+    /// Build a flat plane from 0/1 bytes (test/interop helper).
+    pub fn from_u8(bytes: &[u8]) -> Self {
+        let mut p = Self::flat(bytes.len());
+        p.fill_from_fn(|j| bytes[j] != 0);
+        p
+    }
+
+    /// Expand back to 0/1 bytes in logical order (test/interop helper).
+    pub fn to_u8(&self) -> Vec<u8> {
+        (0..self.len()).map(|j| self.get(j) as u8).collect()
+    }
+
+    /// Logical bit count (`positions * bits_per_pos`).
+    pub fn len(&self) -> usize {
+        self.positions * self.bits_per_pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn positions(&self) -> usize {
+        self.positions
+    }
+
+    pub fn bits_per_pos(&self) -> usize {
+        self.bits_per_pos
+    }
+
+    /// Words per position block.
+    pub fn stride_words(&self) -> usize {
+        self.stride_words
+    }
+
+    /// All storage words (blocks concatenated).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// All storage words, mutable. Callers must uphold the zero-padding
+    /// invariant (the LIF kernels do: they write `bits_per_pos` bits).
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// The word block of one position.
+    pub fn pos_words(&self, pos: usize) -> &[u64] {
+        &self.words[pos * self.stride_words..(pos + 1) * self.stride_words]
+    }
+
+    /// The word block of one position, mutable (zero-padding invariant
+    /// applies past `bits_per_pos`).
+    pub fn pos_words_mut(&mut self, pos: usize) -> &mut [u64] {
+        &mut self.words[pos * self.stride_words..(pos + 1) * self.stride_words]
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Bit address of logical index `j` inside [`words`](Self::words).
+    #[inline(always)]
+    pub fn bit_addr(&self, j: usize) -> usize {
+        (j / self.bits_per_pos) * self.stride_words * 64 + (j % self.bits_per_pos)
+    }
+
+    /// Read logical bit `j`.
+    #[inline(always)]
+    pub fn get(&self, j: usize) -> bool {
+        let a = self.bit_addr(j);
+        (self.words[a >> 6] >> (a & 63)) & 1 != 0
+    }
+
+    /// Set logical bit `j`.
+    #[inline(always)]
+    pub fn set(&mut self, j: usize) {
+        let a = self.bit_addr(j);
+        self.words[a >> 6] |= 1u64 << (a & 63);
+    }
+
+    /// Population count over the whole plane (== number of active
+    /// neurons, by the zero-padding invariant).
+    pub fn count_ones(&self) -> u64 {
+        count_ones(&self.words)
+    }
+
+    /// Population count of one position block.
+    pub fn pos_count_ones(&self, pos: usize) -> u32 {
+        self.pos_words(pos).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Visit every set bit in logical order (`trailing_zeros` scan: 64
+    /// silent neurons per inner-loop instruction).
+    pub fn for_each_set(&self, mut f: impl FnMut(usize)) {
+        for pos in 0..self.positions {
+            let base = pos * self.bits_per_pos;
+            for (wi, &w) in self.pos_words(pos).iter().enumerate() {
+                let mut w = w;
+                while w != 0 {
+                    f(base + wi * 64 + w.trailing_zeros() as usize);
+                    w &= w - 1;
+                }
+            }
+        }
+    }
+
+    /// Rebuild the plane from a per-logical-bit predicate, writing whole
+    /// words (this is how encoders emit planes directly).
+    pub fn fill_from_fn(&mut self, mut f: impl FnMut(usize) -> bool) {
+        for pos in 0..self.positions {
+            let base = pos * self.bits_per_pos;
+            let bits = self.bits_per_pos;
+            let block = &mut self.words
+                [pos * self.stride_words..(pos + 1) * self.stride_words];
+            for (wi, word) in block.iter_mut().enumerate() {
+                let lo = wi * 64;
+                let hi = (lo + 64).min(bits);
+                let mut w = 0u64;
+                for b in lo..hi {
+                    w |= (f(base + b) as u64) << (b - lo);
+                }
+                *word = w;
+            }
+        }
+    }
+}
+
+/// Population count of a word slice.
+pub fn count_ones(words: &[u64]) -> u64 {
+    words.iter().map(|w| w.count_ones() as u64).sum()
+}
+
+/// 2x2 max-pool (OR on binary spikes) over a channel-last conv plane.
+///
+/// `src` is a grid plane of `side*side` positions x `ch` bits (the layout
+/// conv LIF layers write); `dst` is a **flat** plane of
+/// `(side/2)*(side/2)*ch` bits (the layout the next im2col gather and the
+/// fc layer read). The pool of one output pixel is a word-wide OR of the
+/// four source position blocks — up to 64 channels per instruction —
+/// followed by one shifted OR into the flat output.
+pub fn maxpool2_plane(src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikePlane) {
+    let half = side / 2;
+    debug_assert_eq!(src.positions(), side * side);
+    debug_assert_eq!(src.bits_per_pos(), ch);
+    debug_assert_eq!(dst.positions(), 1);
+    debug_assert_eq!(dst.bits_per_pos(), half * half * ch);
+    dst.clear();
+    let stride = src.stride_words();
+    for y in 0..half {
+        for x in 0..half {
+            let a = src.pos_words(2 * y * side + 2 * x);
+            let b = src.pos_words(2 * y * side + 2 * x + 1);
+            let c = src.pos_words((2 * y + 1) * side + 2 * x);
+            let d = src.pos_words((2 * y + 1) * side + 2 * x + 1);
+            let offset = (y * half + x) * ch;
+            for w in 0..stride {
+                let or = a[w] | b[w] | c[w] | d[w];
+                or_word_at(dst.words_mut(), offset + w * 64, or);
+            }
+        }
+    }
+}
+
+/// OR up to 64 bits (`bits`) into a flat word array at bit offset `at`.
+#[inline(always)]
+fn or_word_at(words: &mut [u64], at: usize, bits: u64) {
+    if bits == 0 {
+        return;
+    }
+    let wi = at >> 6;
+    let sh = at & 63;
+    words[wi] |= bits << sh;
+    if sh != 0 {
+        let hi = bits >> (64 - sh);
+        if hi != 0 {
+            words[wi + 1] |= hi;
+        }
+    }
+}
+
+/// Table-driven im2col as a bit gather.
+///
+/// `table` holds, for every logical bit of `dst` (position-major), the
+/// source *bit index* into `src_words`' flat bit space, or `u32::MAX` for
+/// zero padding — the same §Perf P4 tables the byte path uses, valid here
+/// because gather sources (encoder output, pool outputs) are flat planes.
+/// Output words are assembled 64 taps at a time.
+pub fn gather_plane(src_words: &[u64], table: &[u32], dst: &mut SpikePlane) {
+    let row_k = dst.bits_per_pos();
+    debug_assert_eq!(table.len(), dst.positions() * row_k);
+    let stride = dst.stride_words();
+    for pos in 0..dst.positions() {
+        let row = &table[pos * row_k..(pos + 1) * row_k];
+        let block = &mut dst.words_mut()[pos * stride..(pos + 1) * stride];
+        for (wi, word) in block.iter_mut().enumerate() {
+            let lo = wi * 64;
+            let hi = (lo + 64).min(row_k);
+            let mut w = 0u64;
+            for (b, &a) in row[lo..hi].iter().enumerate() {
+                if a != u32::MAX {
+                    w |= ((src_words[(a >> 6) as usize] >> (a & 63)) & 1) << b;
+                }
+            }
+            *word = w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip_ragged() {
+        for n in [1usize, 63, 64, 65, 100, 128, 130] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i % 3 == 0) as u8).collect();
+            let p = SpikePlane::from_u8(&bytes);
+            assert_eq!(p.len(), n);
+            assert_eq!(p.to_u8(), bytes, "n={n}");
+            assert_eq!(
+                p.count_ones(),
+                bytes.iter().filter(|&&b| b != 0).count() as u64
+            );
+        }
+    }
+
+    #[test]
+    fn for_each_set_yields_logical_indices() {
+        let mut p = SpikePlane::grid(3, 70); // stride 2 words, padded
+        p.set(0);
+        p.set(69); // last bit of pos 0
+        p.set(70); // first bit of pos 1
+        p.set(3 * 70 - 1); // very last bit
+        let mut got = Vec::new();
+        p.for_each_set(|j| got.push(j));
+        assert_eq!(got, vec![0, 69, 70, 209]);
+        assert_eq!(p.count_ones(), 4);
+        assert_eq!(p.pos_count_ones(0), 2);
+        assert_eq!(p.pos_count_ones(2), 1);
+    }
+
+    #[test]
+    fn fill_from_fn_keeps_padding_zero() {
+        let mut p = SpikePlane::grid(4, 9); // 9 bits/pos in 1 word
+        p.fill_from_fn(|_| true);
+        assert_eq!(p.count_ones(), 36);
+        for pos in 0..4 {
+            assert_eq!(p.pos_words(pos)[0], (1u64 << 9) - 1);
+        }
+    }
+
+    #[test]
+    fn maxpool_matches_byte_reference() {
+        // channel-last [side, side, ch] -> [side/2, side/2, ch]
+        for (side, ch) in [(4usize, 1usize), (4, 3), (8, 8), (6, 70)] {
+            let n = side * side * ch;
+            let bytes: Vec<u8> = (0..n).map(|i| ((i * 7) % 5 == 0) as u8).collect();
+            // byte reference
+            let half = side / 2;
+            let mut want = vec![0u8; half * half * ch];
+            for y in 0..half {
+                for x in 0..half {
+                    for c in 0..ch {
+                        let p = |yy: usize, xx: usize| bytes[(yy * side + xx) * ch + c];
+                        want[(y * half + x) * ch + c] = p(2 * y, 2 * x)
+                            | p(2 * y, 2 * x + 1)
+                            | p(2 * y + 1, 2 * x)
+                            | p(2 * y + 1, 2 * x + 1);
+                    }
+                }
+            }
+            // plane path: grid src, flat dst
+            let mut src = SpikePlane::grid(side * side, ch);
+            src.fill_from_fn(|j| bytes[j] != 0);
+            let mut dst = SpikePlane::flat(half * half * ch);
+            maxpool2_plane(&src, side, ch, &mut dst);
+            assert_eq!(dst.to_u8(), want, "side={side} ch={ch}");
+        }
+    }
+
+    #[test]
+    fn gather_matches_direct_indexing() {
+        let n_src = 150;
+        let src_bytes: Vec<u8> = (0..n_src).map(|i| (i % 4 == 1) as u8).collect();
+        let src = SpikePlane::from_u8(&src_bytes);
+        // 5 positions x 67 taps, mixing pads and real taps
+        let row_k = 67usize;
+        let table: Vec<u32> = (0..5 * row_k)
+            .map(|i| {
+                if i % 9 == 0 {
+                    u32::MAX
+                } else {
+                    ((i * 13) % n_src) as u32
+                }
+            })
+            .collect();
+        let mut dst = SpikePlane::grid(5, row_k);
+        gather_plane(src.words(), &table, &mut dst);
+        for pos in 0..5 {
+            for f in 0..row_k {
+                let a = table[pos * row_k + f];
+                let want = a != u32::MAX && src_bytes[a as usize] != 0;
+                assert_eq!(dst.get(pos * row_k + f), want, "pos={pos} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn or_word_at_straddles_boundaries() {
+        let mut words = vec![0u64; 2];
+        or_word_at(&mut words, 60, 0b1111);
+        assert_eq!(words[0] >> 60, 0b1111);
+        assert_eq!(words[1], 0);
+        or_word_at(&mut words, 62, 0b101);
+        assert_eq!(words[1], 0b1); // bit 64 spilled
+    }
+}

@@ -23,11 +23,38 @@ impl Measurement {
     }
 }
 
+/// CI smoke knob: when `LSPINE_BENCH_ITERS=N` is set, every [`bench`]
+/// runs exactly `N` measured iterations (no warmup, no time budget) and
+/// [`sample_count`] shrinks bench workload sizes — so the bench-smoke CI
+/// job exercises every bench path in seconds while still emitting the
+/// full set of `BENCH_JSON` lines.
+pub fn smoke_iters() -> Option<usize> {
+    std::env::var("LSPINE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+}
+
+/// Workload-size helper: `default_n` normally, `smoke_n` under the
+/// `LSPINE_BENCH_ITERS` smoke knob.
+pub fn sample_count(default_n: usize, smoke_n: usize) -> usize {
+    if smoke_iters().is_some() {
+        smoke_n.clamp(1, default_n)
+    } else {
+        default_n
+    }
+}
+
 /// Measure `f` (one logical iteration per call).
 ///
 /// Runs `warmup` unmeasured calls, then samples until `budget` elapses or
 /// `max_samples` is reached (whichever first), with at least 5 samples.
+/// Under the `LSPINE_BENCH_ITERS` smoke knob it runs exactly that many
+/// iterations instead.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    if let Some(n) = smoke_iters() {
+        return bench_cfg(name, Duration::MAX, 0, n, &mut f);
+    }
     bench_cfg(name, Duration::from_millis(800), 3, 200, &mut f)
 }
 

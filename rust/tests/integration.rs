@@ -193,6 +193,49 @@ fn serving_engine_native_backend_end_to_end() {
 }
 
 #[test]
+fn serving_sharded_workers_agree_with_reference() {
+    // §Perf P6: four execution shards, mixed-precision traffic — every
+    // response must equal the single-engine reference regardless of
+    // which worker served it, and per-worker metrics must merge to the
+    // full request count.
+    let s = store();
+    let data = s.load_test_set().unwrap();
+    let engine = ServingEngine::start(ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Native,
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut refs = [
+        (ReqPrecision::Int2, SnnEngine::new(s.load_network("mlp", "lspine", 2).unwrap())),
+        (ReqPrecision::Int4, SnnEngine::new(s.load_network("mlp", "lspine", 4).unwrap())),
+        (ReqPrecision::Int8, SnnEngine::new(s.load_network("mlp", "lspine", 8).unwrap())),
+    ];
+
+    let n = 48usize.min(data.n);
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let prec = refs[i % 3].0;
+        rxs.push((i, engine.submit(data.sample(i), prec).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        let reference = &mut refs[i % 3].1;
+        let want: Vec<i32> =
+            reference.infer(data.sample(i)).iter().map(|&c| c as i32).collect();
+        assert_eq!(resp.counts, want, "sample {i}: sharded serving != reference");
+    }
+    let m = engine.metrics();
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.rejected, 0);
+    assert!(m.summary().contains("req/s"));
+    engine.shutdown().unwrap();
+}
+
+#[test]
 fn serving_rejects_fp32_on_native_backend() {
     let engine = ServingEngine::start(ServerConfig {
         artifacts_dir: artifacts_dir_string(),
@@ -252,6 +295,7 @@ fn serving_backpressure_rejects_over_capacity() {
             max_batch: 2,
             max_wait: Duration::from_millis(1),
         },
+        workers: 2,
     })
     .unwrap();
     let mut rxs = Vec::new();

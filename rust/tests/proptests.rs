@@ -7,8 +7,11 @@ use lspine::array::RingFifo;
 use lspine::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use lspine::coordinator::request::{InferRequest, Precision};
 use lspine::nce::adder_tree::{lanewise_add_ref, SimdAdder};
-use lspine::nce::lif::{lif_step_row, LifParams};
+use lspine::nce::lif::{
+    lif_step_plane, lif_step_plane_unpacked, lif_step_row, AccScratch, LifParams,
+};
 use lspine::nce::simd::{pack_row, sign_extend, unpack_row, Precision as SimdPrec};
+use lspine::nce::spikeplane::{gather_plane, maxpool2_plane, SpikePlane};
 use lspine::quant::{quantize, QuantScheme, SCHEMES};
 use lspine::util::json;
 use lspine::util::rng::Rng;
@@ -148,6 +151,159 @@ fn prop_lif_row_matches_dense() {
         }
         assert_eq!(out_fast, out_ref, "seed={seed}");
         assert_eq!(v_fast, v_ref, "seed={seed}");
+    }
+}
+
+/// SpikePlane vs Vec<u8> equivalence for the LIF layer step: the
+/// bit-packed plane kernels (packed-word and unpacked-shadow variants)
+/// must reproduce the byte-path `lif_step_row` bit for bit — spikes and
+/// membranes — across ragged widths (n, k not multiples of 64), all
+/// three precisions and random densities. k ranges beyond the narrow
+/// block-accumulator spill boundaries (63/15/255 rows).
+#[test]
+fn prop_spikeplane_lif_step_matches_vec_u8() {
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(seed * 31 + 9);
+        let p = PRECISIONS[(seed % 3) as usize];
+        let (lo, hi) = p.qrange();
+        // ragged by construction: sizes straddle the 64-bit word boundary
+        let k = 1 + rng.below(300) as usize;
+        let n = 1 + rng.below(150) as usize;
+        let theta = 1 + rng.below(60) as i32;
+        let leak = 1 + rng.below(6) as u32;
+        let density = [0.0, 0.1, 0.5, 1.0][(seed % 4) as usize];
+
+        let w: Vec<Vec<i32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect())
+            .collect();
+        let n_words = n.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for row in &w {
+            packed.extend(pack_row(row, p));
+        }
+        let w_i8: Vec<i8> = w.iter().flatten().map(|&x| x as i8).collect();
+        let mut spikes = vec![0u8; k];
+        rng.fill_spikes(density, &mut spikes);
+        let plane = SpikePlane::from_u8(&spikes);
+        assert_eq!(plane.to_u8(), spikes, "seed={seed}: plane round-trip");
+        let v0: Vec<i32> = (0..n).map(|_| rng.range_i64(-200, 200) as i32).collect();
+        let params = LifParams::new(theta, leak);
+
+        // byte reference
+        let mut v_ref = v0.clone();
+        let mut out_ref = vec![0u8; n];
+        let mut acc = vec![0i32; n];
+        lif_step_row(
+            &spikes, &packed, n_words, p, &mut v_ref, &mut out_ref, params, &mut acc,
+        );
+
+        // plane + packed storage words
+        let mut v_a = v0.clone();
+        let mut out_a = SpikePlane::flat(n);
+        lif_step_plane(
+            plane.words(),
+            k,
+            &packed,
+            n_words,
+            p,
+            &mut v_a,
+            out_a.words_mut(),
+            params,
+            &mut acc,
+        );
+        assert_eq!(out_a.to_u8(), out_ref, "seed={seed} {}: packed-plane spikes", p.name());
+        assert_eq!(v_a, v_ref, "seed={seed} {}: packed-plane membranes", p.name());
+
+        // plane + i8 shadow + narrow block accumulators (production)
+        let mut v_b = v0.clone();
+        let mut out_b = SpikePlane::flat(n);
+        let mut scratch = AccScratch::new();
+        lif_step_plane_unpacked(
+            plane.words(),
+            k,
+            &w_i8,
+            n,
+            p,
+            &mut v_b,
+            out_b.words_mut(),
+            params,
+            &mut scratch,
+        );
+        assert_eq!(out_b.to_u8(), out_ref, "seed={seed} {}: plane spikes", p.name());
+        assert_eq!(v_b, v_ref, "seed={seed} {}: plane membranes", p.name());
+        // spike-count stats come from count_ones on the plane
+        assert_eq!(
+            out_b.count_ones(),
+            out_ref.iter().filter(|&&s| s != 0).count() as u64,
+            "seed={seed}"
+        );
+    }
+}
+
+/// SpikePlane vs Vec<u8> equivalence for the 2x2 max-pool OR: the
+/// word-wide OR over grid planes must equal the byte-path `maxpool2`
+/// for ragged channel counts (ch not a multiple of 64).
+#[test]
+fn prop_spikeplane_maxpool_matches_vec_u8() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed + 0x900D);
+        let side = 2 * (1 + rng.below(8) as usize); // even, 2..16
+        let ch = 1 + rng.below(130) as usize; // straddles one word
+        let mut plane_u8 = vec![0u8; side * side * ch];
+        rng.fill_spikes(0.4, &mut plane_u8);
+
+        let half = side / 2;
+        let mut want = vec![0u8; half * half * ch];
+        lspine::model::engine::maxpool2(&plane_u8, side, ch, &mut want);
+
+        let mut src = SpikePlane::grid(side * side, ch);
+        src.fill_from_fn(|j| plane_u8[j] != 0);
+        let mut dst = SpikePlane::flat(half * half * ch);
+        maxpool2_plane(&src, side, ch, &mut dst);
+        assert_eq!(dst.to_u8(), want, "seed={seed} side={side} ch={ch}");
+    }
+}
+
+/// SpikePlane vs Vec<u8> equivalence for the im2col gather: the bit
+/// gather over the §Perf P4 tables must equal the byte-path
+/// `im2col_gather` (and therefore the branchy `im2col` reference) for
+/// ragged row widths (9*ch not a multiple of 64) at all precisions'
+/// layer geometries.
+#[test]
+fn prop_spikeplane_im2col_gather_matches_vec_u8() {
+    use lspine::model::engine::{im2col_gather, im2col_table};
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed + 0x1A7E);
+        let side = 2 + rng.below(14) as usize; // 2..16
+        let ch = 1 + rng.below(12) as usize; // row_k = 9*ch in 9..108
+        let mut plane_u8 = vec![0u8; side * side * ch];
+        rng.fill_spikes(0.35, &mut plane_u8);
+        let table = im2col_table(side, ch);
+        let row_k = 9 * ch;
+
+        let mut want = vec![0u8; side * side * row_k];
+        im2col_gather(&plane_u8, &table, &mut want);
+
+        let src = SpikePlane::from_u8(&plane_u8);
+        let mut dst = SpikePlane::grid(side * side, row_k);
+        gather_plane(src.words(), &table, &mut dst);
+        for pos in 0..side * side {
+            for f in 0..row_k {
+                assert_eq!(
+                    dst.get(pos * row_k + f),
+                    want[pos * row_k + f] != 0,
+                    "seed={seed} side={side} ch={ch} pos={pos} f={f}"
+                );
+            }
+        }
+        // per-position popcounts drive the conv layers' activity stats
+        for pos in 0..side * side {
+            let want_count: u32 = want[pos * row_k..(pos + 1) * row_k]
+                .iter()
+                .map(|&b| (b != 0) as u32)
+                .sum();
+            assert_eq!(dst.pos_count_ones(pos), want_count, "seed={seed} pos={pos}");
+        }
     }
 }
 

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json trajectory files and gate on perf regressions.
+
+Each file holds one JSON object per line, as collected by `make bench-json`
+from the `BENCH_JSON {...}` lines the benches print (see
+rust/src/util/bench.rs::emit_json). Entries are keyed by (suite, name).
+
+The gate: any entry present in both runs whose `msynops_per_s` dropped by
+more than --threshold (default 15%) fails the diff (exit 1). Other numeric
+fields (median_ns, req_per_s, ...) are reported informationally.
+
+Usage:
+    tools/bench_diff.py BASE.json NEW.json [--threshold 0.15]
+
+Example:
+    git stash && make bench-json && cp BENCH_hotpath.json /tmp/base.json
+    git stash pop && make bench-json
+    tools/bench_diff.py /tmp/base.json BENCH_hotpath.json
+"""
+
+import argparse
+import json
+import sys
+
+GATED_FIELD = "msynops_per_s"
+# lower is better for timings; higher is better for rates
+HIGHER_IS_BETTER = {GATED_FIELD, "req_per_s", "sim_utilization", "accuracy"}
+LOWER_IS_BETTER = {"median_ns", "p10_ns", "p90_ns", "p50_us", "p99_us", "latency_us"}
+
+
+def load(path):
+    entries = {}
+    with open(path, encoding="utf-8") as f:
+        for line_no, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                sys.exit(f"{path}:{line_no}: not a JSON line: {e}")
+            key = (obj.get("suite", "?"), obj.get("name", f"line{line_no}"))
+            entries[key] = obj
+    return entries
+
+
+def fmt_delta(base, new, higher_is_better):
+    if base == 0:
+        return "   n/a"
+    rel = (new - base) / abs(base)
+    arrow = "+" if rel >= 0 else ""
+    good = rel >= 0 if higher_is_better else rel <= 0
+    marker = "" if good else " (worse)"
+    return f"{arrow}{rel * 100.0:6.1f}%{marker}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("base", help="baseline BENCH_*.json (one JSON object per line)")
+    ap.add_argument("new", help="candidate BENCH_*.json to compare against the base")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max tolerated relative drop of %s (default 0.15)" % GATED_FIELD,
+    )
+    args = ap.parse_args()
+
+    base = load(args.base)
+    new = load(args.new)
+    common = sorted(set(base) & set(new))
+    if not common:
+        sys.exit("no common (suite, name) entries between the two runs")
+
+    regressions = []
+    print(f"{'suite/name':<48} {'field':<16} {'base':>14} {'new':>14}  delta")
+    print("-" * 108)
+    for key in common:
+        b, n = base[key], new[key]
+        fields = sorted(
+            f
+            for f in set(b) & set(n)
+            if f not in ("suite", "name", "iters")
+            and isinstance(b[f], (int, float))
+            and isinstance(n[f], (int, float))
+        )
+        for f in fields:
+            hib = f in HIGHER_IS_BETTER or (
+                f not in LOWER_IS_BETTER and not f.endswith("_ns")
+            )
+            print(
+                f"{'/'.join(key):<48} {f:<16} {b[f]:>14.1f} {n[f]:>14.1f}  "
+                f"{fmt_delta(b[f], n[f], hib)}"
+            )
+            if f == GATED_FIELD and b[f] > 0:
+                drop = (b[f] - n[f]) / b[f]
+                if drop > args.threshold:
+                    regressions.append((key, b[f], n[f], drop))
+
+    missing = sorted(set(base) - set(new))
+    added = sorted(set(new) - set(base))
+    for key in missing:
+        print(f"note: {'/'.join(key)} present only in base")
+    for key in added:
+        print(f"note: {'/'.join(key)} present only in new")
+
+    if regressions:
+        print()
+        for key, b, n, drop in regressions:
+            print(
+                f"REGRESSION {'/'.join(key)}: {GATED_FIELD} {b:.1f} -> {n:.1f} "
+                f"(-{drop * 100.0:.1f}% > {args.threshold * 100.0:.0f}% threshold)"
+            )
+        sys.exit(1)
+    print(f"\nOK: no {GATED_FIELD} regression beyond {args.threshold * 100.0:.0f}%")
+
+
+if __name__ == "__main__":
+    main()
