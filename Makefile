@@ -32,7 +32,15 @@ bench:
 # Run both benches and collect their BENCH_JSON lines into the
 # trajectory files at the repo root (one JSON object per line).
 # Compare two runs with: tools/bench_diff.py OLD.json BENCH_hotpath.json
-# (fails on a >15% msynops_per_s regression).
+# (fails on a >15% msynops_per_s regression; entries key on
+# suite/name/backend so kernel-backend sweeps diff like-for-like).
+#
+# BENCH_hotpath.json / BENCH_ablation.json are CHECKED IN as the perf
+# baselines the CI bench-smoke job diffs against at a loose 50%
+# threshold (catastrophic-collapse net; zero-valued seed entries never
+# gate). Refresh them from a bench-smoke CI artifact — same runner
+# class — not from dev hardware. The precise 15% gate is the bench-gate
+# CI job, which benches the PR head and its merge-base on one runner.
 # (plain redirects, not `| tee`, so a failing bench fails the target)
 bench-json:
 	cd rust && $(CARGO) bench --bench hotpath > ../.bench_hotpath.out || (cat ../.bench_hotpath.out; exit 1)

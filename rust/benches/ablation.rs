@@ -23,8 +23,9 @@ use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::encode::{PoissonEncoder, RateEncoder, TtfsEncoder};
 use lspine::forge;
 use lspine::model::SnnEngine;
+use lspine::nce::Kernels;
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::{emit_json_scalar, sample_count, Table};
+use lspine::util::bench::{emit_json_scalar, emit_json_scalar_with, sample_count, Table};
 
 const SUITE: &str = "ablation";
 
@@ -209,9 +210,13 @@ fn main() {
             format!("{}", m.latency.quantile_us(0.5)),
             format!("{:.1}", m.mean_batch()),
         ]);
-        emit_json_scalar(
+        // a5 rows are wall-clock serving numbers, so they carry the
+        // kernel backend they ran on (accuracy rows are backend-exact
+        // by the equivalence proptests and stay untagged).
+        emit_json_scalar_with(
             SUITE,
             &format!("a5 max_wait={wait_ms}ms"),
+            Some(Kernels::from_env().name()),
             &[
                 ("req_per_s", total as f64 / dt),
                 ("p50_us", m.latency.quantile_us(0.5) as f64),

@@ -12,8 +12,10 @@
 //!
 //! Measures the layers the EXPERIMENTS.md §Perf log optimizes:
 //! - the LIF layer step on bit-packed spike planes (§Perf P5 — the
-//!   `lif_step_row` entries, production kernel), plus the packed-word
-//!   storage path for reference
+//!   `lif_step_row` entries, production kernel), swept over every kernel
+//!   backend the host can run (§Perf P7 — rows share a name and differ
+//!   in the BENCH_JSON `backend` field), plus the packed-word storage
+//!   path for reference
 //! - full end-to-end native inference (mlp INT2/4/8 + convnet INT4)
 //! - cycle-simulator throughput
 //! - serving-engine round trip (batcher + channel overhead) and the
@@ -23,81 +25,97 @@ use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::forge;
 use lspine::model::SnnEngine;
-use lspine::nce::lif::{lif_step_plane_unpacked, lif_step_row, AccScratch, LifParams};
+use lspine::nce::lif::{lif_step_row, AccScratch, LifParams};
 use lspine::nce::simd::{pack_row, unpack_row, Precision};
-use lspine::nce::SpikePlane;
+use lspine::nce::{KernelBackend, Kernels, SpikePlane};
 use lspine::runtime::ArtifactStore;
-use lspine::util::bench::{bench, emit_json, emit_json_scalar, report, sample_count};
+use lspine::util::bench::{
+    bench, emit_json, emit_json_scalar_with, emit_json_with, report, sample_count,
+};
 use lspine::util::rng::Rng;
 
 const SUITE: &str = "hotpath";
 
 fn main() {
-    let mut rng = Rng::new(7);
-
     // --- LIF layer step at each precision, serving-scale layer ---
     // The measured kernel is the production path (§Perf P5): bit-packed
     // input spike plane + i8 weight shadow + precision-matched narrow
-    // block accumulators. The packed-storage-word path is reported too,
+    // block accumulators — swept over every kernel backend this host can
+    // run (§Perf P7). The packed-storage-word path is reported too,
     // under its own name, for the storage-model reference.
-    println!("LIF layer step (k=256 inputs, n=128 neurons, 30% density):");
-    for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
-        let (lo, hi) = p.qrange();
-        let k = 256usize;
-        let n = 128usize;
-        let n_words = n.div_ceil(p.fields_per_word());
-        let mut packed = Vec::new();
-        for _ in 0..k {
-            let row: Vec<i32> =
-                (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
-            packed.extend(pack_row(&row, p));
+    for kernels in Kernels::available() {
+        println!(
+            "LIF layer step [{}] (k=256 inputs, n=128 neurons, 30% density):",
+            kernels.name()
+        );
+        let mut krng = Rng::new(7);
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            let k = 256usize;
+            let n = 128usize;
+            let n_words = n.div_ceil(p.fields_per_word());
+            let mut packed = Vec::new();
+            for _ in 0..k {
+                let row: Vec<i32> = (0..n)
+                    .map(|_| krng.range_i64(lo as i64, hi as i64) as i32)
+                    .collect();
+                packed.extend(pack_row(&row, p));
+            }
+            let w_i8: Vec<i8> = (0..k)
+                .flat_map(|j| {
+                    unpack_row(&packed[j * n_words..(j + 1) * n_words], p, n)
+                        .into_iter()
+                        .map(|x| x as i8)
+                })
+                .collect();
+            let mut spikes = vec![0u8; k];
+            krng.fill_spikes(0.3, &mut spikes);
+            let plane = SpikePlane::from_u8(&spikes);
+            let synops = (plane.count_ones() as usize * n) as f64;
+            let mut v = vec![0i32; n];
+            let mut out = SpikePlane::flat(n);
+            let mut scratch = AccScratch::new();
+            let params = LifParams::new(40, 2);
+
+            let m = bench(&format!("lif_step_row {}", p.name()), || {
+                kernels.lif_step_plane_unpacked(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &mut v,
+                    out.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+            });
+            let msynops_per_s = synops / m.per_iter_ns() * 1e3;
+            println!("    -> {msynops_per_s:.1} M synops/s");
+            report(&m);
+            emit_json_with(SUITE, Some(kernels.name()), &m, &[("msynops_per_s", msynops_per_s)]);
+
+            // storage-model reference: packed u32 words, u8 spikes
+            // (pre-P5; scalar-only by design — measure it once)
+            if kernels.name() == "scalar" {
+                let mut v2 = vec![0i32; n];
+                let mut out2 = vec![0u8; n];
+                let mut acc = vec![0i32; n];
+                let m2 = bench(&format!("lif_step_row_packed {}", p.name()), || {
+                    lif_step_row(
+                        &spikes, &packed, n_words, p, &mut v2, &mut out2, params, &mut acc,
+                    );
+                });
+                let packed_msynops = synops / m2.per_iter_ns() * 1e3;
+                report(&m2);
+                emit_json_with(
+                    SUITE,
+                    Some("scalar"),
+                    &m2,
+                    &[("msynops_per_s", packed_msynops)],
+                );
+            }
         }
-        let w_i8: Vec<i8> = (0..k)
-            .flat_map(|j| {
-                unpack_row(&packed[j * n_words..(j + 1) * n_words], p, n)
-                    .into_iter()
-                    .map(|x| x as i8)
-            })
-            .collect();
-        let mut spikes = vec![0u8; k];
-        rng.fill_spikes(0.3, &mut spikes);
-        let plane = SpikePlane::from_u8(&spikes);
-        let synops = (plane.count_ones() as usize * n) as f64;
-        let mut v = vec![0i32; n];
-        let mut out = SpikePlane::flat(n);
-        let mut scratch = AccScratch::new();
-        let params = LifParams::new(40, 2);
-
-        let m = bench(&format!("lif_step_row {}", p.name()), || {
-            lif_step_plane_unpacked(
-                plane.words(),
-                k,
-                &w_i8,
-                n,
-                p,
-                &mut v,
-                out.words_mut(),
-                params,
-                &mut scratch,
-            );
-        });
-        let msynops_per_s = synops / m.per_iter_ns() * 1e3;
-        println!("    -> {msynops_per_s:.1} M synops/s");
-        report(&m);
-        emit_json(SUITE, &m, &[("msynops_per_s", msynops_per_s)]);
-
-        // storage-model reference: packed u32 words, u8 spikes (pre-P5)
-        let mut v2 = vec![0i32; n];
-        let mut out2 = vec![0u8; n];
-        let mut acc = vec![0i32; n];
-        let m2 = bench(&format!("lif_step_row_packed {}", p.name()), || {
-            lif_step_row(
-                &spikes, &packed, n_words, p, &mut v2, &mut out2, params, &mut acc,
-            );
-        });
-        let packed_msynops = synops / m2.per_iter_ns() * 1e3;
-        report(&m2);
-        emit_json(SUITE, &m2, &[("msynops_per_s", packed_msynops)]);
     }
 
     // --- forge-backed end-to-end benches (hermetic, no python) ---
@@ -106,8 +124,11 @@ fn main() {
     let data = store.load_test_set().expect("test set");
     let sample = data.sample(0).to_vec();
 
-    // --- end-to-end native inference ---
-    println!("native end-to-end inference (forge artifacts):");
+    // --- end-to-end native inference (on the process-default backend) ---
+    println!(
+        "native end-to-end inference (forge artifacts, kernels={}):",
+        Kernels::from_env().name()
+    );
     for (model, bits) in [("mlp", 2u32), ("mlp", 4), ("mlp", 8), ("convnet", 4)] {
         let net = store.load_network(model, "lspine", bits).unwrap();
         let mut engine = SnnEngine::new(net);
@@ -116,8 +137,9 @@ fn main() {
         });
         report(&m);
         let st = engine.last_stats();
-        emit_json(
+        emit_json_with(
             SUITE,
+            Some(engine.kernels().name()),
             &m,
             &[
                 ("words_touched", st.words_touched as f64),
@@ -168,8 +190,9 @@ fn main() {
         });
         report(&m);
         let metrics = engine.metrics();
-        emit_json(
+        emit_json_with(
             SUITE,
+            Some(Kernels::from_env().name()),
             &m,
             &[
                 ("mean_batch", metrics.mean_batch()),
@@ -228,9 +251,10 @@ fn main() {
                 m.latency.quantile_us(0.99),
                 m.mean_batch()
             );
-            emit_json_scalar(
+            emit_json_scalar_with(
                 SUITE,
                 &format!("serve throughput workers={workers}"),
+                Some(Kernels::from_env().name()),
                 &[
                     ("req_per_s", req_per_s),
                     ("p50_us", m.latency.quantile_us(0.5) as f64),

@@ -16,6 +16,9 @@
 //! the batcher, and `ServerConfig::workers` execution threads each own a
 //! full backend; ready batches are dealt round-robin (size-capped so
 //! bursts split across the pool) and per-worker metrics merge on read.
+//! Native shards bind a kernel backend once at startup
+//! (`ServerConfig::kernels`, §Perf P7) — an unavailable request fails
+//! `start` instead of silently falling back.
 //!
 //! std threads + channels (tokio is unavailable offline); the hot path is
 //! allocation-light and the queue is the bounded [`crate::array::RingFifo`].

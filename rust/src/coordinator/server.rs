@@ -19,6 +19,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::model::SnnEngine;
+use crate::nce::{KernelKind, Kernels};
 use crate::runtime::executor::{ExecutorPool, ModelKey};
 use crate::runtime::ArtifactStore;
 use crate::Result;
@@ -53,6 +54,10 @@ pub struct ServerConfig {
     /// Execution workers, each owning a full backend (defaults to the
     /// number of available cores; clamped to >= 1 at start).
     pub workers: usize,
+    /// Kernel backend for the native engines (§Perf P7). Resolved once
+    /// at startup — every shard binds the same backend; requesting one
+    /// the host cannot run fails `start` (never a silent fallback).
+    pub kernels: KernelKind,
 }
 
 impl Default for ServerConfig {
@@ -64,6 +69,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             queue_capacity: 1024,
             workers: default_workers(),
+            kernels: KernelKind::Auto,
         }
     }
 }
@@ -91,6 +97,11 @@ impl ServingEngine {
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
         let input_dim = store.manifest().model(&cfg.model)?.arch.input_dim();
         drop(store);
+        if cfg.backend == Backend::Native {
+            // fail fast: an unavailable --kernels must error at startup,
+            // not silently kill every worker thread
+            Kernels::for_kind(cfg.kernels)?;
+        }
         let backend = cfg.backend;
         let n_workers = cfg.workers.max(1);
 
@@ -359,10 +370,13 @@ fn exec_worker_loop(
     let mut exec = match cfg.backend {
         Backend::Pjrt => Exec::Pjrt(ExecutorPool::new(store, &cfg.model)?),
         Backend::Native => {
+            // one resolution per shard, at startup: every engine of this
+            // worker runs the same kernel backend for its whole lifetime
+            let kernels = Kernels::for_kind(cfg.kernels)?;
             let mut engines = Vec::new();
             for bits in [2u32, 4, 8] {
                 let net = store.load_network(&cfg.model, "lspine", bits)?;
-                engines.push((bits, SnnEngine::new(net)));
+                engines.push((bits, SnnEngine::with_kernels(net, kernels)));
             }
             Exec::Native(engines)
         }

@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::model::SnnEngine;
+use lspine::nce::{KernelKind, Kernels};
 use lspine::reports;
 use lspine::runtime::executor::{ExecutorPool, ModelKey};
 use lspine::runtime::ArtifactStore;
@@ -27,6 +28,8 @@ use lspine::util::cli::Args;
 const USAGE: &str = "\
 lspine <forge|serve|eval|simulate|report> [options]
   common:    --artifacts DIR (default: artifacts)  --model mlp|convnet
+             --kernels auto|scalar|wide|avx2|neon (default: auto;
+             env LSPINE_KERNELS sets the process default)
   forge:     --out DIR (default: artifacts)  --seed N
   eval:      --bits 2|4|8  --scheme lspine|stbp|admm|trunc
              --backend native|pjrt|both  --samples N
@@ -50,8 +53,8 @@ fn run() -> lspine::Result<()> {
         argv,
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
-            "requests=", "concurrency=", "workers=", "out=", "seed=", "all",
-            "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
+            "requests=", "concurrency=", "workers=", "kernels=", "out=", "seed=",
+            "all", "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
     if args.has("help") || args.positional().is_empty() {
@@ -60,6 +63,8 @@ fn run() -> lspine::Result<()> {
     }
     let cmd = args.positional()[0].as_str();
     match cmd {
+        // --kernels is parsed per-command (serve binds shards, eval and
+        // simulate bind their single engine); forge/report ignore it.
         "forge" => cmd_forge(&args),
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
@@ -94,11 +99,14 @@ fn cmd_eval(args: &Args) -> lspine::Result<()> {
     let bits = args.get_usize("bits", 4)? as u32;
     let scheme = args.get_or("scheme", "lspine");
     let backend = args.get_or("backend", "native");
+    let kernels = parse_kernels(args)?;
     let data = store.load_test_set()?;
     let samples = args.get_usize("samples", data.n)?.min(data.n);
 
     println!(
-        "eval: model={model} scheme={scheme} INT{bits} backend={backend} n={samples}"
+        "eval: model={model} scheme={scheme} INT{bits} backend={backend} \
+         kernels={} n={samples}",
+        kernels.name()
     );
 
     let native_preds = if backend != "pjrt" {
@@ -107,7 +115,7 @@ fn cmd_eval(args: &Args) -> lspine::Result<()> {
         } else {
             store.load_network(model, scheme, bits)?
         };
-        let mut engine = SnnEngine::new(net);
+        let mut engine = SnnEngine::with_kernels(net, kernels);
         let t0 = Instant::now();
         let preds: Vec<usize> =
             (0..samples).map(|i| engine.predict(data.sample(i))).collect();
@@ -169,7 +177,7 @@ fn cmd_simulate(args: &Args) -> lspine::Result<()> {
     let data = store.load_test_set()?;
     let net = store.load_network(model, "lspine", bits)?;
     let cfg = ArrayConfig::paper();
-    let mut engine = SnnEngine::new(net.clone());
+    let mut engine = SnnEngine::with_kernels(net.clone(), parse_kernels(args)?);
 
     println!(
         "simulate: {model} INT{bits} on {}x{} array @ {} MHz",
@@ -213,6 +221,7 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
     let workers = args
         .get_usize("workers", lspine::coordinator::default_workers())?
         .max(1);
+    let kernel_kind = parse_kernel_kind(args)?;
     let precision = ReqPrecision::parse(&bits.to_string())
         .ok_or_else(|| anyhow::anyhow!("bad bits"))?;
 
@@ -223,13 +232,15 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
         model: model.clone(),
         backend,
         workers,
+        kernels: kernel_kind,
         ..Default::default()
     })?;
 
     println!(
         "serve: {model} {} backend={backend:?} requests={n_requests} \
-         concurrency={concurrency} workers={workers}",
-        precision.name()
+         concurrency={concurrency} workers={workers} kernels={}",
+        precision.name(),
+        Kernels::for_kind(kernel_kind)?.name()
     );
     let t0 = Instant::now();
     let mut hits = 0usize;
@@ -299,6 +310,18 @@ fn cmd_report(args: &Args) -> lspine::Result<()> {
         anyhow::bail!("pick --all or at least one report flag");
     }
     Ok(())
+}
+
+/// `--kernels` as a requested kind (serve: resolved by each shard).
+fn parse_kernel_kind(args: &Args) -> lspine::Result<KernelKind> {
+    let s = args.get_or("kernels", "auto");
+    KernelKind::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("bad --kernels {s:?} (auto|scalar|wide|avx2|neon)"))
+}
+
+/// `--kernels` resolved to a runnable backend (eval/simulate).
+fn parse_kernels(args: &Args) -> lspine::Result<Kernels> {
+    Kernels::for_kind(parse_kernel_kind(args)?)
 }
 
 fn accuracy(preds: &[usize], data: &lspine::model::io::Dataset, n: usize) -> f64 {

@@ -20,8 +20,8 @@
 
 use crate::encode::RateEncoder;
 use crate::nce::lif::LifParams;
-use crate::nce::spikeplane::{gather_plane, maxpool2_plane, SpikePlane};
-use crate::nce::NeuronComputeEngine;
+use crate::nce::spikeplane::SpikePlane;
+use crate::nce::{KernelBackend, Kernels, NeuronComputeEngine};
 
 use super::network::{ArchDesc, QuantNetwork};
 
@@ -86,7 +86,15 @@ pub struct SnnEngine {
 }
 
 impl SnnEngine {
+    /// Engine on the process-default kernel backend (`LSPINE_KERNELS`
+    /// env or auto detection).
     pub fn new(net: QuantNetwork) -> Self {
+        Self::with_kernels(net, Kernels::from_env())
+    }
+
+    /// Engine bound to an explicit kernel backend (what the serving
+    /// shards use — `ServerConfig::kernels` resolves once at startup).
+    pub fn with_kernels(net: QuantNetwork, kernels: Kernels) -> Self {
         let (membranes, spike_bufs, patch_bufs, pool_bufs) = match &net.arch {
             ArchDesc::Mlp { sizes, .. } => {
                 let m: Vec<Vec<i32>> =
@@ -162,7 +170,7 @@ impl SnnEngine {
             input_spikes: SpikePlane::flat(input_dim),
             patch_bufs,
             pool_bufs,
-            nce: NeuronComputeEngine::new(),
+            nce: NeuronComputeEngine::with_kernels(kernels),
             counts: vec![0u32; classes],
             stats: InferStats::default(),
             layer_stats: Vec::new(),
@@ -171,6 +179,12 @@ impl SnnEngine {
 
     pub fn network(&self) -> &QuantNetwork {
         &self.net
+    }
+
+    /// The kernel backend this engine is bound to (§Perf P7) — the one
+    /// handle lives on the embedded NCE.
+    pub fn kernels(&self) -> Kernels {
+        self.nce.kernels()
     }
 
     /// Stats of the most recent `infer` call.
@@ -301,9 +315,10 @@ impl SnnEngine {
         let (c0, c1, c2) = (channels[0], channels[1], channels[2]);
         let s2 = side / 2;
         let s4 = side / 4;
+        let kernels = self.nce.kernels(); // Copy: frees `self` for buffer borrows
 
         // ---- conv1: input plane [side,side,c0] -> spikes [side,side,c1]
-        gather_plane(
+        kernels.gather_plane(
             self.input_spikes.words(),
             &self.im2col_tables[0],
             &mut self.patch_bufs[0],
@@ -311,10 +326,10 @@ impl SnnEngine {
         self.lif_conv_layer(0, side * side, 9 * c0, leak);
 
         // ---- pool1 (word-wide OR): [side,side,c1] -> flat [s2,s2,c1]
-        maxpool2_plane(&self.spike_bufs[0], side, c1, &mut self.pool_bufs[0]);
+        kernels.maxpool2_plane(&self.spike_bufs[0], side, c1, &mut self.pool_bufs[0]);
 
         // ---- conv2 over pooled plane [s2,s2,c1] -> [s2,s2,c2]
-        gather_plane(
+        kernels.gather_plane(
             self.pool_bufs[0].words(),
             &self.im2col_tables[1],
             &mut self.patch_bufs[1],
@@ -322,7 +337,7 @@ impl SnnEngine {
         self.lif_conv_layer(1, s2 * s2, 9 * c1, leak);
 
         // ---- pool2 (word-wide OR): [s2,s2,c2] -> flat [s4,s4,c2]
-        maxpool2_plane(&self.spike_bufs[1], s2, c2, &mut self.pool_bufs[1]);
+        kernels.maxpool2_plane(&self.spike_bufs[1], s2, c2, &mut self.pool_bufs[1]);
         let fc_in = s4 * s4 * c2;
         let _ = classes;
 

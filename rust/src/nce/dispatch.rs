@@ -1,0 +1,810 @@
+//! Runtime-dispatched kernel backends — the selectable SIMD matrix.
+//!
+//! PR 3 made the hot path portable u64 SWAR; this layer makes it *as fast
+//! as the hardware allows*: a [`KernelBackend`] trait covering the four
+//! plane operations the serving hot path is built from — the plane LIF
+//! step, the block accumulate, the 2x2 max-pool OR and the im2col bit
+//! gather — with four implementations selected once at startup:
+//!
+//! - **scalar** — the u64 SWAR reference path of PR 3 (autovectorized
+//!   narrow block accumulators). This is the bit-exact oracle every other
+//!   backend is property-tested against (`rust/tests/backends.rs`).
+//! - **wide** — portable `u128` SWAR: 16 i8 (or 8 i16) lanes per
+//!   carry-isolated add (`((a&L)+(b&L)) ^ ((a^b)&H)`), 128-bit pool ORs.
+//!   Compiles everywhere; exists to demonstrate the technique and as the
+//!   widest path on targets with neither AVX2 nor NEON.
+//! - **avx2** — explicit `std::arch::x86_64`: 32-lane `_mm256_add_epi8`
+//!   accumulate, 256-bit pool ORs, and a masked `vpgatherdd` im2col bit
+//!   gather (8 taps per iteration, pad lanes masked off). Gated by
+//!   `is_x86_feature_detected!("avx2")` at selection time.
+//! - **neon** — explicit `std::arch::aarch64`: 16-lane `vaddq_s8` /
+//!   widening `vaddw_s8` accumulate and 128-bit pool ORs. NEON is
+//!   architecturally mandatory on aarch64; the cfg gate is the compile
+//!   proof (CI cross-checks `aarch64-unknown-linux-gnu` on every PR).
+//!
+//! Every backend is *bit-exact* by construction: the narrow block bounds
+//! (63/15/255 rows — see [`super::lif`]) guarantee the i8/i16 lanes never
+//! wrap, so lane width is purely a throughput knob, exactly the paper's
+//! low-precision SIMD thesis applied to the simulator's own inner loop.
+//!
+//! # Selection
+//!
+//! Order of precedence (first hit wins):
+//! 1. explicit request — CLI `--kernels scalar|wide|avx2|neon`,
+//!    `ServerConfig::kernels` (each serving shard binds its backend once
+//!    at startup), or [`Kernels::for_kind`];
+//! 2. the `LSPINE_KERNELS` environment variable (same values, read once);
+//! 3. `auto`: AVX2 on x86_64 when the CPU has it, NEON on aarch64,
+//!    otherwise the scalar reference.
+//!
+//! Requesting an unavailable backend (`avx2` on an old x86, `neon` on
+//! x86_64) is a hard error — silently falling back would invalidate any
+//! benchmark run with an explicit `--kernels`.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use super::lif::{lif_step_plane_accum, AccScratch, LifParams};
+use super::simd::Precision;
+use super::spikeplane::{self, SpikePlane};
+
+/// Requested backend (the CLI/env/config surface). `Auto` resolves at
+/// selection time via [`Kernels::for_kind`]; the other four name one
+/// implementation each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Best available: avx2 > neon > scalar.
+    Auto,
+    /// u64 SWAR reference (PR 3 path) — the oracle.
+    Scalar,
+    /// Portable u128 SWAR.
+    Wide,
+    /// Explicit AVX2 (x86_64 + runtime detection).
+    Avx2,
+    /// Explicit NEON (aarch64).
+    Neon,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" | "swar" | "swar64" => Some(KernelKind::Scalar),
+            "wide" | "u128" => Some(KernelKind::Wide),
+            "avx2" => Some(KernelKind::Avx2),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Wide => "wide",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+}
+
+/// The four plane operations of the serving hot path.
+///
+/// Implementations must be bit-identical to the scalar reference; the
+/// backend-equivalence suite (`rust/tests/backends.rs`) asserts it for
+/// every backend that compiled on the running host.
+pub trait KernelBackend: Sync {
+    /// Backend name (`scalar` / `wide` / `avx2` / `neon`), used for
+    /// logging and the `backend` field of BENCH_JSON rows.
+    fn name(&self) -> &'static str;
+
+    /// Lane-wise `acc[i] += row[i]` over i8 block accumulators
+    /// (INT2/INT4 rows; exact by the 63/15-row block bound).
+    fn accumulate_i8(&self, acc: &mut [i8], row: &[i8]);
+
+    /// Lane-wise widening `acc[i] += row[i] as i16` over i16 block
+    /// accumulators (INT8 rows; exact by the 255-row block bound).
+    fn accumulate_i16(&self, acc: &mut [i16], row: &[i8]);
+
+    /// One LIF timestep over a bit-packed spike word slice and the
+    /// unpacked i8 weight shadow — semantics of
+    /// [`super::lif::lif_step_plane_unpacked`], accumulating through this
+    /// backend's lanes.
+    #[allow(clippy::too_many_arguments)]
+    fn lif_step_plane_unpacked(
+        &self,
+        in_words: &[u64],
+        k_in: usize,
+        w_i8: &[i8],
+        n_out: usize,
+        precision: Precision,
+        v: &mut [i32],
+        out_words: &mut [u64],
+        p: LifParams,
+        scratch: &mut AccScratch,
+    ) {
+        lif_step_plane_accum(
+            in_words,
+            k_in,
+            w_i8,
+            n_out,
+            precision,
+            v,
+            out_words,
+            p,
+            scratch,
+            |acc, row| self.accumulate_i8(acc, row),
+            |acc, row| self.accumulate_i16(acc, row),
+        );
+    }
+
+    /// 2x2 max-pool (OR on binary spikes) — semantics of
+    /// [`spikeplane::maxpool2_plane`].
+    fn maxpool2_plane(&self, src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikePlane) {
+        spikeplane::maxpool2_plane(src, side, ch, dst);
+    }
+
+    /// Table-driven im2col bit gather — semantics of
+    /// [`spikeplane::gather_plane`].
+    fn gather_plane(&self, src_words: &[u64], table: &[u32], dst: &mut SpikePlane) {
+        spikeplane::gather_plane(src_words, table, dst);
+    }
+}
+
+/// Stack scratch bound for the pool skeleton: `ceil(ch / 64)` words,
+/// i.e. up to 1024 channels, before falling back to one heap buffer.
+const POOL_STACK_WORDS: usize = 16;
+
+/// Shared max-pool skeleton: the outer pool geometry with the 4-way word
+/// OR delegated to the backend (`or4` fills `out` with `a|b|c|d`).
+/// Allocation-free for every realistic channel count (the serving hot
+/// path budget — same policy as `AccScratch`).
+fn maxpool2_with(
+    src: &SpikePlane,
+    side: usize,
+    ch: usize,
+    dst: &mut SpikePlane,
+    mut or4: impl FnMut(&[u64], &[u64], &[u64], &[u64], &mut [u64]),
+) {
+    let half = side / 2;
+    debug_assert_eq!(src.positions(), side * side);
+    debug_assert_eq!(src.bits_per_pos(), ch);
+    debug_assert_eq!(dst.positions(), 1);
+    debug_assert_eq!(dst.bits_per_pos(), half * half * ch);
+    dst.clear();
+    let stride = src.stride_words();
+    let mut stack = [0u64; POOL_STACK_WORDS];
+    let mut heap = Vec::new();
+    let or: &mut [u64] = if stride <= POOL_STACK_WORDS {
+        &mut stack[..stride]
+    } else {
+        heap.resize(stride, 0u64);
+        &mut heap
+    };
+    for y in 0..half {
+        for x in 0..half {
+            let a = src.pos_words(2 * y * side + 2 * x);
+            let b = src.pos_words(2 * y * side + 2 * x + 1);
+            let c = src.pos_words((2 * y + 1) * side + 2 * x);
+            let d = src.pos_words((2 * y + 1) * side + 2 * x + 1);
+            or4(a, b, c, d, or);
+            let offset = (y * half + x) * ch;
+            for (w, &bits) in or.iter().enumerate() {
+                spikeplane::or_word_at(dst.words_mut(), offset + w * 64, bits);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar — the u64 SWAR reference (oracle)
+// ---------------------------------------------------------------------
+
+/// The PR 3 portable path: plain lane loops the compiler autovectorizes,
+/// u64 word ORs, scalar bit gather. Every other backend is tested
+/// bit-identical to this one.
+pub struct ScalarBackend;
+
+impl KernelBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn accumulate_i8(&self, acc: &mut [i8], row: &[i8]) {
+        for (a, &w) in acc.iter_mut().zip(row) {
+            *a += w;
+        }
+    }
+
+    fn accumulate_i16(&self, acc: &mut [i16], row: &[i8]) {
+        for (a, &w) in acc.iter_mut().zip(row) {
+            *a += w as i16;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// wide — portable u128 SWAR
+// ---------------------------------------------------------------------
+
+/// Portable 128-bit SWAR: lane-isolated adds over u128 (16 i8 or 8 i16
+/// lanes per operation) and 128-bit pool ORs. The carry-isolation
+/// identity `((a&L)+(b&L)) ^ ((a^b)&H)` computes a lane-wise *wrapping*
+/// add; the block-row bounds guarantee the lanes never wrap, so the
+/// result equals true lane addition.
+pub struct WideBackend;
+
+/// High (sign) bit of every 8-bit lane of a u128.
+const H8: u128 = 0x8080_8080_8080_8080_8080_8080_8080_8080;
+/// High (sign) bit of every 16-bit lane of a u128.
+const H16: u128 = 0x8000_8000_8000_8000_8000_8000_8000_8000;
+
+/// Lane-wise wrapping add of `lane_hi`-masked lanes (8- or 16-bit).
+#[inline(always)]
+fn swar_add(a: u128, b: u128, lane_hi: u128) -> u128 {
+    let low = !lane_hi;
+    ((a & low).wrapping_add(b & low)) ^ ((a ^ b) & lane_hi)
+}
+
+#[inline(always)]
+fn u128_from_i8(chunk: &[i8]) -> u128 {
+    let mut bytes = [0u8; 16];
+    for (d, &s) in bytes.iter_mut().zip(chunk) {
+        *d = s as u8;
+    }
+    u128::from_le_bytes(bytes)
+}
+
+impl KernelBackend for WideBackend {
+    fn name(&self) -> &'static str {
+        "wide"
+    }
+
+    fn accumulate_i8(&self, acc: &mut [i8], row: &[i8]) {
+        let mut ac = acc.chunks_exact_mut(16);
+        let mut rc = row.chunks_exact(16);
+        for (a, r) in (&mut ac).zip(&mut rc) {
+            let sum = swar_add(u128_from_i8(a), u128_from_i8(r), H8);
+            for (d, b) in a.iter_mut().zip(sum.to_le_bytes()) {
+                *d = b as i8;
+            }
+        }
+        for (a, &w) in ac.into_remainder().iter_mut().zip(rc.remainder()) {
+            *a += w;
+        }
+    }
+
+    fn accumulate_i16(&self, acc: &mut [i16], row: &[i8]) {
+        let mut ac = acc.chunks_exact_mut(8);
+        let mut rc = row.chunks_exact(8);
+        for (a, r) in (&mut ac).zip(&mut rc) {
+            let mut x = 0u128;
+            let mut y = 0u128;
+            for i in 0..8 {
+                x |= (a[i] as u16 as u128) << (16 * i);
+                // widen i8 -> i16 before laning (sign-extension)
+                y |= (r[i] as i16 as u16 as u128) << (16 * i);
+            }
+            let sum = swar_add(x, y, H16);
+            for (i, slot) in a.iter_mut().enumerate() {
+                *slot = (sum >> (16 * i)) as u16 as i16;
+            }
+        }
+        for (a, &w) in ac.into_remainder().iter_mut().zip(rc.remainder()) {
+            *a += w as i16;
+        }
+    }
+
+    fn maxpool2_plane(&self, src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikePlane) {
+        maxpool2_with(src, side, ch, dst, |a, b, c, d, out| {
+            let mut w = 0usize;
+            while w + 1 < out.len() {
+                let x = (a[w] as u128 | ((a[w + 1] as u128) << 64))
+                    | (b[w] as u128 | ((b[w + 1] as u128) << 64))
+                    | (c[w] as u128 | ((c[w + 1] as u128) << 64))
+                    | (d[w] as u128 | ((d[w + 1] as u128) << 64));
+                out[w] = x as u64;
+                out[w + 1] = (x >> 64) as u64;
+                w += 2;
+            }
+            if w < out.len() {
+                out[w] = a[w] | b[w] | c[w] | d[w];
+            }
+        });
+    }
+
+    // The bit gather is pointer-chasing bound; a portable integer path
+    // has no wider primitive than the scalar one, so `gather_plane`
+    // stays the reference implementation (trait default).
+}
+
+// ---------------------------------------------------------------------
+// avx2 — explicit std::arch::x86_64
+// ---------------------------------------------------------------------
+
+/// Explicit AVX2 path. Only constructed after
+/// `is_x86_feature_detected!("avx2")` succeeded (see [`Kernels`]), which
+/// is the safety contract of the `#[target_feature]` functions below.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2Backend;
+
+#[cfg(target_arch = "x86_64")]
+impl KernelBackend for Avx2Backend {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn accumulate_i8(&self, acc: &mut [i8], row: &[i8]) {
+        // SAFETY: selection verified AVX2 support (Kernels invariant).
+        unsafe { avx2::accumulate_i8(acc, row) }
+    }
+
+    fn accumulate_i16(&self, acc: &mut [i16], row: &[i8]) {
+        // SAFETY: as above.
+        unsafe { avx2::accumulate_i16(acc, row) }
+    }
+
+    fn maxpool2_plane(&self, src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikePlane) {
+        maxpool2_with(src, side, ch, dst, |a, b, c, d, out| {
+            // SAFETY: as above.
+            unsafe { avx2::or4(a, b, c, d, out) }
+        });
+    }
+
+    fn gather_plane(&self, src_words: &[u64], table: &[u32], dst: &mut SpikePlane) {
+        // SAFETY: as above.
+        unsafe { avx2::gather_plane(src_words, table, dst) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::SpikePlane;
+    use std::arch::x86_64::*;
+
+    /// 32 i8 lanes per add.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate_i8(acc: &mut [i8], row: &[i8]) {
+        let n = acc.len().min(row.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi8(a, r));
+            i += 32;
+        }
+        while i < n {
+            acc[i] += row[i];
+            i += 1;
+        }
+    }
+
+    /// 16 i16 lanes per add: sign-extend 16 i8 row values, add wide.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate_i16(acc: &mut [i16], row: &[i8]) {
+        let n = acc.len().min(row.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let r8 = _mm_loadu_si128(row.as_ptr().add(i) as *const __m128i);
+            let r = _mm256_cvtepi8_epi16(r8);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi16(a, r));
+            i += 16;
+        }
+        while i < n {
+            acc[i] += row[i] as i16;
+            i += 1;
+        }
+    }
+
+    /// 256-bit 4-way OR (the 2x2 pool inner op).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn or4(a: &[u64], b: &[u64], c: &[u64], d: &[u64], out: &mut [u64]) {
+        let n = out.len();
+        let mut w = 0usize;
+        while w + 4 <= n {
+            let x = _mm256_or_si256(
+                _mm256_or_si256(
+                    _mm256_loadu_si256(a.as_ptr().add(w) as *const __m256i),
+                    _mm256_loadu_si256(b.as_ptr().add(w) as *const __m256i),
+                ),
+                _mm256_or_si256(
+                    _mm256_loadu_si256(c.as_ptr().add(w) as *const __m256i),
+                    _mm256_loadu_si256(d.as_ptr().add(w) as *const __m256i),
+                ),
+            );
+            _mm256_storeu_si256(out.as_mut_ptr().add(w) as *mut __m256i, x);
+            w += 4;
+        }
+        while w < n {
+            out[w] = a[w] | b[w] | c[w] | d[w];
+            w += 1;
+        }
+    }
+
+    /// im2col bit gather, 8 taps per iteration via masked `vpgatherdd`.
+    ///
+    /// The u64 source words are addressed as little-endian u32 halves
+    /// (bit `a` of the u64 bit space is bit `a & 31` of u32 `a >> 5`);
+    /// pad taps (`u32::MAX`) are masked off the gather and contribute a
+    /// hard zero. Bit packing rides `vmovmskps`: each lane's target bit
+    /// is shifted to the lane sign position, and the 8-bit mask lands at
+    /// the chunk's offset in the output word.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_plane(src_words: &[u64], table: &[u32], dst: &mut SpikePlane) {
+        let row_k = dst.bits_per_pos();
+        debug_assert_eq!(table.len(), dst.positions() * row_k);
+        let stride = dst.stride_words();
+        let base = src_words.as_ptr() as *const i32;
+        let all_ones = _mm256_set1_epi32(-1);
+        let mask31 = _mm256_set1_epi32(31);
+        let zero = _mm256_setzero_si256();
+        for pos in 0..dst.positions() {
+            let row = &table[pos * row_k..(pos + 1) * row_k];
+            let block_start = pos * stride;
+            for wi in 0..stride {
+                let lo = wi * 64;
+                let hi = (lo + 64).min(row_k);
+                let mut w = 0u64;
+                let mut t = lo;
+                while t + 8 <= hi {
+                    let vidx = _mm256_loadu_si256(row.as_ptr().add(t) as *const __m256i);
+                    let is_pad = _mm256_cmpeq_epi32(vidx, all_ones);
+                    let valid = _mm256_xor_si256(is_pad, all_ones);
+                    let widx = _mm256_srli_epi32::<5>(vidx);
+                    let gathered = _mm256_mask_i32gather_epi32::<4>(zero, base, widx, valid);
+                    let bits = _mm256_srlv_epi32(gathered, _mm256_and_si256(vidx, mask31));
+                    let msb = _mm256_slli_epi32::<31>(bits);
+                    let m = _mm256_movemask_ps(_mm256_castsi256_ps(msb)) as u32 as u64;
+                    w |= (m & 0xFF) << (t - lo);
+                    t += 8;
+                }
+                while t < hi {
+                    let a = row[t];
+                    if a != u32::MAX {
+                        w |= ((src_words[(a >> 6) as usize] >> (a & 63)) & 1) << (t - lo);
+                    }
+                    t += 1;
+                }
+                dst.words_mut()[block_start + wi] = w;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// neon — explicit std::arch::aarch64
+// ---------------------------------------------------------------------
+
+/// Explicit NEON path. NEON (ASIMD) is architecturally mandatory on
+/// aarch64, so the cfg gate is the availability proof; selection still
+/// runs `is_aarch64_feature_detected!` for uniformity.
+#[cfg(target_arch = "aarch64")]
+pub struct NeonBackend;
+
+#[cfg(target_arch = "aarch64")]
+impl KernelBackend for NeonBackend {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn accumulate_i8(&self, acc: &mut [i8], row: &[i8]) {
+        // SAFETY: selection verified NEON support (Kernels invariant).
+        unsafe { neon::accumulate_i8(acc, row) }
+    }
+
+    fn accumulate_i16(&self, acc: &mut [i16], row: &[i8]) {
+        // SAFETY: as above.
+        unsafe { neon::accumulate_i16(acc, row) }
+    }
+
+    fn maxpool2_plane(&self, src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikePlane) {
+        maxpool2_with(src, side, ch, dst, |a, b, c, d, out| {
+            // SAFETY: as above.
+            unsafe { neon::or4(a, b, c, d, out) }
+        });
+    }
+
+    // No gather instruction on NEON: the bit gather stays the scalar
+    // reference (trait default).
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// 16 i8 lanes per add.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accumulate_i8(acc: &mut [i8], row: &[i8]) {
+        let n = acc.len().min(row.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = vld1q_s8(acc.as_ptr().add(i));
+            let r = vld1q_s8(row.as_ptr().add(i));
+            vst1q_s8(acc.as_mut_ptr().add(i), vaddq_s8(a, r));
+            i += 16;
+        }
+        while i < n {
+            acc[i] += row[i];
+            i += 1;
+        }
+    }
+
+    /// 8 i16 lanes per widening add (`vaddw_s8`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accumulate_i16(acc: &mut [i16], row: &[i8]) {
+        let n = acc.len().min(row.len());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = vld1q_s16(acc.as_ptr().add(i));
+            let r = vld1_s8(row.as_ptr().add(i));
+            vst1q_s16(acc.as_mut_ptr().add(i), vaddw_s8(a, r));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += row[i] as i16;
+            i += 1;
+        }
+    }
+
+    /// 128-bit 4-way OR (the 2x2 pool inner op).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn or4(a: &[u64], b: &[u64], c: &[u64], d: &[u64], out: &mut [u64]) {
+        let n = out.len();
+        let mut w = 0usize;
+        while w + 2 <= n {
+            let x = vorrq_u8(
+                vorrq_u8(
+                    vld1q_u8(a.as_ptr().add(w) as *const u8),
+                    vld1q_u8(b.as_ptr().add(w) as *const u8),
+                ),
+                vorrq_u8(
+                    vld1q_u8(c.as_ptr().add(w) as *const u8),
+                    vld1q_u8(d.as_ptr().add(w) as *const u8),
+                ),
+            );
+            vst1q_u8(out.as_mut_ptr().add(w) as *mut u8, x);
+            w += 2;
+        }
+        while w < n {
+            out[w] = a[w] | b[w] | c[w] | d[w];
+            w += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// selection
+// ---------------------------------------------------------------------
+
+static SCALAR: ScalarBackend = ScalarBackend;
+static WIDE: WideBackend = WideBackend;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Backend = Avx2Backend;
+#[cfg(target_arch = "aarch64")]
+static NEON: NeonBackend = NeonBackend;
+
+/// A bound kernel backend: a cheap copyable handle the engines store and
+/// the serving shards bind once at startup.
+///
+/// Invariant: a `Kernels` for avx2/neon only exists after the runtime
+/// feature check passed — that is the safety contract the intrinsic
+/// paths rely on.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    be: &'static dyn KernelBackend,
+    kind: KernelKind,
+}
+
+impl fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Kernels({})", self.name())
+    }
+}
+
+impl std::ops::Deref for Kernels {
+    type Target = dyn KernelBackend;
+    fn deref(&self) -> &(dyn KernelBackend + 'static) {
+        self.be
+    }
+}
+
+impl Kernels {
+    /// The u64 SWAR reference (always available — the oracle).
+    pub fn scalar() -> Self {
+        Self { be: &SCALAR, kind: KernelKind::Scalar }
+    }
+
+    /// The portable u128 SWAR path (always available).
+    pub fn wide() -> Self {
+        Self { be: &WIDE, kind: KernelKind::Wide }
+    }
+
+    /// Best backend this host supports: avx2 > neon > scalar.
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return Self { be: &AVX2, kind: KernelKind::Avx2 };
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Self { be: &NEON, kind: KernelKind::Neon };
+        }
+        Self::scalar()
+    }
+
+    /// Resolve a concrete (non-`Auto`) kind; explicit requests for
+    /// backends this host cannot run are hard errors (never a silent
+    /// fallback — a benchmark run with `--kernels avx2` must not quietly
+    /// measure something else).
+    fn resolve_concrete(kind: KernelKind) -> anyhow::Result<Self> {
+        match kind {
+            KernelKind::Auto => unreachable!("resolve_concrete given Auto"),
+            KernelKind::Scalar => Ok(Self::scalar()),
+            KernelKind::Wide => Ok(Self::wide()),
+            KernelKind::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                if is_x86_feature_detected!("avx2") {
+                    return Ok(Self { be: &AVX2, kind: KernelKind::Avx2 });
+                }
+                anyhow::bail!("avx2 kernels need an x86_64 CPU with AVX2")
+            }
+            KernelKind::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return Ok(Self { be: &NEON, kind: KernelKind::Neon });
+                }
+                anyhow::bail!("neon kernels need an aarch64 CPU")
+            }
+        }
+    }
+
+    /// Resolve a requested kind. A concrete kind is a hard requirement;
+    /// `Auto` means "no explicit request" and resolves through the
+    /// process default ([`Kernels::from_env`]) so the documented
+    /// precedence — explicit > `LSPINE_KERNELS` > detection — holds.
+    pub fn for_kind(kind: KernelKind) -> anyhow::Result<Self> {
+        match kind {
+            KernelKind::Auto => Ok(Self::from_env()),
+            concrete => Self::resolve_concrete(concrete),
+        }
+    }
+
+    /// Process default: `LSPINE_KERNELS` if set and available, else
+    /// [`Kernels::detect`]. Read once and cached (serving shards and
+    /// engines constructed without an explicit kind all share it). The
+    /// env var is a soft surface: an unavailable or unparsable value
+    /// warns and falls back to detection.
+    pub fn from_env() -> Self {
+        static CACHE: OnceLock<Kernels> = OnceLock::new();
+        *CACHE.get_or_init(|| match std::env::var("LSPINE_KERNELS") {
+            Ok(s) if !s.is_empty() => match KernelKind::parse(&s) {
+                Some(KernelKind::Auto) => Self::detect(),
+                Some(kind) => Self::resolve_concrete(kind).unwrap_or_else(|e| {
+                    let fallback = Self::detect();
+                    eprintln!(
+                        "warning: LSPINE_KERNELS={s:?}: {e}; using {}",
+                        fallback.name()
+                    );
+                    fallback
+                }),
+                None => {
+                    let fallback = Self::detect();
+                    eprintln!(
+                        "warning: LSPINE_KERNELS={s:?} is not a kernel kind \
+                         (auto|scalar|wide|avx2|neon); using {}",
+                        fallback.name()
+                    );
+                    fallback
+                }
+            },
+            _ => Self::detect(),
+        })
+    }
+
+    /// Every backend the running host can execute (scalar and wide
+    /// always; avx2/neon when detected) — the sweep set benches and the
+    /// equivalence tests iterate.
+    pub fn available() -> Vec<Self> {
+        let mut v = vec![Self::scalar(), Self::wide()];
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            v.push(Self { be: &AVX2, kind: KernelKind::Avx2 });
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(Self { be: &NEON, kind: KernelKind::Neon });
+        }
+        v
+    }
+
+    /// The resolved kind (never `Auto`).
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// The resolved backend name (`scalar` / `wide` / `avx2` / `neon`).
+    pub fn name(&self) -> &'static str {
+        self.be.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Auto));
+        assert_eq!(KernelKind::parse("SCALAR"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("u128"), Some(KernelKind::Wide));
+        assert_eq!(KernelKind::parse("avx2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("neon"), Some(KernelKind::Neon));
+        assert_eq!(KernelKind::parse("sse9"), None);
+    }
+
+    #[test]
+    fn scalar_and_wide_always_resolve() {
+        assert_eq!(Kernels::for_kind(KernelKind::Scalar).unwrap().name(), "scalar");
+        assert_eq!(Kernels::for_kind(KernelKind::Wide).unwrap().name(), "wide");
+        // auto always resolves to something runnable
+        let auto = Kernels::for_kind(KernelKind::Auto).unwrap();
+        assert_ne!(auto.kind(), KernelKind::Auto);
+    }
+
+    #[test]
+    fn available_starts_with_the_oracle() {
+        let v = Kernels::available();
+        assert!(v.len() >= 2);
+        assert_eq!(v[0].name(), "scalar");
+        assert_eq!(v[1].name(), "wide");
+    }
+
+    #[test]
+    fn swar_add_lanes_are_isolated() {
+        // i8 lanes: carries must not cross lane boundaries
+        let a = u128_from_i8(&[127, -128, -1, 1, 0, 100, -100, 64, 64, -64, 3, -3, 7, 0, 0, -1]);
+        let b = u128_from_i8(&[-127, 127, 1, -1, 0, -100, 100, -64, -64, 64, -3, 3, -7, 0, -1, 1]);
+        let s = swar_add(a, b, H8);
+        let want: Vec<i8> = vec![0, -1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, -1, 0];
+        let got: Vec<i8> = s.to_le_bytes().iter().map(|&x| x as i8).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn swar_add_i16_lanes() {
+        // 16-bit lanes: the same identity at the wider lane width
+        let vals: [i16; 8] = [32767, -32768, -1, 1, 12345, -12345, 255, -256];
+        let add: [i16; 8] = [-32767, 32767, 1, -1, -12345, 12345, -255, 256];
+        let mut x = 0u128;
+        let mut y = 0u128;
+        for i in 0..8 {
+            x |= (vals[i] as u16 as u128) << (16 * i);
+            y |= (add[i] as u16 as u128) << (16 * i);
+        }
+        let s = swar_add(x, y, H16);
+        for i in 0..8 {
+            let lane = (s >> (16 * i)) as u16 as i16;
+            assert_eq!(lane, vals[i].wrapping_add(add[i]), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn wide_accumulate_matches_scalar_ragged() {
+        // ragged lengths straddle the 16/8-lane chunk boundaries
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100] {
+            let row: Vec<i8> = (0..n).map(|i| ((i as i32 % 17) - 8) as i8).collect();
+            let mut a8: Vec<i8> = (0..n).map(|i| ((i as i32 % 11) - 5) as i8).collect();
+            let mut b8 = a8.clone();
+            ScalarBackend.accumulate_i8(&mut a8, &row);
+            WideBackend.accumulate_i8(&mut b8, &row);
+            assert_eq!(a8, b8, "i8 n={n}");
+
+            let mut a16: Vec<i16> = (0..n).map(|i| (i as i32 * 37 % 2000 - 1000) as i16).collect();
+            let mut b16 = a16.clone();
+            ScalarBackend.accumulate_i16(&mut a16, &row);
+            WideBackend.accumulate_i16(&mut b16, &row);
+            assert_eq!(a16, b16, "i16 n={n}");
+        }
+    }
+}

@@ -6,9 +6,9 @@
 //! allocation-free wrapper over [`super::lif::lif_step_row`].
 
 use super::adder_tree::{SimdAdder, Structure};
+use super::dispatch::{KernelBackend, Kernels};
 use super::lif::{
-    lif_step_plane, lif_step_plane_unpacked, lif_step_row, lif_step_row_unpacked,
-    AccScratch, LifParams,
+    lif_step_plane, lif_step_row, lif_step_row_unpacked, AccScratch, LifParams,
 };
 use super::simd::Precision;
 use super::spikeplane;
@@ -22,6 +22,10 @@ use super::spikeplane;
 pub struct NeuronComputeEngine {
     acc: Vec<i32>,
     scratch: AccScratch,
+    /// Kernel backend the plane fast path runs on (§Perf P7). Bound at
+    /// construction; the packed-word paths stay scalar by design (they
+    /// are the storage-model reference).
+    kernels: Kernels,
     /// Cycle cost accounting for the last `step` (array simulator input).
     last_active_rows: usize,
     last_words_touched: usize,
@@ -34,13 +38,26 @@ impl Default for NeuronComputeEngine {
 }
 
 impl NeuronComputeEngine {
+    /// Engine on the process-default backend (`LSPINE_KERNELS` or auto
+    /// detection — see [`Kernels::from_env`]).
     pub fn new() -> Self {
+        Self::with_kernels(Kernels::from_env())
+    }
+
+    /// Engine bound to an explicit kernel backend.
+    pub fn with_kernels(kernels: Kernels) -> Self {
         Self {
             acc: Vec::new(),
             scratch: AccScratch::new(),
+            kernels,
             last_active_rows: 0,
             last_words_touched: 0,
         }
+    }
+
+    /// The kernel backend this engine is bound to.
+    pub fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     /// One timestep of a tile of `v.len()` neurons with `spikes_in` inputs.
@@ -142,7 +159,8 @@ impl NeuronComputeEngine {
     ) {
         self.last_active_rows = spikeplane::count_ones(in_words) as usize;
         self.last_words_touched = self.last_active_rows * n_words;
-        lif_step_plane_unpacked(
+        let kernels = self.kernels; // Copy: frees `self` for the scratch borrow
+        kernels.lif_step_plane_unpacked(
             in_words,
             k_in,
             w_i8,

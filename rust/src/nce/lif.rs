@@ -175,7 +175,10 @@ const I16_BLOCK_ROWS: usize = 255;
 /// spikes as bits into `out_words` (`n_out` bits, upper padding zeroed).
 ///
 /// Bit-exact with [`lif_step_row_unpacked`] and [`lif_step_row`] — the
-/// block sums are exact integer arithmetic, only wider-lane-count.
+/// block sums are exact integer arithmetic, only wider-lane-count. This
+/// free function is the scalar (u64 SWAR) oracle; the runtime-selected
+/// backends route through [`lif_step_plane_accum`] with their own lane
+/// implementations (see [`super::dispatch`]).
 #[allow(clippy::too_many_arguments)]
 pub fn lif_step_plane_unpacked(
     in_words: &[u64],
@@ -187,6 +190,48 @@ pub fn lif_step_plane_unpacked(
     out_words: &mut [u64],
     p: LifParams,
     scratch: &mut AccScratch,
+) {
+    lif_step_plane_accum(
+        in_words,
+        k_in,
+        w_i8,
+        n_out,
+        precision,
+        v,
+        out_words,
+        p,
+        scratch,
+        |acc, row| {
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += w;
+            }
+        },
+        |acc, row| {
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += w as i16;
+            }
+        },
+    );
+}
+
+/// The plane LIF skeleton with the lane-wise block accumulate delegated
+/// to the caller: `acc_i8(acc, row)` / `acc_i16(acc, row)` must perform
+/// lane-wise `acc[i] += row[i]` (with i8->i16 widening for the i16
+/// variant). Event scan, block spill bookkeeping and the membrane update
+/// are shared by every backend — only the adds differ in lane width.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lif_step_plane_accum(
+    in_words: &[u64],
+    k_in: usize,
+    w_i8: &[i8],
+    n_out: usize,
+    precision: Precision,
+    v: &mut [i32],
+    out_words: &mut [u64],
+    p: LifParams,
+    scratch: &mut AccScratch,
+    mut acc_i8: impl FnMut(&mut [i8], &[i8]),
+    mut acc_i16: impl FnMut(&mut [i16], &[i8]),
 ) {
     debug_assert_eq!(v.len(), n_out);
     debug_assert_eq!(w_i8.len(), k_in * n_out);
@@ -203,9 +248,7 @@ pub fn lif_step_plane_unpacked(
         for_each_set_bit(in_words, |j| {
             debug_assert!(j < k_in);
             let row = &w_i8[j * n_out..(j + 1) * n_out];
-            for (a, &w) in acc8.iter_mut().zip(row) {
-                *a += w;
-            }
+            acc_i8(acc8, row);
             in_block += 1;
             if in_block == block_rows {
                 for (s, a) in acc32.iter_mut().zip(acc8.iter_mut()) {
@@ -227,9 +270,7 @@ pub fn lif_step_plane_unpacked(
         for_each_set_bit(in_words, |j| {
             debug_assert!(j < k_in);
             let row = &w_i8[j * n_out..(j + 1) * n_out];
-            for (a, &w) in acc16.iter_mut().zip(row) {
-                *a += w as i16;
-            }
+            acc_i16(acc16, row);
             in_block += 1;
             if in_block == I16_BLOCK_ROWS {
                 for (s, a) in acc32.iter_mut().zip(acc16.iter_mut()) {

@@ -13,6 +13,9 @@
 //!   per word): `trailing_zeros` event scans, word-wide OR pooling and
 //!   bit-gather im2col (§Perf P5).
 //! - [`lif`] — the integer LIF dynamics (mirrors `kernels/ref.py`).
+//! - [`dispatch`] — runtime-selected kernel backends (§Perf P7): the
+//!   scalar u64 SWAR oracle plus wide-u128 / AVX2 / NEON lanes behind a
+//!   [`KernelBackend`] trait, bound once per engine or serving shard.
 //! - [`adder_tree`] — gate-level structural model of the reconfigurable
 //!   full-adder hierarchy; used for bit-exact cross-checks *and* as the
 //!   netlist the [`crate::fpga`] estimator costs.
@@ -20,11 +23,13 @@
 //!   neuron tile, the unit the [`crate::array`] simulator schedules.
 
 pub mod adder_tree;
+pub mod dispatch;
 pub mod engine;
 pub mod lif;
 pub mod simd;
 pub mod spikeplane;
 
+pub use dispatch::{KernelBackend, KernelKind, Kernels};
 pub use engine::NeuronComputeEngine;
 pub use lif::{lif_step_row, LifParams};
 pub use simd::{pack_row, sign_extend, unpack_word, Precision};

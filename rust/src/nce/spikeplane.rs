@@ -211,8 +211,9 @@ pub fn maxpool2_plane(src: &SpikePlane, side: usize, ch: usize, dst: &mut SpikeP
 }
 
 /// OR up to 64 bits (`bits`) into a flat word array at bit offset `at`.
+/// Shared with the backend max-pool skeleton in [`super::dispatch`].
 #[inline(always)]
-fn or_word_at(words: &mut [u64], at: usize, bits: u64) {
+pub(crate) fn or_word_at(words: &mut [u64], at: usize, bits: u64) {
     if bits == 0 {
         return;
     }

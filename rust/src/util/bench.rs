@@ -108,11 +108,30 @@ pub fn fmt_duration(d: Duration) -> String {
 /// (`suite`, `name`, `iters`, `median_ns`, `p10_ns`, `p90_ns` + any
 /// caller-supplied numeric fields); downstream tooling greps the prefix
 /// and collects the JSON into `BENCH_*.json` files.
+///
+/// Rows measured on a specific kernel backend carry a `backend` string
+/// field (see [`emit_json_with`]); `tools/bench_diff.py` keys entries by
+/// `(suite, name, backend)` and treats rows without the field as
+/// `backend = "scalar"`, so pre-backend trajectories stay comparable.
 pub fn emit_json(suite: &str, m: &Measurement, extra: &[(&str, f64)]) {
+    emit_json_with(suite, None, m, extra);
+}
+
+/// [`emit_json`] with an explicit kernel-backend tag, so per-backend
+/// sweep rows of the same bench name diff like-for-like.
+pub fn emit_json_with(
+    suite: &str,
+    backend: Option<&str>,
+    m: &Measurement,
+    extra: &[(&str, f64)],
+) {
     use super::json::Value;
     let mut obj = std::collections::BTreeMap::new();
     obj.insert("suite".to_string(), Value::Str(suite.to_string()));
     obj.insert("name".to_string(), Value::Str(m.name.clone()));
+    if let Some(b) = backend {
+        obj.insert("backend".to_string(), Value::Str(b.to_string()));
+    }
     obj.insert("iters".to_string(), Value::Num(m.iters as f64));
     obj.insert("median_ns".to_string(), Value::Num(m.median.as_nanos() as f64));
     obj.insert("p10_ns".to_string(), Value::Num(m.p10.as_nanos() as f64));
@@ -125,10 +144,23 @@ pub fn emit_json(suite: &str, m: &Measurement, extra: &[(&str, f64)]) {
 
 /// Like [`emit_json`] but for scalar (non-timing) results.
 pub fn emit_json_scalar(suite: &str, name: &str, fields: &[(&str, f64)]) {
+    emit_json_scalar_with(suite, name, None, fields);
+}
+
+/// [`emit_json_scalar`] with an explicit kernel-backend tag.
+pub fn emit_json_scalar_with(
+    suite: &str,
+    name: &str,
+    backend: Option<&str>,
+    fields: &[(&str, f64)],
+) {
     use super::json::Value;
     let mut obj = std::collections::BTreeMap::new();
     obj.insert("suite".to_string(), Value::Str(suite.to_string()));
     obj.insert("name".to_string(), Value::Str(name.to_string()));
+    if let Some(b) = backend {
+        obj.insert("backend".to_string(), Value::Str(b.to_string()));
+    }
     for (k, v) in fields {
         obj.insert((*k).to_string(), Value::Num(*v));
     }

@@ -1,0 +1,290 @@
+//! Backend-equivalence suite (§Perf P7): every kernel backend the
+//! running host can execute must be *bit-identical* to the scalar u64
+//! SWAR oracle for the plane LIF step, the block accumulates, the 2x2
+//! max-pool OR and the im2col bit gather — across ragged widths (sizes
+//! straddling the 8/16/32-lane chunk and 64-bit word boundaries), all
+//! three precisions, and the narrow-block spill boundaries (63/15/255
+//! rows). On x86_64 CI the available set is {scalar, wide, avx2}, so a
+//! green run is an execution proof of the AVX2 intrinsics; the NEON path
+//! is compile-proven by the aarch64 cross-check CI job and executes this
+//! same suite on arm hosts.
+
+use lspine::model::engine::im2col_table;
+use lspine::nce::lif::{lif_step_plane_unpacked, lif_step_row, AccScratch, LifParams};
+use lspine::nce::simd::{pack_row, Precision};
+use lspine::nce::spikeplane::{gather_plane, maxpool2_plane, SpikePlane};
+use lspine::nce::{KernelBackend, KernelKind, Kernels};
+use lspine::util::rng::Rng;
+
+const PRECISIONS: [Precision; 3] = [Precision::Int2, Precision::Int4, Precision::Int8];
+
+/// Backends under test: everything the host can run, *including* the
+/// scalar trait path (its accumulate hooks route through the shared
+/// skeleton, so comparing it against the free-function oracle pins the
+/// skeleton refactor itself).
+fn candidates() -> Vec<Kernels> {
+    let all = Kernels::available();
+    assert_eq!(all[0].name(), "scalar");
+    all
+}
+
+#[test]
+fn prop_backend_lif_step_matches_scalar_oracle() {
+    for kernels in candidates() {
+        for seed in 0..60u64 {
+            let mut rng = Rng::new(seed * 131 + 17);
+            let p = PRECISIONS[(seed % 3) as usize];
+            let (lo, hi) = p.qrange();
+            // k beyond every narrow-block spill boundary; ragged n
+            let k = 1 + rng.below(400) as usize;
+            let n = 1 + rng.below(200) as usize;
+            let theta = 1 + rng.below(60) as i32;
+            let leak = 1 + rng.below(6) as u32;
+            let density = [0.0, 0.15, 0.5, 1.0][(seed % 4) as usize];
+
+            let w_i8: Vec<i8> = (0..k * n)
+                .map(|_| rng.range_i64(lo as i64, hi as i64) as i8)
+                .collect();
+            let mut spikes = vec![0u8; k];
+            rng.fill_spikes(density, &mut spikes);
+            let plane = SpikePlane::from_u8(&spikes);
+            let v0: Vec<i32> = (0..n).map(|_| rng.range_i64(-200, 200) as i32).collect();
+            let params = LifParams::new(theta, leak);
+
+            // scalar oracle (the free function, not the trait path)
+            let mut v_ref = v0.clone();
+            let mut out_ref = SpikePlane::flat(n);
+            let mut scratch = AccScratch::new();
+            lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v_ref,
+                out_ref.words_mut(),
+                params,
+                &mut scratch,
+            );
+
+            let mut v_b = v0.clone();
+            let mut out_b = SpikePlane::flat(n);
+            let mut scratch_b = AccScratch::new();
+            kernels.lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v_b,
+                out_b.words_mut(),
+                params,
+                &mut scratch_b,
+            );
+            let b = kernels.name();
+            assert_eq!(out_b.to_u8(), out_ref.to_u8(), "{b} seed={seed} {} spikes", p.name());
+            assert_eq!(v_b, v_ref, "{b} seed={seed} {} membranes", p.name());
+        }
+    }
+}
+
+#[test]
+fn prop_backend_lif_step_matches_byte_path() {
+    // transitively pinned via the oracle, but assert directly against
+    // the pre-P5 byte/packed-word path too: the whole chain agrees
+    for kernels in candidates() {
+        for seed in 0..30u64 {
+            let mut rng = Rng::new(seed * 53 + 7);
+            let p = PRECISIONS[(seed % 3) as usize];
+            let (lo, hi) = p.qrange();
+            let k = 1 + rng.below(300) as usize;
+            let n = 1 + rng.below(150) as usize;
+            let w: Vec<Vec<i32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect())
+                .collect();
+            let n_words = n.div_ceil(p.fields_per_word());
+            let mut packed = Vec::new();
+            for row in &w {
+                packed.extend(pack_row(row, p));
+            }
+            let w_i8: Vec<i8> = w.iter().flatten().map(|&x| x as i8).collect();
+            let mut spikes = vec![0u8; k];
+            rng.fill_spikes(0.4, &mut spikes);
+            let plane = SpikePlane::from_u8(&spikes);
+            let v0: Vec<i32> = (0..n).map(|_| rng.range_i64(-100, 100) as i32).collect();
+            let params = LifParams::new(1 + rng.below(40) as i32, 2);
+
+            let mut v_ref = v0.clone();
+            let mut out_ref = vec![0u8; n];
+            let mut acc = vec![0i32; n];
+            lif_step_row(
+                &spikes, &packed, n_words, p, &mut v_ref, &mut out_ref, params, &mut acc,
+            );
+
+            let mut v_b = v0.clone();
+            let mut out_b = SpikePlane::flat(n);
+            let mut scratch = AccScratch::new();
+            kernels.lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v_b,
+                out_b.words_mut(),
+                params,
+                &mut scratch,
+            );
+            let b = kernels.name();
+            assert_eq!(out_b.to_u8(), out_ref, "{b} seed={seed} {}", p.name());
+            assert_eq!(v_b, v_ref, "{b} seed={seed} {}", p.name());
+        }
+    }
+}
+
+#[test]
+fn prop_backend_accumulate_matches_scalar() {
+    // the raw block accumulates, at qmin/qmax boundary values and at
+    // lengths straddling every vector chunk width (8/16/32 lanes)
+    let scalar = Kernels::scalar();
+    for kernels in candidates() {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed + 0xACC);
+            let n = 1 + rng.below(140) as usize;
+            let boundary = seed % 4 == 0;
+            let row: Vec<i8> = (0..n)
+                .map(|i| {
+                    if boundary {
+                        if i % 2 == 0 { -8 } else { 7 }
+                    } else {
+                        rng.range_i64(-8, 7) as i8
+                    }
+                })
+                .collect();
+            // prefill keeps |acc| within the block bound margins
+            let a0: Vec<i8> = (0..n).map(|_| rng.range_i64(-100, 100) as i8).collect();
+            let mut a = a0.clone();
+            let mut b = a0.clone();
+            scalar.accumulate_i8(&mut a, &row);
+            kernels.accumulate_i8(&mut b, &row);
+            assert_eq!(a, b, "{} i8 seed={seed} n={n}", kernels.name());
+
+            let row16: Vec<i8> = (0..n).map(|_| rng.range_i64(-128, 127) as i8).collect();
+            let a016: Vec<i16> =
+                (0..n).map(|_| rng.range_i64(-30000, 30000) as i16).collect();
+            let mut a16 = a016.clone();
+            let mut b16 = a016.clone();
+            scalar.accumulate_i16(&mut a16, &row16);
+            kernels.accumulate_i16(&mut b16, &row16);
+            assert_eq!(a16, b16, "{} i16 seed={seed} n={n}", kernels.name());
+        }
+    }
+}
+
+#[test]
+fn prop_backend_maxpool_matches_scalar() {
+    for kernels in candidates() {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed + 0x900D);
+            let side = 2 * (1 + rng.below(8) as usize); // even, 2..16
+            // ragged channel counts straddling 1, 2 and 4 word strides
+            let ch = [1, 63, 64, 65, 70, 127, 128, 130, 200, 256]
+                [(rng.below(10)) as usize];
+            let mut plane_u8 = vec![0u8; side * side * ch];
+            rng.fill_spikes(0.4, &mut plane_u8);
+            let mut src = SpikePlane::grid(side * side, ch);
+            src.fill_from_fn(|j| plane_u8[j] != 0);
+            let half = side / 2;
+
+            let mut want = SpikePlane::flat(half * half * ch);
+            maxpool2_plane(&src, side, ch, &mut want);
+
+            let mut got = SpikePlane::flat(half * half * ch);
+            kernels.maxpool2_plane(&src, side, ch, &mut got);
+            assert_eq!(
+                got.to_u8(),
+                want.to_u8(),
+                "{} seed={seed} side={side} ch={ch}",
+                kernels.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_backend_im2col_gather_matches_scalar() {
+    for kernels in candidates() {
+        // conv-shaped tables (with border pads) at ragged widths
+        for seed in 0..30u64 {
+            let mut rng = Rng::new(seed + 0x1A7E);
+            let side = 2 + rng.below(14) as usize; // 2..16
+            let ch = 1 + rng.below(12) as usize; // row_k = 9*ch in 9..108
+            let mut plane_u8 = vec![0u8; side * side * ch];
+            rng.fill_spikes(0.35, &mut plane_u8);
+            let table = im2col_table(side, ch);
+            let row_k = 9 * ch;
+            let src = SpikePlane::from_u8(&plane_u8);
+
+            let mut want = SpikePlane::grid(side * side, row_k);
+            gather_plane(src.words(), &table, &mut want);
+
+            let mut got = SpikePlane::grid(side * side, row_k);
+            kernels.gather_plane(src.words(), &table, &mut got);
+            assert_eq!(
+                got.words(),
+                want.words(),
+                "{} seed={seed} side={side} ch={ch}",
+                kernels.name()
+            );
+        }
+        // synthetic tables pinning the 8-tap chunk/tail split (row_k
+        // around multiples of 8 and 64) and dense pad patterns
+        for row_k in [1usize, 7, 8, 9, 15, 16, 63, 64, 65, 67, 128, 133] {
+            let n_src = 257usize;
+            let src_bytes: Vec<u8> = (0..n_src).map(|i| (i % 3 == 1) as u8).collect();
+            let src = SpikePlane::from_u8(&src_bytes);
+            let positions = 5usize;
+            let table: Vec<u32> = (0..positions * row_k)
+                .map(|i| {
+                    if i % 5 == 0 {
+                        u32::MAX // pad taps interleaved with real taps
+                    } else {
+                        ((i * 131) % n_src) as u32
+                    }
+                })
+                .collect();
+            let mut want = SpikePlane::grid(positions, row_k);
+            gather_plane(src.words(), &table, &mut want);
+            let mut got = SpikePlane::grid(positions, row_k);
+            kernels.gather_plane(src.words(), &table, &mut got);
+            assert_eq!(got.words(), want.words(), "{} row_k={row_k}", kernels.name());
+        }
+    }
+}
+
+#[test]
+#[cfg(target_arch = "x86_64")]
+fn auto_selects_avx2_on_avx2_hosts() {
+    // the ISSUE acceptance criterion: `--kernels auto` binds AVX2 on
+    // x86_64 CI (every GitHub runner has AVX2); when the env override is
+    // unset, detection and the Auto kind must agree.
+    if std::env::var("LSPINE_KERNELS").is_ok() {
+        return; // explicit override in play; detection not under test
+    }
+    if is_x86_feature_detected!("avx2") {
+        assert_eq!(Kernels::detect().name(), "avx2");
+        assert_eq!(Kernels::for_kind(KernelKind::Auto).unwrap().name(), "avx2");
+    } else {
+        assert_eq!(Kernels::detect().name(), "scalar");
+    }
+}
+
+#[test]
+fn explicit_unavailable_backend_is_an_error() {
+    // requesting the other arch's backend must fail loudly, never fall
+    // back silently
+    #[cfg(target_arch = "x86_64")]
+    assert!(Kernels::for_kind(KernelKind::Neon).is_err());
+    #[cfg(target_arch = "aarch64")]
+    assert!(Kernels::for_kind(KernelKind::Avx2).is_err());
+}

@@ -236,6 +236,73 @@ fn serving_sharded_workers_agree_with_reference() {
 }
 
 #[test]
+fn serving_kernels_scalar_and_auto_agree() {
+    // §Perf P7 serving-level pin: a pool of shards bound to the scalar
+    // oracle and a pool bound to the auto-selected backend (AVX2 on
+    // x86_64 CI) must produce identical spike counts and predictions
+    // for identical traffic.
+    use lspine::nce::KernelKind;
+    let s = store();
+    let data = s.load_test_set().unwrap();
+    let start = |kernels: KernelKind| {
+        ServingEngine::start(ServerConfig {
+            artifacts_dir: artifacts_dir_string(),
+            model: "mlp".into(),
+            backend: Backend::Native,
+            workers: 2,
+            kernels,
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let scalar = start(KernelKind::Scalar);
+    let auto = start(KernelKind::Auto);
+
+    let n = 24usize.min(data.n);
+    let mut pairs = Vec::new();
+    for i in 0..n {
+        let prec = [ReqPrecision::Int2, ReqPrecision::Int4, ReqPrecision::Int8][i % 3];
+        pairs.push((
+            i,
+            scalar.submit(data.sample(i), prec).unwrap(),
+            auto.submit(data.sample(i), prec).unwrap(),
+        ));
+    }
+    let mut spikes_scalar = 0i64;
+    let mut spikes_auto = 0i64;
+    for (i, rx_s, rx_a) in pairs {
+        let a = rx_s.recv().unwrap();
+        let b = rx_a.recv().unwrap();
+        assert_eq!(a.counts, b.counts, "sample {i}: scalar != auto kernels");
+        assert_eq!(a.prediction, b.prediction, "sample {i}");
+        spikes_scalar += a.counts.iter().map(|&c| c as i64).sum::<i64>();
+        spikes_auto += b.counts.iter().map(|&c| c as i64).sum::<i64>();
+    }
+    assert_eq!(spikes_scalar, spikes_auto);
+    scalar.shutdown().unwrap();
+    auto.shutdown().unwrap();
+}
+
+#[test]
+fn serving_rejects_unavailable_kernels_at_startup() {
+    // a bad --kernels must fail ServingEngine::start, not kill workers
+    use lspine::nce::KernelKind;
+    let other_arch = if cfg!(target_arch = "x86_64") {
+        KernelKind::Neon
+    } else {
+        KernelKind::Avx2
+    };
+    let res = ServingEngine::start(ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Native,
+        kernels: other_arch,
+        ..Default::default()
+    });
+    assert!(res.is_err(), "unavailable kernel backend must be a startup error");
+}
+
+#[test]
 fn serving_rejects_fp32_on_native_backend() {
     let engine = ServingEngine::start(ServerConfig {
         artifacts_dir: artifacts_dir_string(),

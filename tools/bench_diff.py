@@ -3,7 +3,11 @@
 
 Each file holds one JSON object per line, as collected by `make bench-json`
 from the `BENCH_JSON {...}` lines the benches print (see
-rust/src/util/bench.rs::emit_json). Entries are keyed by (suite, name).
+rust/src/util/bench.rs::emit_json). Entries are keyed by
+(suite, name, backend); rows without a `backend` field (pre-backend-sweep
+trajectories) default to "scalar", so kernel-backend sweep rows of the
+same bench name are always compared like-for-like instead of mixing
+backends into one series.
 
 The gate: any entry present in both runs whose `msynops_per_s` dropped by
 more than --threshold (default 15%) fails the diff (exit 1). Other numeric
@@ -39,7 +43,11 @@ def load(path):
                 obj = json.loads(line)
             except json.JSONDecodeError as e:
                 sys.exit(f"{path}:{line_no}: not a JSON line: {e}")
-            key = (obj.get("suite", "?"), obj.get("name", f"line{line_no}"))
+            key = (
+                obj.get("suite", "?"),
+                obj.get("name", f"line{line_no}"),
+                obj.get("backend", "scalar"),
+            )
             entries[key] = obj
     return entries
 
@@ -80,7 +88,7 @@ def main():
         fields = sorted(
             f
             for f in set(b) & set(n)
-            if f not in ("suite", "name", "iters")
+            if f not in ("suite", "name", "backend", "iters")
             and isinstance(b[f], (int, float))
             and isinstance(n[f], (int, float))
         )
