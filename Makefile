@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke doc clean
 
 all: build
 
@@ -56,6 +56,20 @@ bench-json:
 # CI smoke: single-iteration benches, still emitting every BENCH_JSON line.
 bench-smoke:
 	$(MAKE) bench-json LSPINE_BENCH_ITERS=1
+
+# Streaming end-to-end smoke: forge artifacts (stream.lsps included),
+# replay the stream through stateful sessions on 2 workers, and assert
+# the windows actually produced output spikes (nonzero predictions).
+stream-smoke:
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+	cd rust && $(CARGO) run --release -- stream --model mlp --bits 4 --steps 4 --workers 2 > ../.stream_smoke.out || (cat ../.stream_smoke.out; exit 1)
+	cat .stream_smoke.out
+	grep -Eq "nonzero_windows=[1-9][0-9]*" .stream_smoke.out
+	rm -f .stream_smoke.out
+
+# The documented-API gate, same flags as the CI docs job.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib
 
 clean:
 	cd rust && $(CARGO) clean

@@ -265,4 +265,72 @@ fn main() {
             engine.shutdown().unwrap();
         }
     }
+
+    // --- streaming-session throughput sweep (temporal workload) ---
+    // 8 concurrent sessions replay the forged ECG-like stream, one
+    // frame-window (4 timesteps) per request; sessions pin to workers
+    // (affinity), so the workers=1..4 trend shows how stateful streams
+    // scale across the pool.
+    println!("stream throughput vs workers (native backend, mlp INT4, steps=4):");
+    {
+        let stream = store.load_stream_set().expect("forge stream artifact");
+        let frames = sample_count(stream.frames, 8).min(stream.frames);
+        let sessions = 8usize;
+        for workers in [1usize, 2, 4] {
+            let engine = ServingEngine::start(ServerConfig {
+                artifacts_dir: dir.to_string_lossy().into_owned(),
+                model: "mlp".into(),
+                backend: Backend::Native,
+                workers,
+                ..Default::default()
+            })
+            .unwrap();
+            let ids: Vec<u64> = (0..sessions).map(|_| engine.open_stream()).collect();
+            // warm every shard (and create every session's state)
+            let warm: Vec<_> = ids
+                .iter()
+                .map(|&sid| {
+                    engine
+                        .stream_window(sid, stream.frame(0), 1, ReqPrecision::Int4)
+                        .unwrap()
+                })
+                .collect();
+            for rx in warm {
+                rx.recv().unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            for f in 0..frames {
+                let rxs: Vec<_> = ids
+                    .iter()
+                    .map(|&sid| {
+                        engine
+                            .stream_window(sid, stream.frame(f), 4, ReqPrecision::Int4)
+                            .unwrap()
+                    })
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let windows_per_s = (frames * sessions) as f64 / dt;
+            let m = engine.metrics();
+            println!(
+                "  workers={workers}: {windows_per_s:.0} frame-windows/s  p50<={}us p99<={}us",
+                m.latency.quantile_us(0.5),
+                m.latency.quantile_us(0.99)
+            );
+            emit_json_scalar_with(
+                SUITE,
+                &format!("stream throughput workers={workers}"),
+                Some(Kernels::from_env().name()),
+                &[
+                    ("windows_per_s", windows_per_s),
+                    ("p50_us", m.latency.quantile_us(0.5) as f64),
+                    ("p99_us", m.latency.quantile_us(0.99) as f64),
+                ],
+            );
+            engine.shutdown().unwrap();
+        }
+    }
 }

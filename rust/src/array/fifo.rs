@@ -17,6 +17,7 @@ pub struct RingFifo<T> {
 }
 
 impl<T> RingFifo<T> {
+    /// FIFO with fixed `capacity` (> 0).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "FIFO capacity must be positive");
         Self {
@@ -30,18 +31,22 @@ impl<T> RingFifo<T> {
         }
     }
 
+    /// Fixed capacity.
     pub fn capacity(&self) -> usize {
         self.buf.len()
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// True when at capacity (next push rejects).
     pub fn is_full(&self) -> bool {
         self.len == self.buf.len()
     }
@@ -60,6 +65,7 @@ impl<T> RingFifo<T> {
         Ok(())
     }
 
+    /// Dequeue the oldest entry, if any.
     pub fn pop(&mut self) -> Option<T> {
         if self.is_empty() {
             return None;
@@ -70,6 +76,7 @@ impl<T> RingFifo<T> {
         item
     }
 
+    /// The oldest entry without dequeuing it.
     pub fn peek(&self) -> Option<&T> {
         if self.is_empty() {
             None

@@ -11,7 +11,9 @@ use crate::model::network::QuantNetwork;
 /// Grid geometry + clock of the accelerator instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ArrayConfig {
+    /// PE rows.
     pub rows: usize,
+    /// PE columns.
     pub cols: usize,
     /// Core clock in MHz (latency = cycles / clock).
     pub clock_mhz: f64,
@@ -34,6 +36,7 @@ impl ArrayConfig {
         }
     }
 
+    /// Total PEs in the grid.
     pub fn n_pe(&self) -> usize {
         self.rows * self.cols
     }

@@ -8,8 +8,14 @@
 /// FSM states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LeakState {
+    /// No pass in progress.
     Idle,
-    Running { next: usize },
+    /// Walking the slice; `next` is the next entry index.
+    Running {
+        /// Next membrane entry the FSM will process.
+        next: usize,
+    },
+    /// Pass complete (until the next `start`).
     Done,
 }
 
@@ -22,14 +28,17 @@ pub struct LeakFsm {
 }
 
 impl LeakFsm {
+    /// FSM applying `v -= v >> leak_shift` per entry.
     pub fn new(leak_shift: u32) -> Self {
         Self { state: LeakState::Idle, leak_shift, cycles: 0 }
     }
 
+    /// Current FSM state.
     pub fn state(&self) -> LeakState {
         self.state
     }
 
+    /// Cycles consumed across all passes.
     pub fn total_cycles(&self) -> u64 {
         self.cycles
     }

@@ -18,10 +18,12 @@ pub struct Scratchpad {
 }
 
 impl Scratchpad {
+    /// Scratchpad `name` with `capacity_bits` of storage.
     pub fn new(name: &'static str, capacity_bits: u64) -> Self {
         Self { name, capacity_bits, used_bits: 0, reads: 0, writes: 0 }
     }
 
+    /// Instance name (diagnostics).
     pub fn name(&self) -> &'static str {
         self.name
     }
@@ -41,30 +43,37 @@ impl Scratchpad {
         Ok(())
     }
 
+    /// Release every allocation (between layers/samples).
     pub fn free_all(&mut self) {
         self.used_bits = 0;
     }
 
+    /// Account `n` word reads (energy/cycle input).
     pub fn record_reads(&mut self, n: u64) {
         self.reads += n;
     }
 
+    /// Account `n` word writes.
     pub fn record_writes(&mut self, n: u64) {
         self.writes += n;
     }
 
+    /// Total recorded word reads.
     pub fn reads(&self) -> u64 {
         self.reads
     }
 
+    /// Total recorded word writes.
     pub fn writes(&self) -> u64 {
         self.writes
     }
 
+    /// Bits currently allocated.
     pub fn used_bits(&self) -> u64 {
         self.used_bits
     }
 
+    /// Allocated fraction of capacity.
     pub fn utilization(&self) -> f64 {
         self.used_bits as f64 / self.capacity_bits as f64
     }

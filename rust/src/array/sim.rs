@@ -47,13 +47,18 @@ impl Default for SimOverheads {
 /// Per-layer cycle breakdown.
 #[derive(Debug, Clone, Copy)]
 pub struct LayerCycles {
+    /// Event-driven synaptic accumulation cycles.
     pub accumulate: u64,
+    /// Membrane update + threshold cycles.
     pub membrane: u64,
+    /// Spike broadcast drain after the last accumulate.
     pub broadcast_tail: u64,
+    /// Controller overhead (layer setup, MMIO polls).
     pub control: u64,
 }
 
 impl LayerCycles {
+    /// Visible cycles of the layer (membrane overlaps accumulate).
     pub fn total(&self) -> u64 {
         // membrane overlaps accumulation; only its excess is visible
         self.accumulate.max(self.membrane) + self.broadcast_tail + self.control
@@ -63,8 +68,11 @@ impl LayerCycles {
 /// Result of simulating one inference.
 #[derive(Debug, Clone)]
 pub struct CycleReport {
+    /// Per-layer breakdowns, input to output order.
     pub layers: Vec<LayerCycles>,
+    /// Spike-encoder cycles (overlapped with layer 0 where possible).
     pub encode_cycles: u64,
+    /// End-to-end cycles for the inference.
     pub total_cycles: u64,
     /// Mean PE utilization (ideal word traffic / (cycles x n_pe)).
     pub utilization: f64,

@@ -21,6 +21,7 @@ impl SpikeCounter {
         }
     }
 
+    /// Zero all class counters.
     pub fn clear(&mut self) {
         self.counts.fill(0);
     }
@@ -33,6 +34,7 @@ impl SpikeCounter {
         }
     }
 
+    /// Per-class accumulated spike counts.
     pub fn counts(&self) -> &[u32] {
         &self.counts
     }

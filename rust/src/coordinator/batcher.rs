@@ -30,11 +30,14 @@ impl Default for BatcherConfig {
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
     queues: Vec<(Precision, VecDeque<InferRequest>)>,
+    /// Batches emitted so far.
     pub formed_batches: u64,
+    /// Requests across all emitted batches.
     pub batched_requests: u64,
 }
 
 impl DynamicBatcher {
+    /// Batcher with the given policy.
     pub fn new(cfg: BatcherConfig) -> Self {
         let queues = [Precision::Int2, Precision::Int4, Precision::Int8, Precision::Fp32]
             .into_iter()
@@ -43,6 +46,7 @@ impl DynamicBatcher {
         Self { cfg, queues, formed_batches: 0, batched_requests: 0 }
     }
 
+    /// Queue one request under its precision key.
     pub fn push(&mut self, req: InferRequest) {
         let q = self
             .queues
@@ -53,6 +57,7 @@ impl DynamicBatcher {
         q.push_back(req);
     }
 
+    /// Requests queued across all precisions.
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }

@@ -22,10 +22,12 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self { buckets: [0; 31], count: 0, sum_us: 0, max_us: 0 }
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, latency: Duration) {
         let us = latency.as_micros().max(1) as u64;
         let b = (63 - us.leading_zeros() as u64).min(30) as usize;
@@ -45,10 +47,12 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(other.max_us);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean latency in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -56,6 +60,7 @@ impl LatencyHistogram {
         self.sum_us as f64 / self.count as f64
     }
 
+    /// Largest recorded latency in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us
     }
@@ -80,12 +85,19 @@ impl LatencyHistogram {
 /// Aggregate serving metrics (one per worker; merged on read).
 #[derive(Debug, Clone)]
 pub struct Metrics {
+    /// Completed requests (one-shot inferences + stream windows).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Requests dropped at ingest (queue over capacity).
     pub rejected: u64,
+    /// End-to-end (queue + batch + execute) latency distribution.
     pub latency: LatencyHistogram,
     /// Sum of batch sizes (mean batch = / batches).
     pub batched_total: u64,
+    /// Stream windows executed (a subset of `requests`; these bypass the
+    /// batcher and run session-affine).
+    pub stream_windows: u64,
     /// When this metrics object started observing (requests/sec base).
     started: Instant,
 }
@@ -97,6 +109,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Zeroed metrics observing from now.
     pub fn new() -> Self {
         Self {
             requests: 0,
@@ -104,6 +117,7 @@ impl Metrics {
             rejected: 0,
             latency: LatencyHistogram::new(),
             batched_total: 0,
+            stream_windows: 0,
             started: Instant::now(),
         }
     }
@@ -116,10 +130,12 @@ impl Metrics {
         self.batches += other.batches;
         self.rejected += other.rejected;
         self.batched_total += other.batched_total;
+        self.stream_windows += other.stream_windows;
         self.latency.merge(&other.latency);
         self.started = self.started.min(other.started);
     }
 
+    /// Mean executed batch size (0 when no batches ran).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
@@ -141,14 +157,17 @@ impl Metrics {
         self.requests as f64 / dt
     }
 
+    /// One-line operator summary of every counter and quantile.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} ({:.0} req/s) batches={} mean_batch={:.2} rejected={} \
+            "requests={} ({:.0} req/s) batches={} mean_batch={:.2} \
+             stream_windows={} rejected={} \
              latency mean={:.0}us p50<={}us p95<={}us p99<={}us max={}us",
             self.requests,
             self.req_per_s(),
             self.batches,
             self.mean_batch(),
+            self.stream_windows,
             self.rejected,
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
@@ -226,6 +245,17 @@ mod tests {
         assert_eq!(merged.max_us(), 20_000);
         assert!(merged.mean_us() > a.mean_us());
         assert!(merged.quantile_us(1.0) >= 20_000);
+    }
+
+    #[test]
+    fn stream_windows_merge_and_report() {
+        let mut a = Metrics::new();
+        a.stream_windows = 3;
+        let mut b = Metrics::new();
+        b.stream_windows = 4;
+        a.merge(&b);
+        assert_eq!(a.stream_windows, 7);
+        assert!(a.summary().contains("stream_windows=7"), "{}", a.summary());
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! (`ServerConfig::kernels`, §Perf P7) — an unavailable request fails
 //! `start` instead of silently falling back.
 //!
+//! Besides one-shot requests the engine serves **stream sessions**
+//! ([`session`]): stateful temporal inference where membrane (and
+//! encoder) state persists across frame windows. Stream windows bypass
+//! the batcher and route *session-affine* — every window of session `s`
+//! executes on worker `s % workers`, so state lives on exactly one shard
+//! and never migrates; each worker keeps an LRU-bounded [`SessionTable`]
+//! (`ServerConfig::max_sessions` across the pool) and applies the
+//! configured window-boundary [`crate::model::ResetPolicy`].
+//!
 //! std threads + channels (tokio is unavailable offline); the hot path is
 //! allocation-light and the queue is the bounded [`crate::array::RingFifo`].
 
@@ -28,8 +37,10 @@ pub mod firmware;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod session;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use request::{InferRequest, InferResponse, Precision as ReqPrecision};
 pub use server::{default_workers, Backend, ServerConfig, ServingEngine};
+pub use session::{EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession};

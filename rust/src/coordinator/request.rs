@@ -7,9 +7,13 @@ use std::time::Instant;
 /// graph (PJRT backend only); the integer widths run on either backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
+    /// 2-bit fields (16 lanes per storage word).
     Int2,
+    /// 4-bit fields (8 lanes).
     Int4,
+    /// 8-bit fields (4 lanes).
     Int8,
+    /// Float baseline (PJRT backend only).
     Fp32,
 }
 
@@ -24,6 +28,7 @@ impl Precision {
         }
     }
 
+    /// Parse `int2|2|int4|4|int8|8|fp32|f32` (case-insensitive).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "int2" | "2" => Some(Precision::Int2),
@@ -34,6 +39,7 @@ impl Precision {
         }
     }
 
+    /// Display name (`INT2` ... `FP32`).
     pub fn name(self) -> &'static str {
         match self {
             Precision::Int2 => "INT2",
@@ -46,10 +52,13 @@ impl Precision {
 
 /// One inference request travelling through the engine.
 pub struct InferRequest {
+    /// Engine-assigned request id.
     pub id: u64,
     /// u8 pixels, encoder domain (length = model input_dim).
     pub pixels: Vec<u8>,
+    /// Requested execution precision (the batch key).
     pub precision: Precision,
+    /// Ingest timestamp (latency accounting).
     pub enqueued: Instant,
     /// Completion channel (one response per request).
     pub reply: mpsc::Sender<InferResponse>,
@@ -58,8 +67,11 @@ pub struct InferRequest {
 /// The engine's answer.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
+    /// Id of the request this answers.
     pub id: u64,
+    /// Argmax class of the spike counts.
     pub prediction: usize,
+    /// Per-class output spike counts.
     pub counts: Vec<i32>,
     /// Queue + batch + execute time.
     pub latency_us: u64,

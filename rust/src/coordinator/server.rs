@@ -18,7 +18,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::model::SnnEngine;
+// one argmax rule everywhere: the engine's first-maximum tie-break
+use crate::model::engine::argmax as argmax_i32;
+use crate::model::{ResetPolicy, SnnEngine};
 use crate::nce::{KernelKind, Kernels};
 use crate::runtime::executor::{ExecutorPool, ModelKey};
 use crate::runtime::ArtifactStore;
@@ -27,6 +29,9 @@ use crate::Result;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse, Precision};
+use super::session::{
+    EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession,
+};
 
 /// Which engine executes batches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,11 +48,29 @@ pub fn default_workers() -> usize {
 }
 
 /// Serving engine configuration.
+///
+/// ```
+/// use lspine::coordinator::{Backend, ServerConfig};
+/// use lspine::model::ResetPolicy;
+///
+/// let cfg = ServerConfig {
+///     model: "mlp".into(),
+///     backend: Backend::Native,
+///     workers: 4,
+///     stream_policy: ResetPolicy::Decay(2),
+///     ..Default::default()
+/// };
+/// assert_eq!(cfg.queue_capacity, 1024);
+/// ```
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Artifacts directory every worker loads from.
     pub artifacts_dir: String,
+    /// Model name in the manifest.
     pub model: String,
+    /// Which engine executes batches.
     pub backend: Backend,
+    /// Dynamic batching policy.
     pub batcher: BatcherConfig,
     /// Ingest queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
@@ -58,6 +81,14 @@ pub struct ServerConfig {
     /// at startup — every shard binds the same backend; requesting one
     /// the host cannot run fails `start` (never a silent fallback).
     pub kernels: KernelKind,
+    /// Resident stream-session cap across the whole pool; each worker's
+    /// [`SessionTable`] holds at most `ceil(max_sessions / workers)`
+    /// membrane snapshots (LRU eviction beyond that).
+    pub max_sessions: usize,
+    /// Window-boundary policy for stream sessions (`Hold` preserves the
+    /// bit-exactness contract: a session replay equals the same windows
+    /// run back-to-back on one persistent engine).
+    pub stream_policy: ResetPolicy,
 }
 
 impl Default for ServerConfig {
@@ -70,13 +101,25 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             workers: default_workers(),
             kernels: KernelKind::Auto,
+            max_sessions: 1024,
+            stream_policy: ResetPolicy::Hold,
         }
     }
 }
 
 enum Msg {
     Request(InferRequest),
+    Stream(StreamRequest),
+    CloseSession(u64),
     Shutdown,
+}
+
+/// Work dealt to an execution worker: a formed batch, one stream window
+/// (already routed to the session's pinned worker), or a session close.
+enum WorkerMsg {
+    Batch(Precision, Vec<InferRequest>),
+    Stream(StreamRequest),
+    Close(u64),
 }
 
 /// Cloneable client handle to a running engine.
@@ -86,6 +129,7 @@ pub struct ServingEngine {
     workers: Vec<JoinHandle<Result<()>>>,
     metrics: Vec<Arc<Mutex<Metrics>>>,
     next_id: AtomicU64,
+    next_session: AtomicU64,
     input_dim: usize,
     backend: Backend,
 }
@@ -119,13 +163,13 @@ impl ServingEngine {
         for w in 0..n_workers {
             let m = Arc::new(Mutex::new(Metrics::new()));
             metrics.push(Arc::clone(&m));
-            let (btx, brx) = mpsc::channel::<(Precision, Vec<InferRequest>)>();
+            let (btx, brx) = mpsc::channel::<WorkerMsg>();
             worker_txs.push(btx);
             let wcfg = cfg.clone();
             let fl = Arc::clone(&in_flight);
             let handle = std::thread::Builder::new()
                 .name(format!("lspine-exec-{w}"))
-                .spawn(move || exec_worker_loop(wcfg, brx, m, fl))?;
+                .spawn(move || exec_worker_loop(w, wcfg, brx, m, fl))?;
             workers.push(handle);
         }
 
@@ -144,6 +188,7 @@ impl ServingEngine {
             workers,
             metrics,
             next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(0),
             input_dim,
             backend,
         })
@@ -178,6 +223,71 @@ impl ServingEngine {
             .send(Msg::Request(req))
             .map_err(|_| anyhow::anyhow!("engine stopped"))?;
         Ok(rx)
+    }
+
+    /// Allocate a fresh stream-session id. Sessions are created lazily on
+    /// their first [`stream_window`](Self::stream_window); this only hands
+    /// out a unique id (ids also select the session's pinned worker).
+    pub fn open_stream(&self) -> u64 {
+        self.next_session.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit one stream window on `session` with the deployed rate
+    /// coding; returns the response channel (windows of one session
+    /// complete in submission order).
+    pub fn stream_window(
+        &self,
+        session: u64,
+        pixels: &[u8],
+        steps: u32,
+        precision: Precision,
+    ) -> Result<mpsc::Receiver<StreamResponse>> {
+        self.stream_window_with(session, pixels, steps, precision, EncoderKind::Rate)
+    }
+
+    /// [`stream_window`](Self::stream_window) with an explicit spike
+    /// coding — bound to the session on its first window (frame history
+    /// of delta/sliding coders lives in the session).
+    pub fn stream_window_with(
+        &self,
+        session: u64,
+        pixels: &[u8],
+        steps: u32,
+        precision: Precision,
+        encoder: EncoderKind,
+    ) -> Result<mpsc::Receiver<StreamResponse>> {
+        anyhow::ensure!(pixels.len() == self.input_dim, "bad input size");
+        anyhow::ensure!(steps >= 1, "a window needs at least one timestep");
+        anyhow::ensure!(
+            self.backend == Backend::Native,
+            "streaming sessions need the native backend (stateful membranes)"
+        );
+        anyhow::ensure!(
+            precision != Precision::Fp32,
+            "streaming runs the integer engine (INT2/INT4/INT8)"
+        );
+        let (reply, rx) = mpsc::channel();
+        let req = StreamRequest {
+            session,
+            pixels: pixels.to_vec(),
+            steps,
+            precision,
+            encoder,
+            enqueued: Instant::now(),
+            reply,
+        };
+        self.tx
+            .send(Msg::Stream(req))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(rx)
+    }
+
+    /// Explicitly close a stream session, freeing its resident state on
+    /// the pinned worker (a later window would recreate it fresh).
+    pub fn close_stream(&self, session: u64) -> Result<()> {
+        self.tx
+            .send(Msg::CloseSession(session))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))
     }
 
     /// Merged view over the dispatcher's and every worker's metrics.
@@ -229,11 +339,50 @@ impl Drop for ServingEngine {
     }
 }
 
+/// Session-affine routing of the non-batched messages: every window of
+/// session `s` goes to worker `s % workers`, so per-session state lives
+/// on exactly one shard (it never migrates, so it needs no locking).
+struct StreamRouter<'a> {
+    queue_capacity: usize,
+    worker_txs: &'a [mpsc::Sender<WorkerMsg>],
+    metrics: &'a Arc<Mutex<Metrics>>,
+    in_flight: &'a Arc<AtomicUsize>,
+}
+
+impl StreamRouter<'_> {
+    /// Dispatch one stream window immediately (streams are stateful and
+    /// latency-bound: they bypass the batcher but still count against
+    /// `queue_capacity`). A dropped request closes its reply channel.
+    fn route_stream(&self, req: StreamRequest, pending: usize, alive: &mut [bool]) {
+        if pending + self.in_flight.load(Ordering::Relaxed) >= self.queue_capacity {
+            self.metrics.lock().unwrap().rejected += 1;
+            return;
+        }
+        let w = (req.session % self.worker_txs.len() as u64) as usize;
+        if !alive[w] {
+            return; // pinned worker died: the closed reply signals it
+        }
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        if self.worker_txs[w].send(WorkerMsg::Stream(req)).is_err() {
+            alive[w] = false;
+            self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Forward an explicit session close to its pinned worker.
+    fn route_close(&self, id: u64, alive: &mut [bool]) {
+        let w = (id % self.worker_txs.len() as u64) as usize;
+        if alive[w] && self.worker_txs[w].send(WorkerMsg::Close(id)).is_err() {
+            alive[w] = false;
+        }
+    }
+}
+
 /// Ingest + batch formation + round-robin dealing to the workers.
 fn dispatcher_loop(
     cfg: ServerConfig,
     rx: mpsc::Receiver<Msg>,
-    worker_txs: Vec<mpsc::Sender<(Precision, Vec<InferRequest>)>>,
+    worker_txs: Vec<mpsc::Sender<WorkerMsg>>,
     metrics: Arc<Mutex<Metrics>>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
@@ -247,6 +396,13 @@ fn dispatcher_loop(
     let mut pending = 0usize;
     let mut shutting_down = false;
 
+    let router = StreamRouter {
+        queue_capacity: cfg.queue_capacity,
+        worker_txs: &worker_txs,
+        metrics: &metrics,
+        in_flight: &in_flight,
+    };
+
     let dispatch_in_flight = Arc::clone(&in_flight);
     let mut dispatch = |prec: Precision,
                         batch: Vec<InferRequest>,
@@ -259,11 +415,14 @@ fn dispatcher_loop(
             if !alive[w] {
                 continue;
             }
-            match worker_txs[w].send(item) {
+            match worker_txs[w].send(WorkerMsg::Batch(item.0, item.1)) {
                 Ok(()) => return,
                 Err(mpsc::SendError(back)) => {
                     alive[w] = false;
-                    item = back;
+                    item = match back {
+                        WorkerMsg::Batch(p, b) => (p, b),
+                        _ => unreachable!("sent a Batch"),
+                    };
                 }
             }
         }
@@ -298,10 +457,14 @@ fn dispatcher_loop(
                                 batcher.push(r);
                             }
                         }
+                        Msg::Stream(r) => router.route_stream(r, pending, &mut alive),
+                        Msg::CloseSession(id) => router.route_close(id, &mut alive),
                         Msg::Shutdown => shutting_down = true,
                     }
                 }
             }
+            Ok(Msg::Stream(req)) => router.route_stream(req, pending, &mut alive),
+            Ok(Msg::CloseSession(id)) => router.route_close(id, &mut alive),
             Ok(Msg::Shutdown) => shutting_down = true,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => shutting_down = true,
@@ -326,6 +489,8 @@ fn dispatcher_loop(
                         }
                         drained_empty = false;
                     }
+                    Msg::Stream(r) => router.route_stream(r, pending, &mut alive),
+                    Msg::CloseSession(id) => router.route_close(id, &mut alive),
                     Msg::Shutdown => shutting_down = true,
                 }
             }
@@ -358,11 +523,13 @@ fn dispatcher_loop(
     }
 }
 
-/// One execution worker: builds its own backend, then runs dealt batches
-/// until the dispatcher closes the channel.
+/// One execution worker: builds its own backend (and its resident
+/// session table), then runs dealt batches and stream windows until the
+/// dispatcher closes the channel.
 fn exec_worker_loop(
+    worker_index: usize,
     cfg: ServerConfig,
-    rx: mpsc::Receiver<(Precision, Vec<InferRequest>)>,
+    rx: mpsc::Receiver<WorkerMsg>,
     metrics: Arc<Mutex<Metrics>>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
@@ -381,14 +548,104 @@ fn exec_worker_loop(
             Exec::Native(engines)
         }
     };
-    while let Ok((prec, batch)) = rx.recv() {
-        let n = batch.len();
-        let res = run_batch(&mut exec, prec, batch, &metrics);
-        // decrement even on error so a dying worker does not leak
-        // capacity for the batches it already consumed
-        in_flight.fetch_sub(n, Ordering::Relaxed);
-        res?;
+    // this worker's share of the pool-wide session cap (sessions pin by
+    // id, so caps partition cleanly across shards)
+    let session_cap = cfg.max_sessions.div_ceil(cfg.workers.max(1)).max(1);
+    let mut sessions = SessionTable::new(session_cap);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Batch(prec, batch) => {
+                let n = batch.len();
+                let res = run_batch(&mut exec, prec, batch, &metrics);
+                // decrement even on error so a dying worker does not leak
+                // capacity for the batches it already consumed
+                in_flight.fetch_sub(n, Ordering::Relaxed);
+                res?;
+            }
+            WorkerMsg::Stream(req) => {
+                let res = run_stream(
+                    &mut exec,
+                    &mut sessions,
+                    cfg.stream_policy,
+                    worker_index,
+                    req,
+                    &metrics,
+                );
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                res?;
+            }
+            WorkerMsg::Close(id) => {
+                sessions.close(id);
+            }
+        }
     }
+    Ok(())
+}
+
+/// Execute one stream window against the worker's resident session state.
+///
+/// The worker owns one engine per precision and *swaps* the session's
+/// membrane snapshot in and out around the window — sessions cost one
+/// membrane vector each, not one engine each. Boundary policy applies
+/// only between windows of a live session (never to a fresh one), so
+/// `Hold` keeps the served stream bit-identical to the same windows run
+/// back-to-back on one persistent engine.
+fn run_stream(
+    exec: &mut Exec,
+    sessions: &mut SessionTable,
+    policy: ResetPolicy,
+    worker_index: usize,
+    req: StreamRequest,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let Exec::Native(engines) = exec else {
+        // submit() refuses streams on PJRT; a raced message just drops
+        // (the closed reply channel tells the caller)
+        return Ok(());
+    };
+    let bits = req.precision.bits();
+    let (_, engine) = engines
+        .iter_mut()
+        .find(|(b, _)| *b == bits)
+        .ok_or_else(|| anyhow::anyhow!("no native engine for {:?}", req.precision))?;
+    let (sess, mut fresh) = sessions.lookup(req.session, || {
+        StreamSession::new(bits, engine.fresh_state(), req.encoder.build())
+    });
+    if sess.bits != bits {
+        // precision switched mid-stream: integer dynamics are not
+        // comparable across widths, so the state epoch restarts
+        *sess = StreamSession::new(bits, engine.fresh_state(), req.encoder.build());
+        fresh = true;
+    }
+    engine.swap_state(&mut sess.state);
+    if !fresh {
+        engine.apply_boundary(policy);
+    }
+    let counts: Vec<i32> = engine
+        .infer_window_with_encoder(&req.pixels, req.steps, &mut *sess.encoder)
+        .iter()
+        .map(|&c| c as i32)
+        .collect();
+    engine.swap_state(&mut sess.state);
+    let window = sess.windows;
+    sess.windows += 1;
+
+    let now = Instant::now();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.requests += 1;
+        m.stream_windows += 1;
+        m.latency.record(now.duration_since(req.enqueued));
+    }
+    let _ = req.reply.send(StreamResponse {
+        session: req.session,
+        window,
+        prediction: argmax_i32(&counts),
+        counts,
+        fresh,
+        worker: worker_index,
+        latency_us: now.duration_since(req.enqueued).as_micros() as u64,
+    });
     Ok(())
 }
 
@@ -460,12 +717,3 @@ fn run_batch(
     Ok(())
 }
 
-fn argmax_i32(xs: &[i32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate().skip(1) {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
-}

@@ -1,0 +1,293 @@
+//! Streaming sessions — per-stream state the serving engine keeps alive.
+//!
+//! A *stream session* is the unit of temporal inference: a client opens a
+//! session, submits frame windows one at a time, and the membrane state
+//! (plus any stateful encoder history) persists between windows so the
+//! SNN integrates evidence across the whole stream — the canonical edge
+//! workload (continuous ECG / sensor channels), which one-shot
+//! classification requests cannot express.
+//!
+//! Sessions are **worker-affine**: the dispatcher routes every window of
+//! session `s` to worker `s % workers`, so state lives on exactly one
+//! shard and never migrates or needs locking. Each worker owns a
+//! [`SessionTable`] capped at `ceil(max_sessions / workers)` entries with
+//! LRU eviction; an evicted (or brand-new) session starts from zeroed
+//! membranes and reports `fresh = true` in its next response so clients
+//! can detect lost context. Windows of one session execute in submission
+//! order (a single dispatcher thread feeding a FIFO channel per worker).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::request::Precision;
+use crate::encode::{DeltaEncoder, RateEncoder, SlidingWindowEncoder, SpikeEncoder};
+use crate::model::MembraneState;
+
+/// Which spike coding a stream session runs — chosen on the session's
+/// first window and owned by the session (frame history is per-stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncoderKind {
+    /// The deployed deterministic accumulate-and-fire rate code.
+    Rate,
+    /// Inter-frame delta coding (see [`DeltaEncoder`]).
+    Delta {
+        /// Amplification applied to the inter-frame difference.
+        gain: u32,
+    },
+    /// Moving-average coding (see [`SlidingWindowEncoder`]).
+    Sliding {
+        /// Frames in the moving-average window.
+        window: usize,
+    },
+}
+
+impl EncoderKind {
+    /// Parse the CLI surface: `rate`, `delta`, `delta:GAIN`, `window:W`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "rate" => Some(EncoderKind::Rate),
+            "delta" => Some(EncoderKind::Delta { gain: 4 }),
+            _ => {
+                if let Some(g) = s.strip_prefix("delta:") {
+                    let gain = g.parse::<u32>().ok()?;
+                    (gain >= 1).then_some(EncoderKind::Delta { gain })
+                } else if let Some(w) = s.strip_prefix("window:") {
+                    let window = w.parse::<usize>().ok()?;
+                    (window >= 1).then_some(EncoderKind::Sliding { window })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Stable display name (`rate` / `delta:G` / `window:W`).
+    pub fn name(self) -> String {
+        match self {
+            EncoderKind::Rate => "rate".into(),
+            EncoderKind::Delta { gain } => format!("delta:{gain}"),
+            EncoderKind::Sliding { window } => format!("window:{window}"),
+        }
+    }
+
+    /// Materialize a fresh encoder instance for a new session.
+    pub fn build(self) -> Box<dyn SpikeEncoder + Send> {
+        match self {
+            EncoderKind::Rate => Box::new(RateEncoder::new()),
+            EncoderKind::Delta { gain } => Box::new(DeltaEncoder::new(gain)),
+            EncoderKind::Sliding { window } => {
+                Box::new(SlidingWindowEncoder::new(window))
+            }
+        }
+    }
+}
+
+/// One window of a stream travelling through the engine.
+pub struct StreamRequest {
+    /// Session the window belongs to (also selects the worker: `s % workers`).
+    pub session: u64,
+    /// The window's frame, u8 encoder domain (length = model input_dim).
+    pub pixels: Vec<u8>,
+    /// Timesteps to integrate this frame for (ragged lengths are fine).
+    pub steps: u32,
+    /// Execution precision (integer widths only; fixed per session).
+    pub precision: Precision,
+    /// Spike coding of the session (bound on the first window).
+    pub encoder: EncoderKind,
+    /// Ingest timestamp (latency accounting).
+    pub enqueued: Instant,
+    /// Completion channel (one response per window).
+    pub reply: mpsc::Sender<StreamResponse>,
+}
+
+/// The engine's answer to one stream window.
+#[derive(Debug, Clone)]
+pub struct StreamResponse {
+    /// Session the window belonged to.
+    pub session: u64,
+    /// 0-based window index within the session's current state epoch.
+    pub window: u64,
+    /// Argmax of this window's spike counts.
+    pub prediction: usize,
+    /// Per-class output spike counts of this window alone.
+    pub counts: Vec<i32>,
+    /// True when the session state was (re)created for this window —
+    /// a brand-new session, or one whose state was LRU-evicted.
+    pub fresh: bool,
+    /// Worker shard that executed the window (affinity is observable).
+    pub worker: usize,
+    /// Queue + execute time for this window.
+    pub latency_us: u64,
+}
+
+/// Per-session state a worker keeps alive between windows: the membrane
+/// snapshot, the (possibly stateful) encoder, and the window counter.
+pub struct StreamSession {
+    /// Precision the session runs at (a changed precision restarts state).
+    pub bits: u32,
+    /// Membrane potentials as the last window left them.
+    pub state: MembraneState,
+    /// The session's spike coder (delta/sliding keep frame history here).
+    pub encoder: Box<dyn SpikeEncoder + Send>,
+    /// Windows executed since this state epoch began.
+    pub windows: u64,
+    /// LRU clock stamp of the last access (maintained by [`SessionTable`]).
+    last_used: u64,
+}
+
+impl StreamSession {
+    /// A fresh session at window 0.
+    pub fn new(
+        bits: u32,
+        state: MembraneState,
+        encoder: Box<dyn SpikeEncoder + Send>,
+    ) -> Self {
+        Self { bits, state, encoder, windows: 0, last_used: 0 }
+    }
+}
+
+/// Bounded per-worker session store with LRU eviction.
+///
+/// `cap` bounds resident membrane snapshots (the memory a worker commits
+/// to streaming); the least-recently-used session is evicted to admit a
+/// new one. Closing is explicit ([`close`](Self::close)); a window for an
+/// evicted id transparently recreates fresh state (`fresh = true`).
+pub struct SessionTable {
+    cap: usize,
+    clock: u64,
+    map: HashMap<u64, StreamSession>,
+}
+
+impl SessionTable {
+    /// Table admitting at most `cap` (>= 1) resident sessions.
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), clock: 0, map: HashMap::new() }
+    }
+
+    /// Resident session count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no sessions are resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// True when `id` is resident (does not touch LRU recency).
+    pub fn contains(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    /// Fetch session `id`, creating it via `make` if absent (evicting the
+    /// LRU resident first when at capacity). Returns the session and
+    /// whether it was created by this call. Touches LRU recency.
+    pub fn lookup(
+        &mut self,
+        id: u64,
+        make: impl FnOnce() -> StreamSession,
+    ) -> (&mut StreamSession, bool) {
+        self.clock += 1;
+        let created = if self.map.contains_key(&id) {
+            false
+        } else {
+            if self.map.len() >= self.cap {
+                if let Some(evict) =
+                    self.map.iter().min_by_key(|(_, s)| s.last_used).map(|(&k, _)| k)
+                {
+                    self.map.remove(&evict);
+                }
+            }
+            self.map.insert(id, make());
+            true
+        };
+        let s = self.map.get_mut(&id).expect("just ensured present");
+        s.last_used = self.clock;
+        (s, created)
+    }
+
+    /// Drop session `id`; returns whether it was resident.
+    pub fn close(&mut self, id: u64) -> bool {
+        self.map.remove(&id).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sess() -> StreamSession {
+        StreamSession::new(
+            4,
+            MembraneState::default(),
+            EncoderKind::Rate.build(),
+        )
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut t = SessionTable::new(2);
+        t.lookup(1, sess);
+        t.lookup(2, sess);
+        t.lookup(1, sess); // touch 1 -> 2 is now LRU
+        let (_, created) = t.lookup(3, sess); // evicts 2
+        assert!(created);
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(1) && t.contains(3) && !t.contains(2));
+        // the evicted session transparently recreates fresh
+        let (_, recreated) = t.lookup(2, sess);
+        assert!(recreated);
+    }
+
+    #[test]
+    fn lookup_reuses_resident_state() {
+        let mut t = SessionTable::new(4);
+        let (s, created) = t.lookup(7, sess);
+        assert!(created);
+        s.windows = 5;
+        let (s, created) = t.lookup(7, sess);
+        assert!(!created);
+        assert_eq!(s.windows, 5);
+    }
+
+    #[test]
+    fn close_frees_a_slot() {
+        let mut t = SessionTable::new(1);
+        t.lookup(1, sess);
+        assert!(t.close(1));
+        assert!(!t.close(1));
+        assert!(t.is_empty());
+        let (_, created) = t.lookup(2, sess);
+        assert!(created);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn cap_is_at_least_one() {
+        let mut t = SessionTable::new(0);
+        t.lookup(1, sess);
+        t.lookup(2, sess); // evicts 1 rather than panicking
+        assert_eq!(t.len(), 1);
+        assert!(t.contains(2));
+    }
+
+    #[test]
+    fn encoder_kind_parsing() {
+        assert_eq!(EncoderKind::parse("rate"), Some(EncoderKind::Rate));
+        assert_eq!(EncoderKind::parse("delta"), Some(EncoderKind::Delta { gain: 4 }));
+        assert_eq!(
+            EncoderKind::parse("delta:9"),
+            Some(EncoderKind::Delta { gain: 9 })
+        );
+        assert_eq!(
+            EncoderKind::parse("WINDOW:3"),
+            Some(EncoderKind::Sliding { window: 3 })
+        );
+        assert_eq!(EncoderKind::parse("delta:0"), None);
+        assert_eq!(EncoderKind::parse("window:0"), None);
+        assert_eq!(EncoderKind::parse("morse"), None);
+        assert_eq!(EncoderKind::Sliding { window: 3 }.name(), "window:3");
+    }
+}

@@ -7,6 +7,7 @@
 
 /// Q16.16 fixed point.
 pub const FRAC_BITS: u32 = 16;
+/// 1.0 in Q16.16.
 pub const ONE: i64 = 1 << FRAC_BITS;
 
 /// Convert f64 -> Q16.16.
@@ -78,6 +79,7 @@ pub struct Cordic {
 }
 
 impl Cordic {
+    /// CORDIC engine with `iters` pipeline stages (4..=30).
     pub fn new(iters: usize) -> Self {
         assert!((4..=30).contains(&iters), "iteration count out of range");
         Self {
@@ -90,6 +92,7 @@ impl Cordic {
         }
     }
 
+    /// Configured iteration (pipeline stage) count.
     pub fn iters(&self) -> usize {
         self.iters
     }

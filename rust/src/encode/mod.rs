@@ -11,14 +11,23 @@
 //!   robustness experiments; not used by the deployed graph).
 //! - [`TtfsEncoder`] — time-to-first-spike temporal code (one spike per
 //!   pixel, earlier = brighter); used in the encoder ablation bench.
+//!
+//! Streaming workloads add two stateful *windowed* codings in [`window`]:
+//!
+//! - [`DeltaEncoder`] — rate-codes the inter-frame change (static
+//!   background goes silent, events dominate the spike budget);
+//! - [`SlidingWindowEncoder`] — rate-codes a moving average of the last
+//!   `W` frames (single-frame noise suppressed before the spike domain).
 
 mod poisson;
 mod rate;
 mod ttfs;
+pub mod window;
 
 pub use poisson::PoissonEncoder;
 pub use rate::RateEncoder;
 pub use ttfs::TtfsEncoder;
+pub use window::{DeltaEncoder, SlidingWindowEncoder};
 
 use crate::nce::SpikePlane;
 
@@ -59,5 +68,10 @@ mod plane_tests {
         check_plane_equals_bytes(RateEncoder::new(), RateEncoder::new());
         check_plane_equals_bytes(PoissonEncoder::new(7), PoissonEncoder::new(7));
         check_plane_equals_bytes(TtfsEncoder::new(16), TtfsEncoder::new(16));
+        check_plane_equals_bytes(DeltaEncoder::new(4), DeltaEncoder::new(4));
+        check_plane_equals_bytes(
+            SlidingWindowEncoder::new(3),
+            SlidingWindowEncoder::new(3),
+        );
     }
 }

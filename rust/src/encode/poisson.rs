@@ -14,6 +14,7 @@ pub struct PoissonEncoder {
 }
 
 impl PoissonEncoder {
+    /// Poisson encoder with a deterministic RNG seed.
     pub fn new(seed: u64) -> Self {
         Self { state: seed.max(1) }
     }

@@ -13,6 +13,7 @@ use super::SpikeEncoder;
 pub struct RateEncoder;
 
 impl RateEncoder {
+    /// The deployed deterministic rate encoder.
     pub fn new() -> Self {
         Self
     }

@@ -15,6 +15,7 @@ pub struct TtfsEncoder {
 }
 
 impl TtfsEncoder {
+    /// TTFS encoder over a `t_steps`-long window.
     pub fn new(t_steps: u32) -> Self {
         assert!(t_steps > 0);
         Self { t_steps }

@@ -1,0 +1,257 @@
+//! Windowed temporal encoders for streaming workloads.
+//!
+//! One-shot classification encodes a single static image; a *stream*
+//! presents a new frame every window, and the interesting signal is often
+//! the **change** between frames (ECG beats, motion) rather than the
+//! absolute level. Two stateful codings cover that:
+//!
+//! - [`DeltaEncoder`] — rate-codes the inter-frame difference
+//!   `|x_t - x_{t-1}|` (amplified), so static background emits (almost)
+//!   nothing and events dominate the spike budget;
+//! - [`SlidingWindowEncoder`] — rate-codes the mean of the last `W`
+//!   frames, a moving-average low-pass that suppresses single-frame
+//!   noise before the spike domain.
+//!
+//! Both reuse the deterministic accumulate-and-fire contract of
+//! [`RateEncoder`] per timestep chunk: a window of `steps` timesteps over
+//! one frame emits exactly `(value * steps) >> 8` spikes per pixel, where
+//! `value` is the encoded (delta / windowed-mean) magnitude. Frame state
+//! advances on the chunk's first timestep (`t == 0`) and is held for the
+//! rest of the chunk, so ragged window lengths stay well-defined.
+//!
+//! Stream sessions own their encoder instance next to the membrane state
+//! (see [`crate::coordinator::session`]) — frame history is per-session,
+//! never shared across streams.
+
+use std::collections::VecDeque;
+
+use super::{RateEncoder, SpikeEncoder};
+use crate::nce::SpikePlane;
+
+/// Inter-frame delta coding: spikes carry `min(gain * |x_t - x_prev|, 255)`
+/// through the deterministic rate contract.
+///
+/// The first frame is measured against an all-zero previous frame, i.e.
+/// it is encoded (amplified) absolutely — the stream "switches on".
+#[derive(Debug, Clone)]
+pub struct DeltaEncoder {
+    gain: u32,
+    prev: Vec<u8>,
+    /// Held delta magnitudes for the current timestep chunk.
+    delta: Vec<u8>,
+}
+
+impl DeltaEncoder {
+    /// Delta coder with amplification `gain` (>= 1; small inter-frame
+    /// changes still reach the spike domain at short windows).
+    pub fn new(gain: u32) -> Self {
+        Self { gain: gain.max(1), prev: Vec::new(), delta: Vec::new() }
+    }
+
+    /// Advance frame state on the chunk's first timestep.
+    fn refresh(&mut self, pixels: &[u8], t: u32) {
+        if t != 0 {
+            debug_assert_eq!(self.delta.len(), pixels.len(), "chunk without a t=0 step");
+            return;
+        }
+        self.prev.resize(pixels.len(), 0);
+        self.delta.resize(pixels.len(), 0);
+        for j in 0..pixels.len() {
+            let d = (pixels[j] as i32 - self.prev[j] as i32).unsigned_abs();
+            self.delta[j] = (d * self.gain).min(255) as u8;
+        }
+        self.prev.copy_from_slice(pixels);
+    }
+}
+
+impl SpikeEncoder for DeltaEncoder {
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+        debug_assert_eq!(pixels.len(), out.len());
+        self.refresh(pixels, t);
+        for (o, &d) in out.iter_mut().zip(&self.delta) {
+            *o = RateEncoder::spike_at(d, t);
+        }
+    }
+
+    fn encode_step_plane(&mut self, pixels: &[u8], t: u32, out: &mut SpikePlane) {
+        debug_assert_eq!(pixels.len(), out.len());
+        self.refresh(pixels, t);
+        let delta = &self.delta;
+        out.fill_from_fn(|j| RateEncoder::spike_at(delta[j], t) != 0);
+    }
+
+    /// Spikes for a pixel first seen against the zero frame (after that a
+    /// *constant* pixel has delta 0 and stays silent — the point of the
+    /// coding).
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        ((pixel as u32 * self.gain).min(255) * t_steps) >> 8
+    }
+}
+
+/// Moving-average coding: rate-codes the mean of the last `W` frames.
+///
+/// Until `W` frames have been seen the mean runs over what is available,
+/// so a stream starts encoding from its very first frame.
+#[derive(Debug, Clone)]
+pub struct SlidingWindowEncoder {
+    window: usize,
+    frames: VecDeque<Vec<u8>>,
+    /// Per-pixel sums over the retained frames (u32: 255 * W fits easily).
+    sum: Vec<u32>,
+    /// Held windowed means for the current timestep chunk.
+    mean: Vec<u8>,
+}
+
+impl SlidingWindowEncoder {
+    /// Moving average over the last `window` frames (>= 1).
+    pub fn new(window: usize) -> Self {
+        Self {
+            window: window.max(1),
+            frames: VecDeque::new(),
+            sum: Vec::new(),
+            mean: Vec::new(),
+        }
+    }
+
+    /// Advance frame state on the chunk's first timestep.
+    fn refresh(&mut self, pixels: &[u8], t: u32) {
+        if t != 0 {
+            debug_assert_eq!(self.mean.len(), pixels.len(), "chunk without a t=0 step");
+            return;
+        }
+        self.sum.resize(pixels.len(), 0);
+        self.mean.resize(pixels.len(), 0);
+        if self.frames.len() == self.window {
+            let old = self.frames.pop_front().unwrap();
+            for (s, &x) in self.sum.iter_mut().zip(&old) {
+                *s -= x as u32;
+            }
+        }
+        for (s, &x) in self.sum.iter_mut().zip(pixels) {
+            *s += x as u32;
+        }
+        self.frames.push_back(pixels.to_vec());
+        let n = self.frames.len() as u32;
+        for (m, &s) in self.mean.iter_mut().zip(&self.sum) {
+            *m = (s / n) as u8;
+        }
+    }
+}
+
+impl SpikeEncoder for SlidingWindowEncoder {
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+        debug_assert_eq!(pixels.len(), out.len());
+        self.refresh(pixels, t);
+        for (o, &m) in out.iter_mut().zip(&self.mean) {
+            *o = RateEncoder::spike_at(m, t);
+        }
+    }
+
+    fn encode_step_plane(&mut self, pixels: &[u8], t: u32, out: &mut SpikePlane) {
+        debug_assert_eq!(pixels.len(), out.len());
+        self.refresh(pixels, t);
+        let mean = &self.mean;
+        out.fill_from_fn(|j| RateEncoder::spike_at(mean[j], t) != 0);
+    }
+
+    /// A constant stream's windowed mean is the pixel itself, so the
+    /// count matches the plain rate code.
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        (pixel as u32 * t_steps) >> 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_silent_on_constant_stream() {
+        let mut e = DeltaEncoder::new(4);
+        let frame = vec![100u8; 8];
+        let mut out = vec![0u8; 8];
+        // first frame fires (vs the zero frame) ...
+        let mut first = 0u32;
+        for t in 0..4 {
+            e.encode_step(&frame, t, &mut out);
+            first += out.iter().map(|&x| x as u32).sum::<u32>();
+        }
+        assert!(first > 0);
+        // ... every repeat of the same frame is silent
+        for t in 0..4 {
+            e.encode_step(&frame, t, &mut out);
+            assert!(out.iter().all(|&x| x == 0), "t={t}");
+        }
+    }
+
+    #[test]
+    fn delta_fires_on_change_with_gain() {
+        let mut e = DeltaEncoder::new(8);
+        let mut out = vec![0u8; 2];
+        e.encode_step(&[50, 50], 0, &mut out);
+        // jump by 10 on pixel 0 only: amplified delta 80 fires within 4 steps
+        let mut spikes = [0u32; 2];
+        for t in 0..4 {
+            e.encode_step(&[60, 50], t, &mut out);
+            spikes[0] += out[0] as u32;
+            spikes[1] += out[1] as u32;
+        }
+        assert_eq!(spikes[0], (80 * 4) >> 8);
+        assert_eq!(spikes[1], 0);
+    }
+
+    #[test]
+    fn delta_expected_count_contract() {
+        let e = DeltaEncoder::new(2);
+        // first-frame spikes against zero: min(2x, 255) rate-coded
+        assert_eq!(e.expected_count(100, 8), (200 * 8) >> 8);
+        assert_eq!(e.expected_count(200, 8), (255 * 8) >> 8); // clamped
+    }
+
+    #[test]
+    fn sliding_mean_converges_to_constant() {
+        let mut e = SlidingWindowEncoder::new(4);
+        let mut out = vec![0u8; 1];
+        // warm up: 0, 0, 0 then steady 200s; mean rises 50, 100, 150, 200
+        for frame in [[0u8], [0], [0], [200], [200], [200], [200]] {
+            e.encode_step(&frame, 0, &mut out);
+        }
+        // window now holds [200; 4]: a 16-step chunk must emit the plain
+        // rate-code count for 200
+        let mut total = 0u32;
+        for t in 0..16 {
+            e.encode_step(&[200], t, &mut out);
+            total += out[0] as u32;
+        }
+        assert_eq!(total, (200 * 16) >> 8);
+    }
+
+    #[test]
+    fn sliding_window_evicts_oldest() {
+        let mut e = SlidingWindowEncoder::new(2);
+        let mut out = vec![0u8; 1];
+        e.encode_step(&[0], 0, &mut out); // mean 0
+        e.encode_step(&[100], 0, &mut out); // mean 50
+        e.encode_step(&[100], 0, &mut out); // 0 evicted -> mean 100
+        assert_eq!(e.mean[0], 100);
+        e.encode_step(&[0], 0, &mut out); // mean 50
+        assert_eq!(e.mean[0], 50);
+    }
+
+    #[test]
+    fn chunks_hold_frame_state_past_t0() {
+        // t > 0 must not advance the frame history: a chunk of 4 steps
+        // over one frame equals 4 rate-code steps of the frozen value.
+        let mut e = DeltaEncoder::new(1);
+        let mut out = vec![0u8; 1];
+        e.encode_step(&[128], 0, &mut out); // delta 128 latched
+        let mut train = vec![out[0]];
+        for t in 1..4 {
+            // pass a *different* frame at t>0: must be ignored
+            e.encode_step(&[7], t, &mut out);
+            train.push(out[0]);
+        }
+        let want: Vec<u8> = (0..4).map(|t| RateEncoder::spike_at(128, t)).collect();
+        assert_eq!(train, want);
+    }
+}

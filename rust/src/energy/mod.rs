@@ -51,13 +51,18 @@ impl Default for EnergyModel {
 /// Where one inference's energy went.
 #[derive(Debug, Clone, Copy)]
 pub struct EnergyBreakdown {
+    /// Accumulate-stage switching energy.
     pub synaptic_j: f64,
+    /// Membrane update + threshold energy.
     pub membrane_j: f64,
+    /// Scratchpad word-traffic energy.
     pub memory_j: f64,
+    /// Leakage + clock tree over the run's duration.
     pub static_j: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy of the inference (J).
     pub fn total_j(&self) -> f64 {
         self.synaptic_j + self.membrane_j + self.memory_j + self.static_j
     }

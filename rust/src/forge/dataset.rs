@@ -131,6 +131,19 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
     let dataset_file = "dataset.lspd";
     write_lspd(&dir.join(dataset_file), &data)?;
 
+    // Streaming dataset: ECG-like quasi-periodic channels with labeled
+    // events, same input shape as the models (own seed lane — adding it
+    // does not perturb the LSPW/LSPD byte streams).
+    let stream = super::stream::stream_data(
+        cfg.seed,
+        cfg.stream_windows,
+        cfg.stream_window_frames,
+        input_dim,
+        classes,
+    );
+    let stream_file = "stream.lsps";
+    super::stream::write_lsps(&dir.join(stream_file), &stream)?;
+
     let mut models = BTreeMap::new();
     for (name, arch) in &arches {
         let mut fp32_acc = 0.0;
@@ -202,6 +215,15 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
                 ("n_test", num(cfg.n_test as f64)),
                 ("input_dim", num(input_dim as f64)),
                 ("classes", num(classes as f64)),
+            ]),
+        ),
+        (
+            "stream",
+            obj(vec![
+                ("file", Value::Str(stream_file.to_string())),
+                ("frames", num(stream.frames as f64)),
+                ("window", num(stream.window as f64)),
+                ("classes", num(stream.classes as f64)),
             ]),
         ),
         ("models", Value::Obj(models)),

@@ -31,6 +31,7 @@
 //! [`FORGE_VERSION`] and regenerate the goldens.
 
 pub mod dataset;
+pub mod stream;
 pub mod weights;
 
 use std::path::{Path, PathBuf};
@@ -43,11 +44,14 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 pub use dataset::write_lspd;
+pub use stream::{stream_data, write_lsps};
 pub use weights::{layer_from_tensor, write_lspw};
 
 /// Bump when any generator changes (keys the cached artifact directory
-/// and the golden-vector contract).
-pub const FORGE_VERSION: u32 = 1;
+/// and the golden-vector contract). v2: artifacts gained the LSPS
+/// streaming dataset + its manifest entry (existing LSPW/LSPD bytes are
+/// unchanged — the stream generator draws from its own seed lane).
+pub const FORGE_VERSION: u32 = 2;
 
 /// Default seed of the canonical forge artifacts.
 pub const DEFAULT_SEED: u64 = 0x5EED_1517;
@@ -64,14 +68,24 @@ pub const PRECISIONS: [Precision; 3] = [Precision::Int2, Precision::Int4, Precis
 /// Forge configuration.
 #[derive(Debug, Clone)]
 pub struct ForgeConfig {
+    /// Master seed every generator lane derives from.
     pub seed: u64,
     /// Test-set size (kept small: manifest accuracies are measured live).
     pub n_test: usize,
+    /// Labeled windows in the forged LSPS stream.
+    pub stream_windows: usize,
+    /// Frames per labeled stream window.
+    pub stream_window_frames: usize,
 }
 
 impl Default for ForgeConfig {
     fn default() -> Self {
-        Self { seed: DEFAULT_SEED, n_test: 64 }
+        Self {
+            seed: DEFAULT_SEED,
+            n_test: 64,
+            stream_windows: 24,
+            stream_window_frames: 8,
+        }
     }
 }
 
@@ -96,6 +110,7 @@ pub fn golden_mlp_arch() -> ArchDesc {
     ArchDesc::Mlp { sizes: vec![24, 16, 10], timesteps: 8, leak_shift: 2 }
 }
 
+/// ConvNet twin of [`golden_mlp_arch`] for the golden vectors.
 pub fn golden_convnet_arch() -> ArchDesc {
     ArchDesc::Convnet {
         side: 8,
@@ -249,7 +264,10 @@ fn build_default_artifacts() -> Result<PathBuf> {
     let cfg = ForgeConfig::default();
     // The cache key carries every ForgeConfig knob; generator-semantics
     // changes must still bump FORGE_VERSION (see module docs).
-    let key = format!("v{FORGE_VERSION}-{:016x}-n{}", cfg.seed, cfg.n_test);
+    let key = format!(
+        "v{FORGE_VERSION}-{:016x}-n{}-s{}x{}",
+        cfg.seed, cfg.n_test, cfg.stream_windows, cfg.stream_window_frames
+    );
     let canonical = std::env::temp_dir().join(format!("lspine-forge-{key}"));
     if canonical.join("manifest.json").exists() {
         return Ok(canonical);

@@ -1,0 +1,221 @@
+//! LSPS streaming-dataset generator + write side.
+//!
+//! The streaming workload needs a *continuous* signal, not i.i.d. test
+//! samples: this module forges an ECG-like quasi-periodic multi-channel
+//! stream — a piecewise-linear PQRST-ish beat whose period jitters
+//! beat-to-beat, scaled per channel, with bounded noise — and stamps one
+//! event label per fixed-size frame window. Labeled events (`label > 0`)
+//! add a sustained offset on the label's channel subset
+//! (`channel % classes == label`), so event windows are separable from
+//! baseline in the input domain.
+//!
+//! Like every forge generator it is seed-deterministic (all randomness
+//! through [`Rng`], integer arithmetic only — no libm), so the same seed
+//! produces identical LSPS bytes on every platform. Any change here MUST
+//! bump [`super::FORGE_VERSION`].
+
+use std::path::Path;
+
+use crate::model::io::{FORMAT_VERSION, STREAM_MAGIC, StreamData};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::layer_seed;
+
+/// Generate the ECG-like stream: `windows` labeled windows of `window`
+/// frames, `dim` channels each, labels in `0..classes` (0 = baseline).
+pub fn stream_data(
+    seed: u64,
+    windows: usize,
+    window: usize,
+    dim: usize,
+    classes: usize,
+) -> StreamData {
+    assert!(window >= 1 && dim >= 1 && classes >= 1);
+    let mut rng = Rng::new(layer_seed(seed, "stream", 0));
+    // per-channel beat gain in Q8, ~[0.375, 0.875)
+    let gains: Vec<u32> = (0..dim).map(|_| 96 + rng.below(128) as u32).collect();
+    let mut pixels = Vec::with_capacity(windows * window * dim);
+    let mut labels = Vec::with_capacity(windows);
+    let mut phase = 0u32;
+    let mut period = next_period(&mut rng);
+    for _ in 0..windows {
+        let label = rng.below(classes as u64) as u8;
+        labels.push(label);
+        for _ in 0..window {
+            let amp = beat_amp(phase, period);
+            for (c, &g) in gains.iter().enumerate() {
+                let noise = rng.below(13) as i32 - 6;
+                let mut x = 32 + ((amp * g) >> 8) as i32 + noise;
+                if label > 0 && c % classes == label as usize {
+                    // the labeled event: a sustained offset on the
+                    // label's channel subset, larger for higher classes
+                    x += 24 + 8 * label as i32;
+                }
+                pixels.push(x.clamp(0, 255) as u8);
+            }
+            phase += 1;
+            if phase >= period {
+                phase = 0;
+                period = next_period(&mut rng);
+            }
+        }
+    }
+    StreamData { frames: windows * window, dim, classes, window, pixels, labels }
+}
+
+/// Beat-to-beat period jitter: 18..=24 frames per beat.
+fn next_period(rng: &mut Rng) -> u32 {
+    18 + rng.below(7) as u32
+}
+
+/// Piecewise-linear PQRST-ish beat envelope, `0..=160`.
+///
+/// A sharp R complex at phases 0..4 and a small triangular T bump around
+/// 40% of the period; baseline elsewhere. Integer-only on purpose —
+/// bit-reproducible everywhere.
+pub fn beat_amp(phase: u32, period: u32) -> u32 {
+    match phase {
+        0 => 40,
+        1 => 160,
+        2 => 80,
+        3 => 20,
+        _ => {
+            let t_center = 2 * period / 5;
+            let d = phase.abs_diff(t_center);
+            if d <= 3 {
+                48 - 12 * d
+            } else {
+                0
+            }
+        }
+    }
+}
+
+/// Serialize a stream to LSPS bytes (inverse of
+/// [`crate::model::io::load_stream`]).
+pub fn lsps_bytes(s: &StreamData) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(STREAM_MAGIC);
+    for v in [
+        FORMAT_VERSION,
+        s.frames as u32,
+        s.dim as u32,
+        s.classes as u32,
+        s.window as u32,
+    ] {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&s.pixels);
+    b.extend_from_slice(&s.labels);
+    b
+}
+
+/// Write a stream as an LSPS file.
+pub fn write_lsps(path: &Path, s: &StreamData) -> Result<()> {
+    std::fs::write(path, lsps_bytes(s))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::io::load_stream;
+
+    #[test]
+    fn deterministic_and_well_formed() {
+        let a = stream_data(7, 6, 8, 16, 10);
+        let b = stream_data(7, 6, 8, 16, 10);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.frames, 48);
+        assert_eq!(a.windows(), 6);
+        assert_eq!(a.pixels.len(), a.frames * a.dim);
+        assert!(a.labels.iter().all(|&l| (l as usize) < a.classes));
+        let c = stream_data(8, 6, 8, 16, 10);
+        assert_ne!(a.pixels, c.pixels);
+    }
+
+    #[test]
+    fn signal_is_quasi_periodic_not_flat() {
+        let s = stream_data(3, 8, 24, 4, 10);
+        // R peaks drive some frames far above baseline and leave others near it
+        let frame_means: Vec<u32> = (0..s.frames)
+            .map(|i| {
+                s.frame(i).iter().map(|&x| x as u32).sum::<u32>() / s.dim as u32
+            })
+            .collect();
+        let hi = *frame_means.iter().max().unwrap();
+        let lo = *frame_means.iter().min().unwrap();
+        assert!(hi >= lo + 40, "no beat structure: hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn labeled_events_elevate_their_channel_subset() {
+        let classes = 10;
+        let s = stream_data(11, 40, 8, 40, classes);
+        // pick a labeled window; its event channels must sit above the
+        // same channels' stream-wide baseline median
+        let (w, &label) = s
+            .labels
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l > 0)
+            .expect("40 windows contain an event");
+        let event_channels: Vec<usize> =
+            (0..s.dim).filter(|c| c % classes == label as usize).collect();
+        let window_mean = |wdx: usize| -> u32 {
+            let mut sum = 0u32;
+            for f in wdx * s.window..(wdx + 1) * s.window {
+                for &c in &event_channels {
+                    sum += s.frame(f)[c] as u32;
+                }
+            }
+            sum / (s.window * event_channels.len()) as u32
+        };
+        let mean_in_window = window_mean(w);
+        // baseline windows over the same channels
+        let baseline: Vec<usize> = s
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l == 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!baseline.is_empty());
+        let mean_baseline: u32 =
+            baseline.iter().map(|&bw| window_mean(bw)).sum::<u32>()
+                / baseline.len() as u32;
+        assert!(
+            mean_in_window > mean_baseline + 5,
+            "event not separable: {mean_in_window} vs {mean_baseline}"
+        );
+    }
+
+    #[test]
+    fn lsps_roundtrips_through_the_loader() {
+        let dir = std::env::temp_dir().join("lspine_forge_lsps_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = stream_data(5, 4, 6, 8, 10);
+        let p = dir.join("s.lsps");
+        write_lsps(&p, &s).unwrap();
+        let back = load_stream(&p).unwrap();
+        assert_eq!(back.pixels, s.pixels);
+        assert_eq!(back.labels, s.labels);
+        assert_eq!(
+            (back.frames, back.dim, back.classes, back.window),
+            (s.frames, s.dim, s.classes, s.window)
+        );
+    }
+
+    #[test]
+    fn beat_amp_bounds() {
+        for period in 18..=24 {
+            for phase in 0..period {
+                assert!(beat_amp(phase, period) <= 160);
+            }
+            assert_eq!(beat_amp(1, period), 160); // R peak
+            assert_eq!(beat_amp(2 * period / 5, period), 48); // T bump
+        }
+    }
+}

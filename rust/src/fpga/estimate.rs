@@ -7,13 +7,18 @@ use super::primitives as p;
 /// One row of Table I (either paper-reported or model-estimated).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FpgaRow {
+    /// Slice LUTs.
     pub luts: f64,
+    /// Slice flip-flops.
     pub ffs: f64,
+    /// Critical-path delay (ns).
     pub delay_ns: f64,
+    /// Dynamic power (mW).
     pub power_mw: f64,
 }
 
 impl FpgaRow {
+    /// Row from explicit numbers (used for the paper-reported columns).
     pub const fn new(luts: f64, ffs: f64, delay_ns: f64, power_mw: f64) -> Self {
         Self { luts, ffs, delay_ns, power_mw }
     }

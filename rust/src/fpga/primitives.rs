@@ -22,6 +22,7 @@ pub const DELAY_PER_LEVEL_NS: f64 = 0.13;
 /// Dynamic power coefficients (mW per primitive at the reference clock
 /// and unit switching activity).
 pub const MW_PER_LUT: f64 = 0.006;
+/// Dynamic power per flip-flop (mW at reference clock, unit activity).
 pub const MW_PER_FF: f64 = 0.0035;
 
 /// Block RAM: capacity of one BRAM36 (bits) — scratchpads price in BRAM,

@@ -16,10 +16,15 @@ use super::primitives as p;
 /// pico-rv32 is ~1.9k LUT in its small configuration; encoder/FIFO/counter
 /// are small shift/compare datapaths.
 pub const RISCV_LUTS: f64 = 1900.0;
+/// pico-rv32-class controller flip-flops.
 pub const RISCV_FFS: f64 = 1600.0;
+/// Spike encoder LUTs.
 pub const ENCODER_LUTS: f64 = 180.0;
+/// Spike encoder flip-flops.
 pub const ENCODER_FFS: f64 = 300.0;
+/// Ring-FIFO + spike-counter control LUTs.
 pub const FIFO_CTRL_LUTS: f64 = 226.0;
+/// Ring-FIFO + spike-counter control flip-flops.
 pub const FIFO_CTRL_FFS: f64 = 420.0;
 
 /// Static (leakage + clock-tree) power of the loaded device, watts.
@@ -36,10 +41,15 @@ pub const PE_FFS_IN_BRAM: f64 = 116.0;
 /// One row of Table II.
 #[derive(Debug, Clone, Copy)]
 pub struct SystemRow {
+    /// Slice LUTs, thousands.
     pub luts_k: f64,
+    /// Slice flip-flops, thousands.
     pub ffs_k: f64,
+    /// Per-inference latency (ms).
     pub latency_ms: f64,
+    /// Total (static + dynamic) power (W).
     pub power_w: f64,
+    /// BRAM36 blocks occupied by the scratchpads.
     pub bram36: u64,
 }
 
@@ -53,6 +63,7 @@ impl SystemRow {
 /// System configuration: grid + what fraction of cycles PEs toggle.
 #[derive(Debug, Clone, Copy)]
 pub struct SystemConfig {
+    /// Accelerator grid geometry and clock.
     pub array: ArrayConfig,
     /// Mean PE utilization from the cycle simulator.
     pub utilization: f64,

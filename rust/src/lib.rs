@@ -31,8 +31,34 @@
 //! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas graphs
 //!   (HLO text artifacts; python never runs at inference time).
 //! - [`coordinator`] — the async edge-serving engine: request router,
-//!   dynamic batcher, timestep scheduler, sessions and metrics.
+//!   dynamic batcher, sharded execution workers, stateful stream
+//!   sessions (persistent membranes, session-affine routing) and metrics.
 //! - [`reports`] — regenerators for every table and figure in the paper.
+//!
+//! # Quick start
+//!
+//! Everything is hermetic: [`forge`] generates deterministic artifacts
+//! in-process, so no python author path is needed to run inference.
+//!
+//! ```
+//! use lspine::forge;
+//! use lspine::model::SnnEngine;
+//! use lspine::quant::QuantScheme;
+//! use lspine::nce::Precision;
+//!
+//! let arch = forge::golden_mlp_arch();
+//! let net = forge::quantized_network(&arch, 7, "doc", QuantScheme::LSpine, Precision::Int4);
+//! let mut engine = SnnEngine::new(net);
+//! let pixels = forge::pixels(7, 1, arch.input_dim());
+//! let class = engine.predict(&pixels);
+//! assert!(class < arch.classes());
+//! ```
+//!
+//! The documented public surface is enforced: `#![warn(missing_docs)]`
+//! here plus `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"` in
+//! CI (broken intra-doc links fail the build).
+
+#![warn(missing_docs)]
 
 pub mod array;
 pub mod util;

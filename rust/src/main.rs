@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   forge     — generate hermetic synthetic artifacts (no python needed)
 //!   serve     — run the serving engine on synthetic request traffic
+//!   stream    — replay a streaming (LSPS) dataset through stateful
+//!               sessions with persistent membrane state
 //!   eval      — evaluate a quantized artifact on the test set
 //!               (native engine, PJRT, or both with cross-check)
 //!   simulate  — cycle-simulate inference on the 2D NCE array
@@ -14,11 +16,14 @@
 //!   lspine simulate --model mlp --bits 2 --samples 32
 //!   lspine report --all
 //!   lspine serve --model mlp --bits 4 --requests 256 --concurrency 8
+//!   lspine stream --model mlp --bits 4 --steps 4 --workers 2
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
-use lspine::model::SnnEngine;
+use lspine::coordinator::{
+    Backend, EncoderKind, LatencyHistogram, ReqPrecision, ServerConfig, ServingEngine,
+};
+use lspine::model::{ResetPolicy, SnnEngine};
 use lspine::nce::{KernelKind, Kernels};
 use lspine::reports;
 use lspine::runtime::executor::{ExecutorPool, ModelKey};
@@ -26,7 +31,7 @@ use lspine::runtime::ArtifactStore;
 use lspine::util::cli::Args;
 
 const USAGE: &str = "\
-lspine <forge|serve|eval|simulate|report> [options]
+lspine <forge|serve|stream|eval|simulate|report> [options]
   common:    --artifacts DIR (default: artifacts)  --model mlp|convnet
              --kernels auto|scalar|wide|avx2|neon (default: auto;
              env LSPINE_KERNELS sets the process default)
@@ -36,6 +41,11 @@ lspine <forge|serve|eval|simulate|report> [options]
   simulate:  --bits 2|4|8  --samples N
   serve:     --bits 2|4|8  --backend native|pjrt  --requests N  --concurrency N
              --workers N (default: available cores)
+  stream:    --bits 2|4|8  --steps N (timesteps/frame, default 4)
+             --sessions N (concurrent streams, default 1)  --workers N
+             --policy hold|reset|decay:K (window boundary, default hold)
+             --encoder rate|delta[:GAIN]|window:W (default rate)
+             --input FILE|- (LSPS; default artifacts/stream.lsps)
   report:    --all | any of --table1 --table2 --fig4 --fig5 --energy --cpu-gpu
 ";
 
@@ -54,6 +64,7 @@ fn run() -> lspine::Result<()> {
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
             "requests=", "concurrency=", "workers=", "kernels=", "out=", "seed=",
+            "steps=", "sessions=", "policy=", "encoder=", "input=",
             "all", "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
@@ -69,6 +80,7 @@ fn run() -> lspine::Result<()> {
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "report" => cmd_report(&args),
         other => anyhow::bail!("unknown command {other:?}"),
     }
@@ -265,6 +277,127 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
         dt.as_secs_f64(),
         n_requests as f64 / dt.as_secs_f64(),
         hits as f64 * 100.0 / n_requests as f64
+    );
+    println!("  {}", engine.metrics().summary());
+    engine.shutdown()
+}
+
+/// Replay a streaming dataset through stateful serving sessions: one
+/// frame per request, membrane state persistent across frames, per
+/// labeled window an aggregated prediction.
+fn cmd_stream(args: &Args) -> lspine::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let model = args.get_or("model", "mlp").to_string();
+    let bits = args.get_usize("bits", 4)?;
+    let steps = args.get_usize("steps", 4)?.max(1) as u32;
+    let sessions = args.get_usize("sessions", 1)?.max(1);
+    let workers = args
+        .get_usize("workers", lspine::coordinator::default_workers())?
+        .max(1);
+    let policy = ResetPolicy::parse(args.get_or("policy", "hold"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy (hold|reset|decay:K)"))?;
+    let encoder = EncoderKind::parse(args.get_or("encoder", "rate"))
+        .ok_or_else(|| anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W)"))?;
+    let precision = ReqPrecision::parse(&bits.to_string())
+        .ok_or_else(|| anyhow::anyhow!("bad bits"))?;
+    let kernel_kind = parse_kernel_kind(args)?;
+
+    // stream source: explicit LSPS file, `-` for LSPS bytes on stdin, or
+    // the forged artifacts' stream.lsps
+    let data = match args.get("input") {
+        Some("-") => {
+            use std::io::Read;
+            let mut blob = Vec::new();
+            std::io::stdin().read_to_end(&mut blob)?;
+            lspine::model::parse_stream(&blob)?
+        }
+        Some(path) => lspine::model::load_stream(path)?,
+        None => ArtifactStore::open(&artifacts)?.load_stream_set()?,
+    };
+
+    let engine = ServingEngine::start(ServerConfig {
+        artifacts_dir: artifacts,
+        model: model.clone(),
+        backend: Backend::Native,
+        workers,
+        kernels: kernel_kind,
+        stream_policy: policy,
+        ..Default::default()
+    })?;
+    println!(
+        "stream: {model} {} frames={} window={} sessions={sessions} \
+         workers={workers} steps={steps} policy={} encoder={} kernels={}",
+        precision.name(),
+        data.frames,
+        data.window,
+        policy.name(),
+        encoder.name(),
+        Kernels::for_kind(kernel_kind)?.name()
+    );
+
+    let ids: Vec<u64> = (0..sessions).map(|_| engine.open_stream()).collect();
+    let mut win_counts = vec![vec![0i64; data.classes]; sessions];
+    let mut lat = LatencyHistogram::new();
+    let mut nonzero_windows = 0usize;
+    let mut agree = 0usize;
+    let mut total_windows = 0usize;
+    let t0 = Instant::now();
+    for f in 0..data.frames {
+        // one frame-window per session in flight: sessions parallelize
+        // across workers (affinity), frames within a session stay ordered
+        let rxs: Vec<_> = ids
+            .iter()
+            .map(|&sid| {
+                engine.stream_window_with(sid, data.frame(f), steps, precision, encoder)
+            })
+            .collect::<lspine::Result<_>>()?;
+        let boundary = (f + 1) % data.window == 0;
+        for (s, rx) in rxs.into_iter().enumerate() {
+            // a closed reply means the window was dropped: backpressure
+            // rejection (queue over capacity) or a dead worker — either
+            // way the replay has a gap and cannot continue faithfully
+            let resp = rx.recv().map_err(|_| {
+                anyhow::anyhow!(
+                    "stream window dropped at frame {f} (backpressure rejection \
+                     or worker failure; lower --sessions or raise capacity)"
+                )
+            })?;
+            lat.record(Duration::from_micros(resp.latency_us));
+            for (w, &c) in win_counts[s].iter_mut().zip(&resp.counts) {
+                *w += c as i64;
+            }
+            if boundary {
+                let wdx = f / data.window;
+                let label = data.labels[wdx] as usize;
+                let counts = &mut win_counts[s];
+                let pred = lspine::model::engine::argmax(counts);
+                let spikes: i64 = counts.iter().sum();
+                total_windows += 1;
+                nonzero_windows += (spikes > 0) as usize;
+                agree += (pred == label) as usize;
+                if s == 0 && wdx < 5 {
+                    println!(
+                        "  window {wdx:>3}: pred={pred} label={label} spikes={spikes}"
+                    );
+                }
+                counts.fill(0);
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    for &sid in &ids {
+        engine.close_stream(sid)?;
+    }
+    println!(
+        "  windows={total_windows} nonzero_windows={nonzero_windows} \
+         label_agreement={:.1}%",
+        agree as f64 * 100.0 / total_windows.max(1) as f64
+    );
+    println!(
+        "  {:.0} frame-windows/s  inter-window latency p50<={}us p99<={}us",
+        (data.frames * sessions) as f64 / dt,
+        lat.quantile_us(0.5),
+        lat.quantile_us(0.99)
     );
     println!("  {}", engine.metrics().summary());
     engine.shutdown()

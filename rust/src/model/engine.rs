@@ -25,6 +25,81 @@ use crate::nce::{KernelBackend, Kernels, NeuronComputeEngine};
 
 use super::network::{ArchDesc, QuantNetwork};
 
+/// What happens to the membrane state at a stream-window boundary.
+///
+/// One-shot classification resets membranes per sample; a *stream* keeps
+/// them alive so temporal context crosses window boundaries. The policy
+/// is applied once per boundary (before the new window's first timestep):
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResetPolicy {
+    /// Keep membranes exactly as the previous window left them — the
+    /// bit-exactness contract: a held stream session equals the same
+    /// windows run back-to-back on one persistent engine, and the LIF
+    /// dynamics compose exactly across the split (pinned by
+    /// `tests/streaming.rs` and the engine's compose test; note each
+    /// window encodes its frame from `t = 0` — the rate code's phase is
+    /// window-local by design).
+    Hold,
+    /// Zero all membranes — every window is an independent inference
+    /// (the one-shot semantics, expressed as a stream).
+    Reset,
+    /// Apply one extra multiplier-less leak step, `v -= v >> shift`, to
+    /// every membrane — context decays across gaps without a hard reset
+    /// (the shift plays the role of the inter-window time constant).
+    Decay(u32),
+}
+
+impl ResetPolicy {
+    /// Parse the CLI surface: `hold`, `reset` or `decay:K` with
+    /// `1 <= K < 31` (`decay:0` is rejected: `v -= v >> 0` zeroes every
+    /// membrane, i.e. it silently behaves as `reset` — ask for `reset`).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "hold" => Some(ResetPolicy::Hold),
+            "reset" => Some(ResetPolicy::Reset),
+            _ => {
+                let shift = s.strip_prefix("decay:")?.parse::<u32>().ok()?;
+                (1..31).contains(&shift).then_some(ResetPolicy::Decay(shift))
+            }
+        }
+    }
+
+    /// Stable display name (`hold` / `reset` / `decay:K`).
+    pub fn name(self) -> String {
+        match self {
+            ResetPolicy::Hold => "hold".into(),
+            ResetPolicy::Reset => "reset".into(),
+            ResetPolicy::Decay(k) => format!("decay:{k}"),
+        }
+    }
+}
+
+/// Snapshot of all per-layer membrane potentials — the state a
+/// [`StreamSession`](crate::coordinator::session::StreamSession) keeps
+/// alive between windows.
+///
+/// Obtained from [`SnnEngine::fresh_state`] and exchanged with the engine
+/// through [`SnnEngine::swap_state`], so one engine can serve many
+/// sessions without cloning membranes on the hot path.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MembraneState {
+    layers: Vec<Vec<i32>>,
+}
+
+impl MembraneState {
+    /// Per-layer membrane slices (read-only; tests and the decay policy
+    /// inspect these).
+    pub fn layers(&self) -> &[Vec<i32>] {
+        &self.layers
+    }
+
+    /// Total neurons captured across layers.
+    pub fn total_neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+}
+
 /// Execution statistics of one inference (inputs to the energy model and
 /// cross-checks for the cycle simulator).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -58,6 +133,26 @@ pub struct LayerStats {
 }
 
 /// Reusable single-sample inference engine (one engine per worker thread).
+///
+/// ```
+/// use lspine::forge;
+/// use lspine::model::SnnEngine;
+/// use lspine::nce::Precision;
+///
+/// let arch = forge::golden_mlp_arch();
+/// let net = forge::raw_network(&arch, 1, Precision::Int2, 4);
+/// let mut engine = SnnEngine::new(net);
+///
+/// // one-shot classification (membranes reset per sample)
+/// let pixels = forge::pixels(1, 1, arch.input_dim());
+/// assert!(engine.predict(&pixels) < arch.classes());
+///
+/// // streaming: ragged windows over persistent membranes
+/// engine.reset();
+/// let w0 = engine.infer_window(&pixels, 3).to_vec();
+/// let w1 = engine.infer_window(&pixels, 2).to_vec();
+/// assert_eq!((w0.len(), w1.len()), (arch.classes(), arch.classes()));
+/// ```
 #[derive(Debug, Clone)]
 pub struct SnnEngine {
     net: QuantNetwork,
@@ -177,6 +272,7 @@ impl SnnEngine {
         }
     }
 
+    /// The loaded network this engine executes.
     pub fn network(&self) -> &QuantNetwork {
         &self.net
     }
@@ -229,13 +325,64 @@ impl SnnEngine {
         timesteps: u32,
         encoder: &mut dyn crate::encode::SpikeEncoder,
     ) -> &[u32] {
-        assert_eq!(pixels.len(), self.net.arch.input_dim(), "bad input size");
         assert!(timesteps <= self.net.arch.timesteps(), "beyond trained T");
         self.reset();
-        self.counts.fill(0);
-        self.stats = InferStats::default();
+        self.run_window(pixels, timesteps, encoder);
+        // dense bound stays the *trained-T* budget even for truncated
+        // runs (the stats contract predates early-exit readout)
         self.stats.dense_synops =
             self.net.arch.synops_per_step() * self.net.arch.timesteps() as u64;
+        &self.counts
+    }
+
+    /// One **streaming window**: run `steps` timesteps over `pixels`
+    /// *without* resetting the membranes, returning this window's
+    /// per-class spike counts.
+    ///
+    /// This is the temporal-workload entry point ([`crate::coordinator`]
+    /// stream sessions and `lspine stream` are built on it): membrane
+    /// state carries over from whatever the engine held before the call,
+    /// so under [`ResetPolicy::Hold`] the LIF dynamics are exactly
+    /// continuous across windows — a session replay is bit-identical to
+    /// the same windows run back-to-back here, and splitting a run
+    /// changes nothing but the encoder's window-local phase (each window
+    /// encodes its frame from `t = 0`; with the phase carried across the
+    /// split the runs are bit-identical, membranes included — see the
+    /// compose test and `tests/streaming.rs`). Window lengths may be
+    /// ragged and are not limited by the trained `T` — the deterministic
+    /// rate code is defined for every timestep index.
+    pub fn infer_window(&mut self, pixels: &[u8], steps: u32) -> &[u32] {
+        let mut enc = RateEncoder::new();
+        self.infer_window_with_encoder(pixels, steps, &mut enc)
+    }
+
+    /// [`infer_window`](Self::infer_window) with an explicit (possibly
+    /// stateful) encoder — delta and sliding-window codings keep their
+    /// frame history in the encoder, which a stream session owns
+    /// alongside the membrane state.
+    pub fn infer_window_with_encoder(
+        &mut self,
+        pixels: &[u8],
+        steps: u32,
+        encoder: &mut dyn crate::encode::SpikeEncoder,
+    ) -> &[u32] {
+        self.run_window(pixels, steps, encoder);
+        self.stats.dense_synops = self.net.arch.synops_per_step() * steps as u64;
+        &self.counts
+    }
+
+    /// Shared inference loop: `steps` encoded timesteps over the current
+    /// membrane state (callers decide whether to [`reset`](Self::reset)
+    /// first and what `dense_synops` budget to record).
+    fn run_window(
+        &mut self,
+        pixels: &[u8],
+        steps: u32,
+        encoder: &mut dyn crate::encode::SpikeEncoder,
+    ) {
+        assert_eq!(pixels.len(), self.net.arch.input_dim(), "bad input size");
+        self.counts.fill(0);
+        self.stats = InferStats::default();
         let positions = self.net.arch.layer_positions();
         self.layer_stats = self
             .net
@@ -250,7 +397,7 @@ impl SnnEngine {
             })
             .collect();
 
-        for t in 0..timesteps {
+        for t in 0..steps {
             encoder.encode_step_plane(pixels, t, &mut self.input_spikes);
             match self.net.arch {
                 ArchDesc::Mlp { .. } => self.step_mlp(),
@@ -260,7 +407,41 @@ impl SnnEngine {
             let counts = &mut self.counts;
             last.for_each_set(|c| counts[c] += 1);
         }
-        &self.counts
+    }
+
+    /// A zeroed membrane snapshot with this engine's layer shapes — what
+    /// a new stream session starts from.
+    pub fn fresh_state(&self) -> MembraneState {
+        MembraneState {
+            layers: self.membranes.iter().map(|m| vec![0i32; m.len()]).collect(),
+        }
+    }
+
+    /// Exchange the engine's membrane state with `state` (both directions,
+    /// allocation-free). The serving hot path runs one engine per worker
+    /// across many sessions: swap a session's state in, run its window,
+    /// swap back out. Panics if the snapshot's shapes do not match this
+    /// engine's architecture.
+    pub fn swap_state(&mut self, state: &mut MembraneState) {
+        assert_eq!(state.layers.len(), self.membranes.len(), "layer count mismatch");
+        for (mine, theirs) in self.membranes.iter_mut().zip(&mut state.layers) {
+            assert_eq!(mine.len(), theirs.len(), "membrane shape mismatch");
+            std::mem::swap(mine, theirs);
+        }
+    }
+
+    /// Apply a window-boundary [`ResetPolicy`] to the current membranes
+    /// (called between windows of a stream, never inside one).
+    pub fn apply_boundary(&mut self, policy: ResetPolicy) {
+        match policy {
+            ResetPolicy::Hold => {}
+            ResetPolicy::Reset => self.reset(),
+            ResetPolicy::Decay(shift) => {
+                for m in &mut self.membranes {
+                    NeuronComputeEngine::decay_membranes(m, shift);
+                }
+            }
+        }
     }
 
     /// Argmax prediction for one sample.
@@ -418,10 +599,14 @@ impl SnnEngine {
 }
 
 /// First-maximum argmax (ties resolve to the lowest index, like numpy).
-pub fn argmax(xs: &[u32]) -> usize {
+///
+/// Generic so every consumer of spike counts — the engine (`u32`), the
+/// serving layer (`i32`), the stream CLI's window aggregation (`i64`) —
+/// shares the one tie-break rule.
+pub fn argmax<T: PartialOrd>(xs: &[T]) -> usize {
     let mut best = 0usize;
-    for (i, &x) in xs.iter().enumerate().skip(1) {
-        if x > xs[best] {
+    for (i, x) in xs.iter().enumerate().skip(1) {
+        if *x > xs[best] {
             best = i;
         }
     }
@@ -577,6 +762,131 @@ mod tests {
         let counts = e.infer(&[0, 0, 0, 0]).to_vec();
         assert!(counts.iter().all(|&c| c == 0));
         assert_eq!(e.last_stats().active_rows, 0);
+    }
+
+    /// Rate code with its timestep index shifted by a fixed offset —
+    /// emulates carrying the encoder phase across a window split.
+    struct OffsetRate(u32);
+
+    impl crate::encode::SpikeEncoder for OffsetRate {
+        fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+            for (o, &x) in out.iter_mut().zip(pixels) {
+                *o = crate::encode::RateEncoder::spike_at(x, t + self.0);
+            }
+        }
+
+        fn encode_step_plane(
+            &mut self,
+            pixels: &[u8],
+            t: u32,
+            out: &mut crate::nce::SpikePlane,
+        ) {
+            let off = self.0;
+            out.fill_from_fn(|j| {
+                crate::encode::RateEncoder::spike_at(pixels[j], t + off) != 0
+            });
+        }
+
+        fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+            ((pixel as u32) * (self.0 + t_steps) >> 8)
+                - ((pixel as u32) * self.0 >> 8)
+        }
+    }
+
+    #[test]
+    fn held_windows_compose_bit_exactly() {
+        // The Hold contract is about the *dynamics*, not the encoder:
+        // membranes carry over untouched, so splitting a run into ragged
+        // windows changes nothing except the rate code's window-local
+        // phase (every window encodes a fresh frame from t = 0 by
+        // design). Carrying the phase across the split — the offset
+        // encoder below — must therefore reproduce one long run exactly:
+        // identical summed counts AND identical final membranes.
+        let pixels = [255u8, 128, 64, 200];
+        let mut a = SnnEngine::new(tiny_mlp());
+        let mut b = SnnEngine::new(tiny_mlp());
+        a.reset();
+        b.reset();
+        let mut summed = vec![0u32; 2];
+        let mut off = 0u32;
+        for steps in [2u32, 1, 3] {
+            let counts = a
+                .infer_window_with_encoder(&pixels, steps, &mut OffsetRate(off))
+                .to_vec();
+            for (s, c) in summed.iter_mut().zip(counts) {
+                *s += c;
+            }
+            off += steps;
+        }
+        let full = b.infer_window(&pixels, 6).to_vec();
+        assert_eq!(summed, full);
+        let (mut sa, mut sb) = (a.fresh_state(), b.fresh_state());
+        a.swap_state(&mut sa);
+        b.swap_state(&mut sb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn swap_state_isolates_sessions() {
+        // interleaving unrelated one-shot inferences between a session's
+        // windows must not perturb the session (snapshot/restore).
+        let pixels = [10u8, 250, 90, 170];
+        let mut clean = SnnEngine::new(tiny_mlp());
+        clean.reset();
+        let w1 = clean.infer_window(&pixels, 3).to_vec();
+        let w2 = clean.infer_window(&pixels, 3).to_vec();
+
+        let mut shared = SnnEngine::new(tiny_mlp());
+        let mut session = shared.fresh_state();
+        shared.swap_state(&mut session);
+        let i1 = shared.infer_window(&pixels, 3).to_vec();
+        shared.swap_state(&mut session); // park the session
+        shared.infer(&[255, 255, 255, 255]); // unrelated traffic
+        shared.swap_state(&mut session); // resume
+        let i2 = shared.infer_window(&pixels, 3).to_vec();
+        assert_eq!((i1, i2), (w1, w2));
+    }
+
+    #[test]
+    fn boundary_policies() {
+        let pixels = [200u8, 200, 200, 200];
+        let mut e = SnnEngine::new(tiny_mlp());
+        e.reset();
+        e.infer_window(&pixels, 4);
+        // Reset: next window equals a fresh-engine window
+        e.apply_boundary(ResetPolicy::Reset);
+        let after_reset = e.infer_window(&pixels, 4).to_vec();
+        let mut fresh = SnnEngine::new(tiny_mlp());
+        fresh.reset();
+        assert_eq!(after_reset, fresh.infer_window(&pixels, 4).to_vec());
+        // Decay: membranes shrink by exactly v >> k
+        e.reset();
+        e.infer_window(&pixels, 1);
+        let mut snap = e.fresh_state();
+        e.swap_state(&mut snap); // extract...
+        let before = snap.clone();
+        e.swap_state(&mut snap); // ...and put back
+        e.apply_boundary(ResetPolicy::Decay(1));
+        let mut after = e.fresh_state();
+        e.swap_state(&mut after);
+        for (b, a) in before.layers().iter().zip(after.layers()) {
+            for (&vb, &va) in b.iter().zip(a) {
+                assert_eq!(va, vb - (vb >> 1));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_policy_parsing() {
+        assert_eq!(ResetPolicy::parse("hold"), Some(ResetPolicy::Hold));
+        assert_eq!(ResetPolicy::parse("RESET"), Some(ResetPolicy::Reset));
+        assert_eq!(ResetPolicy::parse("decay:3"), Some(ResetPolicy::Decay(3)));
+        assert_eq!(ResetPolicy::parse("decay:40"), None);
+        // shift 0 zeroes the membranes — that is `reset`, not a decay
+        assert_eq!(ResetPolicy::parse("decay:0"), None);
+        assert_eq!(ResetPolicy::parse("decay:"), None);
+        assert_eq!(ResetPolicy::parse("melt"), None);
+        assert_eq!(ResetPolicy::Decay(2).name(), "decay:2");
     }
 
     #[test]

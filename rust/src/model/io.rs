@@ -17,6 +17,7 @@ use super::network::{ArchDesc, QuantNetLayer, QuantNetwork};
 // reader and writer in lockstep across version bumps.
 pub(crate) const WEIGHTS_MAGIC: &[u8; 4] = b"LSPW";
 pub(crate) const DATASET_MAGIC: &[u8; 4] = b"LSPD";
+pub(crate) const STREAM_MAGIC: &[u8; 4] = b"LSPS";
 pub(crate) const FORMAT_VERSION: u32 = 1;
 
 struct Cursor<'a> {
@@ -115,15 +116,20 @@ pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwo
 /// A loaded LSPD dataset: u8 pixels (encoder input) + labels.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Samples in the set.
     pub n: usize,
+    /// Pixels per sample.
     pub dim: usize,
+    /// Label alphabet size.
     pub classes: usize,
     /// Row-major `[n][dim]` u8 pixels — exactly what the encoder consumes.
     pub pixels: Vec<u8>,
+    /// One label per sample.
     pub labels: Vec<u8>,
 }
 
 impl Dataset {
+    /// Pixels of sample `i`.
     pub fn sample(&self, i: usize) -> &[u8] {
         &self.pixels[i * self.dim..(i + 1) * self.dim]
     }
@@ -154,6 +160,81 @@ pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
     Ok(Dataset { n, dim, classes, pixels, labels })
 }
 
+/// A loaded LSPS stream: a continuous frame sequence with one event
+/// label per fixed-size frame window (the temporal/streaming workload).
+///
+/// Unlike [`Dataset`] samples, frames are *ordered* — the signal is
+/// quasi-periodic (ECG-like) and classification context accumulates in
+/// the membranes across frames (see `lspine stream` and
+/// [`crate::coordinator::session`]).
+#[derive(Debug, Clone)]
+pub struct StreamData {
+    /// Total frames in the stream.
+    pub frames: usize,
+    /// Channels per frame (equals the models' `input_dim`).
+    pub dim: usize,
+    /// Event label alphabet size.
+    pub classes: usize,
+    /// Frames per labeled window (`frames` is a multiple of this).
+    pub window: usize,
+    /// Row-major `[frames][dim]` u8 channel values.
+    pub pixels: Vec<u8>,
+    /// One event label per window (`frames / window` entries).
+    pub labels: Vec<u8>,
+}
+
+impl StreamData {
+    /// Frame `i` as an encoder-input slice.
+    pub fn frame(&self, i: usize) -> &[u8] {
+        &self.pixels[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Labeled windows in the stream.
+    pub fn windows(&self) -> usize {
+        self.frames / self.window
+    }
+}
+
+/// Load an LSPS stream file.
+///
+/// ```text
+/// magic "LSPS" | u32 version | u32 frames | u32 dim | u32 classes | u32 window
+/// u8 pixels[frames * dim] | u8 labels[frames / window]
+/// ```
+pub fn load_stream(path: impl AsRef<Path>) -> Result<StreamData> {
+    let blob = std::fs::read(&path)?;
+    parse_stream(&blob)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+}
+
+/// Parse LSPS bytes (the stdin half of `lspine stream --input -`).
+pub fn parse_stream(blob: &[u8]) -> Result<StreamData> {
+    let mut c = Cursor::new(blob);
+    if c.bytes(4)? != STREAM_MAGIC {
+        anyhow::bail!("not an LSPS stream");
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        anyhow::bail!("unsupported LSPS version {version}");
+    }
+    let frames = c.u32()? as usize;
+    let dim = c.u32()? as usize;
+    let classes = c.u32()? as usize;
+    let window = c.u32()? as usize;
+    if window == 0 || frames % window != 0 {
+        anyhow::bail!("stream frames ({frames}) not a multiple of window ({window})");
+    }
+    let pixels = c.bytes(frames * dim)?.to_vec();
+    let labels = c.bytes(frames / window)?.to_vec();
+    if c.pos != blob.len() {
+        anyhow::bail!("trailing bytes in LSPS file");
+    }
+    if labels.iter().any(|&l| l as usize >= classes) {
+        anyhow::bail!("stream label out of range");
+    }
+    Ok(StreamData { frames, dim, classes, window, pixels, labels })
+}
+
 // ---------------------------------------------------------------------
 // Manifest (JSON)
 // ---------------------------------------------------------------------
@@ -161,23 +242,35 @@ pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
 /// Per-(scheme, bits) quantization record (Fig. 4 / Fig. 5 source data).
 #[derive(Debug, Clone)]
 pub struct QuantEntry {
+    /// Top-1 accuracy on the shared test set.
     pub accuracy: f64,
+    /// Packed weight footprint (Fig. 4 x-axis).
     pub memory_bits: u64,
+    /// LSPW file name, relative to the artifacts directory.
     pub weights: String,
+    /// Per-layer dequantization scales.
     pub scales: Vec<f32>,
+    /// Per-layer folded integer thresholds.
     pub thetas: Vec<i32>,
 }
 
 #[derive(Debug, Clone)]
+/// Training-run metadata recorded by the author path.
 pub struct TrainingInfo {
+    /// Optimizer steps trained.
     pub steps: u32,
+    /// Sampled training-loss curve.
     pub loss_curve: Vec<f64>,
+    /// Float-model train accuracy.
     pub fp32_train_acc: f64,
+    /// Float-model test accuracy (the Fig. 4/5 baseline).
     pub fp32_test_acc: f64,
 }
 
 #[derive(Debug, Clone)]
+/// The float baseline's artifact record.
 pub struct Fp32Info {
+    /// FP32 weight footprint.
     pub memory_bits: u64,
     /// batch size -> HLO artifact file name
     pub hlo: BTreeMap<usize, String>,
@@ -186,18 +279,26 @@ pub struct Fp32Info {
 /// Layer-adaptive precision artifact (the paper's future-work feature).
 #[derive(Debug, Clone)]
 pub struct MixedEntry {
+    /// Field width chosen per layer.
     pub bits_per_layer: Vec<u32>,
+    /// Top-1 accuracy on the shared test set.
     pub accuracy: f64,
+    /// Packed weight footprint.
     pub memory_bits: u64,
+    /// LSPW file name, relative to the artifacts directory.
     pub weights: String,
     /// batch size -> HLO artifact file name
     pub hlo: BTreeMap<usize, String>,
 }
 
 #[derive(Debug, Clone)]
+/// One model's manifest entry (arch + training + per-scheme artifacts).
 pub struct ModelEntry {
+    /// Architecture topology.
     pub arch: ArchDesc,
+    /// Training metadata.
     pub training: TrainingInfo,
+    /// Float baseline record.
     pub fp32: Fp32Info,
     /// scheme -> bits -> entry
     pub quant: BTreeMap<String, BTreeMap<u32, QuantEntry>>,
@@ -208,6 +309,7 @@ pub struct ModelEntry {
 }
 
 impl ModelEntry {
+    /// The (scheme, bits) quantization record, or a loud error.
     pub fn quant_entry(&self, scheme: &str, bits: u32) -> Result<&QuantEntry> {
         self.quant
             .get(scheme)
@@ -215,6 +317,7 @@ impl ModelEntry {
             .ok_or_else(|| anyhow::anyhow!("no quant entry for {scheme}/INT{bits}"))
     }
 
+    /// HLO artifact file for (bits, batch), or a loud error.
     pub fn hlo_file(&self, bits: u32, batch: usize) -> Result<&str> {
         self.hlo
             .get(&bits)
@@ -224,23 +327,49 @@ impl ModelEntry {
     }
 }
 
+/// Manifest record of the shared test dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetInfo {
+    /// LSPD file name, relative to the artifacts directory.
     pub file: String,
+    /// Test-set size.
     pub n_test: usize,
+    /// Pixels per sample.
     pub input_dim: usize,
+    /// Label alphabet size.
+    pub classes: usize,
+}
+
+/// Manifest record of the forged streaming dataset (absent in manifests
+/// written before the streaming workload existed — the loader accepts
+/// both).
+#[derive(Debug, Clone)]
+pub struct StreamInfo {
+    /// LSPS file name, relative to the artifacts directory.
+    pub file: String,
+    /// Total frames in the stream.
+    pub frames: usize,
+    /// Frames per labeled window.
+    pub window: usize,
+    /// Event label alphabet size.
     pub classes: usize,
 }
 
 /// The artifact manifest — everything the runtime needs to find/load.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Format version shared by every artifact kind.
     pub format_version: u32,
+    /// The shared test dataset.
     pub dataset: DatasetInfo,
+    /// The streaming dataset, when forged.
+    pub stream: Option<StreamInfo>,
+    /// Per-model entries (arch + quantization + HLO records).
     pub models: BTreeMap<String, ModelEntry>,
 }
 
 impl Manifest {
+    /// The named model's entry, or a loud error.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
@@ -256,6 +385,15 @@ impl Manifest {
             input_dim: d.req("input_dim")?.as_u64().unwrap_or(0) as usize,
             classes: d.req("classes")?.as_u64().unwrap_or(0) as usize,
         };
+        let stream = match v.get("stream") {
+            Some(s) => Some(StreamInfo {
+                file: s.req("file")?.as_str().unwrap_or_default().to_string(),
+                frames: s.req("frames")?.as_u64().unwrap_or(0) as usize,
+                window: s.req("window")?.as_u64().unwrap_or(0) as usize,
+                classes: s.req("classes")?.as_u64().unwrap_or(0) as usize,
+            }),
+            None => None,
+        };
         let mut models = BTreeMap::new();
         for (name, entry) in v
             .req("models")?
@@ -264,7 +402,7 @@ impl Manifest {
         {
             models.insert(name.clone(), Self::model_from_json(entry)?);
         }
-        Ok(Manifest { format_version, dataset, models })
+        Ok(Manifest { format_version, dataset, stream, models })
     }
 
     fn model_from_json(v: &Value) -> Result<ModelEntry> {
@@ -487,6 +625,39 @@ mod tests {
         assert_eq!((d.n, d.dim, d.classes), (2, 3, 10));
         assert_eq!(d.sample(1), &[4, 5, 6]);
         assert_eq!(d.labels, vec![7, 9]);
+    }
+
+    #[test]
+    fn lsps_roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("lspine_io_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.bin");
+        let mut b = Vec::new();
+        b.extend_from_slice(STREAM_MAGIC);
+        // 4 frames x 2 channels, 3 classes, window 2 -> 2 labels
+        for v in [FORMAT_VERSION, 4u32, 2, 3, 2] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]); // pixels
+        b.extend_from_slice(&[0, 2]); // labels
+        std::fs::write(&p, &b).unwrap();
+        let s = load_stream(&p).unwrap();
+        assert_eq!((s.frames, s.dim, s.classes, s.window), (4, 2, 3, 2));
+        assert_eq!(s.windows(), 2);
+        assert_eq!(s.frame(1), &[3, 4]);
+        assert_eq!(s.labels, vec![0, 2]);
+
+        // frames not a multiple of window
+        let mut bad = Vec::new();
+        bad.extend_from_slice(STREAM_MAGIC);
+        for v in [FORMAT_VERSION, 3u32, 1, 2, 2] {
+            bad.extend_from_slice(&v.to_le_bytes());
+        }
+        bad.extend_from_slice(&[1, 2, 3]);
+        bad.push(0);
+        let pb = dir.join("bad.bin");
+        std::fs::write(&pb, &bad).unwrap();
+        assert!(load_stream(&pb).is_err());
     }
 
     #[test]

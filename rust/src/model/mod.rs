@@ -12,6 +12,9 @@ pub mod engine;
 pub mod io;
 pub mod network;
 
-pub use engine::SnnEngine;
-pub use io::{load_dataset, load_manifest, load_weights, Dataset, Manifest};
+pub use engine::{MembraneState, ResetPolicy, SnnEngine};
+pub use io::{
+    load_dataset, load_manifest, load_stream, load_weights, parse_stream, Dataset,
+    Manifest, StreamData,
+};
 pub use network::{ArchDesc, QuantNetwork, QuantNetLayer};

@@ -8,16 +8,24 @@ use crate::util::json::Value;
 pub enum ArchDesc {
     /// Fully-connected LIF stack; `sizes` includes input and output dims.
     Mlp {
+        /// Layer widths, input first and classes last.
         sizes: Vec<usize>,
+        /// Inference timesteps the network was trained for.
         timesteps: u32,
+        /// LIF leak shift shared by all layers.
         leak_shift: u32,
     },
     /// conv3x3 -> pool2 -> conv3x3 -> pool2 -> fc (all layers LIF).
     Convnet {
+        /// Input plane side (square, channel-last).
         side: usize,
+        /// Channels: input, after conv1, after conv2.
         channels: Vec<usize>,
+        /// Output classes of the final fc layer.
         classes: usize,
+        /// Inference timesteps the network was trained for.
         timesteps: u32,
+        /// LIF leak shift shared by all layers.
         leak_shift: u32,
     },
 }
@@ -60,6 +68,7 @@ impl ArchDesc {
         }
     }
 
+    /// Inference timesteps the network was trained for.
     pub fn timesteps(&self) -> u32 {
         match self {
             ArchDesc::Mlp { timesteps, .. } => *timesteps,
@@ -67,6 +76,7 @@ impl ArchDesc {
         }
     }
 
+    /// LIF leak shift shared by all layers.
     pub fn leak_shift(&self) -> u32 {
         match self {
             ArchDesc::Mlp { leak_shift, .. } => *leak_shift,
@@ -74,6 +84,7 @@ impl ArchDesc {
         }
     }
 
+    /// Encoder input size (pixels per sample).
     pub fn input_dim(&self) -> usize {
         match self {
             ArchDesc::Mlp { sizes, .. } => sizes[0],
@@ -81,6 +92,7 @@ impl ArchDesc {
         }
     }
 
+    /// Output classes.
     pub fn classes(&self) -> usize {
         match self {
             ArchDesc::Mlp { sizes, .. } => *sizes.last().unwrap(),
@@ -142,11 +154,17 @@ impl ArchDesc {
 /// One loaded layer: packed weights + folded integer parameters.
 #[derive(Debug, Clone)]
 pub struct QuantNetLayer {
+    /// Field width of the packed weights.
     pub precision: Precision,
+    /// Input rows (fan-in).
     pub k_in: usize,
+    /// Output neurons.
     pub n_out: usize,
+    /// Packed words per weight row.
     pub n_words: usize,
+    /// Dequantization scale (float domain).
     pub scale: f32,
+    /// Folded integer firing threshold.
     pub theta: i32,
     /// Row-major `[k_in][n_words]` storage words.
     pub packed: Vec<u32>,
@@ -162,11 +180,14 @@ impl QuantNetLayer {
 /// A complete quantized network ready for the engine or the simulator.
 #[derive(Debug, Clone)]
 pub struct QuantNetwork {
+    /// Architecture topology.
     pub arch: ArchDesc,
+    /// Per-layer packed weights, input to output order.
     pub layers: Vec<QuantNetLayer>,
 }
 
 impl QuantNetwork {
+    /// Total packed weight footprint in bits.
     pub fn memory_bits(&self) -> usize {
         self.layers.iter().map(|l| l.memory_bits()).sum()
     }

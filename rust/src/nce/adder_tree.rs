@@ -44,6 +44,7 @@ pub struct Structure {
 }
 
 impl Structure {
+    /// Component-wise sum of two inventories (datapath composition).
     pub fn add(&self, other: &Structure) -> Structure {
         Structure {
             full_adders: self.full_adders + other.full_adders,
@@ -55,6 +56,7 @@ impl Structure {
         }
     }
 
+    /// Inventory of `k` copies of this structure.
     pub fn scale(&self, k: usize) -> Structure {
         Structure {
             full_adders: self.full_adders * k,
@@ -81,6 +83,7 @@ impl Default for SimdAdder {
 }
 
 impl SimdAdder {
+    /// The paper's 32-bit reconfigurable adder.
     pub fn new() -> Self {
         Self { width: 32 }
     }

@@ -66,6 +66,7 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
+    /// Parse the CLI/env surface (`auto|scalar|wide|avx2|neon` + aliases).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Some(KernelKind::Auto),
@@ -77,6 +78,7 @@ impl KernelKind {
         }
     }
 
+    /// Stable lowercase name of the kind.
     pub const fn name(self) -> &'static str {
         match self {
             KernelKind::Auto => "auto",
@@ -590,6 +592,16 @@ static NEON: NeonBackend = NeonBackend;
 /// Invariant: a `Kernels` for avx2/neon only exists after the runtime
 /// feature check passed — that is the safety contract the intrinsic
 /// paths rely on.
+///
+/// ```
+/// use lspine::nce::{KernelKind, Kernels};
+///
+/// // the SWAR oracle always resolves; `Auto` resolves to the best
+/// // backend this host can actually run
+/// assert_eq!(Kernels::for_kind(KernelKind::Scalar).unwrap().name(), "scalar");
+/// let auto = Kernels::for_kind(KernelKind::Auto).unwrap();
+/// assert_ne!(auto.kind(), KernelKind::Auto);
+/// ```
 #[derive(Clone, Copy)]
 pub struct Kernels {
     be: &'static dyn KernelBackend,

@@ -173,6 +173,21 @@ impl NeuronComputeEngine {
         );
     }
 
+    /// One inter-window decay pass over a membrane slice: `v -= v >> shift`
+    /// per neuron — the same multiplier-less leak datapath as
+    /// [`super::lif::lif_update`], applied once at a stream-window
+    /// boundary (no synaptic input, no threshold: neurons cannot fire
+    /// between windows). This is the engine-side half of the streaming
+    /// [`ResetPolicy::Decay`](crate::model::engine::ResetPolicy) —
+    /// sessions that pause between windows lose context gradually
+    /// instead of by hard reset.
+    pub fn decay_membranes(v: &mut [i32], shift: u32) {
+        debug_assert!(shift < 31, "leak shift out of range");
+        for x in v.iter_mut() {
+            *x -= *x >> shift;
+        }
+    }
+
     /// Input rows that actually carried a spike in the last step
     /// (event-driven work; the rest were skipped).
     pub fn last_active_rows(&self) -> usize {
@@ -254,6 +269,19 @@ mod tests {
         assert_eq!(s.registers, 32 + 32 + 72);
         assert_eq!(s.comparator_bits, 32);
         assert_eq!(s.shifter_bits, 32);
+    }
+
+    #[test]
+    fn decay_matches_lif_leak_term() {
+        use crate::nce::lif::{lif_update, LifParams};
+        let mut v = vec![100, -100, 3, -3, 0, i32::MAX / 2];
+        let want: Vec<i32> = v
+            .iter()
+            // leak-only LIF step: zero input, threshold too high to fire
+            .map(|&x| lif_update(x, 0, LifParams::new(i32::MAX, 2)).1)
+            .collect();
+        NeuronComputeEngine::decay_membranes(&mut v, 2);
+        assert_eq!(v, want);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub struct LifParams {
 }
 
 impl LifParams {
+    /// Parameters with threshold `theta` (>= 1) and leak `>> leak_shift`.
     pub fn new(theta: i32, leak_shift: u32) -> Self {
         assert!(theta >= 1, "threshold must be positive");
         assert!(leak_shift < 31, "leak shift out of range");
@@ -134,6 +135,7 @@ pub struct AccScratch {
 }
 
 impl AccScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
     pub fn new() -> Self {
         Self::default()
     }
@@ -177,8 +179,8 @@ const I16_BLOCK_ROWS: usize = 255;
 /// Bit-exact with [`lif_step_row_unpacked`] and [`lif_step_row`] — the
 /// block sums are exact integer arithmetic, only wider-lane-count. This
 /// free function is the scalar (u64 SWAR) oracle; the runtime-selected
-/// backends route through [`lif_step_plane_accum`] with their own lane
-/// implementations (see [`super::dispatch`]).
+/// backends route through the crate-internal `lif_step_plane_accum`
+/// skeleton with their own lane implementations (see [`super::dispatch`]).
 #[allow(clippy::too_many_arguments)]
 pub fn lif_step_plane_unpacked(
     in_words: &[u64],

@@ -48,6 +48,7 @@ impl Precision {
         (-(1 << (b - 1)), (1 << (b - 1)) - 1)
     }
 
+    /// Precision from a field width (2/4/8).
     pub fn from_bits(bits: u32) -> Option<Self> {
         match bits {
             2 => Some(Precision::Int2),
@@ -57,6 +58,7 @@ impl Precision {
         }
     }
 
+    /// Display name (`INT2` / `INT4` / `INT8`).
     pub const fn name(self) -> &'static str {
         match self {
             Precision::Int2 => "INT2",

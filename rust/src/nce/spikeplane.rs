@@ -22,6 +22,18 @@
 //! always zero, so `count_ones` and the set-bit scans never need masking.
 
 /// Bit-packed binary spike storage (one bit per neuron).
+///
+/// ```
+/// use lspine::nce::SpikePlane;
+///
+/// let mut p = SpikePlane::flat(100);
+/// p.set(3);
+/// p.set(64); // second storage word
+/// assert_eq!(p.count_ones(), 2);
+/// let mut seen = Vec::new();
+/// p.for_each_set(|j| seen.push(j));
+/// assert_eq!(seen, vec![3, 64]);
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SpikePlane {
     words: Vec<u64>,
@@ -64,14 +76,17 @@ impl SpikePlane {
         self.positions * self.bits_per_pos
     }
 
+    /// True when the plane holds zero logical bits.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Word-aligned position blocks in the plane.
     pub fn positions(&self) -> usize {
         self.positions
     }
 
+    /// Logical bits per position block.
     pub fn bits_per_pos(&self) -> usize {
         self.bits_per_pos
     }
@@ -103,6 +118,7 @@ impl SpikePlane {
         &mut self.words[pos * self.stride_words..(pos + 1) * self.stride_words]
     }
 
+    /// Zero every spike (padding stays zero by construction).
     pub fn clear(&mut self) {
         self.words.fill(0);
     }

@@ -37,6 +37,7 @@ pub struct AdexCordic {
 }
 
 impl AdexCordic {
+    /// AdEx neuron with adaptation parameters `a`, `b` and CORDIC depth `iters`.
     pub fn new(a: f64, b: f64, iters: usize) -> Self {
         let mut n = Self {
             cordic: Cordic::new(iters),
@@ -61,6 +62,7 @@ impl AdexCordic {
         Self::new(0.02, 6.0, 16)
     }
 
+    /// Membrane potential in millivolts (fixed-point decoded).
     pub fn v_mv(&self) -> f64 {
         from_fix(self.v)
     }

@@ -15,7 +15,9 @@ use crate::nce::NeuronComputeEngine;
 /// One Table I comparison entry.
 #[derive(Debug, Clone)]
 pub struct NeuronDesign {
+    /// Design name as printed in Table I.
     pub name: &'static str,
+    /// Paper reference tag (e.g. `[7]`).
     pub citation: &'static str,
     /// Numbers printed in the paper (reference data).
     pub reported: FpgaRow,

@@ -26,12 +26,16 @@ fn fdiv(a: i64, b: i64) -> i64 {
 /// How the rate functions' exponentials are computed.
 #[derive(Debug, Clone)]
 pub enum ExpBackend {
+    /// exp via CORDIC hyperbolic mode (the hardware-faithful variant).
     Cordic(Cordic),
+    /// exp via base-2 decomposition (shift + small polynomial).
     Base2,
+    /// exp via a precomputed RAM lookup table.
     RamTable(Vec<i64>),
 }
 
 impl ExpBackend {
+    /// Table backend with `entries` samples of `exp(z)` over `z in [-12, 0]`.
     pub fn ram(entries: usize) -> Self {
         // table over z in [-12, 0]; index = (-z) * (entries/12)
         let tab = (0..entries)
@@ -134,6 +138,7 @@ const V_REST: f64 = -65.0;
 const DT: f64 = 0.01;
 
 impl HodgkinHuxley {
+    /// HH neuron computing its rate exponentials through `exp`.
     pub fn with_backend(exp: ExpBackend) -> Self {
         let mut hh = Self {
             exp,
@@ -163,18 +168,22 @@ impl HodgkinHuxley {
         quanta
     }
 
+    /// HH with the CORDIC exp backend (16 iterations).
     pub fn cordic() -> Self {
         Self::with_backend(ExpBackend::Cordic(Cordic::new(16)))
     }
 
+    /// HH with the base-2 exp backend.
     pub fn base2() -> Self {
         Self::with_backend(ExpBackend::Base2)
     }
 
+    /// HH with a 1024-entry RAM exp table.
     pub fn ram_table() -> Self {
         Self::with_backend(ExpBackend::ram(1024))
     }
 
+    /// Membrane potential in millivolts (fixed-point decoded).
     pub fn v_mv(&self) -> f64 {
         from_fix(self.v)
     }
@@ -386,6 +395,8 @@ mod tests {
 impl HodgkinHuxley {
     /// Debug accessors (examples/diagnostics).
     pub fn dbg_m(&self) -> i64 { self.m }
+    /// Gating variable `h` (fixed point).
     pub fn dbg_h(&self) -> i64 { self.h }
+    /// Gating variable `n` (fixed point).
     pub fn dbg_n(&self) -> i64 { self.n }
 }

@@ -18,17 +18,23 @@ const V_PEAK: f64 = 30.0;
 /// Regular-spiking parameter set (a, b, c, d) = (0.02, 0.2, -65, 8).
 #[derive(Debug, Clone, Copy)]
 pub struct IzhParams {
+    /// Recovery time scale.
     pub a: f64,
+    /// Recovery sensitivity to `v`.
     pub b: f64,
+    /// Post-spike reset potential (mV).
     pub c: f64,
+    /// Post-spike recovery increment.
     pub d: f64,
 }
 
 impl IzhParams {
+    /// The canonical regular-spiking set (0.02, 0.2, -65, 8).
     pub fn regular_spiking() -> Self {
         Self { a: 0.02, b: 0.2, c: -65.0, d: 8.0 }
     }
 
+    /// The fast-spiking set (0.1, 0.2, -65, 2).
     pub fn fast_spiking() -> Self {
         Self { a: 0.1, b: 0.2, c: -65.0, d: 2.0 }
     }
@@ -44,16 +50,19 @@ pub struct IzhikevichCordic {
 }
 
 impl IzhikevichCordic {
+    /// Izhikevich neuron multiplying through `iters`-stage CORDIC linear mode.
     pub fn new(p: IzhParams, iters: usize) -> Self {
         let mut n = Self { cordic: Cordic::new(iters), p, v: 0, u: 0 };
         n.reset();
         n
     }
 
+    /// Regular-spiking neuron at 16 CORDIC iterations.
     pub fn regular_spiking() -> Self {
         Self::new(IzhParams::regular_spiking(), 16)
     }
 
+    /// Membrane potential in millivolts (fixed-point decoded).
     pub fn v_mv(&self) -> f64 {
         crate::cordic::from_fix(self.v)
     }
@@ -107,12 +116,14 @@ pub struct IzhikevichPwl {
 }
 
 impl IzhikevichPwl {
+    /// PWL-approximated Izhikevich neuron (no multiplier at all).
     pub fn new(p: IzhParams) -> Self {
         let mut n = Self { p, v: 0, u: 0 };
         n.reset();
         n
     }
 
+    /// Regular-spiking PWL neuron.
     pub fn regular_spiking() -> Self {
         Self::new(IzhParams::regular_spiking())
     }

@@ -18,6 +18,7 @@ pub struct LifShiftAdd {
 }
 
 impl LifShiftAdd {
+    /// Shift-add LIF with float threshold `theta_fp` and leak `>> leak_shift`.
     pub fn new(theta_fp: f64, leak_shift: u32) -> Self {
         Self { v: 0, theta: to_fix(theta_fp), leak_shift }
     }
@@ -30,6 +31,7 @@ impl LifShiftAdd {
         Self::new(16.0, 2)
     }
 
+    /// Current membrane potential (fixed point).
     pub fn membrane(&self) -> i64 {
         self.v
     }

@@ -7,6 +7,7 @@ use super::workloads::Workload;
 /// One execution platform.
 #[derive(Debug, Clone, Copy)]
 pub struct Platform {
+    /// Platform name as printed in the comparison.
     pub name: &'static str,
     /// Effective sustained synaptic ops / second on SNN inference
     /// (calibrated once per platform — NOT per workload; see module docs).
@@ -45,6 +46,7 @@ pub const CPU_I7_INT8: Platform = Platform {
     power_w: 125.0,
 };
 
+/// GTX 1050Ti executing INT8 SNN inference.
 pub const GPU_1050TI_INT8: Platform = Platform {
     name: "GPU (GTX 1050Ti, INT8)",
     eff_synops_per_s: 0.70e9,
@@ -52,6 +54,7 @@ pub const GPU_1050TI_INT8: Platform = Platform {
     power_w: 75.0,
 };
 
+/// GTX 1050Ti at FP32.
 pub const GPU_1050TI_FP32: Platform = Platform {
     name: "GPU (GTX 1050Ti, FP32)",
     eff_synops_per_s: 0.135e9,
@@ -59,6 +62,7 @@ pub const GPU_1050TI_FP32: Platform = Platform {
     power_w: 75.0,
 };
 
+/// GTX 1050Ti at FP16.
 pub const GPU_1050TI_FP16: Platform = Platform {
     name: "GPU (GTX 1050Ti, FP16)",
     eff_synops_per_s: 0.137e9,
@@ -66,6 +70,7 @@ pub const GPU_1050TI_FP16: Platform = Platform {
     power_w: 75.0,
 };
 
+/// Every baseline platform, comparison order.
 pub const PLATFORMS: [Platform; 4] =
     [CPU_I7_INT8, GPU_1050TI_INT8, GPU_1050TI_FP32, GPU_1050TI_FP16];
 

@@ -9,6 +9,7 @@
 /// One benchmark network.
 #[derive(Debug, Clone, Copy)]
 pub struct Workload {
+    /// Workload name as printed in the comparison.
     pub name: &'static str,
     /// Dense multiply-accumulates for one frame (32x32x3 input).
     pub dense_macs: u64,

@@ -20,6 +20,7 @@ pub enum QuantScheme {
     Trunc,
 }
 
+/// All four schemes, in the paper's comparison order.
 pub const SCHEMES: [QuantScheme; 4] = [
     QuantScheme::LSpine,
     QuantScheme::Stbp,
@@ -28,6 +29,7 @@ pub const SCHEMES: [QuantScheme; 4] = [
 ];
 
 impl QuantScheme {
+    /// Stable lowercase name (artifact file names, manifest keys).
     pub fn name(self) -> &'static str {
         match self {
             QuantScheme::LSpine => "lspine",
@@ -37,6 +39,7 @@ impl QuantScheme {
         }
     }
 
+    /// Inverse of [`name`](Self::name).
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
             "lspine" => Some(QuantScheme::LSpine),
@@ -51,14 +54,20 @@ impl QuantScheme {
 /// A quantized 2-D weight tensor `[k][n]` plus its dequantization scale.
 #[derive(Debug, Clone)]
 pub struct QuantizedTensor {
+    /// Row-major `[k][n]` quantized values.
     pub q: Vec<i32>, // row-major [k][n]
+    /// Input rows.
     pub k: usize,
+    /// Output columns.
     pub n: usize,
+    /// Dequantization scale.
     pub scale: f32,
+    /// Field width of `q`.
     pub precision: Precision,
 }
 
 impl QuantizedTensor {
+    /// Reconstruct float weights (`q * scale`).
     pub fn dequant(&self) -> Vec<f32> {
         self.q.iter().map(|&v| v as f32 * self.scale).collect()
     }
@@ -73,6 +82,7 @@ impl QuantizedTensor {
         (out, n_words)
     }
 
+    /// Mean squared reconstruction error against the float weights `w`.
     pub fn mse(&self, w: &[f32]) -> f64 {
         w.iter()
             .zip(&self.q)

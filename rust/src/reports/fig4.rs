@@ -8,7 +8,9 @@
 use crate::model::io::Manifest;
 use crate::util::bench::Table;
 
+/// Manifest keys of the compared schemes, plot order.
 pub const SCHEME_ORDER: [&str; 4] = ["lspine", "stbp", "admm", "trunc"];
+/// Printed labels matching [`SCHEME_ORDER`].
 pub const SCHEME_LABEL: [&str; 4] =
     ["Proposed (L-SPINE)", "STBP [14]", "ADMM [15]", "Trunc [16]"];
 

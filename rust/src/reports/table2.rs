@@ -37,10 +37,15 @@ pub const REPORTED_PROPOSED: (&str, f64, f64, f64, f64) =
 
 /// Measured data for the computed row.
 pub struct Table2Measurement {
+    /// Slice LUTs, thousands.
     pub luts_k: f64,
+    /// Slice flip-flops, thousands.
     pub ffs_k: f64,
+    /// Mean per-inference latency (ms).
     pub latency_ms: f64,
+    /// Total power (W).
     pub power_w: f64,
+    /// Mean PE utilization from the cycle simulator.
     pub utilization: f64,
 }
 

@@ -51,6 +51,7 @@ fn enc_j(offset: i32, rd: u32) -> u32 {
 }
 
 impl Assembler {
+    /// Empty program.
     pub fn new() -> Self {
         Self::default()
     }
@@ -66,106 +67,136 @@ impl Assembler {
         at
     }
 
+    /// The assembled program as little-endian bytes.
     pub fn finish(self) -> Vec<u8> {
         self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
     }
 
     // --- op-imm / op ---
+    /// Emit `addi`.
     pub fn addi(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 0, rd, 0x13))
     }
+    /// Emit `andi`.
     pub fn andi(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 7, rd, 0x13))
     }
+    /// Emit `ori`.
     pub fn ori(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 6, rd, 0x13))
     }
+    /// Emit `xori`.
     pub fn xori(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 4, rd, 0x13))
     }
+    /// Emit `slti`.
     pub fn slti(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 2, rd, 0x13))
     }
+    /// Emit `slli`.
     pub fn slli(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
         self.emit(enc_r(0, shamt, rs1, 1, rd, 0x13))
     }
+    /// Emit `srli`.
     pub fn srli(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
         self.emit(enc_r(0, shamt, rs1, 5, rd, 0x13))
     }
+    /// Emit `srai`.
     pub fn srai(&mut self, rd: u32, rs1: u32, shamt: u32) -> u32 {
         self.emit(enc_r(0x20, shamt, rs1, 5, rd, 0x13))
     }
+    /// Emit `add`.
     pub fn add(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0, rs2, rs1, 0, rd, 0x33))
     }
+    /// Emit `sub`.
     pub fn sub(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0x20, rs2, rs1, 0, rd, 0x33))
     }
+    /// Emit `and`.
     pub fn and(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0, rs2, rs1, 7, rd, 0x33))
     }
+    /// Emit `or`.
     pub fn or(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0, rs2, rs1, 6, rd, 0x33))
     }
+    /// Emit `xor`.
     pub fn xor(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0, rs2, rs1, 4, rd, 0x33))
     }
+    /// Emit `sll`.
     pub fn sll(&mut self, rd: u32, rs1: u32, rs2: u32) -> u32 {
         self.emit(enc_r(0, rs2, rs1, 1, rd, 0x33))
     }
 
     // --- upper immediates ---
+    /// Emit `lui`.
     pub fn lui(&mut self, rd: u32, imm20: u32) -> u32 {
         self.emit((imm20 << 12) | (rd << 7) | 0x37)
     }
+    /// Emit `auipc`.
     pub fn auipc(&mut self, rd: u32, imm20: u32) -> u32 {
         self.emit((imm20 << 12) | (rd << 7) | 0x17)
     }
 
     // --- memory ---
+    /// Emit `lw`.
     pub fn lw(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 2, rd, 0x03))
     }
+    /// Emit `lb`.
     pub fn lb(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 0, rd, 0x03))
     }
+    /// Emit `lbu`.
     pub fn lbu(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 4, rd, 0x03))
     }
+    /// Emit `lh`.
     pub fn lh(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 1, rd, 0x03))
     }
+    /// Emit `sw`.
     pub fn sw(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
         self.emit(enc_s(imm, rs2, rs1, 2, 0x23))
     }
+    /// Emit `sb`.
     pub fn sb(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
         self.emit(enc_s(imm, rs2, rs1, 0, 0x23))
     }
+    /// Emit `sh`.
     pub fn sh(&mut self, rs1: u32, rs2: u32, imm: i32) -> u32 {
         self.emit(enc_s(imm, rs2, rs1, 1, 0x23))
     }
 
     // --- control flow (targets are absolute byte addresses) ---
+    /// Emit `beq`.
     pub fn beq(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
         let off = target as i32 - self.here() as i32;
         self.emit(enc_b(off, rs2, rs1, 0))
     }
+    /// Emit `bne`.
     pub fn bne(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
         let off = target as i32 - self.here() as i32;
         self.emit(enc_b(off, rs2, rs1, 1))
     }
+    /// Emit `blt`.
     pub fn blt(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
         let off = target as i32 - self.here() as i32;
         self.emit(enc_b(off, rs2, rs1, 4))
     }
+    /// Emit `bge`.
     pub fn bge(&mut self, rs1: u32, rs2: u32, target: u32) -> u32 {
         let off = target as i32 - self.here() as i32;
         self.emit(enc_b(off, rs2, rs1, 5))
     }
+    /// Emit `jal`.
     pub fn jal_to(&mut self, rd: u32, target: u32) -> u32 {
         let off = target as i32 - self.here() as i32;
         self.emit(enc_j(off, rd))
     }
+    /// Emit `jalr`.
     pub fn jalr(&mut self, rd: u32, rs1: u32, imm: i32) -> u32 {
         self.emit(enc_i(imm, rs1, 0, rd, 0x67))
     }
@@ -182,9 +213,11 @@ impl Assembler {
     }
 
     // --- system ---
+    /// Emit `ebreak`.
     pub fn ebreak(&mut self) -> u32 {
         self.emit(0x0010_0073)
     }
+    /// Emit `ecall`.
     pub fn ecall(&mut self) -> u32 {
         self.emit(0x0000_0073)
     }

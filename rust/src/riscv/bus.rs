@@ -15,36 +15,44 @@ pub struct Ram {
 }
 
 impl Ram {
+    /// Zero-filled RAM of `size` bytes.
     pub fn new(size: usize) -> Self {
         Self { bytes: vec![0; size] }
     }
 
+    /// Copy `data` into RAM at `addr` (program/firmware load).
     pub fn load(&mut self, addr: usize, data: &[u8]) {
         self.bytes[addr..addr + data.len()].copy_from_slice(data);
     }
 
+    /// Read one byte.
     pub fn read_u8(&self, addr: u32) -> u8 {
         self.bytes[addr as usize]
     }
 
+    /// Write one byte.
     pub fn write_u8(&mut self, addr: u32, v: u8) {
         self.bytes[addr as usize] = v;
     }
 
+    /// Read a little-endian word.
     pub fn read_u32(&self, addr: u32) -> u32 {
         let a = addr as usize;
         u32::from_le_bytes(self.bytes[a..a + 4].try_into().unwrap())
     }
 
+    /// Write a little-endian word.
     pub fn write_u32(&mut self, addr: u32, v: u32) {
         let a = addr as usize;
         self.bytes[a..a + 4].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// RAM size in bytes.
     pub fn len(&self) -> usize {
         self.bytes.len()
     }
 
+    /// True for a zero-size RAM.
     pub fn is_empty(&self) -> bool {
         self.bytes.is_empty()
     }
@@ -60,6 +68,7 @@ pub mod array_regs {
     pub const BUSY: u32 = 0x08;
     /// R: cycles consumed by the last layer run.
     pub const CYCLES_LO: u32 = 0x0C;
+    /// R: high half of the cycle counter.
     pub const CYCLES_HI: u32 = 0x10;
     /// R: spikes emitted by the last layer run.
     pub const SPIKES: u32 = 0x14;
@@ -71,6 +80,7 @@ pub mod array_regs {
 pub struct ArrayDevice {
     /// Cycle cost of each layer (set by the testbench / simulator).
     pub layer_cycles: Vec<u64>,
+    /// Spike count each layer reports (set by the testbench).
     pub layer_spikes: Vec<u32>,
     selected: usize,
     busy_polls_left: u32,
@@ -78,10 +88,12 @@ pub struct ArrayDevice {
     polls_per_kcycle: u32,
     last_cycles: u64,
     last_spikes: u32,
+    /// START writes observed (firmware-behavior assertions).
     pub starts: u32,
 }
 
 impl ArrayDevice {
+    /// Device preloaded with per-layer cycle/spike results.
     pub fn new(layer_cycles: Vec<u64>, layer_spikes: Vec<u32>) -> Self {
         Self {
             layer_cycles,
@@ -134,17 +146,22 @@ impl Device for ArrayDevice {
 
 /// The system bus: RAM at 0x0000_0000, array MMIO at 0x4000_0000.
 pub struct Bus {
+    /// RAM at address 0.
     pub ram: Ram,
+    /// NCE-array MMIO device at [`MMIO_BASE`].
     pub array: ArrayDevice,
 }
 
+/// Base address of the array's MMIO window.
 pub const MMIO_BASE: u32 = 0x4000_0000;
 
 impl Bus {
+    /// Bus over the two devices.
     pub fn new(ram: Ram, array: ArrayDevice) -> Self {
         Self { ram, array }
     }
 
+    /// Word read, routed by address.
     pub fn read_u32(&mut self, addr: u32) -> u32 {
         if addr >= MMIO_BASE {
             self.array.read(addr - MMIO_BASE)
@@ -153,6 +170,7 @@ impl Bus {
         }
     }
 
+    /// Word write, routed by address.
     pub fn write_u32(&mut self, addr: u32, v: u32) {
         if addr >= MMIO_BASE {
             self.array.write(addr - MMIO_BASE, v);
@@ -161,6 +179,7 @@ impl Bus {
         }
     }
 
+    /// Byte read, routed by address.
     pub fn read_u8(&mut self, addr: u32) -> u8 {
         if addr >= MMIO_BASE {
             (self.array.read(addr - MMIO_BASE) & 0xFF) as u8
@@ -169,6 +188,7 @@ impl Bus {
         }
     }
 
+    /// Byte write, routed by address.
     pub fn write_u8(&mut self, addr: u32, v: u8) {
         if addr >= MMIO_BASE {
             self.array.write(addr - MMIO_BASE, v as u32);
@@ -177,10 +197,12 @@ impl Bus {
         }
     }
 
+    /// Halfword read (two byte reads, little-endian).
     pub fn read_u16(&mut self, addr: u32) -> u16 {
         (self.read_u8(addr) as u16) | ((self.read_u8(addr + 1) as u16) << 8)
     }
 
+    /// Halfword write (two byte writes, little-endian).
     pub fn write_u16(&mut self, addr: u32, v: u16) {
         self.write_u8(addr, (v & 0xFF) as u8);
         self.write_u8(addr + 1, (v >> 8) as u8);

@@ -10,13 +10,17 @@ pub enum Trap {
     Break,
     /// `ecall` — host call (register a7 selects the function).
     Ecall,
+    /// Undecodable instruction word at `pc`.
     IllegalInstruction(u32),
+    /// Jump/branch target not 4-byte aligned.
     MisalignedPc(u32),
 }
 
 /// The CPU state.
 pub struct Cpu {
+    /// x0..x31 (x0 reads as zero by decode convention).
     pub regs: [u32; 32],
+    /// Program counter (byte address).
     pub pc: u32,
     /// Retired instruction count (== cycles at CPI 1).
     pub cycles: u64,
@@ -29,6 +33,7 @@ impl Default for Cpu {
 }
 
 impl Cpu {
+    /// CPU at pc 0 with zeroed registers.
     pub fn new() -> Self {
         Self { regs: [0; 32], pc: 0, cycles: 0 }
     }

@@ -26,10 +26,12 @@ impl ArtifactStore {
         Self::open("artifacts")
     }
 
+    /// The parsed manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Root directory the artifacts live in.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -59,6 +61,15 @@ impl ArtifactStore {
     /// Load the shared test dataset.
     pub fn load_test_set(&self) -> Result<Dataset> {
         io::load_dataset(self.dir.join(&self.manifest.dataset.file))
+    }
+
+    /// Load the forged streaming dataset (errors when the manifest
+    /// predates the streaming workload — reforge the artifacts).
+    pub fn load_stream_set(&self) -> Result<io::StreamData> {
+        let info = self.manifest.stream.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("no stream artifact in manifest (re-run `lspine forge`)")
+        })?;
+        io::load_stream(self.dir.join(&info.file))
     }
 
     /// Path of the HLO text artifact for (model, bits, batch).

@@ -16,14 +16,18 @@ use super::artifact::ArtifactStore;
 pub struct ModelKey {
     /// 0 encodes FP32; otherwise the integer field width.
     pub bits: u32,
+    /// Compiled batch size.
     pub batch: usize,
 }
 
 /// A compiled, ready-to-execute model graph.
 pub struct ModelExecutor {
     exe: xla::PjRtLoadedExecutable,
+    /// Pixels per sample.
     pub input_dim: usize,
+    /// Output classes.
     pub classes: usize,
+    /// Fixed batch size this executable was compiled for.
     pub batch: usize,
     /// FP32 baseline graphs emit f32 spike-count logits; integer graphs
     /// emit exact i32 counts.
@@ -119,6 +123,7 @@ pub struct ExecutorPool {
 }
 
 impl ExecutorPool {
+    /// Pool over `store` for one model (compiles executables lazily).
     pub fn new(store: ArtifactStore, model: &str) -> Result<Self> {
         let entry = store.manifest().model(model)?;
         let input_dim = entry.arch.input_dim();
@@ -134,10 +139,12 @@ impl ExecutorPool {
         })
     }
 
+    /// The backing artifact store.
     pub fn store(&self) -> &ArtifactStore {
         &self.store
     }
 
+    /// Model name this pool serves.
     pub fn model(&self) -> &str {
         &self.model
     }

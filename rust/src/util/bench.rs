@@ -10,14 +10,20 @@ use std::time::{Duration, Instant};
 /// Result of one measured benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Bench name as printed and keyed in BENCH_JSON.
     pub name: String,
+    /// Median wall-clock time per iteration.
     pub median: Duration,
+    /// 10th-percentile iteration time.
     pub p10: Duration,
+    /// 90th-percentile iteration time.
     pub p90: Duration,
+    /// Measured iterations (excluding warmup).
     pub iters: usize,
 }
 
 impl Measurement {
+    /// Median nanoseconds per iteration.
     pub fn per_iter_ns(&self) -> f64 {
         self.median.as_nanos() as f64
     }
@@ -186,6 +192,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Self {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -193,11 +200,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header's column count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render as aligned plain text (columns padded, never truncated).
     pub fn to_string(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -225,8 +234,58 @@ impl Table {
         out
     }
 
+    /// Print the plain-text rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.to_string());
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    ///
+    /// Cells are **padded to the widest entry of their column, never
+    /// truncated** — long scheme names like `Proposed (L-SPINE)` must
+    /// survive intact (regression-tested), and the raw text stays
+    /// column-aligned for humans reading it unrendered. Literal `|` in a
+    /// cell is escaped so it cannot break the row structure.
+    ///
+    /// ```
+    /// use lspine::util::bench::Table;
+    ///
+    /// let mut t = Table::new(&["Scheme", "Acc (%)"]);
+    /// t.row(&["Proposed (L-SPINE)".into(), "91.2".into()]);
+    /// let md = t.to_markdown();
+    /// assert!(md.contains("| Proposed (L-SPINE) | 91.2    |"));
+    /// assert!(md.lines().nth(1).unwrap().starts_with("|---"));
+    /// ```
+    pub fn to_markdown(&self) -> String {
+        let escape = |c: &str| c.replace('|', "\\|");
+        let header: Vec<String> = self.header.iter().map(|h| escape(h)).collect();
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| escape(c)).collect())
+            .collect();
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for row in &rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (c, w) in cells.iter().zip(widths) {
+                out.push_str(&format!("| {c:<w$} ", w = w));
+            }
+            out.push_str("|\n");
+        };
+        line(&header, &widths, &mut out);
+        for &w in &widths {
+            out.push_str(&format!("|{}", "-".repeat(w + 2)));
+        }
+        out.push_str("|\n");
+        for row in &rows {
+            line(row, &widths, &mut out);
+        }
+        out
     }
 }
 
@@ -265,6 +324,38 @@ mod tests {
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("a    "));
         assert!(lines[2].starts_with("xxx  "));
+    }
+
+    #[test]
+    fn markdown_pads_long_scheme_names_never_truncates() {
+        // regression: renderers must pad to column width, not truncate —
+        // the longest Fig. 4 label has to survive both renderings intact
+        let long = "Proposed (L-SPINE, MSE-clip + QAT refinement)";
+        let mut t = Table::new(&["Scheme", "Bits"]);
+        t.row(&[long.into(), "INT2".into()]);
+        t.row(&["STBP [14]".into(), "INT4".into()]);
+        let md = t.to_markdown();
+        let txt = t.to_string();
+        assert!(md.contains(long), "markdown truncated the scheme name:\n{md}");
+        assert!(txt.contains(long), "text table truncated the scheme name:\n{txt}");
+        // every markdown row is padded to the same rendered width
+        let lens: Vec<usize> = md.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "ragged rows: {lens:?}");
+        // and all rows keep the 3-pipe structure of a 2-column table
+        for l in md.lines() {
+            assert_eq!(l.matches('|').count(), 3, "{l}");
+        }
+    }
+
+    #[test]
+    fn markdown_escapes_pipes_and_renders_header_rule() {
+        let mut t = Table::new(&["a|b", "c"]);
+        t.row(&["x".into(), "p|q".into()]);
+        let md = t.to_markdown();
+        let mut lines = md.lines();
+        assert!(lines.next().unwrap().contains("a\\|b"));
+        assert!(lines.next().unwrap().chars().all(|c| c == '|' || c == '-'));
+        assert!(lines.next().unwrap().contains("p\\|q"));
     }
 
     #[test]

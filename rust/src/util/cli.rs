@@ -53,18 +53,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether a boolean switch (or any option) was given.
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
 
+    /// Value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -72,6 +76,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-flag) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -10,15 +10,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64, like javascript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -32,6 +39,7 @@ impl Value {
             .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -39,6 +47,7 @@ impl Value {
         }
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -46,14 +55,17 @@ impl Value {
         }
     }
 
+    /// The number as u64, if it is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    /// The number as i64, if it is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -61,6 +73,7 @@ impl Value {
         }
     }
 
+    /// The key map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),

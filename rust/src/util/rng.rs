@@ -12,11 +12,13 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded with `seed` (0 is nudged to 1 — xorshift fixpoint).
     pub fn new(seed: u64) -> Self {
         Self { state: seed.max(1) }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state ^= self.state << 13;
         self.state ^= self.state >> 7;
@@ -25,6 +27,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 32-bit output (high half of the 64-bit state).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }

@@ -1,0 +1,305 @@
+//! Streaming conformance — stateful sessions vs one-shot inference.
+//!
+//! The load-bearing contract: replaying a stream window-by-window through
+//! a `StreamSession` (engine-level swap in/out, or the full sharded
+//! serving path) is **bit-identical** to running the same windows
+//! back-to-back on a single persistent-membrane engine, for every
+//! precision and ragged window lengths — sessions, swaps, routing and
+//! interleaved traffic must add *nothing* to the dynamics. (That the
+//! dynamics themselves compose across a window split is pinned separately
+//! by `model::engine`'s compose test, which carries the encoder phase.)
+//! On top of that: reset/decay boundary policies, LRU session eviction,
+//! and session→worker affinity under `workers = 4`.
+
+use lspine::coordinator::{
+    Backend, ReqPrecision, ServerConfig, ServingEngine, StreamResponse,
+};
+use lspine::forge;
+use lspine::model::{ResetPolicy, SnnEngine};
+use lspine::runtime::ArtifactStore;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(forge::ensure_artifacts().expect("forge artifacts"))
+        .expect("forge artifacts load")
+}
+
+fn artifacts_dir_string() -> String {
+    forge::ensure_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+fn native_server(workers: usize, policy: ResetPolicy, max_sessions: usize) -> ServingEngine {
+    ServingEngine::start(ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Native,
+        workers,
+        stream_policy: policy,
+        max_sessions,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Ragged window lengths used throughout (sum = 12 steps).
+const WINDOWS: [u32; 5] = [3, 1, 5, 2, 1];
+
+#[test]
+fn stream_equals_persistent_engine_all_precisions() {
+    // Engine-level: windows through swap_state == one uninterrupted
+    // sequence of infer_window calls, for INT2/INT4/INT8 and both archs.
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    for (model, bits) in [
+        ("mlp", 2u32),
+        ("mlp", 4),
+        ("mlp", 8),
+        ("convnet", 2),
+        ("convnet", 4),
+        ("convnet", 8),
+    ] {
+        let net = s.load_network(model, "lspine", bits).unwrap();
+
+        // reference: one engine, persistent membranes, never swapped
+        let mut reference = SnnEngine::new(net.clone());
+        reference.reset();
+        let want: Vec<Vec<u32>> = WINDOWS
+            .iter()
+            .enumerate()
+            .map(|(i, &steps)| reference.infer_window(stream.frame(i), steps).to_vec())
+            .collect();
+
+        // session path: a *shared* engine that also serves unrelated
+        // traffic between this session's windows
+        let mut shared = SnnEngine::new(net);
+        let mut session = shared.fresh_state();
+        let data = s.load_test_set().unwrap();
+        let got: Vec<Vec<u32>> = WINDOWS
+            .iter()
+            .enumerate()
+            .map(|(i, &steps)| {
+                shared.swap_state(&mut session);
+                let counts = shared.infer_window(stream.frame(i), steps).to_vec();
+                shared.swap_state(&mut session);
+                shared.infer(data.sample(i)); // interleaved one-shot traffic
+                counts
+            })
+            .collect();
+        assert_eq!(got, want, "{model} INT{bits}");
+    }
+}
+
+#[test]
+fn served_stream_equals_persistent_engine_under_sharding() {
+    // Full serving path, workers = 4, two interleaved sessions with
+    // different inputs: per-window counts must equal the engine-level
+    // persistent run, bit for bit, for every precision.
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let engine = native_server(4, ResetPolicy::Hold, 64);
+    for bits in [2u32, 4, 8] {
+        let prec = ReqPrecision::parse(&bits.to_string()).unwrap();
+        let net = s.load_network("mlp", "lspine", bits).unwrap();
+        let mut reference = SnnEngine::new(net);
+
+        // session A replays frames 0.., session B replays frames 5..
+        // (different data, same worker pool, interleaved submissions)
+        let a = engine.open_stream();
+        let b = engine.open_stream();
+        reference.reset();
+        for (i, &steps) in WINDOWS.iter().enumerate() {
+            let rx_a = engine.stream_window(a, stream.frame(i), steps, prec).unwrap();
+            let rx_b = engine.stream_window(b, stream.frame(i + 5), steps, prec).unwrap();
+            let resp_a = rx_a.recv().unwrap();
+            let resp_b = rx_b.recv().unwrap();
+            let want: Vec<i32> = reference
+                .infer_window(stream.frame(i), steps)
+                .iter()
+                .map(|&c| c as i32)
+                .collect();
+            assert_eq!(resp_a.counts, want, "INT{bits} window {i}");
+            assert_eq!(resp_a.window, i as u64);
+            assert_eq!(resp_a.fresh, i == 0, "INT{bits} window {i}");
+            // B ran different frames on live state — sanity only
+            assert_eq!(resp_b.counts.len(), want.len());
+        }
+        engine.close_stream(a).unwrap();
+        engine.close_stream(b).unwrap();
+    }
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn reset_policy_makes_windows_independent() {
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let engine = native_server(2, ResetPolicy::Reset, 64);
+    let net = s.load_network("mlp", "lspine", 4).unwrap();
+    let mut fresh = SnnEngine::new(net);
+    let sid = engine.open_stream();
+    for i in 0..4 {
+        let resp = engine
+            .stream_window(sid, stream.frame(i), 4, ReqPrecision::Int4)
+            .unwrap()
+            .recv()
+            .unwrap();
+        fresh.reset();
+        let want: Vec<i32> =
+            fresh.infer_window(stream.frame(i), 4).iter().map(|&c| c as i32).collect();
+        assert_eq!(resp.counts, want, "window {i}");
+    }
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn decay_policy_applies_boundary_leak() {
+    // Serving with Decay(k) == engine-level run applying the same
+    // boundary op between windows.
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let engine = native_server(1, ResetPolicy::Decay(2), 64);
+    let net = s.load_network("mlp", "lspine", 4).unwrap();
+    let mut reference = SnnEngine::new(net);
+    reference.reset();
+    let sid = engine.open_stream();
+    for i in 0..4 {
+        let resp = engine
+            .stream_window(sid, stream.frame(i), 3, ReqPrecision::Int4)
+            .unwrap()
+            .recv()
+            .unwrap();
+        if i > 0 {
+            reference.apply_boundary(ResetPolicy::Decay(2));
+        }
+        let want: Vec<i32> =
+            reference.infer_window(stream.frame(i), 3).iter().map(|&c| c as i32).collect();
+        assert_eq!(resp.counts, want, "window {i}");
+    }
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn sessions_pin_to_workers_under_sharding() {
+    // Affinity: every window of a session executes on worker
+    // `session % workers`, across many interleaved sessions.
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let engine = native_server(4, ResetPolicy::Hold, 64);
+    let ids: Vec<u64> = (0..8).map(|_| engine.open_stream()).collect();
+    let mut seen: Vec<Vec<usize>> = vec![Vec::new(); ids.len()];
+    for f in 0..6 {
+        let rxs: Vec<_> = ids
+            .iter()
+            .map(|&sid| {
+                engine
+                    .stream_window(sid, stream.frame(f), 2, ReqPrecision::Int4)
+                    .unwrap()
+            })
+            .collect();
+        for (s_idx, rx) in rxs.into_iter().enumerate() {
+            let resp: StreamResponse = rx.recv().unwrap();
+            assert_eq!(resp.session, ids[s_idx]);
+            seen[s_idx].push(resp.worker);
+        }
+    }
+    for (s_idx, workers) in seen.iter().enumerate() {
+        let expect = (ids[s_idx] % 4) as usize;
+        assert!(
+            workers.iter().all(|&w| w == expect),
+            "session {s_idx} wandered: {workers:?} (expected worker {expect})"
+        );
+    }
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn lru_eviction_restarts_state_and_close_is_explicit() {
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    // 1 worker, pool cap 2 resident sessions
+    let engine = native_server(1, ResetPolicy::Hold, 2);
+    let run = |sid: u64, frame: usize| -> StreamResponse {
+        engine
+            .stream_window(sid, stream.frame(frame), 2, ReqPrecision::Int4)
+            .unwrap()
+            .recv()
+            .unwrap()
+    };
+    let (s1, s2, s3) = (engine.open_stream(), engine.open_stream(), engine.open_stream());
+    assert!(run(s1, 0).fresh);
+    assert!(run(s2, 0).fresh);
+    assert!(!run(s1, 1).fresh); // touch s1: s2 becomes LRU
+    assert!(run(s3, 0).fresh); // evicts s2
+    assert!(!run(s1, 2).fresh); // s1 survived
+    let r2 = run(s2, 1);
+    assert!(r2.fresh, "evicted session must restart fresh");
+    assert_eq!(r2.window, 0, "state epoch restarts the window counter");
+
+    // explicit close drops resident state: the next window is fresh
+    let r1 = run(s1, 3);
+    assert!(!r1.fresh);
+    engine.close_stream(s1).unwrap();
+    let r1b = run(s1, 4);
+    assert!(r1b.fresh, "closed session must restart fresh");
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn stream_surface_rejects_bad_requests() {
+    let engine = native_server(1, ResetPolicy::Hold, 8);
+    let sid = engine.open_stream();
+    // wrong input size
+    assert!(engine.stream_window(sid, &[0u8; 3], 2, ReqPrecision::Int4).is_err());
+    // zero-length window
+    assert!(engine.stream_window(sid, &[0u8; 256], 0, ReqPrecision::Int4).is_err());
+    // fp32 has no stateful native engine
+    assert!(engine.stream_window(sid, &[0u8; 256], 2, ReqPrecision::Fp32).is_err());
+    engine.shutdown().unwrap();
+
+    // PJRT backend cannot host sessions (submit-side error) — engine
+    // startup itself may fail without real HLO artifacts, which is fine
+    if let Ok(engine) = ServingEngine::start(ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Pjrt,
+        workers: 1,
+        ..Default::default()
+    }) {
+        let sid = engine.open_stream();
+        assert!(engine.stream_window(sid, &[0u8; 256], 2, ReqPrecision::Int4).is_err());
+        let _ = engine.shutdown();
+    }
+}
+
+#[test]
+fn stream_windows_show_up_in_metrics() {
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let engine = native_server(2, ResetPolicy::Hold, 16);
+    let sid = engine.open_stream();
+    for f in 0..3 {
+        engine
+            .stream_window(sid, stream.frame(f), 2, ReqPrecision::Int4)
+            .unwrap()
+            .recv()
+            .unwrap();
+    }
+    let m = engine.metrics();
+    assert_eq!(m.stream_windows, 3);
+    assert!(m.requests >= 3);
+    assert!(m.summary().contains("stream_windows=3"), "{}", m.summary());
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn forged_stream_artifact_is_loadable_and_labeled() {
+    let s = store();
+    let stream = s.load_stream_set().unwrap();
+    let info = s.manifest().stream.as_ref().expect("stream manifest entry");
+    assert_eq!(info.frames, stream.frames);
+    assert_eq!(info.window, stream.window);
+    assert_eq!(info.classes, stream.classes);
+    assert_eq!(stream.dim, s.manifest().dataset.input_dim);
+    assert_eq!(stream.frames % stream.window, 0);
+    assert_eq!(stream.labels.len(), stream.windows());
+    assert!(stream.labels.iter().any(|&l| l > 0), "no labeled events forged");
+}
