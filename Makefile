@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke doc clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke doc clean
 
 all: build
 
@@ -66,6 +66,24 @@ stream-smoke:
 	cat .stream_smoke.out
 	grep -Eq "nonzero_windows=[1-9][0-9]*" .stream_smoke.out
 	rm -f .stream_smoke.out
+
+# Network end-to-end smoke: boot a real TCP front end, drive 8 concurrent
+# streaming sessions through the open-loop loadgen client, assert every
+# window got a reply (ok>0, zero protocol errors), then drain the server
+# over the wire (--drain sends the Drain frame; the serve process exits
+# on its own once the front end finishes flushing).
+loadgen-smoke:
+	cd rust && $(CARGO) build --release
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+	cd rust && \
+	( ./target/release/lspine serve --backend native --listen 127.0.0.1:17317 --workers 2 > ../.loadgen_serve.out 2>&1 & ) && \
+	./target/release/lspine loadgen --connect 127.0.0.1:17317 --sessions 8 --windows 4 --drain --retry-secs 20 > ../.loadgen_smoke.out || (cat ../.loadgen_smoke.out ../.loadgen_serve.out; exit 1)
+	cat .loadgen_smoke.out
+	grep -Eq "ok=[1-9]" .loadgen_smoke.out
+	grep -Eq "protocol_errors=0" .loadgen_smoke.out
+	grep -Eq "lost=0" .loadgen_smoke.out
+	cat .loadgen_serve.out
+	rm -f .loadgen_smoke.out .loadgen_serve.out
 
 # The documented-API gate, same flags as the CI docs job.
 doc:

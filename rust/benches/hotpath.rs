@@ -20,6 +20,9 @@
 //! - cycle-simulator throughput
 //! - serving-engine round trip (batcher + channel overhead) and the
 //!   sharded-pool throughput sweep over workers=1/2/4 (§Perf P6)
+//! - the network loadgen sweep: a real TCP front end driven by the
+//!   open-loop client at sessions=16/256/4096 (wire protocol + socket
+//!   overhead on top of the in-process numbers above)
 
 use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
@@ -331,6 +334,63 @@ fn main() {
                 ],
             );
             engine.shutdown().unwrap();
+        }
+    }
+
+    // --- network loadgen sweep (TCP wire protocol, open-loop) ---
+    // A real listening front end plus the in-tree loadgen client: N
+    // concurrent streaming sessions multiplexed over the connection
+    // pool, constant-rate open-loop arrivals sized so every sweep point
+    // offers its whole schedule in ~2 s regardless of N. Backpressure
+    // shows up as typed reject frames (the `rejected` field), never as
+    // errors; the row reports delivered req/s and the client-observed
+    // p50/p99/p999 + time-to-first-prediction.
+    println!("network loadgen sweep (TCP front end, mlp INT4):");
+    {
+        use lspine::coordinator::{loadgen, TcpFrontend};
+        use std::sync::Arc;
+        let windows = sample_count(8, 2);
+        for sessions in [16usize, 256, 4096] {
+            let engine = Arc::new(
+                ServingEngine::start(ServerConfig {
+                    artifacts_dir: dir.to_string_lossy().into_owned(),
+                    model: "mlp".into(),
+                    backend: Backend::Native,
+                    max_sessions: sessions,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+            let fe = TcpFrontend::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+            let cfg = loadgen::LoadgenConfig {
+                addr: fe.local_addr().to_string(),
+                sessions,
+                windows,
+                steps: 2,
+                rate: windows as f64 / 2.0,
+                seed: 42,
+                ..Default::default()
+            };
+            let r = loadgen::run(&cfg).unwrap();
+            println!("  {}", r.summary());
+            emit_json_scalar_with(
+                SUITE,
+                &format!("loadgen sessions={sessions}"),
+                Some(Kernels::from_env().name()),
+                &[
+                    ("req_per_s", r.req_per_s()),
+                    ("p50_us", r.latency.quantile_us(0.5) as f64),
+                    ("p99_us", r.latency.quantile_us(0.99) as f64),
+                    ("p999_us", r.latency.quantile_us(0.999) as f64),
+                    ("ttfp_p50_us", r.ttfp.quantile_us(0.5) as f64),
+                    ("rejected", r.rejected as f64),
+                    ("protocol_errors", r.protocol_errors as f64),
+                ],
+            );
+            fe.shutdown().unwrap();
+            if let Ok(e) = Arc::try_unwrap(engine) {
+                e.shutdown().unwrap();
+            }
         }
     }
 }

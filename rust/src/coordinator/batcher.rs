@@ -99,23 +99,31 @@ impl DynamicBatcher {
         idle: bool,
         cap: usize,
     ) -> Option<(Precision, Vec<InferRequest>)> {
-        // full batches first (throughput), then expired partials (latency)
-        let mut candidate: Option<usize> = None;
-        for (i, (_, q)) in self.queues.iter().enumerate() {
-            if q.len() >= self.cfg.max_batch {
-                candidate = Some(i);
-                break;
-            }
-        }
+        // Full batches first (throughput), then expired partials
+        // (latency). Ties in *both* tiers break on the oldest front
+        // request, never on queue index: the old index-0-first scan
+        // (Int2 before Int4 before Int8) starved an expired Int8 partial
+        // indefinitely under sustained Int2 load — every pass found the
+        // Int2 queue first and the Int8 front aged without bound
+        // (regression-tested below).
+        let oldest = |pred: &dyn Fn(&VecDeque<InferRequest>) -> bool| -> Option<usize> {
+            self.queues
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, q))| pred(q))
+                .filter_map(|(i, (_, q))| q.front().map(|f| (i, f.enqueued)))
+                .min_by_key(|&(_, enqueued)| enqueued)
+                .map(|(i, _)| i)
+        };
+        let max_batch = self.cfg.max_batch;
+        let max_wait = self.cfg.max_wait;
+        let mut candidate = oldest(&|q: &VecDeque<InferRequest>| q.len() >= max_batch);
         if candidate.is_none() {
-            for (i, (_, q)) in self.queues.iter().enumerate() {
-                if let Some(front) = q.front() {
-                    if idle || now.duration_since(front.enqueued) >= self.cfg.max_wait {
-                        candidate = Some(i);
-                        break;
-                    }
-                }
-            }
+            candidate = oldest(&|q: &VecDeque<InferRequest>| {
+                q.front().is_some_and(|front| {
+                    idle || now.duration_since(front.enqueued) >= max_wait
+                })
+            });
         }
         let i = candidate?;
         let (prec, q) = &mut self.queues[i];
@@ -228,6 +236,65 @@ mod tests {
         b.push(req(9, Precision::Int2, t0));
         let (_, one) = b.next_batch_idle_capped(t0, 0).unwrap();
         assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn expired_partial_oldest_front_wins() {
+        // regression: the scan always started at index 0 (Int2 first),
+        // so with two expired partials the younger Int2 one preempted
+        // the older Int8 one on every single pass.
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut b = DynamicBatcher::new(cfg);
+        let t0 = Instant::now();
+        b.push(req(0, Precision::Int8, t0)); // oldest — must go first
+        b.push(req(1, Precision::Int2, t0 + Duration::from_millis(1)));
+        let now = t0 + Duration::from_millis(10); // both expired
+        let (p, batch) = b.next_batch(now).expect("expired partial ready");
+        assert_eq!(p, Precision::Int8, "oldest expired front must win");
+        assert_eq!(batch[0].id, 0);
+        let (p, _) = b.next_batch(now).expect("the Int2 partial follows");
+        assert_eq!(p, Precision::Int2);
+    }
+
+    #[test]
+    fn sustained_int2_load_does_not_starve_int8() {
+        // regression: open-loop Int2 traffic where every dispatcher pass
+        // finds a fresh already-expired Int2 request. The old index-0
+        // scan served Int2 on every call and the Int8 partial aged
+        // without bound; oldest-front selection serves it on pass one.
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut b = DynamicBatcher::new(cfg);
+        let t0 = Instant::now();
+        b.push(req(0, Precision::Int8, t0));
+        let mut now = t0 + Duration::from_millis(10);
+        let mut served_int8 = false;
+        for i in 1..=10u64 {
+            // a new Int2 request that is already past max_wait on arrival
+            b.push(req(i, Precision::Int2, now - Duration::from_millis(6)));
+            if let Some((p, _)) = b.next_batch(now) {
+                if p == Precision::Int8 {
+                    served_int8 = true;
+                    break;
+                }
+            }
+            now += Duration::from_millis(1);
+        }
+        assert!(served_int8, "Int8 partial starved under sustained Int2 load");
+    }
+
+    #[test]
+    fn full_batch_tier_also_prefers_oldest_front() {
+        // two simultaneously full queues: the one whose front waited
+        // longest dispatches first (no fixed precision priority).
+        let cfg = BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) };
+        let mut b = DynamicBatcher::new(cfg);
+        let t0 = Instant::now();
+        b.push(req(0, Precision::Int8, t0));
+        b.push(req(1, Precision::Int2, t0 + Duration::from_millis(1)));
+        b.push(req(2, Precision::Int2, t0 + Duration::from_millis(1)));
+        b.push(req(3, Precision::Int8, t0 + Duration::from_millis(2)));
+        let (p, _) = b.next_batch(t0 + Duration::from_millis(3)).unwrap();
+        assert_eq!(p, Precision::Int8, "older full-batch front dispatches first");
     }
 
     #[test]

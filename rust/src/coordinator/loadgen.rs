@@ -1,0 +1,633 @@
+//! Open-loop load generator for the TCP wire protocol.
+//!
+//! Drives N concurrent streaming sessions against a [`super::tcp`]
+//! server over real sockets: sessions are multiplexed across a bounded
+//! connection pool (the protocol is pipelined and tagged, so many
+//! sessions share one connection), windows are injected **open-loop** —
+//! send times come from the arrival schedule, not from response times,
+//! so a slow server accumulates queueing delay instead of silently
+//! throttling the offered load (the closed-loop trap that makes
+//! overloaded systems look fine).
+//!
+//! Three arrival processes per session ([`Arrival`]): constant-rate,
+//! bursts of 8, and a heavy-tailed Pareto(α = 1.5) gap distribution with
+//! the same 1/rate mean — the tail process is what exposes batcher
+//! starvation and admission-control behaviour. Scheduling is
+//! deterministic per `seed`.
+//!
+//! The [`LoadgenReport`] carries client-observed latency quantiles
+//! (p50/p99/p999), time-to-first-prediction per session, typed-reject
+//! and eviction counts, plus the server's own [`WireMetrics`] snapshot
+//! read after the run.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::LatencyHistogram;
+use super::request::Precision;
+use super::session::EncoderKind;
+use super::wire::{self, ErrorCode, Request, Response, WireMetrics, HEADER_LEN};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Per-session arrival process of the open-loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// One window every `1/rate` seconds.
+    Constant,
+    /// Back-to-back bursts of 8 windows, bursts spaced to keep the mean
+    /// rate.
+    Burst,
+    /// Pareto(α = 1.5) inter-arrival gaps with mean `1/rate` (capped at
+    /// `50/rate` so a single tail sample cannot stall the schedule).
+    HeavyTail,
+}
+
+impl Arrival {
+    /// Parse the CLI surface: `constant` / `burst` / `heavy-tail`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" => Some(Arrival::Constant),
+            "burst" => Some(Arrival::Burst),
+            "heavy-tail" | "heavytail" | "pareto" => Some(Arrival::HeavyTail),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Arrival::Constant => "constant",
+            Arrival::Burst => "burst",
+            Arrival::HeavyTail => "heavy-tail",
+        }
+    }
+
+    /// Send offset of window `w` of one session, in seconds from the run
+    /// start (deterministic given the session's `rng`).
+    fn offset(self, w: usize, rate: f64, prev: f64, rng: &mut Rng) -> f64 {
+        match self {
+            Arrival::Constant => w as f64 / rate,
+            Arrival::Burst => (w / 8) as f64 * (8.0 / rate),
+            Arrival::HeavyTail => {
+                if w == 0 {
+                    return 0.0;
+                }
+                // Pareto(α, xm) with mean α·xm/(α-1) = 1/rate
+                const ALPHA: f64 = 1.5;
+                let xm = 1.0 / (3.0 * rate);
+                let u = (1.0 - rng.f64()).max(1e-12);
+                let gap = (xm * u.powf(-1.0 / ALPHA)).min(50.0 / rate);
+                prev + gap
+            }
+        }
+    }
+}
+
+/// Load-generator configuration (see `lspine loadgen --help` surface).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7317`.
+    pub addr: String,
+    /// Concurrent streaming sessions to drive.
+    pub sessions: usize,
+    /// Windows per session.
+    pub windows: usize,
+    /// Timesteps per window.
+    pub steps: u32,
+    /// Execution precision of every window.
+    pub precision: Precision,
+    /// Spike coding of every session.
+    pub encoder: EncoderKind,
+    /// Target per-session window rate (windows/second).
+    pub rate: f64,
+    /// Arrival process.
+    pub arrival: Arrival,
+    /// Connection-pool size (0 = `min(sessions, 64)`).
+    pub conns: usize,
+    /// Schedule seed (same seed → same schedule and pixels).
+    pub seed: u64,
+    /// Send a `Drain` frame after the run (graceful server stop).
+    pub drain: bool,
+    /// Keep retrying the first connect for this long (lets the generator
+    /// start before the server finishes loading artifacts).
+    pub connect_retry: Duration,
+    /// Extra time after the schedule ends to collect straggler replies.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7317".into(),
+            sessions: 16,
+            windows: 8,
+            steps: 4,
+            precision: Precision::Int4,
+            encoder: EncoderKind::Rate,
+            rate: 50.0,
+            arrival: Arrival::Constant,
+            conns: 0,
+            seed: 1,
+            drain: false,
+            connect_retry: Duration::from_secs(5),
+            timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What one load-generation run observed.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Sessions driven.
+    pub sessions: usize,
+    /// Connections used.
+    pub conns: usize,
+    /// Windows sent.
+    pub sent: u64,
+    /// Windows answered with a prediction.
+    pub ok: u64,
+    /// Windows answered with a typed reject (backpressure or draining).
+    pub rejected: u64,
+    /// Windows answered with a typed eviction error (state lost).
+    pub evicted: u64,
+    /// Windows never answered before the collection deadline.
+    pub lost: u64,
+    /// Unexpected frames / framing failures (must be 0 on a healthy run).
+    pub protocol_errors: u64,
+    /// Wall-clock of the whole run (first send to last reply).
+    pub elapsed: Duration,
+    /// Client-observed per-window latency (send → reply).
+    pub latency: LatencyHistogram,
+    /// Per-session time-to-first-prediction (first send → first reply).
+    pub ttfp: LatencyHistogram,
+    /// The server's own metrics snapshot after the run.
+    pub server: Option<WireMetrics>,
+}
+
+impl LoadgenReport {
+    /// Answered windows per second over the run.
+    pub fn req_per_s(&self) -> f64 {
+        let dt = self.elapsed.as_secs_f64();
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / dt
+    }
+
+    /// One-line machine-greppable summary (`loadgen-smoke` keys on
+    /// `ok=` and `protocol_errors=`).
+    pub fn summary(&self) -> String {
+        format!(
+            "loadgen sessions={} conns={} sent={} ok={} rejected={} evicted={} \
+             lost={} protocol_errors={} req_per_s={:.0} p50_us={} p99_us={} \
+             p999_us={} max_us={} ttfp_p50_us={}",
+            self.sessions,
+            self.conns,
+            self.sent,
+            self.ok,
+            self.rejected,
+            self.evicted,
+            self.lost,
+            self.protocol_errors,
+            self.req_per_s(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.99),
+            self.latency.quantile_us(0.999),
+            self.latency.max_us(),
+            self.ttfp.quantile_us(0.5),
+        )
+    }
+}
+
+/// One scheduled send.
+struct Event {
+    at: Duration,
+    /// Index into the connection's local session list.
+    slot: usize,
+}
+
+/// What the reader still owes an answer: send time and session slot.
+struct Pending {
+    sent: Instant,
+    slot: usize,
+}
+
+/// Per-connection tallies folded into the final report.
+#[derive(Default)]
+struct Tally {
+    sent: u64,
+    ok: u64,
+    rejected: u64,
+    evicted: u64,
+    protocol_errors: u64,
+    received: u64,
+    latency: LatencyHistogram,
+    ttfp: LatencyHistogram,
+}
+
+/// Run one load-generation campaign and block until it completes.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.sessions >= 1, "need at least one session");
+    anyhow::ensure!(cfg.windows >= 1, "need at least one window per session");
+    anyhow::ensure!(cfg.rate > 0.0, "rate must be positive");
+    let n_conns = if cfg.conns == 0 { cfg.sessions.min(64) } else { cfg.conns.min(cfg.sessions) };
+
+    // control connection: fetch the model's input dim (retrying while the
+    // server is still starting), reused later for metrics + drain
+    let mut control = connect_retry(&cfg.addr, cfg.connect_retry)?;
+    send_frame(&mut control, &wire::encode_request(0, &Request::Info))?;
+    let info = match read_response(&mut control, Instant::now() + cfg.timeout)? {
+        Some((_, Response::Info(i))) => i,
+        other => anyhow::bail!("expected Info response, got {other:?}"),
+    };
+    let dim = info.input_dim as usize;
+
+    // partition sessions round-robin across the pool and run each
+    // connection's sender/reader pair
+    let mut handles = Vec::with_capacity(n_conns);
+    for c in 0..n_conns {
+        let sessions_here: Vec<usize> =
+            (c..cfg.sessions).step_by(n_conns).collect();
+        let cfg = cfg.clone();
+        handles.push(std::thread::Builder::new().name(format!("loadgen-{c}")).spawn(
+            move || run_conn(&cfg, c, sessions_here, dim),
+        )?);
+    }
+    let t0 = Instant::now();
+    let mut total = Tally::default();
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(t)) => {
+                total.sent += t.sent;
+                total.ok += t.ok;
+                total.rejected += t.rejected;
+                total.evicted += t.evicted;
+                total.protocol_errors += t.protocol_errors;
+                total.received += t.received;
+                total.latency.merge(&t.latency);
+                total.ttfp.merge(&t.ttfp);
+            }
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("loadgen thread panicked"));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let elapsed = t0.elapsed();
+
+    // server-side snapshot, then optionally drain it
+    send_frame(&mut control, &wire::encode_request(1, &Request::Metrics))?;
+    let server = match read_response(&mut control, Instant::now() + cfg.timeout)? {
+        Some((_, Response::Metrics(m))) => Some(m),
+        _ => None,
+    };
+    if cfg.drain {
+        send_frame(&mut control, &wire::encode_request(2, &Request::Drain))?;
+        let _ = read_response(&mut control, Instant::now() + cfg.timeout); // DrainAck
+    }
+
+    Ok(LoadgenReport {
+        sessions: cfg.sessions,
+        conns: n_conns,
+        sent: total.sent,
+        ok: total.ok,
+        rejected: total.rejected,
+        evicted: total.evicted,
+        lost: total.sent.saturating_sub(total.received),
+        protocol_errors: total.protocol_errors,
+        elapsed,
+        latency: total.latency,
+        ttfp: total.ttfp,
+        server,
+    })
+}
+
+/// Drive one connection: open its sessions, then split into an open-loop
+/// sender and a tallying reader.
+fn run_conn(
+    cfg: &LoadgenConfig,
+    conn_index: usize,
+    session_indices: Vec<usize>,
+    dim: usize,
+) -> Result<Tally> {
+    let mut stream = TcpStream::connect(&cfg.addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+
+    // synchronous handshake: open every session this connection owns
+    for i in 0..session_indices.len() {
+        send_frame(&mut stream, &wire::encode_request(i as u64, &Request::StreamOpen))?;
+    }
+    let open_deadline = Instant::now() + cfg.timeout;
+    let mut opened: HashMap<u64, u64> = HashMap::new();
+    while opened.len() < session_indices.len() {
+        match read_response(&mut stream, open_deadline)? {
+            Some((tag, Response::StreamOpened { session })) => {
+                opened.insert(tag, session);
+            }
+            other => anyhow::bail!("conn {conn_index}: expected StreamOpened, got {other:?}"),
+        }
+    }
+    let session_ids: Vec<u64> =
+        (0..session_indices.len()).map(|i| opened[&(i as u64)]).collect();
+
+    // deterministic merged schedule across this connection's sessions
+    let mut events: Vec<Event> = Vec::with_capacity(session_indices.len() * cfg.windows);
+    let mut rngs: Vec<Rng> = Vec::with_capacity(session_indices.len());
+    for (slot, &global) in session_indices.iter().enumerate() {
+        let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ (global as u64 + 1));
+        let mut prev = 0.0f64;
+        for w in 0..cfg.windows {
+            prev = cfg.arrival.offset(w, cfg.rate, prev, &mut rng);
+            events.push(Event { at: Duration::from_secs_f64(prev), slot });
+        }
+        rngs.push(rng);
+    }
+    events.sort_by_key(|e| (e.at, e.slot));
+    let schedule_end = events.last().map(|e| e.at).unwrap_or_default();
+    let expected = events.len() as u64;
+
+    let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
+    let first_sent: Arc<Mutex<Vec<Option<Instant>>>> =
+        Arc::new(Mutex::new(vec![None; session_indices.len()]));
+
+    // reader: tally typed responses until all answers arrive or the
+    // deadline passes (open-loop — it never gates the sender)
+    let read_half = stream.try_clone()?;
+    let t0 = Instant::now();
+    let deadline = t0 + schedule_end + cfg.timeout;
+    let reader = {
+        let pending = Arc::clone(&pending);
+        let first_sent = Arc::clone(&first_sent);
+        std::thread::Builder::new().name(format!("loadgen-rd-{conn_index}")).spawn(
+            move || reader_loop(read_half, pending, first_sent, expected, deadline),
+        )?
+    };
+
+    // sender: inject windows at their scheduled offsets
+    let mut sent = 0u64;
+    let mut next_tag = 1_000_000u64; // clear of the handshake tags
+    let mut pixels = vec![0u8; dim];
+    for ev in &events {
+        let target = t0 + ev.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let rng = &mut rngs[ev.slot];
+        for b in pixels.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let tag = next_tag;
+        next_tag += 1;
+        let sent_at = Instant::now();
+        {
+            let mut fs = first_sent.lock().unwrap();
+            if fs[ev.slot].is_none() {
+                fs[ev.slot] = Some(sent_at);
+            }
+        }
+        pending.lock().unwrap().insert(tag, Pending { sent: sent_at, slot: ev.slot });
+        let frame = wire::encode_request(
+            tag,
+            &Request::StreamWindow {
+                session: session_ids[ev.slot],
+                steps: cfg.steps,
+                precision: cfg.precision,
+                encoder: cfg.encoder,
+                pixels: pixels.clone(),
+            },
+        );
+        if send_frame(&mut stream, &frame).is_err() {
+            break; // server gone: the reader tallies what it can
+        }
+        sent += 1;
+    }
+
+    let mut tally = reader
+        .join()
+        .map_err(|_| anyhow::anyhow!("loadgen reader panicked"))??;
+    tally.sent = sent;
+    Ok(tally)
+}
+
+/// Tally one connection's responses until `expected` answers arrive, the
+/// deadline passes, or the server disconnects.
+fn reader_loop(
+    mut stream: TcpStream,
+    pending: Arc<Mutex<HashMap<u64, Pending>>>,
+    first_sent: Arc<Mutex<Vec<Option<Instant>>>>,
+    expected: u64,
+    deadline: Instant,
+) -> Result<Tally> {
+    let mut t = Tally::default();
+    let mut ttfp_done: Vec<bool> = vec![false; first_sent.lock().unwrap().len()];
+    while t.received < expected {
+        let (tag, resp) = match read_response(&mut stream, deadline) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,        // server closed the connection
+            Err(e) => {
+                if e.to_string().contains("deadline") {
+                    break; // stragglers become `lost`
+                }
+                t.protocol_errors += 1; // framing broke: cannot resync
+                break;
+            }
+        };
+        let now = Instant::now();
+        let p = pending.lock().unwrap().remove(&tag);
+        let Some(p) = p else {
+            t.protocol_errors += 1;
+            continue;
+        };
+        t.received += 1;
+        if !ttfp_done[p.slot] {
+            ttfp_done[p.slot] = true;
+            if let Some(fs) = first_sent.lock().unwrap()[p.slot] {
+                t.ttfp.record(now.duration_since(fs));
+            }
+        }
+        match resp {
+            Response::Window { .. } => {
+                t.ok += 1;
+                t.latency.record(now.duration_since(p.sent));
+            }
+            Response::Error { code: ErrorCode::Rejected, .. }
+            | Response::Error { code: ErrorCode::Draining, .. } => t.rejected += 1,
+            Response::Error { code: ErrorCode::Evicted, .. } => t.evicted += 1,
+            _ => t.protocol_errors += 1,
+        }
+    }
+    Ok(t)
+}
+
+/// Connect, retrying for `patience` (covers a server still loading).
+fn connect_retry(addr: &str, patience: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + patience;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                s.set_read_timeout(Some(Duration::from_millis(50)))?;
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow::anyhow!("connect {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn send_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
+    stream.write_all(frame)?;
+    Ok(())
+}
+
+/// Read one response frame; `Ok(None)` on clean EOF, error on framing
+/// failure or when `deadline` passes (message contains "deadline").
+fn read_response(
+    stream: &mut TcpStream,
+    deadline: Instant,
+) -> Result<Option<(u64, Response)>> {
+    let mut hdr = [0u8; HEADER_LEN];
+    if !read_exact_deadline(stream, &mut hdr, deadline)? {
+        return Ok(None);
+    }
+    let header = wire::decode_header(&hdr)?;
+    let mut body = vec![0u8; header.body_len as usize];
+    if !read_exact_deadline(stream, &mut body, deadline)? {
+        anyhow::bail!("disconnect mid-frame");
+    }
+    let resp = wire::decode_response(header.kind, &body)?;
+    Ok(Some((header.tag, resp)))
+}
+
+/// Fill `buf` from the socket; `Ok(false)` on EOF before the first byte.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(false);
+                }
+                anyhow::bail!("disconnect mid-frame");
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("deadline waiting for a response frame");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_parsing() {
+        assert_eq!(Arrival::parse("constant"), Some(Arrival::Constant));
+        assert_eq!(Arrival::parse("BURST"), Some(Arrival::Burst));
+        assert_eq!(Arrival::parse("heavy-tail"), Some(Arrival::HeavyTail));
+        assert_eq!(Arrival::parse("pareto"), Some(Arrival::HeavyTail));
+        assert_eq!(Arrival::parse("poisson"), None);
+        assert_eq!(Arrival::HeavyTail.name(), "heavy-tail");
+    }
+
+    #[test]
+    fn constant_schedule_is_evenly_spaced() {
+        let mut rng = Rng::new(1);
+        let a = Arrival::Constant;
+        assert_eq!(a.offset(0, 10.0, 0.0, &mut rng), 0.0);
+        assert_eq!(a.offset(3, 10.0, 0.0, &mut rng), 0.3);
+    }
+
+    #[test]
+    fn burst_schedule_groups_of_eight() {
+        let mut rng = Rng::new(1);
+        let a = Arrival::Burst;
+        for w in 0..8 {
+            assert_eq!(a.offset(w, 10.0, 0.0, &mut rng), 0.0, "window {w}");
+        }
+        assert_eq!(a.offset(8, 10.0, 0.0, &mut rng), 0.8);
+        assert_eq!(a.offset(17, 10.0, 0.0, &mut rng), 1.6);
+    }
+
+    #[test]
+    fn heavy_tail_gaps_positive_capped_and_deterministic() {
+        let rate = 20.0;
+        let mut prev = 0.0;
+        let mut rng = Rng::new(7);
+        let mut offsets = Vec::new();
+        for w in 0..200 {
+            let next = Arrival::HeavyTail.offset(w, rate, prev, &mut rng);
+            assert!(next >= prev, "schedule must be monotone");
+            assert!(next - prev <= 50.0 / rate + 1e-9, "gap cap violated");
+            offsets.push(next);
+            prev = next;
+        }
+        // same seed → same schedule
+        let mut prev2 = 0.0;
+        let mut rng2 = Rng::new(7);
+        for (w, &o) in offsets.iter().enumerate() {
+            prev2 = Arrival::HeavyTail.offset(w, rate, prev2, &mut rng2);
+            assert_eq!(prev2, o);
+        }
+        // mean gap should be in the ballpark of 1/rate (loose bound: the
+        // cap trims the tail, so the mean lands a little under 1/rate)
+        let mean = prev / 199.0;
+        assert!(mean > 0.2 / rate && mean < 3.0 / rate, "mean gap {mean}");
+    }
+
+    #[test]
+    fn report_summary_is_greppable() {
+        let r = LoadgenReport {
+            sessions: 8,
+            conns: 4,
+            sent: 64,
+            ok: 60,
+            rejected: 4,
+            evicted: 0,
+            lost: 0,
+            protocol_errors: 0,
+            elapsed: Duration::from_secs(2),
+            latency: LatencyHistogram::new(),
+            ttfp: LatencyHistogram::new(),
+            server: None,
+        };
+        let s = r.summary();
+        assert!(s.contains("ok=60"), "{s}");
+        assert!(s.contains("protocol_errors=0"), "{s}");
+        assert!(s.contains("rejected=4"), "{s}");
+        assert_eq!(r.req_per_s(), 30.0);
+    }
+}

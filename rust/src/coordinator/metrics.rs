@@ -65,7 +65,13 @@ impl LatencyHistogram {
         self.max_us
     }
 
-    /// Approximate quantile (upper edge of the containing bucket).
+    /// Approximate quantile: the *inclusive* upper edge of the containing
+    /// bucket, clamped to [`max_us`](Self::max_us).
+    ///
+    /// The clamp keeps the estimate honest: a histogram holding a single
+    /// 100 µs sample must report `p50 = 100`, not the 128 µs edge of the
+    /// `[64, 127]` bucket — a quantile can never exceed the observed
+    /// maximum (regression-tested).
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -75,7 +81,9 @@ impl LatencyHistogram {
         for (b, &n) in self.buckets.iter().enumerate() {
             seen += n;
             if seen >= target {
-                return 1u64 << (b + 1); // bucket upper edge
+                // bucket b holds [2^b, 2^(b+1) - 1]
+                let edge = (1u64 << (b + 1)) - 1;
+                return edge.min(self.max_us);
             }
         }
         self.max_us
@@ -162,7 +170,7 @@ impl Metrics {
         format!(
             "requests={} ({:.0} req/s) batches={} mean_batch={:.2} \
              stream_windows={} rejected={} \
-             latency mean={:.0}us p50<={}us p95<={}us p99<={}us max={}us",
+             latency mean={:.0}us p50<={}us p95<={}us p99<={}us p999<={}us max={}us",
             self.requests,
             self.req_per_s(),
             self.batches,
@@ -173,6 +181,7 @@ impl Metrics {
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.95),
             self.latency.quantile_us(0.99),
+            self.latency.quantile_us(0.999),
             self.latency.max_us()
         )
     }
@@ -202,6 +211,35 @@ mod tests {
         h.record(Duration::from_micros(100));
         // p100 upper edge must be >= the recorded value
         assert!(h.quantile_us(1.0) >= 100);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max() {
+        // regression: the old code returned the bucket's exclusive upper
+        // edge (1 << (b+1)), so one 100 µs sample reported p50 = 128 µs
+        // while max = 100 µs — a quantile above the maximum.
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.max_us(), 100);
+        assert_eq!(h.quantile_us(0.5), 100);
+        assert_eq!(h.quantile_us(0.99), 100);
+        assert_eq!(h.quantile_us(1.0), 100);
+        // with a second, smaller sample the p50 comes from the [16, 31]
+        // bucket's *inclusive* edge (old code: exclusive 32) and still
+        // stays below max
+        h.record(Duration::from_micros(30));
+        let p50 = h.quantile_us(0.5);
+        assert_eq!(p50, 31, "inclusive edge of the [16, 31] bucket");
+        assert!(p50 <= h.max_us());
+        for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert!(h.quantile_us(q) <= h.max_us(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn p999_reported_in_summary() {
+        let m = Metrics::new();
+        assert!(m.summary().contains("p999<="), "{}", m.summary());
     }
 
     #[test]

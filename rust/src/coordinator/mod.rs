@@ -29,18 +29,31 @@
 //! (`ServerConfig::max_sessions` across the pool) and applies the
 //! configured window-boundary [`crate::model::ResetPolicy`].
 //!
+//! The engine is network-attachable: [`wire`] defines the length-prefixed
+//! binary frame protocol (typed error codes, pipelined tags), [`tcp`]
+//! serves it over real sockets with graceful drain, and [`loadgen`] is
+//! the open-loop client harness that drives hundreds of concurrent
+//! streaming sessions against a listening server and reports
+//! p50/p99/p999 + time-to-first-prediction.
+//!
 //! std threads + channels (tokio is unavailable offline); the hot path is
 //! allocation-light and the queue is the bounded [`crate::array::RingFifo`].
 
 pub mod batcher;
 pub mod firmware;
+pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod server;
 pub mod session;
+pub mod tcp;
+pub mod wire;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use loadgen::{Arrival, LoadgenConfig, LoadgenReport};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use request::{InferRequest, InferResponse, Precision as ReqPrecision};
 pub use server::{default_workers, Backend, ServerConfig, ServingEngine};
 pub use session::{EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession};
+pub use tcp::TcpFrontend;
+pub use wire::{ErrorCode, WireError, WireInfo, WireMetrics};

@@ -77,6 +77,13 @@ pub struct InferResponse {
     pub latency_us: u64,
     /// How many requests shared the executed batch.
     pub batch_size: usize,
+    /// True when admission control rejected the request at ingest (queue
+    /// over capacity): no inference ran and `prediction`/`counts` carry
+    /// no information. Backpressure is *typed* — a rejected request
+    /// still gets a reply (the wire front end maps it to an
+    /// `ERR_REJECTED` frame) instead of a silently dropped channel; a
+    /// closed reply channel now only means engine/worker failure.
+    pub rejected: bool,
 }
 
 #[cfg(test)]

@@ -131,6 +131,8 @@ pub struct ServingEngine {
     next_id: AtomicU64,
     next_session: AtomicU64,
     input_dim: usize,
+    classes: usize,
+    max_sessions: usize,
     backend: Backend,
 }
 
@@ -139,7 +141,9 @@ impl ServingEngine {
     /// per `cfg.workers`, each loading its own backend from the artifacts.
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
-        let input_dim = store.manifest().model(&cfg.model)?.arch.input_dim();
+        let arch = &store.manifest().model(&cfg.model)?.arch;
+        let input_dim = arch.input_dim();
+        let classes = arch.classes();
         drop(store);
         if cfg.backend == Backend::Native {
             // fail fast: an unavailable --kernels must error at startup,
@@ -147,6 +151,7 @@ impl ServingEngine {
             Kernels::for_kind(cfg.kernels)?;
         }
         let backend = cfg.backend;
+        let cfg_max_sessions = cfg.max_sessions;
         let n_workers = cfg.workers.max(1);
 
         let mut metrics = Vec::with_capacity(n_workers + 1);
@@ -190,8 +195,35 @@ impl ServingEngine {
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(0),
             input_dim,
+            classes,
+            max_sessions: cfg_max_sessions,
             backend,
         })
+    }
+
+    /// Model input dimension (the required pixel payload length).
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Model output classes.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Execution workers in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pool-wide resident stream-session cap (`ServerConfig::max_sessions`).
+    pub fn max_sessions(&self) -> usize {
+        self.max_sessions
+    }
+
+    /// Which backend the pool executes on.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Submit one request and block for its response.
@@ -339,6 +371,38 @@ impl Drop for ServingEngine {
     }
 }
 
+/// Typed admission-control rejection of a one-shot request: the caller
+/// gets a `rejected = true` response (never a silently dropped reply
+/// channel — a closed channel now only means worker failure) and the
+/// dispatcher's `Metrics::rejected` counts it.
+fn reject_infer(metrics: &Arc<Mutex<Metrics>>, req: InferRequest) {
+    metrics.lock().unwrap().rejected += 1;
+    let _ = req.reply.send(InferResponse {
+        id: req.id,
+        prediction: 0,
+        counts: Vec::new(),
+        latency_us: req.enqueued.elapsed().as_micros() as u64,
+        batch_size: 0,
+        rejected: true,
+    });
+}
+
+/// Typed admission-control rejection of a stream window (see
+/// [`reject_infer`]); session state does not advance.
+fn reject_stream(metrics: &Arc<Mutex<Metrics>>, req: StreamRequest) {
+    metrics.lock().unwrap().rejected += 1;
+    let _ = req.reply.send(StreamResponse {
+        session: req.session,
+        window: 0,
+        prediction: 0,
+        counts: Vec::new(),
+        fresh: false,
+        worker: usize::MAX,
+        latency_us: req.enqueued.elapsed().as_micros() as u64,
+        rejected: true,
+    });
+}
+
 /// Session-affine routing of the non-batched messages: every window of
 /// session `s` goes to worker `s % workers`, so per-session state lives
 /// on exactly one shard (it never migrates, so it needs no locking).
@@ -352,10 +416,11 @@ struct StreamRouter<'a> {
 impl StreamRouter<'_> {
     /// Dispatch one stream window immediately (streams are stateful and
     /// latency-bound: they bypass the batcher but still count against
-    /// `queue_capacity`). A dropped request closes its reply channel.
+    /// `queue_capacity`). Over-capacity windows get a typed rejection
+    /// reply; only a dead pinned worker closes the reply channel.
     fn route_stream(&self, req: StreamRequest, pending: usize, alive: &mut [bool]) {
         if pending + self.in_flight.load(Ordering::Relaxed) >= self.queue_capacity {
-            self.metrics.lock().unwrap().rejected += 1;
+            reject_stream(self.metrics, req);
             return;
         }
         let w = (req.session % self.worker_txs.len() as u64) as usize;
@@ -440,8 +505,8 @@ fn dispatcher_loop(
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(req)) => {
                 if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
-                    metrics.lock().unwrap().rejected += 1;
-                    // drop: the reply channel closing signals rejection
+                    // typed rejection: the caller gets a `rejected` reply
+                    reject_infer(&metrics, req);
                     continue;
                 }
                 pending += 1;
@@ -451,7 +516,7 @@ fn dispatcher_loop(
                     match msg {
                         Msg::Request(r) => {
                             if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
-                                metrics.lock().unwrap().rejected += 1;
+                                reject_infer(&metrics, r);
                             } else {
                                 pending += 1;
                                 batcher.push(r);
@@ -482,7 +547,7 @@ fn dispatcher_loop(
                 match msg {
                     Msg::Request(r) => {
                         if pending + in_flight.load(Ordering::Relaxed) >= cfg.queue_capacity {
-                            metrics.lock().unwrap().rejected += 1;
+                            reject_infer(&metrics, r);
                         } else {
                             pending += 1;
                             batcher.push(r);
@@ -645,6 +710,7 @@ fn run_stream(
         fresh,
         worker: worker_index,
         latency_us: now.duration_since(req.enqueued).as_micros() as u64,
+        rejected: false,
     });
     Ok(())
 }
@@ -712,6 +778,7 @@ fn run_batch(
             counts,
             latency_us,
             batch_size: n,
+            rejected: false,
         });
     }
     Ok(())

@@ -116,10 +116,16 @@ pub struct StreamResponse {
     /// True when the session state was (re)created for this window —
     /// a brand-new session, or one whose state was LRU-evicted.
     pub fresh: bool,
-    /// Worker shard that executed the window (affinity is observable).
+    /// Worker shard that executed the window (affinity is observable;
+    /// `usize::MAX` on a rejected window that never reached a worker).
     pub worker: usize,
     /// Queue + execute time for this window.
     pub latency_us: u64,
+    /// True when admission control rejected the window at ingest (queue
+    /// over capacity): it never executed, session state did not advance,
+    /// and `prediction`/`counts` carry no information. Typed
+    /// backpressure — see [`super::InferResponse::rejected`].
+    pub rejected: bool,
 }
 
 /// Per-session state a worker keeps alive between windows: the membrane

@@ -1,0 +1,501 @@
+//! Network front end: the TCP server speaking the [`super::wire`] frames.
+//!
+//! [`TcpFrontend::bind`] attaches a listener to a running
+//! [`ServingEngine`]. Each accepted connection gets a *reader* thread
+//! (frame decode + submit into the engine's existing ingest paths) and a
+//! *writer* thread (flushes responses in request order — the protocol is
+//! pipelined, so a connection may have any number of requests in
+//! flight). The listener itself is nonblocking and polls a drain flag.
+//!
+//! Error handling is the point: every malformed input becomes a typed
+//! `Error` frame ([`super::wire::ErrorCode`]), never a panic and never a
+//! silent disconnect. Admission-control rejections surface as
+//! `ERR_REJECTED` frames (the engine's typed `rejected` replies), and a
+//! stream window that executed on LRU-evicted state surfaces as
+//! `ERR_EVICTED` so the client knows temporal context was lost.
+//!
+//! **Graceful drain** (`Drain` frame, [`TcpFrontend::drain`], or a
+//! SIGTERM via [`install_term_handler`]): the listener stops accepting,
+//! readers stop at their next frame boundary, writers flush every
+//! response already owed, and [`TcpFrontend::shutdown`] joins the lot —
+//! no in-flight reply is dropped.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::request::InferResponse;
+use super::server::ServingEngine;
+use super::session::StreamResponse;
+use super::wire::{
+    self, ErrorCode, Request, Response, WireError, WireInfo, WireMetrics, HEADER_LEN,
+};
+use crate::Result;
+
+/// Socket read timeout — the cadence at which blocked readers notice the
+/// drain flag (bounds drain latency, costs nothing while traffic flows).
+const POLL: Duration = Duration::from_millis(50);
+/// Once draining, a half-received frame gets this long to finish before
+/// the connection is abandoned (a stalled client must not block drain).
+const DRAIN_GRACE: Duration = Duration::from_secs(2);
+
+/// The TCP front end bound to a running engine.
+///
+/// Dropping without [`shutdown`](Self::shutdown) detaches the threads
+/// (they exit once their sockets close); call `shutdown` for the
+/// graceful flush-and-join.
+pub struct TcpFrontend {
+    engine: Arc<ServingEngine>,
+    addr: SocketAddr,
+    draining: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl TcpFrontend {
+    /// Bind `addr` (e.g. `127.0.0.1:7317`; port 0 picks a free port) and
+    /// start accepting wire-protocol connections against `engine`.
+    pub fn bind(engine: Arc<ServingEngine>, addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let draining = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_engine = Arc::clone(&engine);
+        let accept_drain = Arc::clone(&draining);
+        let accept_conns = Arc::clone(&conns);
+        let handle = std::thread::Builder::new()
+            .name("lspine-accept".into())
+            .spawn(move || {
+                accept_loop(listener, accept_engine, accept_drain, accept_conns)
+            })?;
+
+        Ok(Self {
+            engine,
+            addr: local,
+            draining,
+            listener: Some(handle),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin draining: stop accepting connections and new frames; owed
+    /// responses still flush. Idempotent; also set by a client's `Drain`
+    /// frame.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested (by [`drain`](Self::drain), a
+    /// client's `Drain` frame, or shutdown).
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Graceful stop: drain, then join the listener and every connection
+    /// thread. Every response owed to a connected client is written
+    /// before its socket closes. The engine keeps running — shut it down
+    /// separately ([`ServingEngine::shutdown`]) once the front end is
+    /// gone.
+    pub fn shutdown(self) -> Result<()> {
+        self.drain();
+        if let Some(l) = self.listener {
+            l.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("connection thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// The engine this front end serves (e.g. for a final metrics read).
+    pub fn engine(&self) -> &Arc<ServingEngine> {
+        &self.engine
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<ServingEngine>,
+    draining: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        if draining.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let eng = Arc::clone(&engine);
+                let drain = Arc::clone(&draining);
+                let spawned = std::thread::Builder::new()
+                    .name("lspine-conn".into())
+                    .spawn(move || serve_conn(stream, eng, drain));
+                // a spawn failure (out of threads) just drops the socket
+                if let Ok(h) = spawned {
+                    conns.lock().unwrap().push(h);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// What the reader hands the writer, in request order.
+enum Out {
+    /// An already-encoded frame (acks, infos, typed errors).
+    Frame(Vec<u8>),
+    /// A pending one-shot reply: `(tag, engine channel)`.
+    Infer(u64, mpsc::Receiver<InferResponse>),
+    /// A pending stream-window reply: `(tag, session, engine channel)`.
+    Stream(u64, u64, mpsc::Receiver<StreamResponse>),
+}
+
+/// One connection: spawn the writer, run the reader inline, then join
+/// the writer (which flushes everything the reader submitted).
+fn serve_conn(stream: TcpStream, engine: Arc<ServingEngine>, draining: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Out>();
+    let writer = std::thread::Builder::new()
+        .name("lspine-conn-wr".into())
+        .spawn(move || writer_loop(write_half, rx));
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    reader_loop(stream, &engine, &draining, &tx);
+    drop(tx); // writer drains the queue, flushes, closes the socket
+    let _ = writer.join();
+}
+
+/// Flush responses in request order. Blocking on each engine channel in
+/// turn preserves FIFO per connection; rejected replies become
+/// `ERR_REJECTED`, closed channels become `ERR_INTERNAL`, and a window
+/// that ran on recreated state (LRU eviction or a precision restart)
+/// becomes `ERR_EVICTED`.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
+    // windows answered per session on this connection: a `fresh` reply
+    // after the first window means resident state was lost mid-stream
+    let mut windows_sent: HashMap<u64, u64> = HashMap::new();
+    let mut alive = true;
+    while let Ok(out) = rx.recv() {
+        let frame = match out {
+            Out::Frame(f) => f,
+            Out::Infer(tag, ch) => match ch.recv() {
+                Ok(resp) if resp.rejected => err_frame(
+                    tag,
+                    ErrorCode::Rejected,
+                    "queue over capacity; retry with backoff",
+                ),
+                Ok(resp) => wire::encode_response(
+                    tag,
+                    &Response::OneShot {
+                        prediction: resp.prediction as u32,
+                        latency_us: resp.latency_us,
+                        counts: resp.counts,
+                    },
+                ),
+                Err(_) => err_frame(tag, ErrorCode::Internal, "engine reply lost"),
+            },
+            Out::Stream(tag, session, ch) => match ch.recv() {
+                Ok(resp) if resp.rejected => err_frame(
+                    tag,
+                    ErrorCode::Rejected,
+                    "queue over capacity; session state did not advance",
+                ),
+                Ok(resp) => {
+                    let seen = windows_sent.entry(session).or_insert(0);
+                    if resp.fresh && *seen > 0 {
+                        // the window executed, but on recreated state
+                        *seen = 1;
+                        err_frame(
+                            tag,
+                            ErrorCode::Evicted,
+                            format!(
+                                "session {session} state was recreated (evicted \
+                                 or precision restart); temporal context lost"
+                            ),
+                        )
+                    } else {
+                        *seen += 1;
+                        wire::encode_response(
+                            tag,
+                            &Response::Window {
+                                session: resp.session,
+                                window: resp.window,
+                                prediction: resp.prediction as u32,
+                                fresh: resp.fresh,
+                                latency_us: resp.latency_us,
+                                counts: resp.counts,
+                            },
+                        )
+                    }
+                }
+                Err(_) => err_frame(tag, ErrorCode::Internal, "engine reply lost"),
+            },
+        };
+        // a gone client cannot stop the flush loop: keep draining the
+        // queue (each entry still consumes its engine reply channel)
+        if alive && stream.write_all(&frame).is_err() {
+            alive = false;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn err_frame(tag: u64, code: ErrorCode, message: impl Into<String>) -> Vec<u8> {
+    wire::encode_response(tag, &Response::Error { code, message: message.into() })
+}
+
+/// Outcome of one bounds-checked frame read.
+enum Frame {
+    /// A complete frame arrived.
+    Ok(wire::Header, Vec<u8>),
+    /// Clean EOF, or a disconnect mid-frame — either way the peer is gone.
+    Eof,
+    /// Drain observed while idle at a frame boundary.
+    Drain,
+    /// The header itself was invalid (connection-fatal; answer then close).
+    Fatal(u64, WireError),
+}
+
+/// Decode-and-dispatch loop of one connection.
+fn reader_loop(
+    mut stream: TcpStream,
+    engine: &Arc<ServingEngine>,
+    draining: &AtomicBool,
+    tx: &mpsc::Sender<Out>,
+) {
+    // sessions this connection opened (and has not closed): windows are
+    // only accepted for these, so a typo'd or foreign id is a typed
+    // UnknownSession error instead of a silent fresh session
+    let mut opened: HashSet<u64> = HashSet::new();
+    loop {
+        let (header, body) = match read_frame(&mut stream, draining) {
+            Frame::Ok(h, b) => (h, b),
+            Frame::Eof | Frame::Drain => break,
+            Frame::Fatal(tag, e) => {
+                let _ = tx.send(Out::Frame(err_frame(tag, e.code, e.message)));
+                break;
+            }
+        };
+        let tag = header.tag;
+        let req = match wire::decode_request(header.kind, &body) {
+            Ok(r) => r,
+            Err(e) => {
+                let recoverable = e.code.recoverable();
+                let _ = tx.send(Out::Frame(err_frame(tag, e.code, e.message)));
+                if recoverable {
+                    continue;
+                }
+                break;
+            }
+        };
+        let out = match req {
+            Request::OneShot { precision, pixels } => {
+                match engine.submit(&pixels, precision) {
+                    Ok(ch) => Out::Infer(tag, ch),
+                    Err(e) => Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string())),
+                }
+            }
+            Request::StreamOpen => {
+                let session = engine.open_stream();
+                opened.insert(session);
+                Out::Frame(wire::encode_response(tag, &Response::StreamOpened { session }))
+            }
+            Request::StreamWindow { session, steps, precision, encoder, pixels } => {
+                if !opened.contains(&session) {
+                    Out::Frame(err_frame(
+                        tag,
+                        ErrorCode::UnknownSession,
+                        format!("session {session} was not opened on this connection"),
+                    ))
+                } else {
+                    match engine.stream_window_with(session, &pixels, steps, precision, encoder)
+                    {
+                        Ok(ch) => Out::Stream(tag, session, ch),
+                        Err(e) => {
+                            Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
+                        }
+                    }
+                }
+            }
+            Request::StreamClose { session } => {
+                if opened.remove(&session) {
+                    let _ = engine.close_stream(session);
+                    Out::Frame(wire::encode_response(tag, &Response::Closed { session }))
+                } else {
+                    Out::Frame(err_frame(
+                        tag,
+                        ErrorCode::UnknownSession,
+                        format!("session {session} was not opened on this connection"),
+                    ))
+                }
+            }
+            Request::Metrics => {
+                let m = engine.metrics();
+                Out::Frame(wire::encode_response(
+                    tag,
+                    &Response::Metrics(WireMetrics {
+                        requests: m.requests,
+                        stream_windows: m.stream_windows,
+                        rejected: m.rejected,
+                        p50_us: m.latency.quantile_us(0.5),
+                        p99_us: m.latency.quantile_us(0.99),
+                        p999_us: m.latency.quantile_us(0.999),
+                        max_us: m.latency.max_us(),
+                    }),
+                ))
+            }
+            Request::Info => Out::Frame(wire::encode_response(
+                tag,
+                &Response::Info(WireInfo {
+                    input_dim: engine.input_dim() as u32,
+                    classes: engine.classes() as u32,
+                    workers: engine.workers() as u32,
+                    max_sessions: engine.max_sessions() as u32,
+                }),
+            )),
+            Request::Drain => {
+                // ack first, then flip the flag: the ack is owed before
+                // draining is observable anywhere else
+                let _ = tx.send(Out::Frame(wire::encode_response(tag, &Response::DrainAck)));
+                draining.store(true, Ordering::SeqCst);
+                break;
+            }
+        };
+        let _ = tx.send(out);
+    }
+    // the connection's open sessions die with it (frees resident state)
+    for session in opened {
+        let _ = engine.close_stream(session);
+    }
+}
+
+/// Read one complete frame, polling the drain flag while idle.
+fn read_frame(stream: &mut TcpStream, draining: &AtomicBool) -> Frame {
+    let mut hdr = [0u8; HEADER_LEN];
+    match read_full(stream, &mut hdr, draining, true) {
+        ReadFull::Full => {}
+        ReadFull::Eof | ReadFull::EofMid | ReadFull::Gone => return Frame::Eof,
+        ReadFull::Drain => return Frame::Drain,
+    }
+    let header = match wire::decode_header(&hdr) {
+        Ok(h) => h,
+        Err(e) => {
+            // the tag bytes are only trustworthy past the version check
+            let tag = if e.code == ErrorCode::Oversize {
+                u64::from_le_bytes(hdr[8..16].try_into().unwrap())
+            } else {
+                0
+            };
+            return Frame::Fatal(tag, e);
+        }
+    };
+    let mut body = vec![0u8; header.body_len as usize];
+    match read_full(stream, &mut body, draining, false) {
+        ReadFull::Full => Frame::Ok(header, body),
+        // a disconnect mid-body: nobody left to answer, just clean up
+        _ => Frame::Eof,
+    }
+}
+
+enum ReadFull {
+    Full,
+    /// Clean EOF before any byte of this read.
+    Eof,
+    /// Disconnect after partial progress (truncated frame).
+    EofMid,
+    /// I/O error — treat the peer as gone.
+    Gone,
+    /// Drain flag observed while idle at a frame boundary.
+    Drain,
+}
+
+/// `read_exact` against a nonblocking-timeout socket: retries timeouts,
+/// polls `draining` (stopping only between frames, or after
+/// [`DRAIN_GRACE`] mid-frame so a stalled client cannot block drain).
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    draining: &AtomicBool,
+    at_boundary: bool,
+) -> ReadFull {
+    let mut off = 0;
+    let mut drain_seen: Option<Instant> = None;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return if off == 0 { ReadFull::Eof } else { ReadFull::EofMid },
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if draining.load(Ordering::SeqCst) {
+                    if off == 0 && at_boundary {
+                        return ReadFull::Drain;
+                    }
+                    let started = *drain_seen.get_or_insert_with(Instant::now);
+                    if started.elapsed() >= DRAIN_GRACE {
+                        return ReadFull::Gone;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ReadFull::Gone,
+        }
+    }
+    ReadFull::Full
+}
+
+/// Process-wide termination flag set by [`install_term_handler`].
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM/SIGINT handlers that set a flag readable via
+/// [`term_requested`] — the `serve --listen` loop polls it and drains.
+/// No-op outside unix. Safe to call more than once.
+#[cfg(unix)]
+pub fn install_term_handler() {
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term as usize);
+        signal(SIGINT, on_term as usize);
+    }
+}
+
+/// Install SIGTERM/SIGINT handlers (no-op on this platform).
+#[cfg(not(unix))]
+pub fn install_term_handler() {}
+
+/// Whether a termination signal has been observed since
+/// [`install_term_handler`].
+pub fn term_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}

@@ -1,0 +1,848 @@
+//! The L-SPINE binary wire protocol — pure framing, no I/O.
+//!
+//! Network-attached serving speaks length-prefixed binary frames over
+//! TCP (see [`super::tcp`] for the socket front end and DESIGN.md
+//! §Wire protocol for the normative layout). This module is the codec:
+//! fixed 20-byte header, typed request/response bodies, and **typed
+//! error codes** — every malformed byte sequence decodes to a
+//! [`WireError`] the server answers with an `Error` frame, never a
+//! panic and never a silently dropped connection.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic      b"LSPN"
+//! 4       1     version    1
+//! 5       1     type       FrameType discriminant
+//! 6       2     reserved   0 (ignored on read)
+//! 8       8     tag        caller correlation id, echoed in responses
+//! 16      4     body_len   bytes following the header (<= MAX_BODY)
+//! 20      ..    body       per-type payload
+//! ```
+//!
+//! The `tag` makes the protocol fully pipelined: a client may have any
+//! number of requests in flight on one connection and match responses by
+//! tag (responses of one connection also arrive in request order).
+//! Multiple stream sessions can multiplex over a single connection.
+
+use super::request::Precision;
+use super::session::EncoderKind;
+
+/// Frame magic: the first four bytes of every L-SPINE frame.
+pub const MAGIC: [u8; 4] = *b"LSPN";
+/// Protocol version this build speaks (a mismatch is a typed error).
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on a declared body length; larger declarations are rejected
+/// with [`ErrorCode::Oversize`] *before* any allocation, so a hostile
+/// length field cannot balloon server memory.
+pub const MAX_BODY: u32 = 1 << 20;
+
+/// Frame type discriminants (requests < 0x80 <= responses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// One-shot inference request.
+    OneShot = 0x01,
+    /// Allocate a stream-session id.
+    StreamOpen = 0x02,
+    /// One frame-window of an open stream session.
+    StreamWindow = 0x03,
+    /// Close a stream session (frees resident state).
+    StreamClose = 0x04,
+    /// Fetch server metrics counters.
+    Metrics = 0x05,
+    /// Fetch server/model info (input dim, classes, pool shape).
+    Info = 0x06,
+    /// Ask the server to drain gracefully (acked before draining).
+    Drain = 0x07,
+    /// Response to [`FrameType::OneShot`].
+    RespOneShot = 0x81,
+    /// Response to [`FrameType::StreamOpen`].
+    RespStreamOpened = 0x82,
+    /// Response to [`FrameType::StreamWindow`].
+    RespWindow = 0x83,
+    /// Response to [`FrameType::StreamClose`].
+    RespClosed = 0x84,
+    /// Response to [`FrameType::Metrics`].
+    RespMetrics = 0x85,
+    /// Response to [`FrameType::Info`].
+    RespInfo = 0x86,
+    /// Response to [`FrameType::Drain`].
+    RespDrainAck = 0x87,
+    /// Typed error response (any request may earn one).
+    RespError = 0xFF,
+}
+
+/// Typed protocol/serving error codes carried by `Error` frames.
+///
+/// The numbering is wire ABI — append only, never renumber (DESIGN.md
+/// has the normative table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Frame did not start with [`MAGIC`] (connection is closed).
+    BadMagic = 1,
+    /// Unsupported protocol version (connection is closed).
+    BadVersion = 2,
+    /// Unknown frame type (connection survives).
+    BadType = 3,
+    /// Declared body length exceeds [`MAX_BODY`] (connection is closed).
+    Oversize = 4,
+    /// Body bytes do not parse as the declared frame type, or the frame
+    /// was truncated by a disconnect.
+    Malformed = 5,
+    /// Precision byte is not one of 0 (fp32) / 2 / 4 / 8.
+    BadPrecision = 6,
+    /// Encoder byte/parameter is invalid.
+    BadEncoder = 7,
+    /// Payload length does not match the model's input dimension, or the
+    /// request is unservable on this backend (e.g. fp32 on native).
+    BadInput = 8,
+    /// Admission control rejected the request (queue over capacity) —
+    /// counted in `Metrics::rejected`; retry with backoff.
+    Rejected = 9,
+    /// Stream window/close for a session this connection never opened
+    /// (or already closed).
+    UnknownSession = 10,
+    /// The session's resident state was LRU-evicted between windows; the
+    /// window ran on fresh state — reopen or continue knowing context
+    /// was lost.
+    Evicted = 11,
+    /// Engine-side failure (worker died, reply channel lost).
+    Internal = 12,
+    /// Server is draining and no longer accepts new work.
+    Draining = 13,
+}
+
+impl ErrorCode {
+    /// Decode a wire byte (unknown values are not representable).
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => ErrorCode::BadMagic,
+            2 => ErrorCode::BadVersion,
+            3 => ErrorCode::BadType,
+            4 => ErrorCode::Oversize,
+            5 => ErrorCode::Malformed,
+            6 => ErrorCode::BadPrecision,
+            7 => ErrorCode::BadEncoder,
+            8 => ErrorCode::BadInput,
+            9 => ErrorCode::Rejected,
+            10 => ErrorCode::UnknownSession,
+            11 => ErrorCode::Evicted,
+            12 => ErrorCode::Internal,
+            13 => ErrorCode::Draining,
+            _ => return None,
+        })
+    }
+
+    /// Whether the connection can keep framing after this error. Magic /
+    /// version / length-field errors leave the byte stream
+    /// unsynchronized, so the server closes after answering.
+    pub fn recoverable(self) -> bool {
+        !matches!(
+            self,
+            ErrorCode::BadMagic | ErrorCode::BadVersion | ErrorCode::Oversize
+        )
+    }
+}
+
+/// A typed protocol error: the code plus a human-readable detail string
+/// (the string travels in the error frame body after the code byte).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Typed error code (wire ABI).
+    pub code: ErrorCode,
+    /// Human-readable detail (diagnostic only, not ABI).
+    pub message: String,
+}
+
+impl WireError {
+    /// Build an error with a detail message.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    /// Raw frame-type byte (validated during body decode).
+    pub kind: u8,
+    /// Caller correlation id (echoed in the response header).
+    pub tag: u64,
+    /// Declared body length in bytes.
+    pub body_len: u32,
+}
+
+/// A decoded request frame body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// One-shot inference over `pixels`.
+    OneShot {
+        /// Execution precision.
+        precision: Precision,
+        /// u8 pixels, encoder domain (length = model input_dim).
+        pixels: Vec<u8>,
+    },
+    /// Allocate a fresh stream-session id.
+    StreamOpen,
+    /// One frame-window of stream `session`.
+    StreamWindow {
+        /// Session id from a prior `StreamOpened` response.
+        session: u64,
+        /// Timesteps to integrate this frame for (>= 1).
+        steps: u32,
+        /// Execution precision (integer widths only).
+        precision: Precision,
+        /// Spike coding (bound to the session on its first window).
+        encoder: EncoderKind,
+        /// The window's frame.
+        pixels: Vec<u8>,
+    },
+    /// Close stream `session`.
+    StreamClose {
+        /// Session id to close.
+        session: u64,
+    },
+    /// Fetch server metrics.
+    Metrics,
+    /// Fetch server/model info.
+    Info,
+    /// Request a graceful drain.
+    Drain,
+}
+
+/// Server metrics snapshot as carried on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireMetrics {
+    /// Completed requests (one-shot + stream windows).
+    pub requests: u64,
+    /// Stream windows executed.
+    pub stream_windows: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// p50 end-to-end latency (µs).
+    pub p50_us: u64,
+    /// p99 end-to-end latency (µs).
+    pub p99_us: u64,
+    /// p99.9 end-to-end latency (µs).
+    pub p999_us: u64,
+    /// Maximum observed end-to-end latency (µs).
+    pub max_us: u64,
+}
+
+/// Server/model info as carried on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireInfo {
+    /// Model input dimension (required payload length).
+    pub input_dim: u32,
+    /// Output classes.
+    pub classes: u32,
+    /// Execution workers in the pool.
+    pub workers: u32,
+    /// Pool-wide resident stream-session cap.
+    pub max_sessions: u32,
+}
+
+/// A decoded response frame body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Answer to a one-shot request.
+    OneShot {
+        /// Argmax class.
+        prediction: u32,
+        /// Queue + batch + execute time (µs).
+        latency_us: u64,
+        /// Per-class output spike counts.
+        counts: Vec<i32>,
+    },
+    /// A freshly allocated stream-session id.
+    StreamOpened {
+        /// The new session id.
+        session: u64,
+    },
+    /// Answer to one stream window.
+    Window {
+        /// Session the window belonged to.
+        session: u64,
+        /// 0-based window index within the session's state epoch.
+        window: u64,
+        /// Argmax class of this window's counts.
+        prediction: u32,
+        /// Whether session state was (re)created for this window.
+        fresh: bool,
+        /// Queue + execute time (µs).
+        latency_us: u64,
+        /// Per-class output spike counts of this window.
+        counts: Vec<i32>,
+    },
+    /// Acknowledges a stream close.
+    Closed {
+        /// The closed session id.
+        session: u64,
+    },
+    /// Metrics snapshot.
+    Metrics(WireMetrics),
+    /// Server/model info.
+    Info(WireInfo),
+    /// Acknowledges a drain request (sent before draining begins).
+    DrainAck,
+    /// Typed error (see [`ErrorCode`]).
+    Error {
+        /// Typed error code.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_header(out: &mut Vec<u8>, kind: u8, tag: u64, body_len: usize) {
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&tag.to_le_bytes());
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+}
+
+fn precision_byte(p: Precision) -> u8 {
+    p.bits() as u8 // 2 / 4 / 8, fp32 = 0 by the artifact convention
+}
+
+fn precision_from_byte(b: u8) -> Result<Precision, WireError> {
+    match b {
+        0 => Ok(Precision::Fp32),
+        2 => Ok(Precision::Int2),
+        4 => Ok(Precision::Int4),
+        8 => Ok(Precision::Int8),
+        other => Err(WireError::new(
+            ErrorCode::BadPrecision,
+            format!("precision byte {other} (want 0/2/4/8)"),
+        )),
+    }
+}
+
+fn encoder_bytes(e: EncoderKind) -> (u8, u32) {
+    match e {
+        EncoderKind::Rate => (0, 0),
+        EncoderKind::Delta { gain } => (1, gain),
+        EncoderKind::Sliding { window } => (2, window as u32),
+    }
+}
+
+fn encoder_from_bytes(kind: u8, param: u32) -> Result<EncoderKind, WireError> {
+    match kind {
+        0 => Ok(EncoderKind::Rate),
+        1 if param >= 1 => Ok(EncoderKind::Delta { gain: param }),
+        2 if param >= 1 => Ok(EncoderKind::Sliding { window: param as usize }),
+        1 | 2 => Err(WireError::new(
+            ErrorCode::BadEncoder,
+            "encoder parameter must be >= 1",
+        )),
+        other => Err(WireError::new(
+            ErrorCode::BadEncoder,
+            format!("encoder byte {other} (want 0=rate/1=delta/2=sliding)"),
+        )),
+    }
+}
+
+/// Encode one request frame (header + body) ready to write.
+pub fn encode_request(tag: u64, req: &Request) -> Vec<u8> {
+    let mut body = Vec::new();
+    let kind = match req {
+        Request::OneShot { precision, pixels } => {
+            body.push(precision_byte(*precision));
+            body.extend_from_slice(pixels);
+            FrameType::OneShot
+        }
+        Request::StreamOpen => FrameType::StreamOpen,
+        Request::StreamWindow { session, steps, precision, encoder, pixels } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            body.extend_from_slice(&steps.to_le_bytes());
+            body.push(precision_byte(*precision));
+            let (ek, ep) = encoder_bytes(*encoder);
+            body.push(ek);
+            body.extend_from_slice(&ep.to_le_bytes());
+            body.extend_from_slice(pixels);
+            FrameType::StreamWindow
+        }
+        Request::StreamClose { session } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            FrameType::StreamClose
+        }
+        Request::Metrics => FrameType::Metrics,
+        Request::Info => FrameType::Info,
+        Request::Drain => FrameType::Drain,
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    put_header(&mut out, kind as u8, tag, body.len());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode one response frame (header + body) ready to write.
+pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
+    let mut body = Vec::new();
+    let push_counts = |body: &mut Vec<u8>, counts: &[i32]| {
+        body.extend_from_slice(&(counts.len() as u16).to_le_bytes());
+        for c in counts {
+            body.extend_from_slice(&c.to_le_bytes());
+        }
+    };
+    let kind = match resp {
+        Response::OneShot { prediction, latency_us, counts } => {
+            body.extend_from_slice(&prediction.to_le_bytes());
+            body.extend_from_slice(&latency_us.to_le_bytes());
+            push_counts(&mut body, counts);
+            FrameType::RespOneShot
+        }
+        Response::StreamOpened { session } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            FrameType::RespStreamOpened
+        }
+        Response::Window { session, window, prediction, fresh, latency_us, counts } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            body.extend_from_slice(&window.to_le_bytes());
+            body.extend_from_slice(&prediction.to_le_bytes());
+            body.push(u8::from(*fresh));
+            body.extend_from_slice(&latency_us.to_le_bytes());
+            push_counts(&mut body, counts);
+            FrameType::RespWindow
+        }
+        Response::Closed { session } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            FrameType::RespClosed
+        }
+        Response::Metrics(m) => {
+            for v in [
+                m.requests,
+                m.stream_windows,
+                m.rejected,
+                m.p50_us,
+                m.p99_us,
+                m.p999_us,
+                m.max_us,
+            ] {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            FrameType::RespMetrics
+        }
+        Response::Info(i) => {
+            for v in [i.input_dim, i.classes, i.workers, i.max_sessions] {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            FrameType::RespInfo
+        }
+        Response::DrainAck => FrameType::RespDrainAck,
+        Response::Error { code, message } => {
+            body.push(*code as u8);
+            body.extend_from_slice(message.as_bytes());
+            FrameType::RespError
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    put_header(&mut out, kind as u8, tag, body.len());
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Validate and decode a frame header from its 20 raw bytes.
+pub fn decode_header(raw: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
+    if raw[0..4] != MAGIC {
+        return Err(WireError::new(
+            ErrorCode::BadMagic,
+            format!("bad magic {:02x?} (want {:02x?} = \"LSPN\")", &raw[0..4], MAGIC),
+        ));
+    }
+    if raw[4] != VERSION {
+        return Err(WireError::new(
+            ErrorCode::BadVersion,
+            format!("protocol version {} (this build speaks {VERSION})", raw[4]),
+        ));
+    }
+    let kind = raw[5];
+    let tag = u64::from_le_bytes(raw[8..16].try_into().unwrap());
+    let body_len = u32::from_le_bytes(raw[16..20].try_into().unwrap());
+    if body_len > MAX_BODY {
+        return Err(WireError::new(
+            ErrorCode::Oversize,
+            format!("declared body length {body_len} exceeds MAX_BODY={MAX_BODY}"),
+        ));
+    }
+    Ok(Header { kind, tag, body_len })
+}
+
+/// Little-endian cursor over a frame body; every read is bounds-checked
+/// into a typed [`ErrorCode::Malformed`].
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.off + n > self.b.len() {
+            return Err(WireError::new(
+                ErrorCode::Malformed,
+                format!("body truncated at offset {} (need {n} more bytes)", self.off),
+            ));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.off..];
+        self.off = self.b.len();
+        s
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.off != self.b.len() {
+            return Err(WireError::new(
+                ErrorCode::Malformed,
+                format!("{} trailing bytes after body", self.b.len() - self.off),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a request body for header type `kind`.
+pub fn decode_request(kind: u8, body: &[u8]) -> Result<Request, WireError> {
+    let mut r = Rd::new(body);
+    let req = match kind {
+        k if k == FrameType::OneShot as u8 => {
+            let precision = precision_from_byte(r.u8()?)?;
+            Request::OneShot { precision, pixels: r.rest().to_vec() }
+        }
+        k if k == FrameType::StreamOpen as u8 => Request::StreamOpen,
+        k if k == FrameType::StreamWindow as u8 => {
+            let session = r.u64()?;
+            let steps = r.u32()?;
+            let precision = precision_from_byte(r.u8()?)?;
+            let encoder = encoder_from_bytes(r.u8()?, r.u32()?)?;
+            Request::StreamWindow {
+                session,
+                steps,
+                precision,
+                encoder,
+                pixels: r.rest().to_vec(),
+            }
+        }
+        k if k == FrameType::StreamClose as u8 => Request::StreamClose { session: r.u64()? },
+        k if k == FrameType::Metrics as u8 => Request::Metrics,
+        k if k == FrameType::Info as u8 => Request::Info,
+        k if k == FrameType::Drain as u8 => Request::Drain,
+        other => {
+            return Err(WireError::new(
+                ErrorCode::BadType,
+                format!("unknown request frame type {other:#04x}"),
+            ))
+        }
+    };
+    r.done()?;
+    Ok(req)
+}
+
+/// Decode a response body for header type `kind` (client side).
+pub fn decode_response(kind: u8, body: &[u8]) -> Result<Response, WireError> {
+    let mut r = Rd::new(body);
+    let take_counts = |r: &mut Rd| -> Result<Vec<i32>, WireError> {
+        let n = u16::from_le_bytes(r.take(2)?.try_into().unwrap()) as usize;
+        let mut counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            counts.push(r.i32()?);
+        }
+        Ok(counts)
+    };
+    let resp = match kind {
+        k if k == FrameType::RespOneShot as u8 => {
+            let prediction = r.u32()?;
+            let latency_us = r.u64()?;
+            let counts = take_counts(&mut r)?;
+            Response::OneShot { prediction, latency_us, counts }
+        }
+        k if k == FrameType::RespStreamOpened as u8 => {
+            Response::StreamOpened { session: r.u64()? }
+        }
+        k if k == FrameType::RespWindow as u8 => {
+            let session = r.u64()?;
+            let window = r.u64()?;
+            let prediction = r.u32()?;
+            let fresh = r.u8()? != 0;
+            let latency_us = r.u64()?;
+            let counts = take_counts(&mut r)?;
+            Response::Window { session, window, prediction, fresh, latency_us, counts }
+        }
+        k if k == FrameType::RespClosed as u8 => Response::Closed { session: r.u64()? },
+        k if k == FrameType::RespMetrics as u8 => Response::Metrics(WireMetrics {
+            requests: r.u64()?,
+            stream_windows: r.u64()?,
+            rejected: r.u64()?,
+            p50_us: r.u64()?,
+            p99_us: r.u64()?,
+            p999_us: r.u64()?,
+            max_us: r.u64()?,
+        }),
+        k if k == FrameType::RespInfo as u8 => Response::Info(WireInfo {
+            input_dim: r.u32()?,
+            classes: r.u32()?,
+            workers: r.u32()?,
+            max_sessions: r.u32()?,
+        }),
+        k if k == FrameType::RespDrainAck as u8 => Response::DrainAck,
+        k if k == FrameType::RespError as u8 => {
+            let code_byte = r.u8()?;
+            let code = ErrorCode::from_u8(code_byte).ok_or_else(|| {
+                WireError::new(
+                    ErrorCode::Malformed,
+                    format!("unknown error code {code_byte}"),
+                )
+            })?;
+            let message = String::from_utf8_lossy(r.rest()).into_owned();
+            Response::Error { code, message }
+        }
+        other => {
+            return Err(WireError::new(
+                ErrorCode::BadType,
+                format!("unknown response frame type {other:#04x}"),
+            ))
+        }
+    };
+    r.done()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let raw = encode_request(7, &req);
+        let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(hdr.tag, 7);
+        assert_eq!(hdr.body_len as usize, raw.len() - HEADER_LEN);
+        let back = decode_request(hdr.kind, &raw[HEADER_LEN..]).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let raw = encode_response(99, &resp);
+        let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(hdr.tag, 99);
+        let back = decode_response(hdr.kind, &raw[HEADER_LEN..]).unwrap();
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::OneShot {
+            precision: Precision::Int4,
+            pixels: vec![1, 2, 3, 255],
+        });
+        roundtrip_request(Request::StreamOpen);
+        roundtrip_request(Request::StreamWindow {
+            session: u64::MAX,
+            steps: 4,
+            precision: Precision::Int2,
+            encoder: EncoderKind::Delta { gain: 9 },
+            pixels: vec![0; 64],
+        });
+        roundtrip_request(Request::StreamWindow {
+            session: 0,
+            steps: 1,
+            precision: Precision::Int8,
+            encoder: EncoderKind::Sliding { window: 3 },
+            pixels: vec![7],
+        });
+        roundtrip_request(Request::StreamClose { session: 12 });
+        roundtrip_request(Request::Metrics);
+        roundtrip_request(Request::Info);
+        roundtrip_request(Request::Drain);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_response(Response::OneShot {
+            prediction: 3,
+            latency_us: 1234,
+            counts: vec![-1, 0, 5, 1 << 20],
+        });
+        roundtrip_response(Response::StreamOpened { session: 42 });
+        roundtrip_response(Response::Window {
+            session: 42,
+            window: 17,
+            prediction: 0,
+            fresh: true,
+            latency_us: 88,
+            counts: vec![1, 2],
+        });
+        roundtrip_response(Response::Closed { session: 42 });
+        roundtrip_response(Response::Metrics(WireMetrics {
+            requests: 10,
+            stream_windows: 4,
+            rejected: 1,
+            p50_us: 100,
+            p99_us: 900,
+            p999_us: 1200,
+            max_us: 1500,
+        }));
+        roundtrip_response(Response::Info(WireInfo {
+            input_dim: 256,
+            classes: 10,
+            workers: 4,
+            max_sessions: 1024,
+        }));
+        roundtrip_response(Response::DrainAck);
+        roundtrip_response(Response::Error {
+            code: ErrorCode::Rejected,
+            message: "queue over capacity".into(),
+        });
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_oversize() {
+        let good = encode_request(0, &Request::Metrics);
+        let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
+        h[0] = b'X';
+        assert_eq!(decode_header(&h).unwrap_err().code, ErrorCode::BadMagic);
+        let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
+        h[4] = 99;
+        assert_eq!(decode_header(&h).unwrap_err().code, ErrorCode::BadVersion);
+        let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
+        h[16..20].copy_from_slice(&(MAX_BODY + 1).to_le_bytes());
+        assert_eq!(decode_header(&h).unwrap_err().code, ErrorCode::Oversize);
+        // reserved bytes are ignored on read (forward compatibility)
+        let mut h: [u8; HEADER_LEN] = good[..HEADER_LEN].try_into().unwrap();
+        h[6] = 0xAB;
+        h[7] = 0xCD;
+        assert!(decode_header(&h).is_ok());
+    }
+
+    #[test]
+    fn body_errors_are_typed() {
+        // unknown request type
+        assert_eq!(
+            decode_request(0x70, &[]).unwrap_err().code,
+            ErrorCode::BadType
+        );
+        // truncated stream-window body
+        assert_eq!(
+            decode_request(FrameType::StreamWindow as u8, &[1, 2, 3]).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        // bad precision byte in a one-shot
+        assert_eq!(
+            decode_request(FrameType::OneShot as u8, &[3, 0, 0]).unwrap_err().code,
+            ErrorCode::BadPrecision
+        );
+        // bad encoder byte in a stream window
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.push(4); // precision int4
+        body.push(9); // encoder byte 9: invalid
+        body.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            decode_request(FrameType::StreamWindow as u8, &body).unwrap_err().code,
+            ErrorCode::BadEncoder
+        );
+        // delta gain 0 is invalid
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.push(4);
+        body.push(1); // delta
+        body.extend_from_slice(&0u32.to_le_bytes()); // gain 0
+        assert_eq!(
+            decode_request(FrameType::StreamWindow as u8, &body).unwrap_err().code,
+            ErrorCode::BadEncoder
+        );
+        // trailing junk after a fixed-size body
+        let mut body = 5u64.to_le_bytes().to_vec();
+        body.push(0xEE);
+        assert_eq!(
+            decode_request(FrameType::StreamClose as u8, &body).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        // truncated response counts
+        let raw = encode_response(
+            1,
+            &Response::OneShot { prediction: 1, latency_us: 2, counts: vec![1, 2, 3] },
+        );
+        let cut = &raw[HEADER_LEN..raw.len() - 2];
+        assert_eq!(
+            decode_response(FrameType::RespOneShot as u8, cut).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn error_code_wire_stability() {
+        // the numbering is ABI: a renumbering would break deployed clients
+        for (code, byte) in [
+            (ErrorCode::BadMagic, 1u8),
+            (ErrorCode::BadVersion, 2),
+            (ErrorCode::BadType, 3),
+            (ErrorCode::Oversize, 4),
+            (ErrorCode::Malformed, 5),
+            (ErrorCode::BadPrecision, 6),
+            (ErrorCode::BadEncoder, 7),
+            (ErrorCode::BadInput, 8),
+            (ErrorCode::Rejected, 9),
+            (ErrorCode::UnknownSession, 10),
+            (ErrorCode::Evicted, 11),
+            (ErrorCode::Internal, 12),
+            (ErrorCode::Draining, 13),
+        ] {
+            assert_eq!(code as u8, byte);
+            assert_eq!(ErrorCode::from_u8(byte), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(14), None);
+        // connection-fatal vs recoverable partition
+        assert!(!ErrorCode::BadMagic.recoverable());
+        assert!(!ErrorCode::BadVersion.recoverable());
+        assert!(!ErrorCode::Oversize.recoverable());
+        assert!(ErrorCode::BadType.recoverable());
+        assert!(ErrorCode::Rejected.recoverable());
+        assert!(ErrorCode::UnknownSession.recoverable());
+    }
+}

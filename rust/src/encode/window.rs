@@ -54,8 +54,16 @@ impl DeltaEncoder {
             debug_assert_eq!(self.delta.len(), pixels.len(), "chunk without a t=0 step");
             return;
         }
-        self.prev.resize(pixels.len(), 0);
-        self.delta.resize(pixels.len(), 0);
+        if self.prev.len() != pixels.len() {
+            // Frame dimension changed mid-stream (or first frame): the
+            // retained frame is from a different geometry, so element-wise
+            // deltas against it are meaningless — a bare `resize` would
+            // diff mismatched positions (truncation) or diff new tail
+            // pixels against zero while old heads kept stale history.
+            // Restart as on a first frame: delta measured against zero.
+            self.prev = vec![0; pixels.len()];
+            self.delta = vec![0; pixels.len()];
+        }
         for j in 0..pixels.len() {
             let d = (pixels[j] as i32 - self.prev[j] as i32).unsigned_abs();
             self.delta[j] = (d * self.gain).min(255) as u8;
@@ -119,8 +127,18 @@ impl SlidingWindowEncoder {
             debug_assert_eq!(self.mean.len(), pixels.len(), "chunk without a t=0 step");
             return;
         }
-        self.sum.resize(pixels.len(), 0);
-        self.mean.resize(pixels.len(), 0);
+        if self.sum.len() != pixels.len() {
+            // Frame dimension changed mid-stream (or first frame): the
+            // retained frames and their running sums belong to a
+            // different geometry — a bare `resize` plus the zip-truncated
+            // eviction below would subtract a stale shorter/longer frame
+            // from mismatched positions and corrupt the sums for the rest
+            // of the stream. Drop the window history and restart the
+            // moving average from this frame.
+            self.frames.clear();
+            self.sum = vec![0; pixels.len()];
+            self.mean = vec![0; pixels.len()];
+        }
         if self.frames.len() == self.window {
             let old = self.frames.pop_front().unwrap();
             for (s, &x) in self.sum.iter_mut().zip(&old) {
@@ -236,6 +254,58 @@ mod tests {
         assert_eq!(e.mean[0], 100);
         e.encode_step(&[0], 0, &mut out); // mean 50
         assert_eq!(e.mean[0], 50);
+    }
+
+    #[test]
+    fn delta_resets_on_frame_dim_change() {
+        // regression: `prev.resize` kept stale history across a frame
+        // geometry change — grown frames diffed their old head against
+        // retained values (and their new tail against zero), shrunk
+        // frames diffed against a truncated stale frame. A dimension
+        // change must restart the stream (first-frame semantics).
+        let mut e = DeltaEncoder::new(1);
+        let mut out = vec![0u8; 4];
+        e.encode_step(&[100u8; 4], 0, &mut out);
+        assert_eq!(e.delta, vec![100u8; 4]);
+        // grow 4 -> 8: every pixel must encode fresh against zero
+        // (old code: first four deltas were 0 = stale |100 - 100|)
+        let mut out = vec![0u8; 8];
+        e.encode_step(&[100u8; 8], 0, &mut out);
+        assert_eq!(e.delta, vec![100u8; 8], "grown frame must re-key from zero");
+        // shrink 8 -> 2: same contract
+        // (old code: prev truncated to [100, 100] so delta was 0)
+        let mut out = vec![0u8; 2];
+        e.encode_step(&[100u8; 2], 0, &mut out);
+        assert_eq!(e.delta, vec![100u8; 2], "shrunk frame must re-key from zero");
+        // and the stream continues normally at the new geometry
+        e.encode_step(&[100u8; 2], 0, &mut out);
+        assert_eq!(e.delta, vec![0u8; 2]);
+    }
+
+    #[test]
+    fn sliding_resets_on_frame_dim_change() {
+        // regression: `sum.resize` plus the zip-truncated eviction kept
+        // (and later subtracted) running sums from a different geometry,
+        // silently corrupting every subsequent mean.
+        let mut e = SlidingWindowEncoder::new(2);
+        let mut out = vec![0u8; 2];
+        e.encode_step(&[200u8; 2], 0, &mut out);
+        assert_eq!(e.mean, vec![200u8; 2]);
+        // grow 2 -> 4: the moving average must restart at this frame
+        // (old code: sum resized to [200, 200, 0, 0] gave mean
+        // [100, 100, 0, 0] — half stale, half fresh)
+        let mut out = vec![0u8; 4];
+        e.encode_step(&[0u8; 4], 0, &mut out);
+        assert_eq!(e.mean, vec![0u8; 4], "grown frame must restart the window");
+        e.encode_step(&[100u8; 4], 0, &mut out);
+        assert_eq!(e.mean, vec![50u8; 4], "mean of the two post-reset frames");
+        // shrink 4 -> 1 at full window occupancy: the eviction path must
+        // never subtract the stale 4-wide frame from the 1-wide sum
+        let mut out = vec![0u8; 1];
+        e.encode_step(&[30u8], 0, &mut out);
+        assert_eq!(e.mean, vec![30u8], "shrunk frame must restart the window");
+        e.encode_step(&[90u8], 0, &mut out);
+        assert_eq!(e.mean, vec![60u8]);
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   forge     — generate hermetic synthetic artifacts (no python needed)
-//!   serve     — run the serving engine on synthetic request traffic
+//!   serve     — run the serving engine on synthetic request traffic, or
+//!               (--listen) attach the TCP wire-protocol front end
+//!   loadgen   — open-loop load generator against a listening server
 //!   stream    — replay a streaming (LSPS) dataset through stateful
 //!               sessions with persistent membrane state
 //!   eval      — evaluate a quantized artifact on the test set
@@ -16,12 +18,16 @@
 //!   lspine simulate --model mlp --bits 2 --samples 32
 //!   lspine report --all
 //!   lspine serve --model mlp --bits 4 --requests 256 --concurrency 8
+//!   lspine serve --backend native --listen 127.0.0.1:7317
+//!   lspine loadgen --connect 127.0.0.1:7317 --sessions 256 --drain
 //!   lspine stream --model mlp --bits 4 --steps 4 --workers 2
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lspine::coordinator::{
-    Backend, EncoderKind, LatencyHistogram, ReqPrecision, ServerConfig, ServingEngine,
+    loadgen, tcp, Backend, EncoderKind, LatencyHistogram, ReqPrecision, ServerConfig,
+    ServingEngine, TcpFrontend,
 };
 use lspine::model::{ResetPolicy, SnnEngine};
 use lspine::nce::{KernelKind, Kernels};
@@ -41,6 +47,16 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
   simulate:  --bits 2|4|8  --samples N
   serve:     --bits 2|4|8  --backend native|pjrt  --requests N  --concurrency N
              --workers N (default: available cores)
+             --listen HOST:PORT (serve the TCP wire protocol instead of
+             synthetic traffic; --queue N --max-sessions N size admission
+             control; SIGTERM or a client Drain frame stops gracefully)
+  loadgen:   --connect HOST:PORT (default 127.0.0.1:7317)
+             --sessions N (default 16)  --windows N/session (default 8)
+             --steps N  --bits 2|4|8  --encoder rate|delta[:G]|window:W
+             --rate R (windows/s/session, default 50)
+             --arrival constant|burst|heavy-tail  --conns N (default auto)
+             --seed N  --drain (stop the server afterwards)
+             --retry-secs S (connect patience)  --timeout-secs S
   stream:    --bits 2|4|8  --steps N (timesteps/frame, default 4)
              --sessions N (concurrent streams, default 1)  --workers N
              --policy hold|reset|decay:K (window boundary, default hold)
@@ -64,7 +80,9 @@ fn run() -> lspine::Result<()> {
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
             "requests=", "concurrency=", "workers=", "kernels=", "out=", "seed=",
-            "steps=", "sessions=", "policy=", "encoder=", "input=",
+            "steps=", "sessions=", "policy=", "encoder=", "input=", "listen=",
+            "queue=", "max-sessions=", "connect=", "windows=", "rate=",
+            "arrival=", "conns=", "retry-secs=", "timeout-secs=", "drain",
             "all", "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
@@ -80,6 +98,7 @@ fn run() -> lspine::Result<()> {
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "stream" => cmd_stream(&args),
         "report" => cmd_report(&args),
         other => anyhow::bail!("unknown command {other:?}"),
@@ -221,6 +240,9 @@ fn cmd_simulate(args: &Args) -> lspine::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> lspine::Result<()> {
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(args, listen);
+    }
     let model = args.get_or("model", "mlp").to_string();
     let bits = args.get_usize("bits", 4)?;
     let backend = match args.get_or("backend", "pjrt") {
@@ -263,12 +285,14 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
         if inflight.len() >= concurrency {
             let (idx, rx) = inflight.remove(0);
             let resp = rx.recv().map_err(|_| anyhow::anyhow!("engine died"))?;
-            hits += (resp.prediction == data.labels[idx] as usize) as usize;
+            hits += (!resp.rejected && resp.prediction == data.labels[idx] as usize)
+                as usize;
         }
     }
     for (idx, rx) in inflight {
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("engine died"))?;
-        hits += (resp.prediction == data.labels[idx] as usize) as usize;
+        hits +=
+            (!resp.rejected && resp.prediction == data.labels[idx] as usize) as usize;
     }
     let dt = t0.elapsed();
     println!(
@@ -280,6 +304,113 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
     );
     println!("  {}", engine.metrics().summary());
     engine.shutdown()
+}
+
+/// `serve --listen HOST:PORT`: attach the TCP wire-protocol front end
+/// to a serving engine and run until a SIGTERM/SIGINT or a client's
+/// `Drain` frame asks for a graceful drain (stop accepting, flush every
+/// in-flight reply, join, print the final metrics).
+fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
+    let model = args.get_or("model", "mlp").to_string();
+    // streaming sessions need the native backend, so that is the
+    // network-mode default (PJRT still serves one-shot-only deployments)
+    let backend = match args.get_or("backend", "native") {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => anyhow::bail!("unknown backend {other:?}"),
+    };
+    let workers = args
+        .get_usize("workers", lspine::coordinator::default_workers())?
+        .max(1);
+    let kernel_kind = parse_kernel_kind(args)?;
+    let queue_capacity = args.get_usize("queue", 1024)?.max(1);
+    let max_sessions = args.get_usize("max-sessions", 1024)?.max(1);
+
+    let engine = Arc::new(ServingEngine::start(ServerConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        model: model.clone(),
+        backend,
+        workers,
+        kernels: kernel_kind,
+        queue_capacity,
+        max_sessions,
+        ..Default::default()
+    })?);
+    let frontend = TcpFrontend::bind(Arc::clone(&engine), listen)?;
+    tcp::install_term_handler();
+    println!(
+        "serve: {model} backend={backend:?} workers={workers} queue={queue_capacity} \
+         max_sessions={max_sessions} listening on {}",
+        frontend.local_addr()
+    );
+    while !tcp::term_requested() && !frontend.draining() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("draining: flushing in-flight replies");
+    frontend.shutdown()?;
+    let engine = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow::anyhow!("front end still holds the engine"))?;
+    println!("  {}", engine.metrics().summary());
+    engine.shutdown()
+}
+
+/// Open-loop load generation against a `serve --listen` server.
+fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
+    let bits = args.get_usize("bits", 4)?;
+    let cfg = loadgen::LoadgenConfig {
+        addr: args.get_or("connect", "127.0.0.1:7317").into(),
+        sessions: args.get_usize("sessions", 16)?.max(1),
+        windows: args.get_usize("windows", 8)?.max(1),
+        steps: args.get_usize("steps", 4)?.max(1) as u32,
+        precision: ReqPrecision::parse(&bits.to_string())
+            .ok_or_else(|| anyhow::anyhow!("bad bits"))?,
+        encoder: EncoderKind::parse(args.get_or("encoder", "rate"))
+            .ok_or_else(|| anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W)"))?,
+        rate: args.get_or("rate", "50").parse::<f64>()?,
+        arrival: loadgen::Arrival::parse(args.get_or("arrival", "constant"))
+            .ok_or_else(|| anyhow::anyhow!("bad --arrival (constant|burst|heavy-tail)"))?,
+        conns: args.get_usize("conns", 0)?,
+        seed: args.get_usize("seed", 1)? as u64,
+        drain: args.has("drain"),
+        connect_retry: Duration::from_secs(args.get_usize("retry-secs", 5)? as u64),
+        timeout: Duration::from_secs(args.get_usize("timeout-secs", 10)? as u64),
+    };
+    println!(
+        "loadgen: connect={} sessions={} windows={} steps={} {} rate={}/s \
+         arrival={} encoder={}",
+        cfg.addr,
+        cfg.sessions,
+        cfg.windows,
+        cfg.steps,
+        cfg.precision.name(),
+        cfg.rate,
+        cfg.arrival.name(),
+        cfg.encoder.name()
+    );
+    let report = loadgen::run(&cfg)?;
+    println!("  {}", report.summary());
+    if let Some(m) = &report.server {
+        println!(
+            "  server: requests={} stream_windows={} rejected={} p50_us={} \
+             p99_us={} p999_us={} max_us={}",
+            m.requests, m.stream_windows, m.rejected, m.p50_us, m.p99_us, m.p999_us,
+            m.max_us
+        );
+    }
+    lspine::util::bench::emit_json_scalar(
+        "loadgen",
+        &format!("sessions={}", cfg.sessions),
+        &[
+            ("req_per_s", report.req_per_s()),
+            ("p50_us", report.latency.quantile_us(0.5) as f64),
+            ("p99_us", report.latency.quantile_us(0.99) as f64),
+            ("p999_us", report.latency.quantile_us(0.999) as f64),
+            ("ttfp_p50_us", report.ttfp.quantile_us(0.5) as f64),
+            ("rejected", report.rejected as f64),
+            ("protocol_errors", report.protocol_errors as f64),
+        ],
+    );
+    Ok(())
 }
 
 /// Replay a streaming dataset through stateful serving sessions: one
@@ -353,15 +484,17 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
             .collect::<lspine::Result<_>>()?;
         let boundary = (f + 1) % data.window == 0;
         for (s, rx) in rxs.into_iter().enumerate() {
-            // a closed reply means the window was dropped: backpressure
-            // rejection (queue over capacity) or a dead worker — either
-            // way the replay has a gap and cannot continue faithfully
+            // a rejected window (typed backpressure) or a closed reply
+            // (dead worker) means the replay has a gap and cannot
+            // continue faithfully
             let resp = rx.recv().map_err(|_| {
-                anyhow::anyhow!(
-                    "stream window dropped at frame {f} (backpressure rejection \
-                     or worker failure; lower --sessions or raise capacity)"
-                )
+                anyhow::anyhow!("stream window dropped at frame {f} (worker failure)")
             })?;
+            anyhow::ensure!(
+                !resp.rejected,
+                "stream window rejected at frame {f} (queue over capacity; \
+                 lower --sessions or raise capacity)"
+            );
             lat.record(Duration::from_micros(resp.latency_us));
             for (w, &c) in win_counts[s].iter_mut().zip(&resp.counts) {
                 *w += c as i64;

@@ -369,13 +369,19 @@ fn serving_backpressure_rejects_over_capacity() {
     for i in 0..64 {
         rxs.push(engine.submit(data.sample(i % data.n), ReqPrecision::Int4).unwrap());
     }
-    // every channel either answers or closes (rejected) — no hangs
+    // every channel answers — rejection is *typed* (`rejected = true`),
+    // never a silently dropped reply channel, so no caller can hang
     let mut answered = 0;
     let mut rejected = 0;
     for rx in rxs {
-        match rx.recv_timeout(std::time::Duration::from_secs(10)) {
-            Ok(_) => answered += 1,
-            Err(_) => rejected += 1,
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("rejection must be a typed reply, not a closed channel");
+        if resp.rejected {
+            assert_eq!(resp.batch_size, 0, "a rejected request never executed");
+            rejected += 1;
+        } else {
+            answered += 1;
         }
     }
     assert_eq!(answered + rejected, 64);
