@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke doc clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke doc clean
 
 all: build
 
@@ -85,10 +85,28 @@ loadgen-smoke:
 	cat .loadgen_serve.out
 	rm -f .loadgen_smoke.out .loadgen_serve.out
 
+# Sparse end-to-end smoke: forge 0.9-magnitude-pruned artifacts (sparse
+# LSPW v2 rows on disk), serve them over TCP, drive one loadgen pass
+# through the skip-walk engine, and assert every request got a typed
+# answer (ok>0, zero lost, zero protocol errors). Separate artifacts
+# dir + port so it composes with loadgen-smoke in one CI job.
+prune-smoke:
+	cd rust && $(CARGO) build --release
+	cd rust && $(CARGO) run --release -- forge --out artifacts-sparse --sparsity 0.9
+	cd rust && \
+	( ./target/release/lspine serve --backend native --artifacts artifacts-sparse --listen 127.0.0.1:17319 --workers 2 > ../.prune_serve.out 2>&1 & ) && \
+	./target/release/lspine loadgen --connect 127.0.0.1:17319 --sessions 8 --windows 4 --drain --retry-secs 20 > ../.prune_smoke.out || (cat ../.prune_smoke.out ../.prune_serve.out; exit 1)
+	cat .prune_smoke.out
+	grep -Eq "ok=[1-9]" .prune_smoke.out
+	grep -Eq "protocol_errors=0" .prune_smoke.out
+	grep -Eq "lost=0" .prune_smoke.out
+	cat .prune_serve.out
+	rm -f .prune_smoke.out .prune_serve.out
+
 # The documented-API gate, same flags as the CI docs job.
 doc:
 	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib
 
 clean:
 	cd rust && $(CARGO) clean
-	rm -rf rust/artifacts
+	rm -rf rust/artifacts rust/artifacts-sparse

@@ -27,10 +27,10 @@
 use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
 use lspine::forge;
-use lspine::model::SnnEngine;
+use lspine::model::{QuantNetLayer, SnnEngine};
 use lspine::nce::lif::{lif_step_row, AccScratch, LifParams};
 use lspine::nce::simd::{pack_row, unpack_row, Precision};
-use lspine::nce::{KernelBackend, Kernels, SpikePlane};
+use lspine::nce::{KernelBackend, Kernels, SparseRowIndex, SpikePlane};
 use lspine::runtime::ArtifactStore;
 use lspine::util::bench::{
     bench, emit_json, emit_json_scalar_with, emit_json_with, report, sample_count,
@@ -96,7 +96,17 @@ fn main() {
             let msynops_per_s = synops / m.per_iter_ns() * 1e3;
             println!("    -> {msynops_per_s:.1} M synops/s");
             report(&m);
-            emit_json_with(SUITE, Some(kernels.name()), &m, &[("msynops_per_s", msynops_per_s)]);
+            // dense accounting: every active row streams all n_words
+            let dense_words = plane.count_ones() * n_words as u64;
+            emit_json_with(
+                SUITE,
+                Some(kernels.name()),
+                &m,
+                &[
+                    ("msynops_per_s", msynops_per_s),
+                    ("words_touched", dense_words as f64),
+                ],
+            );
 
             // storage-model reference: packed u32 words, u8 spikes
             // (pre-P5; scalar-only by design — measure it once)
@@ -121,6 +131,92 @@ fn main() {
         }
     }
 
+    // --- sparse LIF layer step: 0.9 magnitude-pruned weights (§Sparse) ---
+    // Same layer shape as above; the skip walk streams only nonzero
+    // weight blocks, so the per-row `words_touched` drops ~10x at 0.9
+    // sparsity while the LIF math stays bit-exact with the dense kernels
+    // (rust/tests/sparse.rs pins both claims).
+    for kernels in Kernels::available() {
+        println!(
+            "sparse LIF layer step [{}] (k=256, n=128, 30% density, sparsity=0.9):",
+            kernels.name()
+        );
+        let mut krng = Rng::new(7);
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            let k = 256usize;
+            let n = 128usize;
+            let n_words = n.div_ceil(p.fields_per_word());
+            // prune through forge::prune_layer itself so the bench and
+            // the artifact pipeline share ONE pruning rule
+            let mut packed = Vec::new();
+            for _ in 0..k {
+                let row: Vec<i32> = (0..n)
+                    .map(|_| krng.range_i64(lo as i64, hi as i64) as i32)
+                    .collect();
+                packed.extend(pack_row(&row, p));
+            }
+            let layer = QuantNetLayer {
+                precision: p,
+                k_in: k,
+                n_out: n,
+                n_words,
+                scale: 1.0,
+                theta: 40,
+                packed,
+            };
+            let pruned = forge::prune_layer(&layer, 0.9);
+            let w_i8: Vec<i8> = (0..k)
+                .flat_map(|j| {
+                    unpack_row(&pruned.packed[j * n_words..(j + 1) * n_words], p, n)
+                        .into_iter()
+                        .map(|x| x as i8)
+                })
+                .collect();
+            let index = SparseRowIndex::build(&w_i8, k, n, p);
+            let mut spikes = vec![0u8; k];
+            krng.fill_spikes(0.3, &mut spikes);
+            let plane = SpikePlane::from_u8(&spikes);
+            let dense_words = plane.count_ones() * n_words as u64;
+            let mut v = vec![0i32; n];
+            let mut out = SpikePlane::flat(n);
+            let mut scratch = AccScratch::new();
+            let params = LifParams::new(40, 2);
+            let mut touched = 0u64;
+            let m = bench(&format!("lif_step_sparse {}", p.name()), || {
+                touched = kernels.lif_step_plane_sparse(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &index,
+                    &mut v,
+                    out.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+            });
+            let synops = (touched as usize * p.fields_per_word()) as f64;
+            let msynops_per_s = synops / m.per_iter_ns() * 1e3;
+            println!(
+                "    -> words touched {touched} vs dense {dense_words} ({:.1}x fewer)",
+                dense_words as f64 / touched.max(1) as f64
+            );
+            report(&m);
+            emit_json_with(
+                SUITE,
+                Some(kernels.name()),
+                &m,
+                &[
+                    ("msynops_per_s", msynops_per_s),
+                    ("words_touched", touched as f64),
+                    ("dense_words", dense_words as f64),
+                ],
+            );
+        }
+    }
+
     // --- forge-backed end-to-end benches (hermetic, no python) ---
     let dir = forge::ensure_artifacts().expect("forge artifacts");
     let store = ArtifactStore::open(&dir).expect("forge artifacts load");
@@ -136,6 +232,34 @@ fn main() {
         let net = store.load_network(model, "lspine", bits).unwrap();
         let mut engine = SnnEngine::new(net);
         let m = bench(&format!("{model} INT{bits} infer"), || {
+            engine.infer(&sample);
+        });
+        report(&m);
+        let st = engine.last_stats();
+        emit_json_with(
+            SUITE,
+            Some(engine.kernels().name()),
+            &m,
+            &[
+                ("words_touched", st.words_touched as f64),
+                ("spikes_emitted", st.spikes_emitted as f64),
+            ],
+        );
+    }
+
+    // --- end-to-end inference over 0.9-pruned nets (§Sparse routing) ---
+    // Same models as above, magnitude-pruned in place: the engine routes
+    // through the skip walk, so `words_touched` here is the credited
+    // (post-skip) traffic the energy model sees.
+    println!(
+        "native end-to-end inference, sparsity=0.9 (kernels={}):",
+        Kernels::from_env().name()
+    );
+    for (model, bits) in [("mlp", 4u32), ("convnet", 4)] {
+        let net = store.load_network(model, "lspine", bits).unwrap();
+        let pruned = forge::prune_network(&net, 0.9).unwrap();
+        let mut engine = SnnEngine::new(pruned);
+        let m = bench(&format!("{model} INT{bits} infer sparse0.9"), || {
             engine.infer(&sample);
         });
         report(&m);

@@ -104,6 +104,7 @@ mod tests {
                 theta: 1,
                 packed,
             }],
+            sparse_weights: false,
         };
         assert!(c.check_fit(&net).is_ok());
 

@@ -158,6 +158,7 @@ mod tests {
                 theta: 1,
                 packed,
             }],
+            sparse_weights: false,
         }
     }
 

@@ -237,6 +237,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_quantiles_monotone_and_never_exceed_max() {
+        // guards the PR 6 inclusive-edge fix as a property, not just the
+        // single recorded regression: for arbitrary sample sets the
+        // quantile curve is monotone in q and bounded by the observed max
+        use crate::util::rng::Rng;
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(seed * 977 + 5);
+            let mut h = LatencyHistogram::new();
+            let n = 1 + rng.below(64) as usize;
+            let mut max = 0u64;
+            for _ in 0..n {
+                // spans every bucket incl. the saturating 30th
+                let us = 1 + rng.below(2_000_000_000);
+                max = max.max(us);
+                h.record(Duration::from_micros(us));
+            }
+            assert_eq!(h.count(), n as u64, "seed={seed}");
+            assert_eq!(h.max_us(), max, "seed={seed}");
+            let mut prev = 0u64;
+            for q in [0.001, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let v = h.quantile_us(q);
+                assert!(v >= prev, "seed={seed} q={q}: p{q} {v} < previous {prev}");
+                assert!(v <= h.max_us(), "seed={seed} q={q}: {v} > max {}", h.max_us());
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn prop_single_sample_every_quantile_is_the_sample() {
+        // inclusive-edge property: with one sample, every quantile IS
+        // that sample (the bucket edge clamps to max)
+        use crate::util::rng::Rng;
+        for seed in 0..100u64 {
+            let mut rng = Rng::new(seed + 31);
+            let us = 1 + rng.below(1_000_000);
+            let mut h = LatencyHistogram::new();
+            h.record(Duration::from_micros(us));
+            for q in [0.001, 0.5, 0.99, 0.999, 1.0] {
+                assert_eq!(h.quantile_us(q), us, "seed={seed} q={q}");
+            }
+        }
+    }
+
+    #[test]
     fn p999_reported_in_summary() {
         let m = Metrics::new();
         assert!(m.summary().contains("p999<="), "{}", m.summary());

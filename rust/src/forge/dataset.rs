@@ -108,15 +108,20 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
 
     // Dataset: random pixels; labels = the INT8/lspine MLP teacher's
     // argmax predictions (so that configuration scores exactly 1.0 and
-    // everything else records deterministic agreement with it).
+    // everything else records deterministic agreement with it). When
+    // pruning, the teacher is pruned too — labels derive from the same
+    // weights the artifacts carry, keeping the 1.0 anchor.
     let pix = pixels(cfg.seed, cfg.n_test, input_dim);
-    let teacher = quantized_network(
-        &arches[0].1,
-        cfg.seed,
-        "mlp",
-        QuantScheme::LSpine,
-        crate::nce::simd::Precision::Int8,
-    );
+    let teacher = super::prune_network(
+        &quantized_network(
+            &arches[0].1,
+            cfg.seed,
+            "mlp",
+            QuantScheme::LSpine,
+            crate::nce::simd::Precision::Int8,
+        ),
+        cfg.sparsity,
+    )?;
     let mut teacher_engine = SnnEngine::new(teacher);
     let labels: Vec<u8> = (0..cfg.n_test)
         .map(|i| teacher_engine.predict(&pix[i * input_dim..(i + 1) * input_dim]) as u8)
@@ -151,9 +156,16 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
         for scheme in SCHEMES {
             let mut per_bits: BTreeMap<String, Value> = BTreeMap::new();
             for p in PRECISIONS {
-                let net = quantized_network(arch, cfg.seed, name, scheme, p);
+                let net = super::prune_network(
+                    &quantized_network(arch, cfg.seed, name, scheme, p),
+                    cfg.sparsity,
+                )?;
                 let file = format!("{name}_{}_int{}.lspw", scheme.name(), p.bits());
-                weights::write_lspw(&dir.join(&file), &net)?;
+                if net.sparse_weights {
+                    weights::write_lspw_sparse(&dir.join(&file), &net)?;
+                } else {
+                    weights::write_lspw(&dir.join(&file), &net)?;
+                }
                 let acc = measure_accuracy(&net, &data);
                 if scheme == QuantScheme::LSpine && p == crate::nce::simd::Precision::Int8 {
                     // stand-in for the (untrainable-offline) FP32 oracle
@@ -164,9 +176,14 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
             quant_json.insert(scheme.name().to_string(), Value::Obj(per_bits));
         }
 
-        let (mixed_net, bits_per_layer) = mixed_network(arch, cfg.seed, name);
+        let (mixed_raw, bits_per_layer) = mixed_network(arch, cfg.seed, name);
+        let mixed_net = super::prune_network(&mixed_raw, cfg.sparsity)?;
         let mixed_file = format!("{name}_mixed.lspw");
-        weights::write_lspw(&dir.join(&mixed_file), &mixed_net)?;
+        if mixed_net.sparse_weights {
+            weights::write_lspw_sparse(&dir.join(&mixed_file), &mixed_net)?;
+        } else {
+            weights::write_lspw(&dir.join(&mixed_file), &mixed_net)?;
+        }
         let mixed_acc = measure_accuracy(&mixed_net, &data);
         let mixed_json = obj(vec![
             (

@@ -45,7 +45,10 @@ use crate::Result;
 
 pub use dataset::write_lspd;
 pub use stream::{stream_data, write_lsps};
-pub use weights::{layer_from_tensor, write_lspw};
+pub use weights::{
+    layer_from_tensor, lspw_bytes, lspw_sparse_bytes, prune_layer, prune_network,
+    write_lspw, write_lspw_sparse,
+};
 
 /// Bump when any generator changes (keys the cached artifact directory
 /// and the golden-vector contract). v2: artifacts gained the LSPS
@@ -76,6 +79,12 @@ pub struct ForgeConfig {
     pub stream_windows: usize,
     /// Frames per labeled stream window.
     pub stream_window_frames: usize,
+    /// Per-layer magnitude-pruning target in `[0.0, 1.0)`. Zero (the
+    /// default) forges dense v1 artifacts byte-identical to before the
+    /// knob existed; anything above prunes every network (teacher
+    /// included, so labels stay self-consistent) and writes v2
+    /// block-sparse LSPW files.
+    pub sparsity: f64,
 }
 
 impl Default for ForgeConfig {
@@ -85,6 +94,7 @@ impl Default for ForgeConfig {
             n_test: 64,
             stream_windows: 24,
             stream_window_frames: 8,
+            sparsity: 0.0,
         }
     }
 }
@@ -187,7 +197,7 @@ pub fn quantized_network(
             layer_from_tensor(&qt, theta_fp(k))
         })
         .collect();
-    let net = QuantNetwork { arch: arch.clone(), layers };
+    let net = QuantNetwork { arch: arch.clone(), layers, sparse_weights: false };
     debug_assert!(net.validate().is_ok());
     net
 }
@@ -210,7 +220,7 @@ pub fn mixed_network(arch: &ArchDesc, seed: u64, tag: &str) -> (QuantNetwork, Ve
             layer_from_tensor(&qt, theta_fp(k))
         })
         .collect();
-    let net = QuantNetwork { arch: arch.clone(), layers };
+    let net = QuantNetwork { arch: arch.clone(), layers, sparse_weights: false };
     debug_assert!(net.validate().is_ok());
     (net, bits)
 }
@@ -237,7 +247,7 @@ pub fn raw_network(arch: &ArchDesc, seed: u64, p: Precision, theta: i32) -> Quan
             QuantNetLayer { precision: p, k_in: k, n_out: n, n_words, scale: 1.0, theta, packed }
         })
         .collect();
-    let net = QuantNetwork { arch: arch.clone(), layers };
+    let net = QuantNetwork { arch: arch.clone(), layers, sparse_weights: false };
     debug_assert!(net.validate().is_ok());
     net
 }
@@ -264,10 +274,14 @@ fn build_default_artifacts() -> Result<PathBuf> {
     let cfg = ForgeConfig::default();
     // The cache key carries every ForgeConfig knob; generator-semantics
     // changes must still bump FORGE_VERSION (see module docs).
-    let key = format!(
+    let mut key = format!(
         "v{FORGE_VERSION}-{:016x}-n{}-s{}x{}",
         cfg.seed, cfg.n_test, cfg.stream_windows, cfg.stream_window_frames
     );
+    // appended only when pruning so pre-sparsity cache dirs stay valid
+    if cfg.sparsity > 0.0 {
+        key.push_str(&format!("-p{:.3}", cfg.sparsity));
+    }
     let canonical = std::env::temp_dir().join(format!("lspine-forge-{key}"));
     if canonical.join("manifest.json").exists() {
         return Ok(canonical);

@@ -42,6 +42,8 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
              --kernels auto|scalar|wide|avx2|neon (default: auto;
              env LSPINE_KERNELS sets the process default)
   forge:     --out DIR (default: artifacts)  --seed N
+             --sparsity S (magnitude-prune every net to S in [0,1);
+             S > 0 writes v2 block-sparse LSPW files)
   eval:      --bits 2|4|8  --scheme lspine|stbp|admm|trunc
              --backend native|pjrt|both  --samples N
   simulate:  --bits 2|4|8  --samples N
@@ -80,6 +82,7 @@ fn run() -> lspine::Result<()> {
         &[
             "artifacts=", "model=", "bits=", "scheme=", "backend=", "samples=",
             "requests=", "concurrency=", "workers=", "kernels=", "out=", "seed=",
+            "sparsity=",
             "steps=", "sessions=", "policy=", "encoder=", "input=", "listen=",
             "queue=", "max-sessions=", "connect=", "windows=", "rate=",
             "arrival=", "conns=", "retry-secs=", "timeout-secs=", "drain",
@@ -115,12 +118,21 @@ fn cmd_forge(args: &Args) -> lspine::Result<()> {
             None => s.parse::<u64>()?,
         },
     };
-    let cfg = lspine::forge::ForgeConfig { seed, ..Default::default() };
+    let sparsity = args.get_or("sparsity", "0").parse::<f64>()?;
+    let cfg = lspine::forge::ForgeConfig { seed, sparsity, ..Default::default() };
     lspine::forge::write_artifacts(std::path::Path::new(out), &cfg)?;
-    println!(
-        "forged hermetic artifacts into {out}/ (seed {seed:#x}, {} test samples)",
-        cfg.n_test
-    );
+    if sparsity > 0.0 {
+        println!(
+            "forged hermetic artifacts into {out}/ (seed {seed:#x}, {} test samples, \
+             pruned to {sparsity} sparsity — v2 block-sparse LSPW)",
+            cfg.n_test
+        );
+    } else {
+        println!(
+            "forged hermetic artifacts into {out}/ (seed {seed:#x}, {} test samples)",
+            cfg.n_test
+        );
+    }
     Ok(())
 }
 

@@ -21,7 +21,7 @@
 use crate::encode::RateEncoder;
 use crate::nce::lif::LifParams;
 use crate::nce::spikeplane::SpikePlane;
-use crate::nce::{KernelBackend, Kernels, NeuronComputeEngine};
+use crate::nce::{KernelBackend, Kernels, NeuronComputeEngine, SparseRowIndex};
 
 use super::network::{ArchDesc, QuantNetwork};
 
@@ -160,6 +160,13 @@ pub struct SnnEngine {
     /// the functional hot path reads these; packed words remain the
     /// storage/accounting model. INT2/4/8 all fit i8 exactly.
     unpacked: Vec<Vec<i8>>,
+    /// Per-layer zero-block skip indexes (§Sparse), built at load ONLY
+    /// when the artifact is marked sparse (`net.sparse_weights`) — never
+    /// inferred from zero-valued words, so dense nets keep the pinned
+    /// `words_touched == active_rows * n_words` accounting. Empty for
+    /// dense nets; when present, every LIF step routes through the
+    /// sparse walk.
+    sparse_idx: Vec<SparseRowIndex>,
     /// Per-layer membrane state, flattened over spatial positions.
     membranes: Vec<Vec<i32>>,
     /// Per-layer output spike planes (bit-packed; conv layers use
@@ -249,6 +256,15 @@ impl SnnEngine {
                 w
             })
             .collect();
+        let sparse_idx: Vec<SparseRowIndex> = if net.sparse_weights {
+            net.layers
+                .iter()
+                .zip(&unpacked)
+                .map(|(l, w)| SparseRowIndex::build(w, l.k_in, l.n_out, l.precision))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let im2col_tables = match &net.arch {
             ArchDesc::Convnet { side, channels, .. } => vec![
                 im2col_table(*side, channels[0]),
@@ -259,6 +275,7 @@ impl SnnEngine {
         Self {
             net,
             unpacked,
+            sparse_idx,
             im2col_tables,
             membranes,
             spike_bufs,
@@ -464,16 +481,28 @@ impl SnnEngine {
                 (&a[i - 1], b)
             };
             let out = &mut rest[0]; // == spike_bufs[i]
-            self.nce.step_plane_unpacked(
-                prev.words(),
-                layer.k_in,
-                &self.unpacked[i],
-                layer.n_words,
-                layer.precision,
-                &mut self.membranes[i],
-                out.words_mut(),
-                params,
-            );
+            match self.sparse_idx.get(i) {
+                Some(sidx) => self.nce.step_plane_sparse(
+                    prev.words(),
+                    layer.k_in,
+                    &self.unpacked[i],
+                    sidx,
+                    layer.precision,
+                    &mut self.membranes[i],
+                    out.words_mut(),
+                    params,
+                ),
+                None => self.nce.step_plane_unpacked(
+                    prev.words(),
+                    layer.k_in,
+                    &self.unpacked[i],
+                    layer.n_words,
+                    layer.precision,
+                    &mut self.membranes[i],
+                    out.words_mut(),
+                    params,
+                ),
+            }
             let spikes = out.count_ones();
             self.stats.active_rows += self.nce.last_active_rows() as u64;
             self.stats.words_touched += self.nce.last_words_touched() as u64;
@@ -525,16 +554,28 @@ impl SnnEngine {
         // ---- fc (event scan straight over the flat pool plane)
         let layer = &self.net.layers[2];
         let params = LifParams::new(layer.theta, leak);
-        self.nce.step_plane_unpacked(
-            self.pool_bufs[1].words(),
-            fc_in,
-            &self.unpacked[2],
-            layer.n_words,
-            layer.precision,
-            &mut self.membranes[2],
-            self.spike_bufs[2].words_mut(),
-            params,
-        );
+        match self.sparse_idx.get(2) {
+            Some(sidx) => self.nce.step_plane_sparse(
+                self.pool_bufs[1].words(),
+                fc_in,
+                &self.unpacked[2],
+                sidx,
+                layer.precision,
+                &mut self.membranes[2],
+                self.spike_bufs[2].words_mut(),
+                params,
+            ),
+            None => self.nce.step_plane_unpacked(
+                self.pool_bufs[1].words(),
+                fc_in,
+                &self.unpacked[2],
+                layer.n_words,
+                layer.precision,
+                &mut self.membranes[2],
+                self.spike_bufs[2].words_mut(),
+                params,
+            ),
+        }
         let spikes = self.spike_bufs[2].count_ones();
         self.stats.active_rows += self.nce.last_active_rows() as u64;
         self.stats.words_touched += self.nce.last_words_touched() as u64;
@@ -557,22 +598,35 @@ impl SnnEngine {
         let mut spikes = 0u64;
         let patch = &self.patch_bufs[idx];
         let w = &self.unpacked[idx];
+        let sidx = self.sparse_idx.get(idx);
         let v_all = &mut self.membranes[idx];
         let out_plane = &mut self.spike_bufs[idx];
         let nce = &mut self.nce;
         for pos in 0..positions {
             let v = &mut v_all[pos * n..(pos + 1) * n];
             let out = out_plane.pos_words_mut(pos);
-            nce.step_plane_unpacked(
-                patch.pos_words(pos),
-                row_k,
-                w,
-                layer.n_words,
-                layer.precision,
-                v,
-                out,
-                params,
-            );
+            match sidx {
+                Some(sidx) => nce.step_plane_sparse(
+                    patch.pos_words(pos),
+                    row_k,
+                    w,
+                    sidx,
+                    layer.precision,
+                    v,
+                    out,
+                    params,
+                ),
+                None => nce.step_plane_unpacked(
+                    patch.pos_words(pos),
+                    row_k,
+                    w,
+                    layer.n_words,
+                    layer.precision,
+                    v,
+                    out,
+                    params,
+                ),
+            }
             active += nce.last_active_rows() as u64;
             words += nce.last_words_touched() as u64;
             spikes += out.iter().map(|x| x.count_ones() as u64).sum::<u64>();
@@ -734,7 +788,7 @@ mod tests {
         let arch = ArchDesc::Mlp { sizes: vec![4, 3, 2], timesteps: 4, leak_shift: 2 };
         let l0 = dense_layer(4, 3, Precision::Int4, |j, o| ((j + o) % 3) as i32, 2);
         let l1 = dense_layer(3, 2, Precision::Int4, |j, o| j as i32 - o as i32, 1);
-        QuantNetwork { arch, layers: vec![l0, l1] }
+        QuantNetwork { arch, layers: vec![l0, l1], sparse_weights: false }
     }
 
     #[test]

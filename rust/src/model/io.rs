@@ -19,6 +19,9 @@ pub(crate) const WEIGHTS_MAGIC: &[u8; 4] = b"LSPW";
 pub(crate) const DATASET_MAGIC: &[u8; 4] = b"LSPD";
 pub(crate) const STREAM_MAGIC: &[u8; 4] = b"LSPS";
 pub(crate) const FORMAT_VERSION: u32 = 1;
+/// LSPW version tag of the block-sparse row encoding (pruned weights).
+/// Only LSPW files use it; LSPD/LSPS/manifest stay at [`FORMAT_VERSION`].
+pub(crate) const SPARSE_FORMAT_VERSION: u32 = 2;
 
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -56,6 +59,18 @@ impl<'a> Cursor<'a> {
 ///
 /// The arch description comes from the manifest; the loader validates the
 /// weight shapes against it via [`QuantNetwork::validate`].
+///
+/// Two on-disk layouts share the magic and are told apart by version:
+///
+/// * **v1 (dense)** — per layer, `u32 packed[k_in * n_words]` row-major.
+///   Byte-identical to every artifact written before sparse support.
+/// * **v2 (block-sparse rows)** — per layer, after the same header, a
+///   `u32 bitmap[k_in * ceil(n_words/32)]` (bit `b` of row `r`'s bitmap
+///   span set ⇔ packed word `b` of row `r` is nonzero) followed by
+///   `u32 payload[popcount(bitmap)]` holding exactly the nonzero packed
+///   words, row-major then word-index order. The loader reconstructs the
+///   dense `packed` array (absent words are zero) and marks the network
+///   [`QuantNetwork::sparse_weights`] so the engine builds skip indices.
 pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwork> {
     let blob = std::fs::read(&path)?;
     let mut c = Cursor::new(&blob);
@@ -63,7 +78,8 @@ pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwo
         anyhow::bail!("{}: not an LSPW file", path.as_ref().display());
     }
     let version = c.u32()?;
-    if version != FORMAT_VERSION {
+    let sparse = version == SPARSE_FORMAT_VERSION;
+    if version != FORMAT_VERSION && !sparse {
         anyhow::bail!("unsupported LSPW version {version}");
     }
     let n_layers = c.u32()? as usize;
@@ -87,11 +103,14 @@ pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwo
         let theta = c.i32()?;
         let precision = Precision::from_bits(bits)
             .ok_or_else(|| anyhow::anyhow!("bad field width {bits}"))?;
-        let payload = c.bytes(k_in * n_words * 4)?;
-        let packed: Vec<u32> = payload
-            .chunks_exact(4)
-            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
-            .collect();
+        let packed: Vec<u32> = if sparse {
+            read_sparse_rows(&mut c, k_in, n_words)?
+        } else {
+            c.bytes(k_in * n_words * 4)?
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect()
+        };
         if theta < 1 {
             anyhow::bail!("non-positive folded threshold {theta}");
         }
@@ -108,9 +127,49 @@ pub fn load_weights(path: impl AsRef<Path>, arch: ArchDesc) -> Result<QuantNetwo
     if c.pos != blob.len() {
         anyhow::bail!("trailing bytes in LSPW file");
     }
-    let net = QuantNetwork { arch, layers };
+    let net = QuantNetwork { arch, layers, sparse_weights: sparse };
     net.validate()?;
     Ok(net)
+}
+
+/// Decode one v2 layer's block-sparse rows back into the dense
+/// `[k_in][n_words]` packed array.
+///
+/// The encoding is canonical: a set bitmap bit must carry a *nonzero*
+/// payload word, bits past `n_words` in a row's last bitmap word must be
+/// clear, and the payload length is exactly the bitmap popcount — any
+/// violation is a loud error, so a v2 file has one valid byte form.
+fn read_sparse_rows(c: &mut Cursor<'_>, k_in: usize, n_words: usize) -> Result<Vec<u32>> {
+    let bm_words = n_words.div_ceil(32);
+    let bitmap: Vec<u32> = c
+        .bytes(k_in * bm_words * 4)?
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let nnz: usize = bitmap.iter().map(|w| w.count_ones() as usize).sum();
+    let payload = c.bytes(nnz * 4)?;
+    let mut payload_words =
+        payload.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()));
+    let mut packed = vec![0u32; k_in * n_words];
+    for r in 0..k_in {
+        for (i, &bm) in bitmap[r * bm_words..(r + 1) * bm_words].iter().enumerate() {
+            let base = i * 32;
+            if base + 32 > n_words && (bm >> (n_words - base)) != 0 {
+                anyhow::bail!("sparse bitmap sets a word past n_words in row {r}");
+            }
+            let mut rest = bm;
+            while rest != 0 {
+                let b = rest.trailing_zeros() as usize;
+                rest &= rest - 1;
+                let w = payload_words.next().expect("payload sized from popcount");
+                if w == 0 {
+                    anyhow::bail!("zero payload word under a set bitmap bit (row {r})");
+                }
+                packed[r * n_words + base + b] = w;
+            }
+        }
+    }
+    Ok(packed)
 }
 
 /// A loaded LSPD dataset: u8 pixels (encoder input) + labels.
@@ -658,6 +717,58 @@ mod tests {
         let pb = dir.join("bad.bin");
         std::fs::write(&pb, &bad).unwrap();
         assert!(load_stream(&pb).is_err());
+    }
+
+    /// A one-layer v2 blob for `tiny_arch` (2 rows x 1 word, INT8):
+    /// per-row bitmaps `bms`, then the packed payload words.
+    fn v2_blob(bms: [u32; 2], payload: &[u32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(WEIGHTS_MAGIC);
+        for v in [SPARSE_FORMAT_VERSION, 1u32, 16, 2] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [8u32, 2, 4, 1] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&0.5f32.to_le_bytes());
+        b.extend_from_slice(&2i32.to_le_bytes());
+        for bm in bms {
+            b.extend_from_slice(&bm.to_le_bytes());
+        }
+        for w in payload {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn lspw_v2_sparse_roundtrip() {
+        let dir = std::env::temp_dir().join("lspine_io_test8");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.w.bin");
+        // row 0 has its single word present, row 1 is all-zero
+        std::fs::write(&p, v2_blob([1, 0], &[0x04030201])).unwrap();
+        let net = load_weights(&p, tiny_arch()).unwrap();
+        assert!(net.sparse_weights, "v2 files mark the network sparse");
+        assert_eq!(net.layers[0].packed, vec![0x04030201, 0]);
+    }
+
+    #[test]
+    fn lspw_v2_rejects_non_canonical() {
+        let dir = std::env::temp_dir().join("lspine_io_test9");
+        std::fs::create_dir_all(&dir).unwrap();
+        // zero payload word under a set bitmap bit
+        let p = dir.join("z.w.bin");
+        std::fs::write(&p, v2_blob([1, 1], &[0x04030201, 0])).unwrap();
+        assert!(load_weights(&p, tiny_arch()).is_err());
+        // bitmap bit past n_words (n_words = 1, bit 1 set)
+        let p2 = dir.join("oob.w.bin");
+        std::fs::write(&p2, v2_blob([2, 0], &[7])).unwrap();
+        assert!(load_weights(&p2, tiny_arch()).is_err());
+        // payload shorter than the bitmap popcount -> truncated
+        let p3 = dir.join("short.w.bin");
+        std::fs::write(&p3, v2_blob([1, 1], &[7])).unwrap();
+        assert!(load_weights(&p3, tiny_arch()).is_err());
     }
 
     #[test]

@@ -184,6 +184,13 @@ pub struct QuantNetwork {
     pub arch: ArchDesc,
     /// Per-layer packed weights, input to output order.
     pub layers: Vec<QuantNetLayer>,
+    /// Pruned-network marker: set by the sparse (v2) LSPW loader and by
+    /// `forge::prune_network`. When true the engine builds per-layer
+    /// skip indices and routes through the sparse kernel walk; dense
+    /// artifacts keep the exact `active_rows * n_words` word-traffic
+    /// accounting, so sparsity is always an explicit property of the
+    /// artifact, never inferred from zero-valued packed words.
+    pub sparse_weights: bool,
 }
 
 impl QuantNetwork {

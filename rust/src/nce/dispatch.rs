@@ -44,7 +44,7 @@
 use std::fmt;
 use std::sync::OnceLock;
 
-use super::lif::{lif_step_plane_accum, AccScratch, LifParams};
+use super::lif::{lif_step_plane_accum, lif_step_plane_sparse_accum, AccScratch, LifParams, SparseRowIndex};
 use super::simd::Precision;
 use super::spikeplane::{self, SpikePlane};
 
@@ -138,6 +138,47 @@ pub trait KernelBackend: Sync {
             |acc, row| self.accumulate_i8(acc, row),
             |acc, row| self.accumulate_i16(acc, row),
         );
+    }
+
+    /// One LIF timestep over a *pruned* weight matrix: identical
+    /// semantics to [`KernelBackend::lif_step_plane_unpacked`] but the
+    /// per-row accumulate walks only the nonzero lane spans recorded in
+    /// `index` (see [`SparseRowIndex`]), skipping zero weight blocks
+    /// entirely. Returns the number of packed synaptic words actually
+    /// touched, for the energy/cycle accounting.
+    ///
+    /// This is a trait default on purpose: there is exactly ONE skip-list
+    /// walk in the codebase, and every backend flows its lane adds
+    /// through it. Backend `accumulate_i8`/`accumulate_i16` impls already
+    /// handle ragged tails, so span subslices need no special casing.
+    #[allow(clippy::too_many_arguments)]
+    fn lif_step_plane_sparse(
+        &self,
+        in_words: &[u64],
+        k_in: usize,
+        w_i8: &[i8],
+        n_out: usize,
+        precision: Precision,
+        index: &SparseRowIndex,
+        v: &mut [i32],
+        out_words: &mut [u64],
+        p: LifParams,
+        scratch: &mut AccScratch,
+    ) -> u64 {
+        lif_step_plane_sparse_accum(
+            in_words,
+            k_in,
+            w_i8,
+            n_out,
+            precision,
+            index,
+            v,
+            out_words,
+            p,
+            scratch,
+            |acc, row| self.accumulate_i8(acc, row),
+            |acc, row| self.accumulate_i16(acc, row),
+        )
     }
 
     /// 2x2 max-pool (OR on binary spikes) — semantics of

@@ -9,6 +9,7 @@ use super::adder_tree::{SimdAdder, Structure};
 use super::dispatch::{KernelBackend, Kernels};
 use super::lif::{
     lif_step_plane, lif_step_row, lif_step_row_unpacked, AccScratch, LifParams,
+    SparseRowIndex,
 };
 use super::simd::Precision;
 use super::spikeplane;
@@ -171,6 +172,41 @@ impl NeuronComputeEngine {
             params,
             &mut self.scratch,
         );
+    }
+
+    /// Sparse variant of [`step_plane_unpacked`](Self::step_plane_unpacked):
+    /// the accumulate walks only the nonzero lane spans of `index`,
+    /// skipping pruned weight blocks (§Sparse). `last_words_touched`
+    /// reflects the packed words *actually* streamed — on a pruned net
+    /// this is what the cycle/energy models see, so skipped synapses are
+    /// credited automatically.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_plane_sparse(
+        &mut self,
+        in_words: &[u64],
+        k_in: usize,
+        w_i8: &[i8],
+        index: &SparseRowIndex,
+        precision: Precision,
+        v: &mut [i32],
+        out_words: &mut [u64],
+        params: LifParams,
+    ) {
+        self.last_active_rows = spikeplane::count_ones(in_words) as usize;
+        let kernels = self.kernels; // Copy: frees `self` for the scratch borrow
+        let touched = kernels.lif_step_plane_sparse(
+            in_words,
+            k_in,
+            w_i8,
+            v.len(),
+            precision,
+            index,
+            v,
+            out_words,
+            params,
+            &mut self.scratch,
+        );
+        self.last_words_touched = touched as usize;
     }
 
     /// One inter-window decay pass over a membrane slice: `v -= v >> shift`

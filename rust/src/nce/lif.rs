@@ -8,6 +8,7 @@
 //! conditional subtract in hardware.
 
 use super::simd::{unpack_field, Precision};
+use super::spikeplane::for_each_set_bit;
 
 /// Static per-layer neuron parameters (folded integer domain).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -292,6 +293,230 @@ pub(crate) fn lif_step_plane_accum(
     membrane_update_to_words(v, acc32, p, out_words);
 }
 
+// ---------------------------------------------------------------------
+// Sparse-synapse skip walk (pruned weights)
+// ---------------------------------------------------------------------
+
+/// CSR skip index over a layer's i8 weight shadow, at packed-storage-word
+/// granularity: each row is cut into chunks of `fields_per_word` lanes
+/// (exactly the lanes one packed `u32` stores), all-zero chunks are
+/// dropped, and adjacent surviving chunks merge into `[start, end)` lane
+/// spans. The sparse LIF walk streams only these spans, so zero weight
+/// blocks cost neither adds nor (in the accounting) memory words.
+///
+/// Built once per layer at engine-construction time from the same shadow
+/// the dense kernels read; the weights themselves stay dense in memory —
+/// only the *walk* is sparse, which keeps every backend's lane
+/// accumulators unchanged (they already handle arbitrary slice lengths).
+#[derive(Debug, Clone)]
+pub struct SparseRowIndex {
+    /// CSR offsets into `spans`: row `j` owns `spans[idx[j]..idx[j+1]]`.
+    span_index: Vec<u32>,
+    /// Merged nonzero chunk ranges as `[start, end)` lane indices.
+    spans: Vec<(u32, u32)>,
+    /// Nonzero packed storage words per row (the words-touched credit).
+    row_words: Vec<u32>,
+    k_in: usize,
+    n_out: usize,
+}
+
+impl SparseRowIndex {
+    /// Scan `w_i8` (`[k_in][n_out]` row-major) into a skip index; chunk
+    /// width is `precision.fields_per_word()` so the word-traffic
+    /// accounting matches the packed storage model exactly.
+    pub fn build(w_i8: &[i8], k_in: usize, n_out: usize, precision: Precision) -> Self {
+        assert_eq!(w_i8.len(), k_in * n_out, "shadow shape mismatch");
+        let fields = precision.fields_per_word();
+        let mut span_index = Vec::with_capacity(k_in + 1);
+        let mut spans: Vec<(u32, u32)> = Vec::new();
+        let mut row_words = Vec::with_capacity(k_in);
+        span_index.push(0u32);
+        for r in 0..k_in {
+            let row = &w_i8[r * n_out..(r + 1) * n_out];
+            let row_start = spans.len();
+            let mut words = 0u32;
+            let mut chunk = 0usize;
+            while chunk * fields < n_out {
+                let s = chunk * fields;
+                let e = ((chunk + 1) * fields).min(n_out);
+                if row[s..e].iter().any(|&w| w != 0) {
+                    words += 1;
+                    // merge with the previous span when it belongs to
+                    // this row and ends exactly where this chunk starts
+                    let merge = spans.len() > row_start
+                        && spans.last().is_some_and(|l| l.1 as usize == s);
+                    if merge {
+                        spans.last_mut().unwrap().1 = e as u32;
+                    } else {
+                        spans.push((s as u32, e as u32));
+                    }
+                }
+                chunk += 1;
+            }
+            span_index.push(spans.len() as u32);
+            row_words.push(words);
+        }
+        Self { span_index, spans, row_words, k_in, n_out }
+    }
+
+    /// Merged nonzero lane spans of input row `j`.
+    #[inline]
+    pub fn row_spans(&self, j: usize) -> &[(u32, u32)] {
+        &self.spans[self.span_index[j] as usize..self.span_index[j + 1] as usize]
+    }
+
+    /// Nonzero packed storage words of input row `j`.
+    #[inline]
+    pub fn row_word_count(&self, j: usize) -> u32 {
+        self.row_words[j]
+    }
+
+    /// Nonzero packed words across the whole layer (dense is
+    /// `k_in * n_words`).
+    pub fn total_words(&self) -> u64 {
+        self.row_words.iter().map(|&w| w as u64).sum()
+    }
+
+    /// Shape this index was built for.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k_in, self.n_out)
+    }
+}
+
+/// Sparse-walk twin of [`lif_step_plane_unpacked`]: identical event scan
+/// and membrane update, but each active row accumulates only the spans
+/// its [`SparseRowIndex`] marks nonzero. Returns the packed storage
+/// words actually touched (the sum of active rows' nonzero word counts),
+/// which the engine threads into stats and the energy model.
+///
+/// Bit-exact with the dense kernels by construction — skipped spans are
+/// all-zero, so their adds are identities; and the narrow-block spill
+/// bounds stay exact because skipping lanes only removes magnitude from
+/// the block sums. This free function is the scalar oracle; backends
+/// share the walk through `lif_step_plane_sparse_accum` (see
+/// [`super::dispatch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn lif_step_plane_sparse(
+    in_words: &[u64],
+    k_in: usize,
+    w_i8: &[i8],
+    n_out: usize,
+    precision: Precision,
+    index: &SparseRowIndex,
+    v: &mut [i32],
+    out_words: &mut [u64],
+    p: LifParams,
+    scratch: &mut AccScratch,
+) -> u64 {
+    lif_step_plane_sparse_accum(
+        in_words,
+        k_in,
+        w_i8,
+        n_out,
+        precision,
+        index,
+        v,
+        out_words,
+        p,
+        scratch,
+        |acc, row| {
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += w;
+            }
+        },
+        |acc, row| {
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += w as i16;
+            }
+        },
+    )
+}
+
+/// The sparse plane LIF skeleton: [`lif_step_plane_accum`] with the
+/// per-row accumulate restricted to the index's nonzero spans. One walk,
+/// every backend — the `acc_i8`/`acc_i16` lane closures are the only
+/// backend-specific part and already handle ragged span lengths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lif_step_plane_sparse_accum(
+    in_words: &[u64],
+    k_in: usize,
+    w_i8: &[i8],
+    n_out: usize,
+    precision: Precision,
+    index: &SparseRowIndex,
+    v: &mut [i32],
+    out_words: &mut [u64],
+    p: LifParams,
+    scratch: &mut AccScratch,
+    mut acc_i8: impl FnMut(&mut [i8], &[i8]),
+    mut acc_i16: impl FnMut(&mut [i16], &[i8]),
+) -> u64 {
+    debug_assert_eq!(v.len(), n_out);
+    debug_assert_eq!(w_i8.len(), k_in * n_out);
+    debug_assert_eq!(index.shape(), (k_in, n_out), "index built for another layer");
+    debug_assert_eq!(out_words.len(), n_out.div_ceil(64).max(1));
+    scratch.reserve(n_out);
+    let acc32 = &mut scratch.acc32[..n_out];
+    acc32.fill(0);
+    let mut words_touched = 0u64;
+
+    let block_rows = i8_block_rows(precision);
+    if block_rows > 0 {
+        let acc8 = &mut scratch.acc8[..n_out];
+        acc8.fill(0);
+        let mut in_block = 0usize;
+        for_each_set_bit(in_words, |j| {
+            debug_assert!(j < k_in);
+            let row = &w_i8[j * n_out..(j + 1) * n_out];
+            for &(s, e) in index.row_spans(j) {
+                acc_i8(&mut acc8[s as usize..e as usize], &row[s as usize..e as usize]);
+            }
+            words_touched += index.row_word_count(j) as u64;
+            in_block += 1;
+            if in_block == block_rows {
+                for (s, a) in acc32.iter_mut().zip(acc8.iter_mut()) {
+                    *s += *a as i32;
+                    *a = 0;
+                }
+                in_block = 0;
+            }
+        });
+        if in_block > 0 {
+            for (s, &a) in acc32.iter_mut().zip(acc8.iter()) {
+                *s += a as i32;
+            }
+        }
+    } else {
+        let acc16 = &mut scratch.acc16[..n_out];
+        acc16.fill(0);
+        let mut in_block = 0usize;
+        for_each_set_bit(in_words, |j| {
+            debug_assert!(j < k_in);
+            let row = &w_i8[j * n_out..(j + 1) * n_out];
+            for &(s, e) in index.row_spans(j) {
+                acc_i16(&mut acc16[s as usize..e as usize], &row[s as usize..e as usize]);
+            }
+            words_touched += index.row_word_count(j) as u64;
+            in_block += 1;
+            if in_block == I16_BLOCK_ROWS {
+                for (s, a) in acc32.iter_mut().zip(acc16.iter_mut()) {
+                    *s += *a as i32;
+                    *a = 0;
+                }
+                in_block = 0;
+            }
+        });
+        if in_block > 0 {
+            for (s, &a) in acc32.iter_mut().zip(acc16.iter()) {
+                *s += a as i32;
+            }
+        }
+    }
+
+    membrane_update_to_words(v, acc32, p, out_words);
+    words_touched
+}
+
 /// Plane-input variant of [`lif_step_row`] over *packed* storage words —
 /// the storage-model reference for the plane path (conformance pin).
 #[allow(clippy::too_many_arguments)]
@@ -318,18 +543,6 @@ pub fn lif_step_plane(
         accumulate_row(row, precision, fields, &mut acc[..n_out]);
     });
     membrane_update_to_words(v, &acc[..n_out], p, out_words);
-}
-
-/// `trailing_zeros` scan over set bits of a word slice.
-#[inline]
-fn for_each_set_bit(words: &[u64], mut f: impl FnMut(usize)) {
-    for (wi, &w) in words.iter().enumerate() {
-        let mut w = w;
-        while w != 0 {
-            f(wi * 64 + w.trailing_zeros() as usize);
-            w &= w - 1;
-        }
-    }
 }
 
 /// Membrane update + threshold + reset, writing spikes as output bits.
@@ -636,6 +849,108 @@ mod tests {
                 );
                 assert_eq!(out_b.to_u8(), out_ref, "{} k={k} n={n}", p.name());
                 assert_eq!(v_b, v_ref, "{} k={k} n={n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_index_spans_and_word_counts() {
+        // INT4 -> 8 lanes per packed word. Row layout (n=20, 3 chunks of
+        // 8/8/4 lanes): chunk0 nonzero, chunk1 zero, chunk2 nonzero ->
+        // two spans, 2 words. A second row all-zero -> no spans.
+        let n = 20usize;
+        let mut w = vec![0i8; 2 * n];
+        w[0] = 3; // chunk 0
+        w[17] = -2; // chunk 2 (ragged, lanes 16..20)
+        let idx = SparseRowIndex::build(&w, 2, n, Precision::Int4);
+        assert_eq!(idx.row_spans(0), &[(0, 8), (16, 20)]);
+        assert_eq!(idx.row_word_count(0), 2);
+        assert_eq!(idx.row_spans(1), &[] as &[(u32, u32)]);
+        assert_eq!(idx.row_word_count(1), 0);
+        assert_eq!(idx.total_words(), 2);
+
+        // adjacent nonzero chunks merge into one span
+        let mut w2 = vec![0i8; n];
+        w2[2] = 1;
+        w2[9] = 1; // chunks 0 and 1 both nonzero -> merged [0, 16)
+        let idx2 = SparseRowIndex::build(&w2, 1, n, Precision::Int4);
+        assert_eq!(idx2.row_spans(0), &[(0, 16)]);
+        assert_eq!(idx2.row_word_count(0), 2);
+    }
+
+    #[test]
+    fn sparse_walk_matches_dense_and_counts_words() {
+        use crate::nce::spikeplane::SpikePlane;
+        let mut state = 0x7A57Eu64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(13);
+            (state >> 33) as u32
+        };
+        for p in [Precision::Int2, Precision::Int4, Precision::Int8] {
+            let (lo, hi) = p.qrange();
+            // shapes across ragged widths and the 63/15/255 spill bounds
+            for (k, n) in [(1usize, 1usize), (16, 65), (70, 33), (300, 50)] {
+                // ~80% of weights zeroed, in chunk-sized runs and singles
+                let w_i8: Vec<i8> = (0..k * n)
+                    .map(|_| {
+                        if next() % 5 == 0 {
+                            (lo + (next() as i32).rem_euclid(hi - lo + 1)) as i8
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                let spikes: Vec<u8> = (0..k).map(|_| (next() % 2) as u8).collect();
+                let plane = SpikePlane::from_u8(&spikes);
+                let v0: Vec<i32> =
+                    (0..n).map(|_| (next() as i32).rem_euclid(100) - 50).collect();
+                let params = LifParams::new(5, 2);
+
+                let mut v_dense = v0.clone();
+                let mut out_dense = SpikePlane::flat(n);
+                let mut scratch = AccScratch::new();
+                lif_step_plane_unpacked(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &mut v_dense,
+                    out_dense.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+
+                let index = SparseRowIndex::build(&w_i8, k, n, p);
+                let mut v_sp = v0.clone();
+                let mut out_sp = SpikePlane::flat(n);
+                let touched = lif_step_plane_sparse(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &index,
+                    &mut v_sp,
+                    out_sp.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+                assert_eq!(out_sp.words(), out_dense.words(), "{} k={k} n={n}", p.name());
+                assert_eq!(v_sp, v_dense, "{} k={k} n={n}", p.name());
+
+                // the word credit is exactly the active rows' nonzero words
+                let want: u64 = spikes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &s)| s != 0)
+                    .map(|(j, _)| index.row_word_count(j) as u64)
+                    .sum();
+                assert_eq!(touched, want, "{} k={k} n={n}", p.name());
+                let n_words = n.div_ceil(p.fields_per_word());
+                let dense_words =
+                    spikes.iter().filter(|&&s| s != 0).count() as u64 * n_words as u64;
+                assert!(touched <= dense_words);
             }
         }
     }

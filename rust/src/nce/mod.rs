@@ -31,6 +31,6 @@ pub mod spikeplane;
 
 pub use dispatch::{KernelBackend, KernelKind, Kernels};
 pub use engine::NeuronComputeEngine;
-pub use lif::{lif_step_row, LifParams};
+pub use lif::{lif_step_row, LifParams, SparseRowIndex};
 pub use simd::{pack_row, sign_extend, unpack_word, Precision};
 pub use spikeplane::SpikePlane;

@@ -195,6 +195,21 @@ pub fn count_ones(words: &[u64]) -> u64 {
     words.iter().map(|w| w.count_ones() as u64).sum()
 }
 
+/// `trailing_zeros` scan over the set bits of a raw word slice — the
+/// event scan shared by the dense and sparse LIF plane skeletons in
+/// [`super::lif`] (flat bit indexing; for position-block planes use
+/// [`SpikePlane::for_each_set`]).
+#[inline]
+pub(crate) fn for_each_set_bit(words: &[u64], mut f: impl FnMut(usize)) {
+    for (wi, &w) in words.iter().enumerate() {
+        let mut w = w;
+        while w != 0 {
+            f(wi * 64 + w.trailing_zeros() as usize);
+            w &= w - 1;
+        }
+    }
+}
+
 /// 2x2 max-pool (OR on binary spikes) over a channel-last conv plane.
 ///
 /// `src` is a grid plane of `side*side` positions x `ch` bits (the layout

@@ -1,0 +1,555 @@
+//! Sparse-synapse differential battery: the pruned forge, the v2
+//! block-sparse LSPW format, and the zero-block-skipping kernel walk are
+//! locked down against the dense pipeline they must agree with.
+//!
+//! The contract under test, end to end:
+//! - **bit-exactness** — a pruned network routed through the sparse skip
+//!   walk produces *identical* spike counts to the same pruned weights
+//!   run through the dense kernels, at every sparsity level, precision,
+//!   architecture, and kernel backend (skipping an all-zero block only
+//!   removes `+0` terms; block-accumulator spills happen at the same row
+//!   counts either way).
+//! - **strict dense compatibility** — `prune(0.0)` is a byte-level no-op
+//!   and every dense (v1) artifact keeps loading exactly as before, with
+//!   `sparse_weights == false` and the dense word-traffic accounting.
+//! - **the skip actually pays** — at 0.9 sparsity the walk touches >= 5x
+//!   fewer synaptic words than the dense walk over the same net.
+//! - **serving integration** — a 0.9-pruned forged artifact served over
+//!   the real 4-worker TCP path answers one-shots bit-identically to an
+//!   in-process dense-walk reference on the same pruned weights.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use lspine::coordinator::wire::{self, Request, Response, HEADER_LEN};
+use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine, TcpFrontend};
+use lspine::forge;
+use lspine::model::{load_weights, ArchDesc, QuantNetwork, SnnEngine};
+use lspine::nce::lif::{AccScratch, LifParams};
+use lspine::nce::simd::{pack_row, unpack_row, Precision};
+use lspine::nce::{KernelBackend, Kernels, SparseRowIndex, SpikePlane};
+use lspine::runtime::ArtifactStore;
+use lspine::util::rng::Rng;
+
+const SPARSITIES: [f64; 4] = [0.0, 0.5, 0.9, 0.99];
+
+fn golden_archs() -> [(&'static str, ArchDesc); 2] {
+    [
+        ("mlp", forge::golden_mlp_arch()),
+        ("convnet", forge::golden_convnet_arch()),
+    ]
+}
+
+/// The golden net pruned to `s`, with the sparse flag forced on so the
+/// engine routes the skip walk even at `s = 0.0` (where `prune_network`
+/// is a no-op that keeps the artifact dense).
+fn pruned_net(arch: &ArchDesc, p: Precision, s: f64) -> QuantNetwork {
+    let net = forge::raw_network(arch, forge::GOLDEN_SEED, p, forge::golden_theta(p));
+    let mut pruned = forge::prune_network(&net, s).expect("prune");
+    pruned.sparse_weights = true;
+    pruned
+}
+
+// --- (a) sparse-vs-dense bit-exactness across the whole matrix ---
+
+#[test]
+fn sparse_walk_is_bit_exact_with_dense_everywhere() {
+    for (name, arch) in golden_archs() {
+        let dim = arch.input_dim();
+        let px = forge::pixels(forge::GOLDEN_SEED, 4, dim);
+        for p in forge::PRECISIONS {
+            for s in SPARSITIES {
+                let sparse_net = pruned_net(&arch, p, s);
+                let mut dense_net = sparse_net.clone();
+                dense_net.sparse_weights = false;
+                // dense reference: same pruned weights, dense walk, scalar
+                let mut reference = SnnEngine::with_kernels(dense_net, Kernels::scalar());
+                for kernels in Kernels::available() {
+                    let mut engine =
+                        SnnEngine::with_kernels(sparse_net.clone(), kernels);
+                    for (i, sample) in px.chunks(dim).enumerate() {
+                        let want: Vec<u32> = reference.infer(sample).to_vec();
+                        let got: Vec<u32> = engine.infer(sample).to_vec();
+                        let ctx = format!(
+                            "{name} {} s={s} backend={} sample={i}",
+                            p.name(),
+                            kernels.name()
+                        );
+                        assert_eq!(got, want, "counts diverge: {ctx}");
+                        let (ds, ss) = (reference.last_stats(), engine.last_stats());
+                        assert_eq!(
+                            ss.spikes_emitted, ds.spikes_emitted,
+                            "spike totals diverge: {ctx}"
+                        );
+                        assert_eq!(
+                            ss.active_rows, ds.active_rows,
+                            "active rows diverge: {ctx}"
+                        );
+                        assert!(
+                            ss.words_touched <= ds.words_touched,
+                            "skip walk touched more words than dense ({} > {}): {ctx}",
+                            ss.words_touched,
+                            ds.words_touched
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --- the acceptance bound: 0.9 sparsity -> >= 5x fewer words ---
+
+#[test]
+fn sparsity_09_touches_5x_fewer_words_than_dense() {
+    for (name, arch) in golden_archs() {
+        let dim = arch.input_dim();
+        let px = forge::pixels(forge::GOLDEN_SEED, 1, dim);
+        for p in forge::PRECISIONS {
+            let sparse_net = pruned_net(&arch, p, 0.9);
+            let mut dense_net = sparse_net.clone();
+            dense_net.sparse_weights = false;
+            let mut sparse = SnnEngine::with_kernels(sparse_net, Kernels::scalar());
+            let mut dense = SnnEngine::with_kernels(dense_net, Kernels::scalar());
+            sparse.infer(&px);
+            dense.infer(&px);
+            let ws = sparse.last_stats().words_touched;
+            let wd = dense.last_stats().words_touched;
+            assert!(wd > 0, "{name} {}: dense walk streamed nothing", p.name());
+            assert!(
+                ws * 5 <= wd,
+                "{name} {}: 0.9-sparsity words {ws} not >= 5x under dense {wd}",
+                p.name()
+            );
+        }
+    }
+}
+
+// --- (b) prune(0.0) round-trips to the exact dense artifact bytes ---
+
+#[test]
+fn prune_zero_is_a_byte_level_noop() {
+    for (name, arch) in golden_archs() {
+        for p in forge::PRECISIONS {
+            let net =
+                forge::raw_network(&arch, forge::GOLDEN_SEED, p, forge::golden_theta(p));
+            let pruned = forge::prune_network(&net, 0.0).expect("prune 0.0");
+            assert!(
+                !pruned.sparse_weights,
+                "{name} {}: prune(0.0) must stay a dense artifact",
+                p.name()
+            );
+            assert_eq!(
+                forge::lspw_bytes(&pruned),
+                forge::lspw_bytes(&net),
+                "{name} {}: prune(0.0) changed the LSPW bytes",
+                p.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_files_roundtrip_and_dense_files_stay_v1() {
+    let dir = std::env::temp_dir().join(format!("lspine-sparse-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, arch) in golden_archs() {
+        for p in forge::PRECISIONS {
+            let net =
+                forge::raw_network(&arch, forge::GOLDEN_SEED, p, forge::golden_theta(p));
+            // dense v1 path: byte round-trip, flag stays off
+            let dense_path = dir.join(format!("{name}-{}-dense.lspw", p.name()));
+            forge::write_lspw(&dense_path, &net).unwrap();
+            let loaded = load_weights(&dense_path, arch.clone()).unwrap();
+            assert!(!loaded.sparse_weights, "{name} {}", p.name());
+            assert_eq!(
+                loaded.layers.iter().map(|l| &l.packed).collect::<Vec<_>>(),
+                net.layers.iter().map(|l| &l.packed).collect::<Vec<_>>()
+            );
+            // sparse v2 path: pruned weights survive the bitmap encoding
+            let pruned = forge::prune_network(&net, 0.9).unwrap();
+            let sparse_path = dir.join(format!("{name}-{}-sparse.lspw", p.name()));
+            forge::write_lspw_sparse(&sparse_path, &pruned).unwrap();
+            let loaded = load_weights(&sparse_path, arch.clone()).unwrap();
+            assert!(loaded.sparse_weights, "{name} {}", p.name());
+            assert_eq!(
+                loaded.layers.iter().map(|l| &l.packed).collect::<Vec<_>>(),
+                pruned.layers.iter().map(|l| &l.packed).collect::<Vec<_>>(),
+                "{name} {}: v2 payload lost weights",
+                p.name()
+            );
+            assert!(
+                std::fs::metadata(&sparse_path).unwrap().len()
+                    < std::fs::metadata(&dense_path).unwrap().len(),
+                "{name} {}: 0.9-sparse file not smaller than dense",
+                p.name()
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn default_forge_artifacts_load_dense() {
+    // the checked-in/default pipeline stays v1: no artifact silently
+    // becomes sparse, and the word-traffic accounting pin holds
+    let store = ArtifactStore::open(&forge::ensure_artifacts().unwrap()).unwrap();
+    for (model, bits) in [("mlp", 2u32), ("mlp", 4), ("mlp", 8), ("convnet", 4)] {
+        let net = store.load_network(model, "lspine", bits).unwrap();
+        assert!(!net.sparse_weights, "{model} INT{bits} loaded as sparse");
+    }
+}
+
+// --- (c) skip-walk proptests: ragged widths, spill boundaries ---
+
+/// Hand-rolled property test: random layer shapes (including ragged
+/// final words), random zero-block patterns (plus scattered zero lanes
+/// that must NOT cause skipping on their own), random membranes and
+/// spike planes — the skip walk must match the dense kernel bit-for-bit
+/// on every backend and report exactly the surviving words of the
+/// active rows. Fan-ins up to 600 active rows cross both the i8 block
+/// spill (15/63 rows) and the i16 spill (255 rows).
+#[test]
+fn prop_skip_walk_matches_dense_on_random_shapes() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed * 6151 + 17);
+        let p = forge::PRECISIONS[(seed % 3) as usize];
+        let (lo, hi) = p.qrange();
+        let fields = p.fields_per_word();
+        let k = 1 + rng.below(600) as usize;
+        let n = 1 + rng.below(140) as usize;
+        let mut w_i8: Vec<i8> = (0..k * n)
+            .map(|_| rng.range_i64(lo as i64, hi as i64) as i8)
+            .collect();
+        for row in 0..k {
+            let mut s = 0usize;
+            while s < n {
+                let e = (s + fields).min(n);
+                if rng.below(2) == 0 {
+                    // whole-block zero: the walk must skip it
+                    w_i8[row * n + s..row * n + e].fill(0);
+                } else if rng.below(4) == 0 {
+                    // partial zeros: block survives, lanes stay exact
+                    w_i8[row * n + s] = 0;
+                }
+                s = e;
+            }
+        }
+        let index = SparseRowIndex::build(&w_i8, k, n, p);
+        let mut spikes = vec![0u8; k];
+        rng.fill_spikes(0.4, &mut spikes);
+        let plane = SpikePlane::from_u8(&spikes);
+        let v0: Vec<i32> = (0..n).map(|_| rng.range_i64(-40, 40) as i32).collect();
+        let params = LifParams::new(forge::golden_theta(p), 2);
+
+        let expected_words: u64 = spikes
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s != 0)
+            .map(|(j, _)| index.row_word_count(j) as u64)
+            .sum();
+
+        // dense reference once (scalar), then every backend's skip walk
+        let mut v_ref = v0.clone();
+        let mut out_ref = SpikePlane::flat(n);
+        let mut scratch = AccScratch::new();
+        Kernels::scalar().lif_step_plane_unpacked(
+            plane.words(),
+            k,
+            &w_i8,
+            n,
+            p,
+            &mut v_ref,
+            out_ref.words_mut(),
+            params,
+            &mut scratch,
+        );
+        for kernels in Kernels::available() {
+            let mut v = v0.clone();
+            let mut out = SpikePlane::flat(n);
+            let touched = kernels.lif_step_plane_sparse(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &index,
+                &mut v,
+                out.words_mut(),
+                params,
+                &mut scratch,
+            );
+            let ctx = format!(
+                "seed={seed} {} k={k} n={n} backend={}",
+                p.name(),
+                kernels.name()
+            );
+            assert_eq!(v, v_ref, "membranes diverge: {ctx}");
+            assert_eq!(out.words(), out_ref.words(), "spikes diverge: {ctx}");
+            assert_eq!(touched, expected_words, "word accounting off: {ctx}");
+        }
+    }
+}
+
+/// Block-spill boundary pin: exactly-at/one-past the i8 spill row counts
+/// with every surviving block at the ragged tail of the row.
+#[test]
+fn prop_skip_walk_exact_at_spill_boundaries() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed * 733 + 3);
+        let p = forge::PRECISIONS[(seed % 3) as usize];
+        let fields = p.fields_per_word();
+        // i8 block spills at 63 (Int2/Int4) or 15 (Int8) accumulated
+        // rows; sweep active-row counts straddling both plus the 255 i16
+        // spill
+        for &active in &[14usize, 15, 16, 62, 63, 64, 255, 256] {
+            let k = active; // every row spikes
+            // strictly ragged tail: 1 ..= fields-1 lanes past the last
+            // full word
+            let n = fields * 3 + 1 + rng.below(fields as u64 - 1) as usize;
+            let (lo, hi) = p.qrange();
+            let mut w_i8: Vec<i8> = (0..k * n)
+                .map(|_| rng.range_i64(lo as i64, hi as i64) as i8)
+                .collect();
+            for row in 0..k {
+                // zero everything except the ragged last block (pinned
+                // nonzero so the index keeps exactly one span per row)
+                let tail_start = (n / fields) * fields;
+                w_i8[row * n..row * n + tail_start].fill(0);
+                w_i8[row * n + tail_start] = 1;
+            }
+            let index = SparseRowIndex::build(&w_i8, k, n, p);
+            let plane = SpikePlane::from_u8(&vec![1u8; k]);
+            let params = LifParams::new(forge::golden_theta(p), 2);
+            let mut scratch = AccScratch::new();
+            let mut v_ref = vec![0i32; n];
+            let mut out_ref = SpikePlane::flat(n);
+            Kernels::scalar().lif_step_plane_unpacked(
+                plane.words(),
+                k,
+                &w_i8,
+                n,
+                p,
+                &mut v_ref,
+                out_ref.words_mut(),
+                params,
+                &mut scratch,
+            );
+            for kernels in Kernels::available() {
+                let mut v = vec![0i32; n];
+                let mut out = SpikePlane::flat(n);
+                let touched = kernels.lif_step_plane_sparse(
+                    plane.words(),
+                    k,
+                    &w_i8,
+                    n,
+                    p,
+                    &index,
+                    &mut v,
+                    out.words_mut(),
+                    params,
+                    &mut scratch,
+                );
+                let ctx = format!(
+                    "seed={seed} {} active={active} n={n} backend={}",
+                    p.name(),
+                    kernels.name()
+                );
+                assert_eq!(v, v_ref, "{ctx}");
+                assert_eq!(out.words(), out_ref.words(), "{ctx}");
+                // one surviving (ragged) block per active row
+                assert_eq!(touched, active as u64, "{ctx}");
+            }
+        }
+    }
+}
+
+/// The forge pruning rule really produces block-aligned zeros: every
+/// packed word of a 0.9-pruned layer is either fully zero or fully
+/// retained relative to the unpruned layer's word, and at least the
+/// budgeted weight count is zeroed.
+#[test]
+fn prop_prune_layer_zeros_whole_blocks() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed * 389 + 11);
+        let p = forge::PRECISIONS[(seed % 3) as usize];
+        let (lo, hi) = p.qrange();
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(70) as usize;
+        let n_words = n.div_ceil(p.fields_per_word());
+        let mut packed = Vec::new();
+        for _ in 0..k {
+            let row: Vec<i32> =
+                (0..n).map(|_| rng.range_i64(lo as i64, hi as i64) as i32).collect();
+            packed.extend(pack_row(&row, p));
+        }
+        let layer = lspine::model::QuantNetLayer {
+            precision: p,
+            k_in: k,
+            n_out: n,
+            n_words,
+            scale: 1.0,
+            theta: forge::golden_theta(p),
+            packed,
+        };
+        for s in [0.5, 0.9] {
+            let pruned = forge::prune_layer(&layer, s);
+            let budget = (s * (k * n) as f64).floor() as usize;
+            for row in 0..k {
+                let before = unpack_row(
+                    &layer.packed[row * n_words..(row + 1) * n_words],
+                    p,
+                    n,
+                );
+                let after = unpack_row(
+                    &pruned.packed[row * n_words..(row + 1) * n_words],
+                    p,
+                    n,
+                );
+                for (w, b) in after.chunks(p.fields_per_word()).zip(&pruned.packed
+                    [row * n_words..(row + 1) * n_words])
+                {
+                    let all_zero = w.iter().all(|&x| x == 0);
+                    assert_eq!(
+                        all_zero,
+                        *b == 0,
+                        "seed={seed} {} s={s}: packed word not canonical",
+                        p.name()
+                    );
+                }
+                for (i, (&b, &a)) in before.iter().zip(&after).enumerate() {
+                    if a != b {
+                        assert_eq!(a, 0, "seed={seed}: pruning may only zero");
+                        // ...and only as part of a whole zeroed block
+                        let blk = i / p.fields_per_word() * p.fields_per_word();
+                        let e = (blk + p.fields_per_word()).min(n);
+                        assert!(
+                            after[blk..e].iter().all(|&x| x == 0),
+                            "seed={seed} {} s={s}: partial block zeroed",
+                            p.name()
+                        );
+                    }
+                }
+            }
+            // zeros after pruning must cover the budget
+            let total_zero: usize = (0..k)
+                .map(|row| {
+                    unpack_row(&pruned.packed[row * n_words..(row + 1) * n_words], p, n)
+                        .iter()
+                        .filter(|&&x| x == 0)
+                        .count()
+                })
+                .sum();
+            assert!(
+                total_zero >= budget,
+                "seed={seed} {} s={s}: {total_zero} zeros < budget {budget}",
+                p.name()
+            );
+        }
+    }
+}
+
+// --- (d) end-to-end: pruned artifact over the sharded TCP path ---
+
+/// Forge a 0.9-sparsity artifact set once (cached across test processes
+/// via a versioned temp dir, same publish-by-rename discipline as the
+/// default forge cache).
+fn sparse_artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<Result<PathBuf, String>> = OnceLock::new();
+    let r = DIR.get_or_init(|| {
+        let base = std::env::temp_dir().join(format!(
+            "lspine-test-forge-v{}-block-p0.900",
+            forge::FORGE_VERSION
+        ));
+        if base.join("manifest.json").exists() {
+            return Ok(base);
+        }
+        let scratch = std::env::temp_dir()
+            .join(format!("lspine-test-forge-scratch-{}", std::process::id()));
+        std::fs::create_dir_all(&scratch).map_err(|e| e.to_string())?;
+        let cfg = forge::ForgeConfig { sparsity: 0.9, ..Default::default() };
+        forge::write_artifacts(&scratch, &cfg).map_err(|e| e.to_string())?;
+        match std::fs::rename(&scratch, &base) {
+            Ok(()) => {}
+            Err(e) => {
+                // another process published first: use theirs
+                if !base.join("manifest.json").exists() {
+                    return Err(e.to_string());
+                }
+                let _ = std::fs::remove_dir_all(&scratch);
+            }
+        }
+        Ok(base)
+    });
+    r.clone().expect("sparse forge artifacts")
+}
+
+fn read_resp(s: &mut TcpStream) -> (u64, Response) {
+    let mut hdr = [0u8; HEADER_LEN];
+    s.read_exact(&mut hdr).expect("response header");
+    let h = wire::decode_header(&hdr).expect("server sends valid headers");
+    let mut body = vec![0u8; h.body_len as usize];
+    s.read_exact(&mut body).expect("response body");
+    (h.tag, wire::decode_response(h.kind, &body).expect("valid body"))
+}
+
+#[test]
+fn pruned_model_serves_bit_exact_over_sharded_tcp() {
+    let dir = sparse_artifacts_dir();
+    let store = ArtifactStore::open(&dir).expect("sparse artifacts open");
+    let data = store.load_test_set().expect("test set");
+
+    // in-process reference: the SAME pruned weights, dense walk, scalar
+    let net = store.load_network("mlp", "lspine", 4).expect("pruned mlp INT4");
+    assert!(net.sparse_weights, "0.9-sparsity artifacts must load as sparse");
+    let mut dense_net = net.clone();
+    dense_net.sparse_weights = false;
+    let mut reference = SnnEngine::with_kernels(dense_net, Kernels::scalar());
+
+    let engine = Arc::new(
+        ServingEngine::start(ServerConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            model: "mlp".into(),
+            backend: Backend::Native,
+            workers: 4,
+            ..Default::default()
+        })
+        .expect("serving engine over sparse artifacts"),
+    );
+    let fe = TcpFrontend::bind(Arc::clone(&engine), "127.0.0.1:0").expect("bind");
+    let mut s = TcpStream::connect(fe.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_nodelay(true).unwrap();
+
+    // enough requests that round-robin dealing hits all four workers
+    let samples = data.n.min(16);
+    for i in 0..samples {
+        let sample = data.sample(i);
+        let want: Vec<i32> = reference.infer(sample).iter().map(|&c| c as i32).collect();
+        s.write_all(&wire::encode_request(
+            i as u64,
+            &Request::OneShot {
+                precision: ReqPrecision::Int4,
+                pixels: sample.to_vec(),
+            },
+        ))
+        .unwrap();
+        let (tag, resp) = read_resp(&mut s);
+        assert_eq!(tag, i as u64);
+        let Response::OneShot { prediction, counts, .. } = resp else {
+            panic!("expected OneShot, got {resp:?}")
+        };
+        assert_eq!(counts, want, "sample {i}: sparse TCP path diverges from dense");
+        assert_eq!(
+            counts[prediction as usize],
+            *counts.iter().max().unwrap(),
+            "sample {i}: prediction is not an argmax of the counts"
+        );
+    }
+    let m = engine.metrics();
+    assert_eq!(m.requests, samples as u64);
+    fe.shutdown().unwrap();
+}

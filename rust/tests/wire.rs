@@ -453,6 +453,116 @@ fn drain_flushes_every_in_flight_reply() {
     assert!(TcpStream::connect(addr).is_err(), "drained server must not accept");
 }
 
+/// Like [`read_exact`] but for hostile-input connections: a connection
+/// reset counts as a close. A mutated frame legitimately leaves unread
+/// bytes in the server's receive queue, so its close surfaces as RST —
+/// which may also discard an in-flight error frame — and that is a
+/// *clean* outcome here, not a protocol violation.
+fn fuzz_read(s: &mut TcpStream, buf: &mut [u8], deadline: Instant) -> bool {
+    let mut off = 0;
+    while off < buf.len() {
+        match s.read(&mut buf[off..]) {
+            Ok(0) => {
+                assert_eq!(off, 0, "clean EOF mid-frame after {off} bytes");
+                return false;
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                assert!(Instant::now() < deadline, "fuzz: server stopped answering");
+            }
+            Err(e) if e.kind() == ErrorKind::ConnectionReset => return false,
+            Err(e) => panic!("fuzz read error: {e}"),
+        }
+    }
+    true
+}
+
+#[test]
+fn fuzz_10k_hostile_byte_strings_never_kill_the_server() {
+    use lspine::util::rng::Rng;
+    // 10k seed-deterministic hostile inputs over real sockets, three
+    // mutation families: pure random bytes, truncations of a valid
+    // frame, and bit-flips of a valid frame. The server may answer with
+    // well-formed (typed-error or success) frames and/or close — it may
+    // never panic, hang, or emit an undecodable frame. The seed frame is
+    // a stream window for a never-opened session, so even a mutation
+    // that survives decoding costs a typed `UnknownSession`, not an
+    // inference.
+    let restart = || start_frontend(|cfg| cfg.workers = 1);
+    let mut fe = restart();
+    let px = pixels(&fe);
+    let seed_frame = window_frame(7, 0xDEAD_BEEF, &px);
+    let (mut frames_decoded, mut closes, mut drains) = (0u64, 0u64, 0u64);
+    for seed in 0..10_000u64 {
+        let mut rng = Rng::new(seed * 0x9E37_79B9 + 101);
+        let payload: Vec<u8> = match seed % 3 {
+            0 => (0..rng.below(64)).map(|_| rng.below(256) as u8).collect(),
+            1 => seed_frame[..rng.below(seed_frame.len() as u64) as usize].to_vec(),
+            _ => {
+                let mut f = seed_frame.clone();
+                for _ in 0..=rng.below(3) {
+                    let bit = rng.below((f.len() * 8) as u64) as usize;
+                    f[bit / 8] ^= 1 << (bit % 8);
+                }
+                f
+            }
+        };
+        // a bit-flip can legitimately produce a Drain frame — that is an
+        // intentional admin action, not a robustness bug; restart and
+        // keep fuzzing
+        let mut s = match TcpStream::connect(fe.local_addr()) {
+            Ok(s) => s,
+            Err(_) => {
+                assert!(fe.draining(), "seed {seed}: server died without draining");
+                drains += 1;
+                fe.shutdown().unwrap();
+                fe = restart();
+                connect(&fe)
+            }
+        };
+        s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        // ignore write errors: the server may already have closed on the
+        // first hostile bytes
+        let _ = s.write_all(&payload);
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        // drain the connection: every frame the server sends must be
+        // well-formed until it closes
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let mut hdr = [0u8; HEADER_LEN];
+            if !fuzz_read(&mut s, &mut hdr, deadline) {
+                closes += 1;
+                break;
+            }
+            let h = wire::decode_header(&hdr)
+                .unwrap_or_else(|e| panic!("seed {seed}: bad server header: {e:?}"));
+            let mut body = vec![0u8; h.body_len as usize];
+            assert!(
+                fuzz_read(&mut s, &mut body, deadline),
+                "seed {seed}: server truncated its own frame"
+            );
+            wire::decode_response(h.kind, &body)
+                .unwrap_or_else(|e| panic!("seed {seed}: bad server body: {e:?}"));
+            frames_decoded += 1;
+        }
+    }
+    // the fuzz actually exercised both outcome classes
+    assert!(frames_decoded > 100, "only {frames_decoded} server frames seen");
+    assert!(closes > 100, "only {closes} closes seen");
+    println!(
+        "fuzz: {frames_decoded} well-formed frames, {closes} closes, {drains} drains"
+    );
+    // and the server is still fully alive afterwards
+    let mut s = connect(&fe);
+    s.write_all(&wire::encode_request(1, &Request::Info)).unwrap();
+    let (tag, resp) = read_resp(&mut s).expect("post-fuzz Info answer");
+    assert_eq!(tag, 1);
+    assert!(matches!(resp, Response::Info(_)));
+    fe.shutdown().unwrap();
+}
+
 #[test]
 fn loadgen_end_to_end_small() {
     let fe = start_frontend(|_| {});

@@ -250,17 +250,24 @@ def lif_rows(spikes_in, w, v, theta, leak=2):
     return fired, v2
 
 
-def infer_mlp(sizes, layers, pix, T, leak=2):
-    """layers: [(w [k,n] int64, theta int)]. Returns per-class counts."""
-    vs = [np.zeros(n, dtype=np.int64) for n in sizes[1:]]
+def infer_mlp_window(sizes, layers, pix, steps, vs, leak=2):
+    """One streaming window: `steps` timesteps over persistent membranes
+    `vs`, window-local encoder phase (each window encodes from t=0, like
+    ``SnnEngine::infer_window``). Returns this window's counts."""
     counts = np.zeros(sizes[-1], dtype=np.int64)
     px = np.array(pix, dtype=np.int64)
-    for t in range(T):
+    for t in range(steps):
         spk = spike_step(px, t)
         for i, (w, theta) in enumerate(layers):
             spk, vs[i] = lif_rows(spk, w, vs[i], theta, leak)
         counts += spk
     return counts
+
+
+def infer_mlp(sizes, layers, pix, T, leak=2):
+    """layers: [(w [k,n] int64, theta int)]. Returns per-class counts."""
+    vs = [np.zeros(n, dtype=np.int64) for n in sizes[1:]]
+    return infer_mlp_window(sizes, layers, pix, T, vs, leak)
 
 
 def im2col_table(side, ch):
@@ -445,6 +452,42 @@ def gen_quant_golden():
     return out
 
 
+DECAY_WINDOWS = 3
+DECAY_STEPS = 4
+
+
+def gen_decay_golden():
+    """``ResetPolicy::Decay(k)`` pins: the golden MLP run as a 3-window
+    stream (4 steps each, one pixel frame per window, window-local
+    encoder phase) with `v -= v >> k` applied to every membrane at each
+    window boundary."""
+    dim = MLP_SIZES[0]
+    pix = pixels(GOLDEN_SEED, DECAY_WINDOWS, dim)
+    shapes = list(zip(MLP_SIZES[:-1], MLP_SIZES[1:]))
+    out = {}
+    for k_shift in (1, 4, 7):
+        per_prec = {}
+        for bits in (2, 4, 8):
+            theta = GOLDEN_THETA[bits]
+            layers = [
+                (raw_layer_q(GOLDEN_SEED, i, bits, k, n), theta)
+                for i, (k, n) in enumerate(shapes)
+            ]
+            vs = [np.zeros(n, dtype=np.int64) for n in MLP_SIZES[1:]]
+            rows = []
+            for w in range(DECAY_WINDOWS):
+                counts = infer_mlp_window(
+                    MLP_SIZES, layers, pix[w * dim : (w + 1) * dim], DECAY_STEPS, vs
+                )
+                rows.append([int(c) for c in counts])
+                for v in vs:
+                    # numpy int64 >> is arithmetic, matching rust i32 >>
+                    v -= v >> k_shift
+            per_prec[f"int{bits}"] = rows
+        out[f"k{k_shift}"] = per_prec
+    return out
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     golden_dir = os.path.join(here, "..", "rust", "tests", "golden")
@@ -452,6 +495,7 @@ def main():
 
     engine = gen_engine_golden()
     quant = gen_quant_golden()
+    decay = gen_decay_golden()
 
     # sanity: goldens must exercise real spiking activity per
     # configuration, not silence. Exception: trunc/INT2 — the truncation
@@ -475,13 +519,37 @@ def main():
                 raise SystemExit(f"quant golden {scheme}/{prec} is silent: tune thetas")
     if total == 0:
         raise SystemExit("engine goldens are all-zero: tune thetas")
-    print(f"engine golden total spikes: {total}; quant golden total: {qtotal}")
+    dtotal = 0
+    for shift, per in decay.items():
+        for prec, rows in per.items():
+            spikes = sum(sum(r) for r in rows)
+            dtotal += spikes
+            if spikes == 0 and prec != "int2":
+                raise SystemExit(f"decay golden {shift}/{prec} is silent: tune thetas")
+    if dtotal == 0:
+        raise SystemExit("decay goldens are all-zero: tune thetas")
+    print(
+        f"engine golden total spikes: {total}; quant golden total: {qtotal}; "
+        f"decay golden total: {dtotal}"
+    )
 
     with open(os.path.join(golden_dir, "engine.json"), "w") as f:
         json.dump({"seed": GOLDEN_SEED, "timesteps": T, "models": engine}, f, indent=1)
         f.write("\n")
     with open(os.path.join(golden_dir, "quant.json"), "w") as f:
         json.dump({"seed": GOLDEN_SEED, "timesteps": T, "schemes": quant}, f, indent=1)
+        f.write("\n")
+    with open(os.path.join(golden_dir, "decay.json"), "w") as f:
+        json.dump(
+            {
+                "seed": GOLDEN_SEED,
+                "steps": DECAY_STEPS,
+                "windows": DECAY_WINDOWS,
+                "shifts": decay,
+            },
+            f,
+            indent=1,
+        )
         f.write("\n")
     print("wrote", golden_dir)
 

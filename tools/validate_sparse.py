@@ -1,0 +1,346 @@
+#!/usr/bin/env python3
+"""Python mirror validation of the sparse-synapse pipeline.
+
+Usage:  python3 tools/validate_sparse.py
+
+Mirrors, bit-for-bit, the sparse Rust code:
+- ``SparseRowIndex::build``    (chunk scan, adjacent-span merge, word counts)
+- ``lif_step_plane_sparse``    (span-restricted accumulate + block spills)
+- ``forge::prune_layer``       (block-granular magnitude pruning,
+                               (l1, row, start) ordering, budget loop)
+
+and checks, against the independent dense reference in
+tools/gen_goldens.py:
+ 1. sparse walk == dense walk (spikes, membranes) on random shapes,
+    including ragged final words and both block-spill boundaries, plus
+    exact words_touched accounting and narrow-accumulator bounds;
+ 2. golden MLP + convnet end-to-end: counts identical sparse-vs-dense on
+    0.0/0.5/0.9/0.99-pruned weights;
+ 3. the acceptance bound: at 0.9 sparsity the walk touches >= 5x fewer
+    words than dense on BOTH golden archs at every precision;
+ 4. prune_layer determinism, zero-budget coverage, block alignment.
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import gen_goldens as g  # noqa: E402
+
+FIELDS = {2: 16, 4: 8, 8: 4}
+I8_BLOCK = {2: 63, 4: 15, 8: 0}
+I16_BLOCK = 255
+GOLDEN_THETA = g.GOLDEN_THETA
+
+
+def build_index(w, fields):
+    """Mirror of SparseRowIndex::build. w: [k,n] int array."""
+    spans_per_row, row_words = [], []
+    k, n = w.shape
+    for r in range(k):
+        spans, words = [], 0
+        for s in range(0, n, fields):
+            e = min(s + fields, n)
+            if np.any(w[r, s:e] != 0):
+                words += 1
+                if spans and spans[-1][1] == s:
+                    spans[-1][1] = e
+                else:
+                    spans.append([s, e])
+        spans_per_row.append(spans)
+        row_words.append(words)
+    return spans_per_row, row_words
+
+
+def sparse_lif_step(spikes, w, spans, row_words, v, theta, bits, leak=2):
+    """Mirror of lif_step_plane_sparse: span-restricted accumulate with
+    the same narrow-block spill cadence, returning words touched and the
+    peak |narrow accumulator| (to prove the width bound still holds)."""
+    n = w.shape[1]
+    block = I8_BLOCK[bits] or I16_BLOCK
+    acc_blk = np.zeros(n, dtype=np.int64)
+    acc32 = np.zeros(n, dtype=np.int64)
+    in_block, touched, peak = 0, 0, 0
+    for j in np.nonzero(spikes)[0]:
+        for s, e in spans[j]:
+            acc_blk[s:e] += w[j, s:e]
+        peak = max(peak, int(np.max(np.abs(acc_blk))) if n else 0)
+        touched += row_words[j]
+        in_block += 1
+        if in_block == block:
+            acc32 += acc_blk
+            acc_blk[:] = 0
+            in_block = 0
+    acc32 += acc_blk
+    v2 = v - (v >> leak) + acc32
+    fired = (v2 >= theta).astype(np.int64)
+    return fired, v2 - fired * theta, touched, peak
+
+
+def prune_layer(q, sparsity, fields):
+    """Mirror of forge::prune_layer: rank fields-wide blocks by
+    (L1, row, start), zero smallest-first until the budget is covered."""
+    if sparsity <= 0.0:
+        return q.copy()
+    k, n = q.shape
+    budget = int(np.floor(sparsity * k * n))
+    blocks = []
+    for r in range(k):
+        for s in range(0, n, fields):
+            e = min(s + fields, n)
+            l1 = int(np.sum(np.abs(q[r, s:e])))
+            blocks.append((l1, r, s, e))
+    blocks.sort()
+    out = q.copy()
+    zeroed = 0
+    for _, r, s, e in blocks:
+        if zeroed >= budget:
+            break
+        out[r, s:e] = 0
+        zeroed += e - s
+    return out
+
+
+# ---------------------------------------------------------------------
+# 1. random differential: sparse walk vs dense reference
+# ---------------------------------------------------------------------
+
+
+def check_random_walks():
+    cases = 0
+    for seed in range(250):
+        rng = g.Rng(seed * 6151 + 17)
+        bits = (2, 4, 8)[seed % 3]
+        fields = FIELDS[bits]
+        lo, hi = g.qrange(bits)
+        # shapes crossing both spill boundaries (63/15 and 255 rows) and
+        # ragged final words
+        k = 1 + rng.below(600)
+        n = 1 + rng.below(140)
+        w = np.array(
+            [[rng.range_i64(lo, hi) for _ in range(n)] for _ in range(k)],
+            dtype=np.int64,
+        )
+        for r in range(k):
+            for s in range(0, n, fields):
+                e = min(s + fields, n)
+                if rng.below(2) == 0:
+                    w[r, s:e] = 0  # whole-block zero: must be skipped
+                elif rng.below(4) == 0:
+                    w[r, s] = 0  # partial zero: block must survive
+        spans, row_words = build_index(w, fields)
+        spikes = np.array([int(rng.f64() < 0.4) for _ in range(k)], dtype=np.int64)
+        v0 = np.array([rng.range_i64(-40, 40) for _ in range(n)], dtype=np.int64)
+        theta = GOLDEN_THETA[bits]
+
+        fired_d, v_d = g.lif_rows(spikes, w, v0.copy(), theta)
+        fired_s, v_s, touched, peak = sparse_lif_step(
+            spikes, w, spans, row_words, v0.copy(), theta, bits
+        )
+        assert np.array_equal(fired_s, fired_d), f"seed {seed}: spikes diverge"
+        assert np.array_equal(v_s, v_d), f"seed {seed}: membranes diverge"
+        want_words = sum(row_words[j] for j in np.nonzero(spikes)[0])
+        assert touched == want_words, f"seed {seed}: words {touched} != {want_words}"
+        bound = 127 if I8_BLOCK[bits] else 32767
+        assert peak <= bound, f"seed {seed}: narrow accumulator {peak} > {bound}"
+        # sanity on the index itself: skipped chunks are exactly the
+        # all-zero chunks
+        for r in range(k):
+            covered = np.zeros(n, dtype=bool)
+            for s, e in spans[r]:
+                covered[s:e] = True
+            assert np.all(w[r, ~covered] == 0), f"seed {seed}: span missed a weight"
+        cases += 1
+    print(f"1. random walks: {cases} cases, sparse == dense everywhere")
+
+
+# ---------------------------------------------------------------------
+# 2+3. golden-arch end-to-end + the >= 5x acceptance bound
+# ---------------------------------------------------------------------
+
+
+def mlp_words(sizes, layers, pix, T, bits, spans_rw=None):
+    """Run the golden MLP mirror, counting words touched per LIF layer:
+    dense walk when spans_rw is None, sparse walk otherwise."""
+    vs = [np.zeros(n, dtype=np.int64) for n in sizes[1:]]
+    counts = np.zeros(sizes[-1], dtype=np.int64)
+    px = np.array(pix, dtype=np.int64)
+    words = 0
+    fields = FIELDS[bits]
+    for t in range(T):
+        spk = g.spike_step(px, t)
+        for i, (w, theta) in enumerate(layers):
+            n_words = -(-w.shape[1] // fields)
+            active = np.nonzero(spk)[0]
+            if spans_rw is None:
+                words += len(active) * n_words
+                spk, vs[i] = g.lif_rows(spk, w, vs[i], theta)
+            else:
+                spans, row_words = spans_rw[i]
+                spk, vs[i], touched, _ = sparse_lif_step(
+                    spk, w, spans, row_words, vs[i], theta, bits
+                )
+                words += touched
+        counts += spk
+    return counts, words
+
+
+def conv_words(side, channels, classes, layers, pix, T, bits, spans_rw=None):
+    """Golden convnet mirror with word accounting on the three LIF banks
+    (conv1 / conv2 / fc), dense or sparse walk."""
+    c0, c1, c2 = channels
+    s2 = side // 2
+    t0, t1 = g.im2col_table(side, c0), g.im2col_table(s2, c1)
+    fields = FIELDS[bits]
+    v0 = np.zeros((side * side, c1), dtype=np.int64)
+    v1 = np.zeros((s2 * s2, c2), dtype=np.int64)
+    v2 = np.zeros(classes, dtype=np.int64)
+    counts = np.zeros(classes, dtype=np.int64)
+    px = np.array(pix, dtype=np.int64)
+    (w0, th0), (w1, th1), (w2, th2) = layers
+    words = 0
+
+    def conv_bank(patches, w, th, v):
+        nonlocal words
+        n_words = -(-w.shape[1] // fields)
+        fired = np.zeros((patches.shape[0], w.shape[1]), dtype=np.int64)
+        vv_all = np.zeros_like(v)
+        for posi in range(patches.shape[0]):
+            spk = patches[posi]
+            if spans_rw is None:
+                words += int(np.count_nonzero(spk)) * n_words
+                f, vv = g.lif_rows(spk, w, v[posi], th)
+            else:
+                spans, row_words = spans_rw[id(w)]
+                f, vv, touched, _ = sparse_lif_step(
+                    spk, w, spans, row_words, v[posi], th, bits
+                )
+                words += touched
+            fired[posi] = f
+            vv_all[posi] = vv
+        return fired, vv_all
+
+    for t in range(T):
+        in_plane = g.spike_step(px, t)
+        patches = g.gather(in_plane, t0).reshape(side * side, 9 * c0)
+        fired, v0 = conv_bank(patches, w0, th0, v0)
+        pooled1 = g.maxpool2(fired.reshape(-1), side, c1)
+        patches2 = g.gather(pooled1, t1).reshape(s2 * s2, 9 * c1)
+        fired, v1 = conv_bank(patches2, w1, th1, v1)
+        pooled2 = g.maxpool2(fired.reshape(-1), s2, c2)
+        if spans_rw is None:
+            n_words_fc = -(-w2.shape[1] // fields)
+            words += int(np.count_nonzero(pooled2)) * n_words_fc
+            spk, v2 = g.lif_rows(pooled2, w2, v2, th2)
+        else:
+            spans, row_words = spans_rw[id(w2)]
+            spk, v2, touched, _ = sparse_lif_step(
+                pooled2, w2, spans, row_words, v2, th2, bits
+            )
+            words += touched
+        counts += spk
+    return counts, words
+
+
+def check_golden_archs():
+    T = g.T
+    ratios = []
+    # MLP
+    sizes = g.MLP_SIZES
+    shapes = list(zip(sizes[:-1], sizes[1:]))
+    dim = sizes[0]
+    pix = g.pixels(g.GOLDEN_SEED, 1, dim)
+    for bits in (2, 4, 8):
+        fields = FIELDS[bits]
+        theta = GOLDEN_THETA[bits]
+        raw = [
+            g.raw_layer_q(g.GOLDEN_SEED, i, bits, k, n)
+            for i, (k, n) in enumerate(shapes)
+        ]
+        for s in (0.0, 0.5, 0.9, 0.99):
+            pruned = [prune_layer(w, s, fields) for w in raw]
+            layers = [(w, theta) for w in pruned]
+            spans_rw = [build_index(w, fields) for w in pruned]
+            cd, wd = mlp_words(sizes, layers, pix, T, bits)
+            cs, ws = mlp_words(sizes, layers, pix, T, bits, spans_rw)
+            assert np.array_equal(cd, cs), f"mlp int{bits} s={s}: counts diverge"
+            assert ws <= wd, f"mlp int{bits} s={s}: sparse words {ws} > dense {wd}"
+            if s == 0.9:
+                assert ws * 5 <= wd, f"mlp int{bits}: 0.9 ratio {wd}/{ws} < 5x"
+                ratios.append(("mlp", bits, wd / max(ws, 1)))
+    # convnet
+    side, channels, classes = g.CONV["side"], g.CONV["channels"], g.CONV["classes"]
+    dim = side * side * channels[0]
+    pix = g.pixels(g.GOLDEN_SEED, 1, dim)
+    shapes = g.conv_shapes(side, channels, classes)
+    for bits in (2, 4, 8):
+        fields = FIELDS[bits]
+        theta = GOLDEN_THETA[bits]
+        raw = [
+            g.raw_layer_q(g.GOLDEN_SEED, i, bits, k, n)
+            for i, (k, n) in enumerate(shapes)
+        ]
+        for s in (0.0, 0.5, 0.9, 0.99):
+            pruned = [prune_layer(w, s, fields) for w in raw]
+            layers = [(w, theta) for w in pruned]
+            spans_rw = {id(w): build_index(w, fields) for w in pruned}
+            cd, wd = conv_words(side, channels, classes, layers, pix, T, bits)
+            cs, ws = conv_words(
+                side, channels, classes, layers, pix, T, bits, spans_rw
+            )
+            assert np.array_equal(cd, cs), f"conv int{bits} s={s}: counts diverge"
+            assert ws <= wd, f"conv int{bits} s={s}: sparse words {ws} > dense {wd}"
+            if s == 0.9:
+                assert ws * 5 <= wd, f"conv int{bits}: 0.9 ratio {wd}/{ws} < 5x"
+                ratios.append(("convnet", bits, wd / max(ws, 1)))
+    for name, bits, r in ratios:
+        print(f"   {name} int{bits}: 0.9-sparsity words ratio {r:.1f}x (>= 5x ok)")
+    print("2+3. golden archs: sparse == dense, 0.9 word ratios all >= 5x")
+
+
+# ---------------------------------------------------------------------
+# 4. prune rule properties
+# ---------------------------------------------------------------------
+
+
+def check_prune_properties():
+    for seed in range(60):
+        rng = g.Rng(seed * 389 + 11)
+        bits = (2, 4, 8)[seed % 3]
+        fields = FIELDS[bits]
+        lo, hi = g.qrange(bits)
+        k, n = 1 + rng.below(40), 1 + rng.below(70)
+        q = np.array(
+            [[rng.range_i64(lo, hi) for _ in range(n)] for _ in range(k)],
+            dtype=np.int64,
+        )
+        for s in (0.5, 0.9):
+            a = prune_layer(q, s, fields)
+            b = prune_layer(q, s, fields)
+            assert np.array_equal(a, b), f"seed {seed}: prune nondeterministic"
+            budget = int(np.floor(s * k * n))
+            assert int(np.sum(a == 0)) >= budget, f"seed {seed}: budget not covered"
+            changed = (a != q)
+            assert np.all(a[changed] == 0), f"seed {seed}: prune may only zero"
+            for r in range(k):
+                for st in range(0, n, fields):
+                    e = min(st + fields, n)
+                    if np.any(changed[r, st:e]):
+                        assert np.all(a[r, st:e] == 0), (
+                            f"seed {seed}: partial block zeroed"
+                        )
+        assert np.array_equal(prune_layer(q, 0.0, fields), q)
+    print("4. prune rule: deterministic, budget-covering, block-aligned")
+
+
+def main():
+    check_random_walks()
+    check_golden_archs()
+    check_prune_properties()
+    print("ALL SPARSE MIRROR CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()
