@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke doc clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke chaos-smoke doc clean
 
 all: build
 
@@ -102,6 +102,28 @@ prune-smoke:
 	grep -Eq "lost=0" .prune_smoke.out
 	cat .prune_serve.out
 	rm -f .prune_smoke.out .prune_serve.out
+
+# Fault-tolerance end-to-end smoke: serve with a seeded fault plan
+# (worker panic, a 100ms stall, one dropped reply), drive the loadgen
+# client with retry+backoff against it, and assert the contract held:
+# every request resolved (lost=0, zero protocol errors) AND the server
+# really did panic and restart (panics/restarts nonzero in its summary).
+# Separate port so it composes with the other smokes in one CI job.
+chaos-smoke:
+	cd rust && $(CARGO) build --release
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+	cd rust && \
+	( ./target/release/lspine serve --backend native --listen 127.0.0.1:17321 --workers 2 --faults "panic@6,stall@12:100ms,drop@18" > ../.chaos_serve.out 2>&1 & ) && \
+	./target/release/lspine loadgen --connect 127.0.0.1:17321 --sessions 8 --windows 4 --retries 3 --backoff-ms 20 --drain --retry-secs 20 > ../.chaos_smoke.out || (cat ../.chaos_smoke.out ../.chaos_serve.out; exit 1)
+	cat .chaos_smoke.out
+	grep -Eq "lost=0" .chaos_smoke.out
+	grep -Eq "protocol_errors=0" .chaos_smoke.out
+	# the drained server may still be flushing its final summary line
+	for i in $$(seq 1 50); do grep -q "restarts=" .chaos_serve.out && break; sleep 0.2; done
+	cat .chaos_serve.out
+	grep -Eq "panics=[1-9]" .chaos_serve.out
+	grep -Eq "restarts=[1-9]" .chaos_serve.out
+	rm -f .chaos_smoke.out .chaos_serve.out
 
 # The documented-API gate, same flags as the CI docs job.
 doc:

@@ -48,12 +48,19 @@ impl DynamicBatcher {
 
     /// Queue one request under its precision key.
     pub fn push(&mut self, req: InferRequest) {
+        // every Precision variant gets a queue in new(), so the find can
+        // only miss if that invariant breaks — recover by appending a
+        // queue instead of panicking on the dispatcher thread
+        let missing = !self.queues.iter().any(|(p, _)| *p == req.precision);
+        if missing {
+            self.queues.push((req.precision, VecDeque::new()));
+        }
         let q = self
             .queues
             .iter_mut()
             .find(|(p, _)| *p == req.precision)
             .map(|(_, q)| q)
-            .expect("all precisions have queues");
+            .expect("queue just ensured present");
         q.push_back(req);
     }
 
@@ -151,7 +158,7 @@ mod tests {
 
     fn req(id: u64, precision: Precision, enqueued: Instant) -> InferRequest {
         let (tx, _rx) = mpsc::channel();
-        InferRequest { id, pixels: vec![0; 4], precision, enqueued, reply: tx }
+        InferRequest { id, pixels: vec![0; 4], precision, enqueued, deadline: None, reply: tx }
     }
 
     #[test]

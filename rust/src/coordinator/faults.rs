@@ -1,0 +1,288 @@
+//! Seeded, deterministic fault injection for the serving path.
+//!
+//! A [`FaultPlan`] schedules faults at *planned request indices* so a
+//! chaos run is exactly reproducible: the worker pool shares one atomic
+//! execution counter that every dequeued request increments, and a fault
+//! fires when its planned index falls inside the window a worker just
+//! claimed. The plan is compiled in always — an empty plan costs one
+//! branch per batch and no atomics — so production binaries and chaos
+//! tests run the same code.
+//!
+//! ## Plan grammar (CLI `serve --faults`, env `LSPINE_FAULTS`)
+//!
+//! Comma-separated entries, each `kind@index` with an optional
+//! `:duration` (only `stall` takes one):
+//!
+//! ```text
+//! panic@6            worker executing request #6 panics (supervised)
+//! stall@12:250ms     worker sleeps 250ms before executing request #12
+//! drop@18            reply for request #18 is never sent (client sees
+//!                    a typed Internal error from the reply-lost path)
+//! reset@2            the 3rd accepted TCP connection is closed on accept
+//! ```
+//!
+//! Indices are 0-based. `panic`/`stall`/`drop` count *dequeued requests
+//! pool-wide* (one-shots and stream windows alike, after deadline
+//! shedding); `reset` counts accepted connections. Durations take `ms`
+//! or `s` suffixes (a bare number is milliseconds). Example:
+//! `--faults "panic@6,stall@12:250ms,drop@18,reset@2"`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Environment variable consulted by [`FaultPlan::from_env`] when the
+/// CLI `--faults` flag is absent.
+pub const FAULTS_ENV: &str = "LSPINE_FAULTS";
+
+/// What a planned fault does when its index comes up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    /// Panic inside the worker's execute path (exercises supervision).
+    Panic,
+    /// Sleep this long before executing (exercises deadlines/backoff).
+    Stall(Duration),
+    /// Skip sending the reply (exercises the reply-lost typed error).
+    DropReply,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    at: u64,
+    kind: FaultKind,
+}
+
+/// A deterministic schedule of injected faults (see the module docs for
+/// the grammar). Shared across the worker pool behind an `Arc`; interior
+/// counters make injection exactly-once per planned index.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// panic/stall/drop entries, keyed by pool-wide execution index.
+    exec: Vec<Entry>,
+    /// reset entries, keyed by accepted-connection index.
+    resets: Vec<u64>,
+    exec_counter: AtomicU64,
+    accept_counter: AtomicU64,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, no atomic traffic on the hot path.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Whether this plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.exec.is_empty() && self.resets.is_empty()
+    }
+
+    /// Parse a plan from the `--faults` grammar. An empty or
+    /// whitespace-only spec is the empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault entry {part:?}: want kind@index[:duration]"))?;
+            let (idx_str, dur_str) = match rest.split_once(':') {
+                Some((i, d)) => (i, Some(d)),
+                None => (rest, None),
+            };
+            let at: u64 = idx_str
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("fault entry {part:?}: index {idx_str:?} is not a u64"))?;
+            match (kind.trim(), dur_str) {
+                ("panic", None) => plan.exec.push(Entry { at, kind: FaultKind::Panic }),
+                ("drop", None) => plan.exec.push(Entry { at, kind: FaultKind::DropReply }),
+                ("reset", None) => plan.resets.push(at),
+                ("stall", Some(d)) => {
+                    plan.exec.push(Entry { at, kind: FaultKind::Stall(parse_duration(d)?) })
+                }
+                ("stall", None) => bail!("fault entry {part:?}: stall needs :duration"),
+                (k @ ("panic" | "drop" | "reset"), Some(_)) => {
+                    bail!("fault entry {part:?}: {k} takes no duration")
+                }
+                (other, _) => {
+                    bail!("fault entry {part:?}: unknown kind {other:?} (want panic/stall/drop/reset)")
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Parse from the [`FAULTS_ENV`] environment variable (unset or
+    /// empty means the empty plan).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(spec) => Self::parse(&spec),
+            Err(_) => Ok(Self::empty()),
+        }
+    }
+
+    /// Claim the next `n` pool-wide execution indices for a dequeued
+    /// batch; returns the base index. Empty plans skip the atomic and
+    /// return a sentinel no planned index can match.
+    pub fn claim_exec(&self, n: u64) -> u64 {
+        if self.exec.is_empty() {
+            return u64::MAX;
+        }
+        self.exec_counter.fetch_add(n, Ordering::Relaxed)
+    }
+
+    fn in_window(&self, kind_match: impl Fn(FaultKind) -> bool, base: u64, n: u64) -> bool {
+        base != u64::MAX
+            && self
+                .exec
+                .iter()
+                .any(|e| kind_match(e.kind) && e.at >= base && e.at - base < n)
+    }
+
+    /// Total planned stall time inside the claimed window `[base, base+n)`.
+    pub fn stall_in(&self, base: u64, n: u64) -> Option<Duration> {
+        if base == u64::MAX {
+            return None;
+        }
+        let total: Duration = self
+            .exec
+            .iter()
+            .filter(|e| e.at >= base && e.at - base < n)
+            .filter_map(|e| match e.kind {
+                FaultKind::Stall(d) => Some(d),
+                _ => None,
+            })
+            .sum();
+        (total > Duration::ZERO).then_some(total)
+    }
+
+    /// Whether a panic is planned inside the claimed window.
+    pub fn panic_in(&self, base: u64, n: u64) -> bool {
+        self.in_window(|k| k == FaultKind::Panic, base, n)
+    }
+
+    /// Whether the reply for absolute execution index `idx` is planned
+    /// to be dropped.
+    pub fn drop_reply_at(&self, idx: u64) -> bool {
+        idx != u64::MAX
+            && self.exec.iter().any(|e| e.kind == FaultKind::DropReply && e.at == idx)
+    }
+
+    /// Claim the next accepted-connection index and report whether the
+    /// plan resets (closes) that connection.
+    pub fn reset_accept(&self) -> bool {
+        if self.resets.is_empty() {
+            return false;
+        }
+        let idx = self.accept_counter.fetch_add(1, Ordering::Relaxed);
+        self.resets.contains(&idx)
+    }
+
+    /// One-line human summary for serve-time logging.
+    pub fn summary(&self) -> String {
+        if self.is_empty() {
+            return "faults: none".into();
+        }
+        let mut parts: Vec<String> = self
+            .exec
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Panic => format!("panic@{}", e.at),
+                FaultKind::Stall(d) => format!("stall@{}:{}ms", e.at, d.as_millis()),
+                FaultKind::DropReply => format!("drop@{}", e.at),
+            })
+            .collect();
+        parts.extend(self.resets.iter().map(|at| format!("reset@{at}")));
+        format!("faults: {}", parts.join(","))
+    }
+}
+
+fn parse_duration(s: &str) -> Result<Duration> {
+    let s = s.trim();
+    let (num, mult_ms) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1000)
+    } else {
+        (s, 1)
+    };
+    let v: u64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("duration {s:?}: want e.g. 250ms or 2s"))?;
+    Ok(Duration::from_millis(v * mult_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plans_are_free_and_inert() {
+        for plan in [FaultPlan::empty(), FaultPlan::parse("").unwrap(), FaultPlan::parse("  ,  ").unwrap()]
+        {
+            assert!(plan.is_empty());
+            let base = plan.claim_exec(8);
+            assert_eq!(base, u64::MAX, "empty plan skips the counter");
+            assert!(!plan.panic_in(base, 8));
+            assert!(plan.stall_in(base, 8).is_none());
+            assert!(!plan.drop_reply_at(base));
+            assert!(!plan.reset_accept());
+            assert_eq!(plan.summary(), "faults: none");
+        }
+    }
+
+    #[test]
+    fn grammar_roundtrips() {
+        let plan = FaultPlan::parse("panic@6, stall@12:250ms ,drop@18,reset@2,stall@20:2s").unwrap();
+        assert!(!plan.is_empty());
+        assert_eq!(plan.summary(), "faults: panic@6,stall@12:250ms,drop@18,stall@20:2000ms,reset@2");
+        // bare numbers are milliseconds
+        let p = FaultPlan::parse("stall@0:40").unwrap();
+        assert_eq!(p.stall_in(p.claim_exec(1), 1), Some(Duration::from_millis(40)));
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_entries() {
+        for bad in [
+            "panic",          // no index
+            "panic@x",        // non-numeric index
+            "stall@3",        // stall without duration
+            "panic@3:10ms",   // duration on a kind that takes none
+            "jitter@1",       // unknown kind
+            "stall@1:fast",   // unparseable duration
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn exec_windows_fire_exactly_once() {
+        let plan = FaultPlan::parse("panic@6,stall@12:5ms,drop@13").unwrap();
+        // batch [0,4): nothing planned
+        let b0 = plan.claim_exec(4);
+        assert_eq!(b0, 0);
+        assert!(!plan.panic_in(b0, 4));
+        assert!(plan.stall_in(b0, 4).is_none());
+        // batch [4,8): the panic at 6 falls inside
+        let b1 = plan.claim_exec(4);
+        assert!(plan.panic_in(b1, 4));
+        // batch [8,14): stall at 12 and the dropped reply at 13
+        let b2 = plan.claim_exec(6);
+        assert_eq!(plan.stall_in(b2, 6), Some(Duration::from_millis(5)));
+        assert!(!plan.drop_reply_at(b2 + 4)); // index 12 stalls, 13 drops
+        assert!(plan.drop_reply_at(b2 + 5));
+        // later windows see nothing
+        let b3 = plan.claim_exec(100);
+        assert!(!plan.panic_in(b3, 100));
+        assert!(plan.stall_in(b3, 100).is_none());
+    }
+
+    #[test]
+    fn reset_counts_accepted_connections() {
+        let plan = FaultPlan::parse("reset@1").unwrap();
+        assert!(!plan.reset_accept()); // connection 0 survives
+        assert!(plan.reset_accept()); // connection 1 is reset
+        assert!(!plan.reset_accept()); // exactly once
+    }
+}

@@ -19,10 +19,19 @@
 //! (p50/p99/p999), time-to-first-prediction per session, typed-reject
 //! and eviction counts, plus the server's own [`WireMetrics`] snapshot
 //! read after the run.
+//!
+//! The generator is also the fault-tolerance exerciser: windows can
+//! carry a per-request deadline budget (`deadline_ms`, version-2
+//! frames), and typed retriable errors (`Rejected`, `Draining`,
+//! `DeadlineExceeded`, `WorkerRestarted`) can be retried with
+//! exponential backoff and deterministic per-tag jitter (`retries` /
+//! `backoff`) — the client half of the chaos battery's *no request is
+//! ever silently lost* invariant.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -117,6 +126,17 @@ pub struct LoadgenConfig {
     pub connect_retry: Duration,
     /// Extra time after the schedule ends to collect straggler replies.
     pub timeout: Duration,
+    /// Resends allowed per window after a typed retriable error
+    /// (`Rejected` / `Draining` / `DeadlineExceeded` / `WorkerRestarted`);
+    /// 0 disables retries entirely.
+    pub retries: u32,
+    /// Base backoff before the first resend; doubles per attempt with
+    /// ±50% deterministic per-tag jitter.
+    pub backoff: Duration,
+    /// Per-window deadline budget in milliseconds, carried on version-2
+    /// frames (0 = no deadline; version-1 frames, byte-identical to
+    /// pre-deadline builds).
+    pub deadline_ms: u32,
 }
 
 impl Default for LoadgenConfig {
@@ -135,6 +155,9 @@ impl Default for LoadgenConfig {
             drain: false,
             connect_retry: Duration::from_secs(5),
             timeout: Duration::from_secs(10),
+            retries: 0,
+            backoff: Duration::from_millis(50),
+            deadline_ms: 0,
         }
     }
 }
@@ -154,6 +177,16 @@ pub struct LoadgenReport {
     pub rejected: u64,
     /// Windows answered with a typed eviction error (state lost).
     pub evicted: u64,
+    /// Windows whose final answer was a typed deadline shed.
+    pub expired: u64,
+    /// Windows whose final answer was a worker-restart fault.
+    pub restarted: u64,
+    /// Windows answered `ERR_INTERNAL` (the server lost the reply
+    /// channel — e.g. an injected dropped reply). Still an answer: the
+    /// window is accounted, not lost.
+    pub server_errors: u64,
+    /// Resends scheduled after typed retriable errors.
+    pub retried: u64,
     /// Windows never answered before the collection deadline.
     pub lost: u64,
     /// Unexpected frames / framing failures (must be 0 on a healthy run).
@@ -183,6 +216,7 @@ impl LoadgenReport {
     pub fn summary(&self) -> String {
         format!(
             "loadgen sessions={} conns={} sent={} ok={} rejected={} evicted={} \
+             expired={} restarted={} server_errors={} retried={} \
              lost={} protocol_errors={} req_per_s={:.0} p50_us={} p99_us={} \
              p999_us={} max_us={} ttfp_p50_us={}",
             self.sessions,
@@ -191,6 +225,10 @@ impl LoadgenReport {
             self.ok,
             self.rejected,
             self.evicted,
+            self.expired,
+            self.restarted,
+            self.server_errors,
+            self.retried,
             self.lost,
             self.protocol_errors,
             self.req_per_s(),
@@ -210,11 +248,46 @@ struct Event {
     slot: usize,
 }
 
-/// What the reader still owes an answer: send time and session slot.
+/// What the reader still owes an answer: send time, session slot, and
+/// which resend attempt this was (0 = the scheduled send).
 struct Pending {
     sent: Instant,
     slot: usize,
+    attempt: u32,
 }
+
+/// One resend the reader has queued for the sender (backoff applied).
+struct Retry {
+    slot: usize,
+    attempt: u32,
+    due: Instant,
+}
+
+/// Exponential-backoff policy with deterministic per-tag jitter — two
+/// runs with the same seed back off identically, so chaos runs stay
+/// reproducible.
+#[derive(Clone, Copy)]
+struct RetryPolicy {
+    max: u32,
+    backoff: Duration,
+    seed: u64,
+}
+
+impl RetryPolicy {
+    /// Backoff before resend `attempt` (1-based) of the window whose
+    /// failed send carried `tag`: `backoff · 2^(attempt-1)` (capped at
+    /// 64×), jittered into [0.5×, 1.5×) by a (seed, tag)-keyed hash.
+    fn delay(&self, attempt: u32, tag: u64) -> Duration {
+        let exp = attempt.saturating_sub(1).min(6);
+        let base = self.backoff.as_secs_f64() * f64::from(1u32 << exp);
+        let mut rng = Rng::new(self.seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15));
+        Duration::from_secs_f64(base * (0.5 + rng.f64()))
+    }
+}
+
+/// Sender-side cadence for weaving queued retries between scheduled
+/// sends (also bounds how stale the reader-done check can get).
+const RETRY_TICK: Duration = Duration::from_millis(5);
 
 /// Per-connection tallies folded into the final report.
 #[derive(Default)]
@@ -223,6 +296,10 @@ struct Tally {
     ok: u64,
     rejected: u64,
     evicted: u64,
+    expired: u64,
+    restarted: u64,
+    server_errors: u64,
+    retried: u64,
     protocol_errors: u64,
     received: u64,
     latency: LatencyHistogram,
@@ -267,6 +344,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 total.ok += t.ok;
                 total.rejected += t.rejected;
                 total.evicted += t.evicted;
+                total.expired += t.expired;
+                total.restarted += t.restarted;
+                total.server_errors += t.server_errors;
+                total.retried += t.retried;
                 total.protocol_errors += t.protocol_errors;
                 total.received += t.received;
                 total.latency.merge(&t.latency);
@@ -307,6 +388,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         ok: total.ok,
         rejected: total.rejected,
         evicted: total.evicted,
+        expired: total.expired,
+        restarted: total.restarted,
+        server_errors: total.server_errors,
+        retried: total.retried,
         lost: total.sent.saturating_sub(total.received),
         protocol_errors: total.protocol_errors,
         elapsed,
@@ -359,63 +444,78 @@ fn run_conn(
     }
     events.sort_by_key(|e| (e.at, e.slot));
     let schedule_end = events.last().map(|e| e.at).unwrap_or_default();
-    let expected = events.len() as u64;
+    let expected = Arc::new(AtomicU64::new(events.len() as u64));
 
     let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
     let first_sent: Arc<Mutex<Vec<Option<Instant>>>> =
         Arc::new(Mutex::new(vec![None; session_indices.len()]));
+    let retryq: Arc<Mutex<Vec<Retry>>> = Arc::new(Mutex::new(Vec::new()));
+    let reader_done = Arc::new(AtomicBool::new(false));
+    let policy = RetryPolicy { max: cfg.retries, backoff: cfg.backoff, seed: cfg.seed };
 
     // reader: tally typed responses until all answers arrive or the
-    // deadline passes (open-loop — it never gates the sender)
+    // deadline passes (open-loop — it never gates the sender); retriable
+    // errors go back on the retry queue and bump `expected`
     let read_half = stream.try_clone()?;
     let t0 = Instant::now();
     let deadline = t0 + schedule_end + cfg.timeout;
     let reader = {
         let pending = Arc::clone(&pending);
         let first_sent = Arc::clone(&first_sent);
+        let expected = Arc::clone(&expected);
+        let retryq = Arc::clone(&retryq);
+        let reader_done = Arc::clone(&reader_done);
         std::thread::Builder::new().name(format!("loadgen-rd-{conn_index}")).spawn(
-            move || reader_loop(read_half, pending, first_sent, expected, deadline),
+            move || {
+                reader_loop(
+                    read_half, pending, first_sent, expected, deadline, retryq, policy,
+                    reader_done,
+                )
+            },
         )?
     };
 
-    // sender: inject windows at their scheduled offsets
+    // sender: inject windows at their scheduled offsets, weaving in any
+    // due retries the reader has queued
     let mut sent = 0u64;
     let mut next_tag = 1_000_000u64; // clear of the handshake tags
     let mut pixels = vec![0u8; dim];
-    for ev in &events {
+    let mut conn_up = true;
+    'schedule: for ev in &events {
         let target = t0 + ev.at;
-        let now = Instant::now();
-        if target > now {
-            std::thread::sleep(target - now);
-        }
-        let rng = &mut rngs[ev.slot];
-        for b in pixels.iter_mut() {
-            *b = rng.next_u32() as u8;
-        }
-        let tag = next_tag;
-        next_tag += 1;
-        let sent_at = Instant::now();
-        {
-            let mut fs = first_sent.lock().unwrap();
-            if fs[ev.slot].is_none() {
-                fs[ev.slot] = Some(sent_at);
+        loop {
+            if !drain_due_retries(
+                &mut stream, cfg, &retryq, &session_ids, &mut rngs, &mut pixels,
+                &mut next_tag, &mut sent, &pending, &first_sent,
+            ) {
+                conn_up = false;
+                break 'schedule; // server gone: the reader tallies what it can
             }
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            std::thread::sleep((target - now).min(RETRY_TICK));
         }
-        pending.lock().unwrap().insert(tag, Pending { sent: sent_at, slot: ev.slot });
-        let frame = wire::encode_request(
-            tag,
-            &Request::StreamWindow {
-                session: session_ids[ev.slot],
-                steps: cfg.steps,
-                precision: cfg.precision,
-                encoder: cfg.encoder,
-                pixels: pixels.clone(),
-            },
-        );
-        if send_frame(&mut stream, &frame).is_err() {
-            break; // server gone: the reader tallies what it can
+        if !send_window(
+            &mut stream, cfg, session_ids[ev.slot], ev.slot, 0, &mut rngs[ev.slot],
+            &mut pixels, &mut next_tag, &pending, &first_sent,
+        ) {
+            conn_up = false;
+            break;
         }
         sent += 1;
+    }
+    // tail: keep serving queued retries until the reader has collected
+    // every answer (or given up at the deadline)
+    while conn_up && !reader_done.load(Ordering::SeqCst) && Instant::now() < deadline {
+        if !drain_due_retries(
+            &mut stream, cfg, &retryq, &session_ids, &mut rngs, &mut pixels,
+            &mut next_tag, &mut sent, &pending, &first_sent,
+        ) {
+            break;
+        }
+        std::thread::sleep(RETRY_TICK);
     }
 
     let mut tally = reader
@@ -425,18 +525,112 @@ fn run_conn(
     Ok(tally)
 }
 
+/// Send one window (scheduled or resend) for `slot`; registers the
+/// pending entry and first-send stamp. Returns `false` when the
+/// connection is gone.
+#[allow(clippy::too_many_arguments)]
+fn send_window(
+    stream: &mut TcpStream,
+    cfg: &LoadgenConfig,
+    session_id: u64,
+    slot: usize,
+    attempt: u32,
+    rng: &mut Rng,
+    pixels: &mut [u8],
+    next_tag: &mut u64,
+    pending: &Mutex<HashMap<u64, Pending>>,
+    first_sent: &Mutex<Vec<Option<Instant>>>,
+) -> bool {
+    for b in pixels.iter_mut() {
+        *b = rng.next_u32() as u8;
+    }
+    let tag = *next_tag;
+    *next_tag += 1;
+    let sent_at = Instant::now();
+    {
+        let mut fs = first_sent.lock().unwrap();
+        if fs[slot].is_none() {
+            fs[slot] = Some(sent_at);
+        }
+    }
+    pending.lock().unwrap().insert(tag, Pending { sent: sent_at, slot, attempt });
+    let req = Request::StreamWindow {
+        session: session_id,
+        steps: cfg.steps,
+        precision: cfg.precision,
+        encoder: cfg.encoder,
+        pixels: pixels.to_vec(),
+    };
+    // a configured deadline budget rides on version-2 frames; without
+    // one the frames stay version-1, byte-identical to older builds
+    let frame = if cfg.deadline_ms > 0 {
+        wire::encode_request_deadline(tag, &req, cfg.deadline_ms)
+    } else {
+        wire::encode_request(tag, &req)
+    };
+    stream.write_all(&frame).is_ok()
+}
+
+/// Pop and send every retry whose backoff has elapsed. Returns `false`
+/// when the connection died mid-send.
+#[allow(clippy::too_many_arguments)]
+fn drain_due_retries(
+    stream: &mut TcpStream,
+    cfg: &LoadgenConfig,
+    retryq: &Mutex<Vec<Retry>>,
+    session_ids: &[u64],
+    rngs: &mut [Rng],
+    pixels: &mut [u8],
+    next_tag: &mut u64,
+    sent: &mut u64,
+    pending: &Mutex<HashMap<u64, Pending>>,
+    first_sent: &Mutex<Vec<Option<Instant>>>,
+) -> bool {
+    let now = Instant::now();
+    let due: Vec<Retry> = {
+        let mut q = retryq.lock().unwrap();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].due <= now {
+                due.push(q.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        due
+    };
+    for r in due {
+        if !send_window(
+            stream, cfg, session_ids[r.slot], r.slot, r.attempt, &mut rngs[r.slot],
+            pixels, next_tag, pending, first_sent,
+        ) {
+            return false;
+        }
+        *sent += 1;
+    }
+    true
+}
+
 /// Tally one connection's responses until `expected` answers arrive, the
-/// deadline passes, or the server disconnects.
+/// deadline passes, or the server disconnects. Typed retriable errors
+/// re-queue the window (bumping `expected`) while attempts remain;
+/// exhausted windows land in their final bucket. Sets `done` on exit so
+/// the sender's retry tail loop stops.
+#[allow(clippy::too_many_arguments)]
 fn reader_loop(
     mut stream: TcpStream,
     pending: Arc<Mutex<HashMap<u64, Pending>>>,
     first_sent: Arc<Mutex<Vec<Option<Instant>>>>,
-    expected: u64,
+    expected: Arc<AtomicU64>,
     deadline: Instant,
+    retryq: Arc<Mutex<Vec<Retry>>>,
+    policy: RetryPolicy,
+    done: Arc<AtomicBool>,
 ) -> Result<Tally> {
     let mut t = Tally::default();
     let mut ttfp_done: Vec<bool> = vec![false; first_sent.lock().unwrap().len()];
-    while t.received < expected {
+    while t.received < expected.load(Ordering::SeqCst) {
         let (tag, resp) = match read_response(&mut stream, deadline) {
             Ok(Some(f)) => f,
             Ok(None) => break,        // server closed the connection
@@ -461,17 +655,48 @@ fn reader_loop(
                 t.ttfp.record(now.duration_since(fs));
             }
         }
+        // queue a resend (with backoff) while attempts remain; the
+        // bumped `expected` keeps this loop waiting for its answer
+        let retry = |t: &mut Tally| -> bool {
+            if p.attempt >= policy.max {
+                return false;
+            }
+            t.retried += 1;
+            expected.fetch_add(1, Ordering::SeqCst);
+            retryq.lock().unwrap().push(Retry {
+                slot: p.slot,
+                attempt: p.attempt + 1,
+                due: now + policy.delay(p.attempt + 1, tag),
+            });
+            true
+        };
         match resp {
             Response::Window { .. } => {
                 t.ok += 1;
                 t.latency.record(now.duration_since(p.sent));
             }
             Response::Error { code: ErrorCode::Rejected, .. }
-            | Response::Error { code: ErrorCode::Draining, .. } => t.rejected += 1,
+            | Response::Error { code: ErrorCode::Draining, .. } => {
+                if !retry(&mut t) {
+                    t.rejected += 1;
+                }
+            }
+            Response::Error { code: ErrorCode::DeadlineExceeded, .. } => {
+                if !retry(&mut t) {
+                    t.expired += 1;
+                }
+            }
+            Response::Error { code: ErrorCode::WorkerRestarted, .. } => {
+                if !retry(&mut t) {
+                    t.restarted += 1;
+                }
+            }
             Response::Error { code: ErrorCode::Evicted, .. } => t.evicted += 1,
+            Response::Error { code: ErrorCode::Internal, .. } => t.server_errors += 1,
             _ => t.protocol_errors += 1,
         }
     }
+    done.store(true, Ordering::SeqCst);
     Ok(t)
 }
 
@@ -617,6 +842,10 @@ mod tests {
             ok: 60,
             rejected: 4,
             evicted: 0,
+            expired: 2,
+            restarted: 1,
+            server_errors: 0,
+            retried: 3,
             lost: 0,
             protocol_errors: 0,
             elapsed: Duration::from_secs(2),
@@ -628,6 +857,29 @@ mod tests {
         assert!(s.contains("ok=60"), "{s}");
         assert!(s.contains("protocol_errors=0"), "{s}");
         assert!(s.contains("rejected=4"), "{s}");
+        assert!(s.contains("expired=2"), "{s}");
+        assert!(s.contains("restarted=1"), "{s}");
+        assert!(s.contains("retried=3"), "{s}");
+        assert!(s.contains("lost=0"), "{s}");
         assert_eq!(r.req_per_s(), 30.0);
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential_jittered_deterministic() {
+        let p = RetryPolicy { max: 3, backoff: Duration::from_millis(50), seed: 9 };
+        let d1 = p.delay(1, 42);
+        let d2 = p.delay(2, 42);
+        let d3 = p.delay(3, 42);
+        // jitter keeps every delay inside [0.5x, 1.5x) of its base
+        let base = 0.050;
+        assert!(d1.as_secs_f64() >= base * 0.5 && d1.as_secs_f64() < base * 1.5);
+        assert!(d2.as_secs_f64() >= base * 1.0 && d2.as_secs_f64() < base * 3.0);
+        assert!(d3.as_secs_f64() >= base * 2.0 && d3.as_secs_f64() < base * 6.0);
+        // deterministic per (seed, tag); different tags de-synchronize
+        assert_eq!(p.delay(1, 42), d1);
+        assert_ne!(p.delay(1, 43), d1);
+        // the exponent caps at 64x instead of overflowing
+        let far = p.delay(200, 42).as_secs_f64();
+        assert!(far < base * 64.0 * 1.5 + 1e-9);
     }
 }

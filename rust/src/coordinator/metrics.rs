@@ -106,6 +106,16 @@ pub struct Metrics {
     /// Stream windows executed (a subset of `requests`; these bypass the
     /// batcher and run session-affine).
     pub stream_windows: u64,
+    /// Worker panics caught by supervision (each is followed by either a
+    /// restart or — during drain / failed respawn — a clean worker exit).
+    pub panics: u64,
+    /// Workers respawned with a fresh engine after a panic.
+    pub restarts: u64,
+    /// Stream sessions whose resident state was lost to a worker restart
+    /// (their next window reports `fresh = true`).
+    pub rehomed: u64,
+    /// Requests shed at dequeue because their deadline had expired.
+    pub deadline_exceeded: u64,
     /// When this metrics object started observing (requests/sec base).
     started: Instant,
 }
@@ -126,6 +136,10 @@ impl Metrics {
             latency: LatencyHistogram::new(),
             batched_total: 0,
             stream_windows: 0,
+            panics: 0,
+            restarts: 0,
+            rehomed: 0,
+            deadline_exceeded: 0,
             started: Instant::now(),
         }
     }
@@ -139,6 +153,10 @@ impl Metrics {
         self.rejected += other.rejected;
         self.batched_total += other.batched_total;
         self.stream_windows += other.stream_windows;
+        self.panics += other.panics;
+        self.restarts += other.restarts;
+        self.rehomed += other.rehomed;
+        self.deadline_exceeded += other.deadline_exceeded;
         self.latency.merge(&other.latency);
         self.started = self.started.min(other.started);
     }
@@ -170,6 +188,7 @@ impl Metrics {
         format!(
             "requests={} ({:.0} req/s) batches={} mean_batch={:.2} \
              stream_windows={} rejected={} \
+             panics={} restarts={} rehomed={} deadline_exceeded={} \
              latency mean={:.0}us p50<={}us p95<={}us p99<={}us p999<={}us max={}us",
             self.requests,
             self.req_per_s(),
@@ -177,6 +196,10 @@ impl Metrics {
             self.mean_batch(),
             self.stream_windows,
             self.rejected,
+            self.panics,
+            self.restarts,
+            self.rehomed,
+            self.deadline_exceeded,
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.95),
@@ -339,6 +362,41 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.stream_windows, 7);
         assert!(a.summary().contains("stream_windows=7"), "{}", a.summary());
+    }
+
+    #[test]
+    fn fault_counters_merge_and_report() {
+        // the chaos battery reads these through the same merge path the
+        // engine uses, so cross-worker summation is load-bearing
+        let mut a = Metrics::new();
+        a.panics = 1;
+        a.rehomed = 2;
+        let mut b = Metrics::new();
+        b.panics = 2;
+        b.restarts = 2;
+        b.rehomed = 3;
+        b.deadline_exceeded = 5;
+        let mut c = Metrics::new();
+        c.deadline_exceeded = 1;
+        a.merge(&b);
+        a.merge(&c);
+        assert_eq!(a.panics, 3);
+        assert_eq!(a.restarts, 2);
+        assert_eq!(a.rehomed, 5);
+        assert_eq!(a.deadline_exceeded, 6);
+        let s = a.summary();
+        assert!(s.contains("panics=3"), "{s}");
+        assert!(s.contains("restarts=2"), "{s}");
+        assert!(s.contains("rehomed=5"), "{s}");
+        assert!(s.contains("deadline_exceeded=6"), "{s}");
+    }
+
+    #[test]
+    fn fault_counters_zero_by_default() {
+        // fault-free runs must report all-zero fault counters so the
+        // bit-identical contract extends to the operator surface
+        let s = Metrics::new().summary();
+        assert!(s.contains("panics=0 restarts=0 rehomed=0 deadline_exceeded=0"), "{s}");
     }
 
     #[test]

@@ -36,10 +36,22 @@
 //! streaming sessions against a listening server and reports
 //! p50/p99/p999 + time-to-first-prediction.
 //!
+//! The serving path is **fault-tolerant** (DESIGN.md §Fault tolerance):
+//! worker panics are supervised — caught, counted, answered with the
+//! typed `WorkerRestarted` error, and the worker respawns with a fresh
+//! engine (its sessions rehome onto fresh state) — requests carry
+//! optional deadlines shed at dequeue with `DeadlineExceeded`, and
+//! [`faults`] injects deterministic, seeded failures (panics, stalls,
+//! dropped replies, connection resets) so the chaos battery can prove
+//! the *exactly-one-reply* invariant over real sockets.
+//!
 //! std threads + channels (tokio is unavailable offline); the hot path is
 //! allocation-light and the queue is the bounded [`crate::array::RingFifo`].
 
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
 pub mod batcher;
+pub mod faults;
 pub mod firmware;
 pub mod loadgen;
 pub mod metrics;
@@ -50,10 +62,20 @@ pub mod tcp;
 pub mod wire;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use faults::FaultPlan;
 pub use loadgen::{Arrival, LoadgenConfig, LoadgenReport};
 pub use metrics::{LatencyHistogram, Metrics};
-pub use request::{InferRequest, InferResponse, Precision as ReqPrecision};
+pub use request::{InferRequest, InferResponse, Precision as ReqPrecision, ServeFault};
 pub use server::{default_workers, Backend, ServerConfig, ServingEngine};
 pub use session::{EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession};
 pub use tcp::TcpFrontend;
 pub use wire::{ErrorCode, WireError, WireInfo, WireMetrics};
+
+/// Poison-tolerant mutex access for the serving path: a thread that
+/// panicked while holding one of these locks (metrics, connection
+/// registry) left plain counters/maps behind, never a broken invariant —
+/// so the supervised remainder of the server keeps running instead of
+/// cascading the panic through `unwrap()` on every later lock.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

@@ -50,6 +50,22 @@ impl Precision {
     }
 }
 
+/// A typed serving fault carried on an otherwise-well-formed reply.
+///
+/// Faults are the third answer class next to success and `rejected`:
+/// the request was admitted but could not produce a result. A faulted
+/// reply carries no prediction information; the wire front end maps
+/// each variant to its [`super::wire::ErrorCode`] twin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeFault {
+    /// The request's deadline expired before a worker dequeued it; the
+    /// work was shed without executing.
+    DeadlineExceeded,
+    /// The worker executing (or routed) this request panicked and was
+    /// restarted, or the pool had no live worker left. Safe to retry.
+    WorkerRestarted,
+}
+
 /// One inference request travelling through the engine.
 pub struct InferRequest {
     /// Engine-assigned request id.
@@ -60,6 +76,10 @@ pub struct InferRequest {
     pub precision: Precision,
     /// Ingest timestamp (latency accounting).
     pub enqueued: Instant,
+    /// Absolute shed point: a worker that dequeues this request after
+    /// the instant answers [`ServeFault::DeadlineExceeded`] instead of
+    /// executing (`None` = never sheds).
+    pub deadline: Option<Instant>,
     /// Completion channel (one response per request).
     pub reply: mpsc::Sender<InferResponse>,
 }
@@ -84,6 +104,10 @@ pub struct InferResponse {
     /// `ERR_REJECTED` frame) instead of a silently dropped channel; a
     /// closed reply channel now only means engine/worker failure.
     pub rejected: bool,
+    /// Typed serving fault (`None` on success and plain rejection). Like
+    /// `rejected`, a faulted reply carries no prediction information —
+    /// every admitted request still gets exactly one reply.
+    pub fault: Option<ServeFault>,
 }
 
 #[cfg(test)]

@@ -12,7 +12,8 @@
 //! channel — a deliberately simple surface that an RPC front-end (or the
 //! examples) wraps.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -27,8 +28,10 @@ use crate::runtime::ArtifactStore;
 use crate::Result;
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::faults::FaultPlan;
+use super::lock;
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse, Precision};
+use super::request::{InferRequest, InferResponse, Precision, ServeFault};
 use super::session::{
     EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession,
 };
@@ -89,6 +92,10 @@ pub struct ServerConfig {
     /// bit-exactness contract: a session replay equals the same windows
     /// run back-to-back on one persistent engine).
     pub stream_policy: ResetPolicy,
+    /// Deterministic fault-injection plan shared across the pool
+    /// (default: empty — one branch per batch, no other cost). See
+    /// [`FaultPlan`] for the grammar and the chaos battery it feeds.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -103,6 +110,7 @@ impl Default for ServerConfig {
             kernels: KernelKind::Auto,
             max_sessions: 1024,
             stream_policy: ResetPolicy::Hold,
+            faults: Arc::new(FaultPlan::empty()),
         }
     }
 }
@@ -134,6 +142,11 @@ pub struct ServingEngine {
     classes: usize,
     max_sessions: usize,
     backend: Backend,
+    // drain-vs-restart contract: set *before* Shutdown is sent so a
+    // worker that panics while draining exits cleanly instead of
+    // respawning an engine nobody will use
+    draining: Arc<AtomicBool>,
+    faults: Arc<FaultPlan>,
 }
 
 impl ServingEngine {
@@ -162,6 +175,8 @@ impl ServingEngine {
         // counts these toward queue_capacity so sharding does not turn
         // the bounded ingest queue into unbounded per-worker backlogs
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let draining = Arc::new(AtomicBool::new(false));
+        let faults = Arc::clone(&cfg.faults);
 
         let mut worker_txs = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
@@ -172,19 +187,21 @@ impl ServingEngine {
             worker_txs.push(btx);
             let wcfg = cfg.clone();
             let fl = Arc::clone(&in_flight);
+            let dr = Arc::clone(&draining);
             let handle = std::thread::Builder::new()
                 .name(format!("lspine-exec-{w}"))
-                .spawn(move || exec_worker_loop(w, wcfg, brx, m, fl))?;
+                .spawn(move || exec_worker_loop(w, wcfg, brx, m, fl, dr))?;
             workers.push(handle);
         }
 
         let (tx, rx) = mpsc::channel::<Msg>();
         let dispatcher_metrics = Arc::clone(&metrics[0]);
         let dcfg = cfg;
+        let ddr = Arc::clone(&draining);
         let dispatcher = std::thread::Builder::new()
             .name("lspine-dispatch".into())
             .spawn(move || {
-                dispatcher_loop(dcfg, rx, worker_txs, dispatcher_metrics, in_flight)
+                dispatcher_loop(dcfg, rx, worker_txs, dispatcher_metrics, in_flight, ddr)
             })?;
 
         Ok(Self {
@@ -198,6 +215,8 @@ impl ServingEngine {
             classes,
             max_sessions: cfg_max_sessions,
             backend,
+            draining,
+            faults,
         })
     }
 
@@ -226,6 +245,12 @@ impl ServingEngine {
         self.backend
     }
 
+    /// The pool's fault-injection plan (empty in production; the TCP
+    /// front end consults it for accept-loop resets).
+    pub fn faults(&self) -> &Arc<FaultPlan> {
+        &self.faults
+    }
+
     /// Submit one request and block for its response.
     pub fn infer(&self, pixels: &[u8], precision: Precision) -> Result<InferResponse> {
         let rx = self.submit(pixels, precision)?;
@@ -238,6 +263,19 @@ impl ServingEngine {
         pixels: &[u8],
         precision: Precision,
     ) -> Result<mpsc::Receiver<InferResponse>> {
+        self.submit_with_deadline(pixels, precision, None)
+    }
+
+    /// [`submit`](Self::submit) with an optional latency budget: a worker
+    /// that dequeues the request after `deadline` has elapsed sheds it
+    /// with a typed [`ServeFault::DeadlineExceeded`] reply instead of
+    /// executing (load shedding — expired work is work nobody awaits).
+    pub fn submit_with_deadline(
+        &self,
+        pixels: &[u8],
+        precision: Precision,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<InferResponse>> {
         anyhow::ensure!(pixels.len() == self.input_dim, "bad input size");
         anyhow::ensure!(
             !(self.backend == Backend::Native && precision == Precision::Fp32),
@@ -249,6 +287,7 @@ impl ServingEngine {
             pixels: pixels.to_vec(),
             precision,
             enqueued: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
             reply,
         };
         self.tx
@@ -288,6 +327,21 @@ impl ServingEngine {
         precision: Precision,
         encoder: EncoderKind,
     ) -> Result<mpsc::Receiver<StreamResponse>> {
+        self.stream_window_with_deadline(session, pixels, steps, precision, encoder, None)
+    }
+
+    /// [`stream_window_with`](Self::stream_window_with) plus an optional
+    /// latency budget (see [`submit_with_deadline`](Self::submit_with_deadline)).
+    /// An expired window is shed without advancing session state.
+    pub fn stream_window_with_deadline(
+        &self,
+        session: u64,
+        pixels: &[u8],
+        steps: u32,
+        precision: Precision,
+        encoder: EncoderKind,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<StreamResponse>> {
         anyhow::ensure!(pixels.len() == self.input_dim, "bad input size");
         anyhow::ensure!(steps >= 1, "a window needs at least one timestep");
         anyhow::ensure!(
@@ -306,6 +360,7 @@ impl ServingEngine {
             precision,
             encoder,
             enqueued: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
             reply,
         };
         self.tx
@@ -324,16 +379,20 @@ impl ServingEngine {
 
     /// Merged view over the dispatcher's and every worker's metrics.
     pub fn metrics(&self) -> Metrics {
-        let mut merged = self.metrics[0].lock().unwrap().clone();
+        let mut merged = lock(&self.metrics[0]).clone();
         for m in &self.metrics[1..] {
-            merged.merge(&m.lock().unwrap());
+            merged.merge(&lock(m));
         }
         merged
     }
 
     /// Graceful shutdown: drains the queue, then joins every thread and
     /// surfaces the first error (e.g. a worker whose backend failed).
+    /// A worker that panics *during* the drain is not respawned — its
+    /// owed replies are answered as [`ServeFault::WorkerRestarted`] and
+    /// the drain still completes.
     pub fn shutdown(mut self) -> Result<()> {
+        self.draining.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
         let mut first_err: Option<anyhow::Error> = None;
         let mut note = |res: std::thread::Result<Result<()>>, who: &str| {
@@ -361,6 +420,7 @@ impl ServingEngine {
 
 impl Drop for ServingEngine {
     fn drop(&mut self) {
+        self.draining.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -376,7 +436,7 @@ impl Drop for ServingEngine {
 /// channel — a closed channel now only means worker failure) and the
 /// dispatcher's `Metrics::rejected` counts it.
 fn reject_infer(metrics: &Arc<Mutex<Metrics>>, req: InferRequest) {
-    metrics.lock().unwrap().rejected += 1;
+    lock(metrics).rejected += 1;
     let _ = req.reply.send(InferResponse {
         id: req.id,
         prediction: 0,
@@ -384,13 +444,14 @@ fn reject_infer(metrics: &Arc<Mutex<Metrics>>, req: InferRequest) {
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         batch_size: 0,
         rejected: true,
+        fault: None,
     });
 }
 
 /// Typed admission-control rejection of a stream window (see
 /// [`reject_infer`]); session state does not advance.
 fn reject_stream(metrics: &Arc<Mutex<Metrics>>, req: StreamRequest) {
-    metrics.lock().unwrap().rejected += 1;
+    lock(metrics).rejected += 1;
     let _ = req.reply.send(StreamResponse {
         session: req.session,
         window: 0,
@@ -400,7 +461,52 @@ fn reject_stream(metrics: &Arc<Mutex<Metrics>>, req: StreamRequest) {
         worker: usize::MAX,
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         rejected: true,
+        fault: None,
     });
+}
+
+/// Answer a one-shot with a typed serving fault — the exactly-one-reply
+/// invariant holds even for work that never (successfully) executed.
+fn fault_infer(req: InferRequest, fault: ServeFault) {
+    let _ = req.reply.send(InferResponse {
+        id: req.id,
+        prediction: 0,
+        counts: Vec::new(),
+        latency_us: req.enqueued.elapsed().as_micros() as u64,
+        batch_size: 0,
+        rejected: false,
+        fault: Some(fault),
+    });
+}
+
+/// Answer a stream window with a typed serving fault; session state did
+/// not advance (see [`fault_infer`]).
+fn fault_stream(req: StreamRequest, fault: ServeFault) {
+    let _ = req.reply.send(StreamResponse {
+        session: req.session,
+        window: 0,
+        prediction: 0,
+        counts: Vec::new(),
+        fresh: false,
+        worker: usize::MAX,
+        latency_us: req.enqueued.elapsed().as_micros() as u64,
+        rejected: false,
+        fault: Some(fault),
+    });
+}
+
+/// Session-affine routing over the *live* workers: session `s` maps to
+/// the `(s mod live)`-th live worker. While the whole pool is healthy
+/// this is exactly the historical `s % workers` contract; when a worker
+/// dies permanently (engine respawn failed) its sessions deterministically
+/// rehome onto the survivors, whose tables recreate them fresh.
+fn alive_route(session: u64, alive: &[bool]) -> Option<usize> {
+    let live = alive.iter().filter(|a| **a).count();
+    if live == 0 {
+        return None;
+    }
+    let k = (session % live as u64) as usize;
+    alive.iter().enumerate().filter(|(_, a)| **a).nth(k).map(|(i, _)| i)
 }
 
 /// Session-affine routing of the non-batched messages: every window of
@@ -417,28 +523,45 @@ impl StreamRouter<'_> {
     /// Dispatch one stream window immediately (streams are stateful and
     /// latency-bound: they bypass the batcher but still count against
     /// `queue_capacity`). Over-capacity windows get a typed rejection
-    /// reply; only a dead pinned worker closes the reply channel.
+    /// reply; a window that finds no live worker gets a typed
+    /// [`ServeFault::WorkerRestarted`] reply — never a silent drop.
     fn route_stream(&self, req: StreamRequest, pending: usize, alive: &mut [bool]) {
         if pending + self.in_flight.load(Ordering::Relaxed) >= self.queue_capacity {
             reject_stream(self.metrics, req);
             return;
         }
-        let w = (req.session % self.worker_txs.len() as u64) as usize;
-        if !alive[w] {
-            return; // pinned worker died: the closed reply signals it
-        }
-        self.in_flight.fetch_add(1, Ordering::Relaxed);
-        if self.worker_txs[w].send(WorkerMsg::Stream(req)).is_err() {
-            alive[w] = false;
-            self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let mut req = req;
+        loop {
+            let Some(w) = alive_route(req.session, alive) else {
+                fault_stream(req, ServeFault::WorkerRestarted);
+                return;
+            };
+            self.in_flight.fetch_add(1, Ordering::Relaxed);
+            match self.worker_txs[w].send(WorkerMsg::Stream(req)) {
+                Ok(()) => return,
+                Err(mpsc::SendError(back)) => {
+                    // worker died permanently between route and send:
+                    // mark it and re-route to the next survivor
+                    alive[w] = false;
+                    self.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    req = match back {
+                        WorkerMsg::Stream(r) => r,
+                        _ => unreachable!("sent a Stream"),
+                    };
+                }
+            }
         }
     }
 
-    /// Forward an explicit session close to its pinned worker.
+    /// Forward an explicit session close to its routed worker (a close
+    /// with no live worker has nothing left to free).
     fn route_close(&self, id: u64, alive: &mut [bool]) {
-        let w = (id % self.worker_txs.len() as u64) as usize;
-        if alive[w] && self.worker_txs[w].send(WorkerMsg::Close(id)).is_err() {
-            alive[w] = false;
+        loop {
+            let Some(w) = alive_route(id, alive) else { return };
+            match self.worker_txs[w].send(WorkerMsg::Close(id)) {
+                Ok(()) => return,
+                Err(_) => alive[w] = false,
+            }
         }
     }
 }
@@ -450,11 +573,13 @@ fn dispatcher_loop(
     worker_txs: Vec<mpsc::Sender<WorkerMsg>>,
     metrics: Arc<Mutex<Metrics>>,
     in_flight: Arc<AtomicUsize>,
+    draining: Arc<AtomicBool>,
 ) -> Result<()> {
     let n_workers = worker_txs.len();
-    // a worker whose channel closed (backend failed) is skipped; batches
-    // routed to a dead worker drop their reply senders, which callers
-    // observe as a closed response channel rather than a hang
+    // a worker's channel only closes when its respawn failed (supervised
+    // panics keep the same channel); such permanently-dead workers are
+    // skipped and their sessions rehome via alive_route. With the whole
+    // pool dead every request still gets a typed WorkerRestarted reply.
     let mut alive = vec![true; n_workers];
     let mut next_worker = 0usize;
     let mut batcher = DynamicBatcher::new(cfg.batcher);
@@ -491,9 +616,13 @@ fn dispatcher_loop(
                 }
             }
         }
-        // all workers dead: dropping the batch closes its reply channels;
-        // give its capacity back so ingest keeps rejecting cleanly
+        // all workers dead: answer every request with the typed restart
+        // fault (never a silent drop) and give the capacity back so
+        // ingest keeps rejecting cleanly
         dispatch_in_flight.fetch_sub(item.1.len(), Ordering::Relaxed);
+        for req in item.1 {
+            fault_infer(req, ServeFault::WorkerRestarted);
+        }
     };
 
     loop {
@@ -524,15 +653,24 @@ fn dispatcher_loop(
                         }
                         Msg::Stream(r) => router.route_stream(r, pending, &mut alive),
                         Msg::CloseSession(id) => router.route_close(id, &mut alive),
-                        Msg::Shutdown => shutting_down = true,
+                        Msg::Shutdown => {
+                            draining.store(true, Ordering::SeqCst);
+                            shutting_down = true;
+                        }
                     }
                 }
             }
             Ok(Msg::Stream(req)) => router.route_stream(req, pending, &mut alive),
             Ok(Msg::CloseSession(id)) => router.route_close(id, &mut alive),
-            Ok(Msg::Shutdown) => shutting_down = true,
+            Ok(Msg::Shutdown) => {
+                draining.store(true, Ordering::SeqCst);
+                shutting_down = true;
+            }
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+            Err(RecvTimeoutError::Disconnected) => {
+                draining.store(true, Ordering::SeqCst);
+                shutting_down = true;
+            }
         }
 
         // 2. dispatch ready batches. Idle-dispatch policy (§Perf P1):
@@ -556,7 +694,10 @@ fn dispatcher_loop(
                     }
                     Msg::Stream(r) => router.route_stream(r, pending, &mut alive),
                     Msg::CloseSession(id) => router.route_close(id, &mut alive),
-                    Msg::Shutdown => shutting_down = true,
+                    Msg::Shutdown => {
+                        draining.store(true, Ordering::SeqCst);
+                        shutting_down = true;
+                    }
                 }
             }
             let now = Instant::now();
@@ -588,18 +729,11 @@ fn dispatcher_loop(
     }
 }
 
-/// One execution worker: builds its own backend (and its resident
-/// session table), then runs dealt batches and stream windows until the
-/// dispatcher closes the channel.
-fn exec_worker_loop(
-    worker_index: usize,
-    cfg: ServerConfig,
-    rx: mpsc::Receiver<WorkerMsg>,
-    metrics: Arc<Mutex<Metrics>>,
-    in_flight: Arc<AtomicUsize>,
-) -> Result<()> {
+/// Build a worker's execution backend from the artifacts (also the
+/// respawn path after a supervised panic).
+fn build_exec(cfg: &ServerConfig) -> Result<Exec> {
     let store = ArtifactStore::open(&cfg.artifacts_dir)?;
-    let mut exec = match cfg.backend {
+    Ok(match cfg.backend {
         Backend::Pjrt => Exec::Pjrt(ExecutorPool::new(store, &cfg.model)?),
         Backend::Native => {
             // one resolution per shard, at startup: every engine of this
@@ -612,35 +746,121 @@ fn exec_worker_loop(
             }
             Exec::Native(engines)
         }
-    };
+    })
+}
+
+/// Answer one dealt message with [`ServeFault::WorkerRestarted`] and
+/// return its claimed capacity — the teardown path a dying or draining
+/// worker runs so nothing it owes is silently lost.
+fn answer_restarted(msg: WorkerMsg, in_flight: &AtomicUsize) {
+    match msg {
+        WorkerMsg::Batch(_, batch) => {
+            let n = batch.len();
+            for req in batch {
+                fault_infer(req, ServeFault::WorkerRestarted);
+            }
+            in_flight.fetch_sub(n, Ordering::Relaxed);
+        }
+        WorkerMsg::Stream(req) => {
+            fault_stream(req, ServeFault::WorkerRestarted);
+            in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+        WorkerMsg::Close(_) => {}
+    }
+}
+
+/// One execution worker: builds its own backend (and its resident
+/// session table), then runs dealt batches and stream windows until the
+/// dispatcher closes the channel.
+///
+/// The loop is **supervised** (DESIGN.md §Fault tolerance): a panic in
+/// the execute path is caught ([`run_batch`] / [`run_stream`] answer the
+/// in-flight requests with [`ServeFault::WorkerRestarted`] and return
+/// `false`), the panicked engine and session table are discarded, and
+/// the worker respawns a fresh backend on the *same* channel — queued
+/// work keeps flowing and later windows of its sessions report
+/// `fresh = true`. Two exits from supervision: a panic while `draining`
+/// is set never respawns (the worker answers its remaining queue with
+/// the restart fault and completes the drain), and a failed respawn
+/// (e.g. artifacts became unreadable) kills the worker for good — its
+/// channel closes and the dispatcher reroutes sessions to survivors.
+fn exec_worker_loop(
+    worker_index: usize,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<WorkerMsg>,
+    metrics: Arc<Mutex<Metrics>>,
+    in_flight: Arc<AtomicUsize>,
+    draining: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut exec = build_exec(&cfg)?;
     // this worker's share of the pool-wide session cap (sessions pin by
     // id, so caps partition cleanly across shards)
     let session_cap = cfg.max_sessions.div_ceil(cfg.workers.max(1)).max(1);
     let mut sessions = SessionTable::new(session_cap);
     while let Ok(msg) = rx.recv() {
-        match msg {
+        let healthy = match msg {
             WorkerMsg::Batch(prec, batch) => {
                 let n = batch.len();
-                let res = run_batch(&mut exec, prec, batch, &metrics);
-                // decrement even on error so a dying worker does not leak
-                // capacity for the batches it already consumed
+                let ok = run_batch(&mut exec, prec, batch, &metrics, &cfg.faults);
+                // decrement even on failure so a dying worker does not
+                // leak capacity for the batches it already consumed
                 in_flight.fetch_sub(n, Ordering::Relaxed);
-                res?;
+                ok
             }
             WorkerMsg::Stream(req) => {
-                let res = run_stream(
+                let ok = run_stream(
                     &mut exec,
                     &mut sessions,
                     cfg.stream_policy,
                     worker_index,
                     req,
                     &metrics,
+                    &cfg.faults,
                 );
                 in_flight.fetch_sub(1, Ordering::Relaxed);
-                res?;
+                ok
             }
             WorkerMsg::Close(id) => {
                 sessions.close(id);
+                true
+            }
+        };
+        if healthy {
+            continue;
+        }
+        // ---- supervision: the engine panicked (or failed) mid-request.
+        // Its state is no longer trusted; the request itself was already
+        // answered with the typed restart fault.
+        lock(&metrics).panics += 1;
+        let lost_sessions = sessions.len() as u64;
+        sessions = SessionTable::new(session_cap);
+        if draining.load(Ordering::SeqCst) {
+            // drain-vs-restart: dying during a graceful drain never
+            // respawns an engine nobody will use — answer everything
+            // still queued (blocking until the dispatcher closes the
+            // channel) so the drain owes no reply, then exit cleanly
+            lock(&metrics).rehomed += lost_sessions;
+            while let Ok(queued) = rx.recv() {
+                answer_restarted(queued, &in_flight);
+            }
+            return Ok(());
+        }
+        match build_exec(&cfg) {
+            Ok(fresh) => {
+                exec = fresh;
+                let mut m = lock(&metrics);
+                m.restarts += 1;
+                m.rehomed += lost_sessions;
+            }
+            Err(e) => {
+                // respawn failed: answer what is already buffered, then
+                // die — the closed channel tells the dispatcher to mark
+                // this worker dead and rehome its sessions elsewhere
+                lock(&metrics).rehomed += lost_sessions;
+                while let Ok(queued) = rx.try_recv() {
+                    answer_restarted(queued, &in_flight);
+                }
+                return Err(e);
             }
         }
     }
@@ -655,6 +875,11 @@ fn exec_worker_loop(
 /// only between windows of a live session (never to a fresh one), so
 /// `Hold` keeps the served stream bit-identical to the same windows run
 /// back-to-back on one persistent engine.
+///
+/// Returns `false` when the execute path panicked (or the engine
+/// failed): the window was answered [`ServeFault::WorkerRestarted`] and
+/// the caller must run supervision. Expired deadlines shed *before*
+/// execution, so session state never advances on shed windows.
 fn run_stream(
     exec: &mut Exec,
     sessions: &mut SessionTable,
@@ -662,57 +887,87 @@ fn run_stream(
     worker_index: usize,
     req: StreamRequest,
     metrics: &Arc<Mutex<Metrics>>,
-) -> Result<()> {
-    let Exec::Native(engines) = exec else {
-        // submit() refuses streams on PJRT; a raced message just drops
-        // (the closed reply channel tells the caller)
-        return Ok(());
-    };
-    let bits = req.precision.bits();
-    let (_, engine) = engines
-        .iter_mut()
-        .find(|(b, _)| *b == bits)
-        .ok_or_else(|| anyhow::anyhow!("no native engine for {:?}", req.precision))?;
-    let (sess, mut fresh) = sessions.lookup(req.session, || {
-        StreamSession::new(bits, engine.fresh_state(), req.encoder.build())
-    });
-    if sess.bits != bits {
-        // precision switched mid-stream: integer dynamics are not
-        // comparable across widths, so the state epoch restarts
-        *sess = StreamSession::new(bits, engine.fresh_state(), req.encoder.build());
-        fresh = true;
+    faults: &FaultPlan,
+) -> bool {
+    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+        lock(metrics).deadline_exceeded += 1;
+        fault_stream(req, ServeFault::DeadlineExceeded);
+        return true;
     }
-    engine.swap_state(&mut sess.state);
-    if !fresh {
-        engine.apply_boundary(policy);
+    let base = faults.claim_exec(1);
+    if let Some(stall) = faults.stall_in(base, 1) {
+        std::thread::sleep(stall);
     }
-    let counts: Vec<i32> = engine
-        .infer_window_with_encoder(&req.pixels, req.steps, &mut *sess.encoder)
-        .iter()
-        .map(|&c| c as i32)
-        .collect();
-    engine.swap_state(&mut sess.state);
-    let window = sess.windows;
-    sess.windows += 1;
-
-    let now = Instant::now();
-    {
-        let mut m = metrics.lock().unwrap();
-        m.requests += 1;
-        m.stream_windows += 1;
-        m.latency.record(now.duration_since(req.enqueued));
+    let computed = catch_unwind(AssertUnwindSafe(
+        || -> Result<Option<(Vec<i32>, u64, bool)>> {
+            if faults.panic_in(base, 1) {
+                panic!("injected fault: worker panic (stream)");
+            }
+            let Exec::Native(engines) = exec else {
+                // submit() refuses streams on PJRT; a raced message just
+                // drops (the closed reply channel tells the caller)
+                return Ok(None);
+            };
+            let bits = req.precision.bits();
+            let (_, engine) = engines
+                .iter_mut()
+                .find(|(b, _)| *b == bits)
+                .ok_or_else(|| anyhow::anyhow!("no native engine for {:?}", req.precision))?;
+            let (sess, mut fresh) = sessions.lookup(req.session, || {
+                StreamSession::new(bits, engine.fresh_state(), req.encoder.build())
+            });
+            if sess.bits != bits {
+                // precision switched mid-stream: integer dynamics are not
+                // comparable across widths, so the state epoch restarts
+                *sess = StreamSession::new(bits, engine.fresh_state(), req.encoder.build());
+                fresh = true;
+            }
+            engine.swap_state(&mut sess.state);
+            if !fresh {
+                engine.apply_boundary(policy);
+            }
+            let counts: Vec<i32> = engine
+                .infer_window_with_encoder(&req.pixels, req.steps, &mut *sess.encoder)
+                .iter()
+                .map(|&c| c as i32)
+                .collect();
+            engine.swap_state(&mut sess.state);
+            let window = sess.windows;
+            sess.windows += 1;
+            Ok(Some((counts, window, fresh)))
+        },
+    ));
+    match computed {
+        Ok(Ok(Some((counts, window, fresh)))) => {
+            let now = Instant::now();
+            {
+                let mut m = lock(metrics);
+                m.requests += 1;
+                m.stream_windows += 1;
+                m.latency.record(now.duration_since(req.enqueued));
+            }
+            if !faults.drop_reply_at(base) {
+                let _ = req.reply.send(StreamResponse {
+                    session: req.session,
+                    window,
+                    prediction: argmax_i32(&counts),
+                    counts,
+                    fresh,
+                    worker: worker_index,
+                    latency_us: now.duration_since(req.enqueued).as_micros() as u64,
+                    rejected: false,
+                    fault: None,
+                });
+            }
+            true
+        }
+        Ok(Ok(None)) => true,
+        Ok(Err(_)) | Err(_) => {
+            // engine failure or panic: typed reply, then supervision
+            fault_stream(req, ServeFault::WorkerRestarted);
+            false
+        }
     }
-    let _ = req.reply.send(StreamResponse {
-        session: req.session,
-        window,
-        prediction: argmax_i32(&counts),
-        counts,
-        fresh,
-        worker: worker_index,
-        latency_us: now.duration_since(req.enqueued).as_micros() as u64,
-        rejected: false,
-    });
-    Ok(())
 }
 
 /// Execution backends materialized inside each worker thread.
@@ -721,14 +976,16 @@ enum Exec {
     Native(Vec<(u32, SnnEngine)>),
 }
 
-fn run_batch(
+/// Execute a batch's inferences (the panic-prone compute core of
+/// [`run_batch`], kept free of reply senders so unwinding can never
+/// strand one).
+fn compute_batch(
     exec: &mut Exec,
     precision: Precision,
-    batch: Vec<InferRequest>,
-    metrics: &Arc<Mutex<Metrics>>,
-) -> Result<()> {
+    batch: &[InferRequest],
+) -> Result<Vec<(usize, Vec<i32>)>> {
     let n = batch.len();
-    let results: Vec<(usize, Vec<i32>)> = match exec {
+    Ok(match exec {
         Exec::Pjrt(pool) => {
             let b = pool.best_batch(precision.bits(), n)?;
             let mut out = Vec::with_capacity(n);
@@ -758,29 +1015,86 @@ fn run_batch(
                 })
                 .collect()
         }
-    };
+    })
+}
 
+/// Run one dealt batch: shed expired deadlines, execute the survivors
+/// under `catch_unwind`, reply. Returns `false` when the execute path
+/// panicked or errored — every request of the batch was still answered
+/// (with [`ServeFault::WorkerRestarted`]) and the caller must run
+/// supervision.
+fn run_batch(
+    exec: &mut Exec,
+    precision: Precision,
+    batch: Vec<InferRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+    faults: &FaultPlan,
+) -> bool {
+    // deadline shedding at dequeue time: expired work is answered with
+    // the typed fault and never executed (nor does it claim fault indices)
     let now = Instant::now();
-    {
-        let mut m = metrics.lock().unwrap();
-        m.batches += 1;
-        m.batched_total += n as u64;
-        m.requests += n as u64;
-        for req in &batch {
-            m.latency.record(now.duration_since(req.enqueued));
+    let (live, expired): (Vec<_>, Vec<_>) =
+        batch.into_iter().partition(|r| r.deadline.map_or(true, |d| now < d));
+    if !expired.is_empty() {
+        lock(metrics).deadline_exceeded += expired.len() as u64;
+        for req in expired {
+            fault_infer(req, ServeFault::DeadlineExceeded);
         }
     }
-    for (req, (pred, counts)) in batch.into_iter().zip(results) {
-        let latency_us = now.duration_since(req.enqueued).as_micros() as u64;
-        let _ = req.reply.send(InferResponse {
-            id: req.id,
-            prediction: pred,
-            counts,
-            latency_us,
-            batch_size: n,
-            rejected: false,
-        });
+    if live.is_empty() {
+        return true;
     }
-    Ok(())
+    let n = live.len();
+    let base = faults.claim_exec(n as u64);
+    if let Some(stall) = faults.stall_in(base, n as u64) {
+        std::thread::sleep(stall);
+    }
+    let computed = catch_unwind(AssertUnwindSafe(|| {
+        if faults.panic_in(base, n as u64) {
+            panic!("injected fault: worker panic (batch)");
+        }
+        compute_batch(exec, precision, &live)
+    }));
+    match computed {
+        Ok(Ok(results)) => {
+            let now = Instant::now();
+            {
+                let mut m = lock(metrics);
+                m.batches += 1;
+                m.batched_total += n as u64;
+                m.requests += n as u64;
+                for req in &live {
+                    m.latency.record(now.duration_since(req.enqueued));
+                }
+            }
+            for (i, (req, (pred, counts))) in live.into_iter().zip(results).enumerate() {
+                // wrapping: the empty-plan sentinel base (u64::MAX) never
+                // matches a planned index, whatever it wraps to
+                if faults.drop_reply_at(base.wrapping_add(i as u64)) {
+                    // injected reply loss: dropping the sender is the
+                    // fault — the front end answers with a typed Internal
+                    continue;
+                }
+                let latency_us = now.duration_since(req.enqueued).as_micros() as u64;
+                let _ = req.reply.send(InferResponse {
+                    id: req.id,
+                    prediction: pred,
+                    counts,
+                    latency_us,
+                    batch_size: n,
+                    rejected: false,
+                    fault: None,
+                });
+            }
+            true
+        }
+        Ok(Err(_)) | Err(_) => {
+            // engine failure or panic: typed replies, then supervision
+            for req in live {
+                fault_infer(req, ServeFault::WorkerRestarted);
+            }
+            false
+        }
+    }
 }
 

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
-use super::request::Precision;
+use super::request::{Precision, ServeFault};
 use crate::encode::{DeltaEncoder, RateEncoder, SlidingWindowEncoder, SpikeEncoder};
 use crate::model::MembraneState;
 
@@ -98,6 +98,10 @@ pub struct StreamRequest {
     pub encoder: EncoderKind,
     /// Ingest timestamp (latency accounting).
     pub enqueued: Instant,
+    /// Absolute shed point (see [`super::InferRequest::deadline`]): an
+    /// expired window is answered [`ServeFault::DeadlineExceeded`]
+    /// without executing and session state does not advance.
+    pub deadline: Option<Instant>,
     /// Completion channel (one response per window).
     pub reply: mpsc::Sender<StreamResponse>,
 }
@@ -126,6 +130,10 @@ pub struct StreamResponse {
     /// and `prediction`/`counts` carry no information. Typed
     /// backpressure — see [`super::InferResponse::rejected`].
     pub rejected: bool,
+    /// Typed serving fault (`None` on success and plain rejection): the
+    /// window was shed past its deadline or lost its worker mid-flight.
+    /// Session state did not advance. See [`super::ServeFault`].
+    pub fault: Option<ServeFault>,
 }
 
 /// Per-session state a worker keeps alive between windows: the membrane

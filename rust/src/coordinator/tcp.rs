@@ -10,9 +10,14 @@
 //! Error handling is the point: every malformed input becomes a typed
 //! `Error` frame ([`super::wire::ErrorCode`]), never a panic and never a
 //! silent disconnect. Admission-control rejections surface as
-//! `ERR_REJECTED` frames (the engine's typed `rejected` replies), and a
+//! `ERR_REJECTED` frames (the engine's typed `rejected` replies), a
 //! stream window that executed on LRU-evicted state surfaces as
-//! `ERR_EVICTED` so the client knows temporal context was lost.
+//! `ERR_EVICTED` so the client knows temporal context was lost, and the
+//! typed serving faults map to their wire twins: a shed request becomes
+//! `ERR_DEADLINE_EXCEEDED`, a request lost to a supervised worker panic
+//! becomes `ERR_WORKER_RESTARTED` (both safe to retry). Version-2
+//! frames carry the optional deadline budget; version-1 clients keep
+//! working unchanged.
 //!
 //! **Graceful drain** (`Drain` frame, [`TcpFrontend::drain`], or a
 //! SIGTERM via [`install_term_handler`]): the listener stops accepting,
@@ -28,7 +33,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::request::InferResponse;
+use super::request::{InferResponse, ServeFault};
 use super::server::ServingEngine;
 use super::session::StreamResponse;
 use super::wire::{
@@ -113,7 +118,7 @@ impl TcpFrontend {
         if let Some(l) = self.listener {
             l.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
         }
-        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        let handles = std::mem::take(&mut *super::lock(&self.conns));
         for h in handles {
             h.join().map_err(|_| anyhow::anyhow!("connection thread panicked"))?;
         }
@@ -138,6 +143,13 @@ fn accept_loop(
         }
         match listener.accept() {
             Ok((stream, _)) => {
+                // injected connection reset (fault plan `reset@N`): the
+                // accepted socket closes before a single frame is read —
+                // the client sees EOF, the server stays healthy
+                if engine.faults().reset_accept() {
+                    drop(stream);
+                    continue;
+                }
                 let eng = Arc::clone(&engine);
                 let drain = Arc::clone(&draining);
                 let spawned = std::thread::Builder::new()
@@ -145,7 +157,7 @@ fn accept_loop(
                     .spawn(move || serve_conn(stream, eng, drain));
                 // a spawn failure (out of threads) just drops the socket
                 if let Ok(h) = spawned {
-                    conns.lock().unwrap().push(h);
+                    super::lock(&conns).push(h);
                 }
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -190,9 +202,10 @@ fn serve_conn(stream: TcpStream, engine: Arc<ServingEngine>, draining: Arc<Atomi
 
 /// Flush responses in request order. Blocking on each engine channel in
 /// turn preserves FIFO per connection; rejected replies become
-/// `ERR_REJECTED`, closed channels become `ERR_INTERNAL`, and a window
-/// that ran on recreated state (LRU eviction or a precision restart)
-/// becomes `ERR_EVICTED`.
+/// `ERR_REJECTED`, typed serving faults become their `ErrorCode` twins
+/// (`ERR_DEADLINE_EXCEEDED` / `ERR_WORKER_RESTARTED`), closed channels
+/// become `ERR_INTERNAL`, and a window that ran on recreated state (LRU
+/// eviction or a precision restart) becomes `ERR_EVICTED`.
 fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
     // windows answered per session on this connection: a `fresh` reply
     // after the first window means resident state was lost mid-stream
@@ -202,6 +215,7 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
         let frame = match out {
             Out::Frame(f) => f,
             Out::Infer(tag, ch) => match ch.recv() {
+                Ok(resp) if resp.fault.is_some() => fault_frame(tag, resp.fault, false),
                 Ok(resp) if resp.rejected => err_frame(
                     tag,
                     ErrorCode::Rejected,
@@ -218,6 +232,9 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
                 Err(_) => err_frame(tag, ErrorCode::Internal, "engine reply lost"),
             },
             Out::Stream(tag, session, ch) => match ch.recv() {
+                // a faulted window never executed and never advanced
+                // session state, so it must not touch `windows_sent`
+                Ok(resp) if resp.fault.is_some() => fault_frame(tag, resp.fault, true),
                 Ok(resp) if resp.rejected => err_frame(
                     tag,
                     ErrorCode::Rejected,
@@ -268,6 +285,35 @@ fn err_frame(tag: u64, code: ErrorCode, message: impl Into<String>) -> Vec<u8> {
     wire::encode_response(tag, &Response::Error { code, message: message.into() })
 }
 
+/// Map a typed [`ServeFault`] reply to its error frame. `stream` only
+/// changes the wording (whether session state is mentioned).
+fn fault_frame(tag: u64, fault: Option<ServeFault>, stream: bool) -> Vec<u8> {
+    match fault {
+        Some(ServeFault::DeadlineExceeded) => err_frame(
+            tag,
+            ErrorCode::DeadlineExceeded,
+            if stream {
+                "deadline expired before execution; session state did not advance"
+            } else {
+                "deadline expired before execution; request was shed"
+            },
+        ),
+        Some(ServeFault::WorkerRestarted) => err_frame(
+            tag,
+            ErrorCode::WorkerRestarted,
+            if stream {
+                "worker restarted; session state was lost — safe to retry \
+                 (next window reports fresh)"
+            } else {
+                "worker restarted before this request completed; safe to retry"
+            },
+        ),
+        // unreachable by construction (callers check `fault.is_some()`),
+        // but a wrong frame beats a panic in the flush loop
+        None => err_frame(tag, ErrorCode::Internal, "faultless reply in fault path"),
+    }
+}
+
 /// Outcome of one bounds-checked frame read.
 enum Frame {
     /// A complete frame arrived.
@@ -301,20 +347,23 @@ fn reader_loop(
             }
         };
         let tag = header.tag;
-        let req = match wire::decode_request(header.kind, &body) {
-            Ok(r) => r,
-            Err(e) => {
-                let recoverable = e.code.recoverable();
-                let _ = tx.send(Out::Frame(err_frame(tag, e.code, e.message)));
-                if recoverable {
-                    continue;
+        let (req, deadline_ms) =
+            match wire::decode_request_versioned(header.version, header.kind, &body) {
+                Ok(r) => r,
+                Err(e) => {
+                    let recoverable = e.code.recoverable();
+                    let _ = tx.send(Out::Frame(err_frame(tag, e.code, e.message)));
+                    if recoverable {
+                        continue;
+                    }
+                    break;
                 }
-                break;
-            }
-        };
+            };
+        // the wire budget is relative to receipt; 0 means no deadline
+        let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
         let out = match req {
             Request::OneShot { precision, pixels } => {
-                match engine.submit(&pixels, precision) {
+                match engine.submit_with_deadline(&pixels, precision, deadline) {
                     Ok(ch) => Out::Infer(tag, ch),
                     Err(e) => Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string())),
                 }
@@ -332,8 +381,9 @@ fn reader_loop(
                         format!("session {session} was not opened on this connection"),
                     ))
                 } else {
-                    match engine.stream_window_with(session, &pixels, steps, precision, encoder)
-                    {
+                    match engine.stream_window_with_deadline(
+                        session, &pixels, steps, precision, encoder, deadline,
+                    ) {
                         Ok(ch) => Out::Stream(tag, session, ch),
                         Err(e) => {
                             Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
@@ -365,6 +415,10 @@ fn reader_loop(
                         p99_us: m.latency.quantile_us(0.99),
                         p999_us: m.latency.quantile_us(0.999),
                         max_us: m.latency.max_us(),
+                        panics: m.panics,
+                        restarts: m.restarts,
+                        rehomed: m.rehomed,
+                        deadline_exceeded: m.deadline_exceeded,
                     }),
                 ))
             }

@@ -31,8 +31,13 @@ use super::session::EncoderKind;
 
 /// Frame magic: the first four bytes of every L-SPINE frame.
 pub const MAGIC: [u8; 4] = *b"LSPN";
-/// Protocol version this build speaks (a mismatch is a typed error).
+/// Baseline protocol version (a mismatch is a typed error).
 pub const VERSION: u8 = 1;
+/// Deadline-aware protocol version: identical to [`VERSION`] except that
+/// `OneShot` and `StreamWindow` request bodies carry a leading `u32`
+/// `deadline_ms` field (0 = no deadline). Version-1 frames parse
+/// byte-identically — old clients never see the field.
+pub const VERSION_DEADLINE: u8 = 2;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Hard cap on a declared body length; larger declarations are rejected
@@ -115,6 +120,14 @@ pub enum ErrorCode {
     Internal = 12,
     /// Server is draining and no longer accepts new work.
     Draining = 13,
+    /// The worker executing this request panicked and was restarted (or
+    /// the pool had no live worker to run it); any session state the
+    /// worker held restarted fresh. Safe to retry.
+    WorkerRestarted = 14,
+    /// The request's deadline expired before a worker dequeued it; the
+    /// work was shed without executing. Retry with backoff or a larger
+    /// deadline.
+    DeadlineExceeded = 15,
 }
 
 impl ErrorCode {
@@ -134,6 +147,8 @@ impl ErrorCode {
             11 => ErrorCode::Evicted,
             12 => ErrorCode::Internal,
             13 => ErrorCode::Draining,
+            14 => ErrorCode::WorkerRestarted,
+            15 => ErrorCode::DeadlineExceeded,
             _ => return None,
         })
     }
@@ -177,6 +192,9 @@ impl std::error::Error for WireError {}
 /// A decoded frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    /// Negotiated protocol version ([`VERSION`] or [`VERSION_DEADLINE`]);
+    /// selects the body grammar in [`decode_request_versioned`].
+    pub version: u8,
     /// Raw frame-type byte (validated during body decode).
     pub kind: u8,
     /// Caller correlation id (echoed in the response header).
@@ -240,6 +258,14 @@ pub struct WireMetrics {
     pub p999_us: u64,
     /// Maximum observed end-to-end latency (µs).
     pub max_us: u64,
+    /// Worker panics caught by supervision.
+    pub panics: u64,
+    /// Workers respawned with a fresh engine after a panic.
+    pub restarts: u64,
+    /// Stream sessions whose resident state was lost to a restart.
+    pub rehomed: u64,
+    /// Requests shed at dequeue because their deadline had expired.
+    pub deadline_exceeded: u64,
 }
 
 /// Server/model info as carried on the wire.
@@ -309,9 +335,9 @@ pub enum Response {
 
 // ---------------------------------------------------------------- encode
 
-fn put_header(out: &mut Vec<u8>, kind: u8, tag: u64, body_len: usize) {
+fn put_header(out: &mut Vec<u8>, version: u8, kind: u8, tag: u64, body_len: usize) {
     out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
+    out.push(version);
     out.push(kind);
     out.extend_from_slice(&0u16.to_le_bytes());
     out.extend_from_slice(&tag.to_le_bytes());
@@ -359,8 +385,7 @@ fn encoder_from_bytes(kind: u8, param: u32) -> Result<EncoderKind, WireError> {
     }
 }
 
-/// Encode one request frame (header + body) ready to write.
-pub fn encode_request(tag: u64, req: &Request) -> Vec<u8> {
+fn request_body(req: &Request) -> (FrameType, Vec<u8>) {
     let mut body = Vec::new();
     let kind = match req {
         Request::OneShot { precision, pixels } => {
@@ -387,8 +412,35 @@ pub fn encode_request(tag: u64, req: &Request) -> Vec<u8> {
         Request::Info => FrameType::Info,
         Request::Drain => FrameType::Drain,
     };
+    (kind, body)
+}
+
+/// Encode one version-1 request frame (header + body) ready to write.
+/// The byte layout of version-1 frames is frozen — see the
+/// `v1_request_encoding_is_pinned` test.
+pub fn encode_request(tag: u64, req: &Request) -> Vec<u8> {
+    let (kind, body) = request_body(req);
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
-    put_header(&mut out, kind as u8, tag, body.len());
+    put_header(&mut out, VERSION, kind as u8, tag, body.len());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode one version-2 request frame carrying a deadline.
+///
+/// `deadline_ms` is a request budget relative to receipt (0 = no
+/// deadline); it rides as a `u32` prefix on `OneShot` / `StreamWindow`
+/// bodies only — every other frame type has no use for a deadline and
+/// keeps its version-1 body layout.
+pub fn encode_request_deadline(tag: u64, req: &Request, deadline_ms: u32) -> Vec<u8> {
+    let (kind, body) = request_body(req);
+    let prefixed = matches!(kind, FrameType::OneShot | FrameType::StreamWindow);
+    let extra = if prefixed { 4 } else { 0 };
+    let mut out = Vec::with_capacity(HEADER_LEN + extra + body.len());
+    put_header(&mut out, VERSION_DEADLINE, kind as u8, tag, extra + body.len());
+    if prefixed {
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+    }
     out.extend_from_slice(&body);
     out
 }
@@ -435,6 +487,10 @@ pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
                 m.p99_us,
                 m.p999_us,
                 m.max_us,
+                m.panics,
+                m.restarts,
+                m.rehomed,
+                m.deadline_exceeded,
             ] {
                 body.extend_from_slice(&v.to_le_bytes());
             }
@@ -454,7 +510,7 @@ pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
         }
     };
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
-    put_header(&mut out, kind as u8, tag, body.len());
+    put_header(&mut out, VERSION, kind as u8, tag, body.len());
     out.extend_from_slice(&body);
     out
 }
@@ -469,10 +525,13 @@ pub fn decode_header(raw: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
             format!("bad magic {:02x?} (want {:02x?} = \"LSPN\")", &raw[0..4], MAGIC),
         ));
     }
-    if raw[4] != VERSION {
+    let version = raw[4];
+    if version != VERSION && version != VERSION_DEADLINE {
         return Err(WireError::new(
             ErrorCode::BadVersion,
-            format!("protocol version {} (this build speaks {VERSION})", raw[4]),
+            format!(
+                "protocol version {version} (this build speaks {VERSION} and {VERSION_DEADLINE})"
+            ),
         ));
     }
     let kind = raw[5];
@@ -484,7 +543,7 @@ pub fn decode_header(raw: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
             format!("declared body length {body_len} exceeds MAX_BODY={MAX_BODY}"),
         ));
     }
-    Ok(Header { kind, tag, body_len })
+    Ok(Header { version, kind, tag, body_len })
 }
 
 /// Little-endian cursor over a frame body; every read is bounds-checked
@@ -544,7 +603,34 @@ impl<'a> Rd<'a> {
     }
 }
 
-/// Decode a request body for header type `kind`.
+/// Decode a request body under the header's negotiated `version`.
+///
+/// Returns the request plus its `deadline_ms` budget (0 = none).
+/// Version-1 bodies parse exactly as [`decode_request`] — old clients
+/// never carry the field — while [`VERSION_DEADLINE`] `OneShot` /
+/// `StreamWindow` bodies start with the `u32` deadline prefix.
+pub fn decode_request_versioned(
+    version: u8,
+    kind: u8,
+    body: &[u8],
+) -> Result<(Request, u32), WireError> {
+    let prefixed = version == VERSION_DEADLINE
+        && (kind == FrameType::OneShot as u8 || kind == FrameType::StreamWindow as u8);
+    if prefixed {
+        if body.len() < 4 {
+            return Err(WireError::new(
+                ErrorCode::Malformed,
+                "v2 body truncated before the deadline field",
+            ));
+        }
+        let deadline_ms = u32::from_le_bytes(body[..4].try_into().unwrap());
+        Ok((decode_request(kind, &body[4..])?, deadline_ms))
+    } else {
+        Ok((decode_request(kind, body)?, 0))
+    }
+}
+
+/// Decode a version-1 request body for header type `kind`.
 pub fn decode_request(kind: u8, body: &[u8]) -> Result<Request, WireError> {
     let mut r = Rd::new(body);
     let req = match kind {
@@ -620,6 +706,10 @@ pub fn decode_response(kind: u8, body: &[u8]) -> Result<Response, WireError> {
             p99_us: r.u64()?,
             p999_us: r.u64()?,
             max_us: r.u64()?,
+            panics: r.u64()?,
+            restarts: r.u64()?,
+            rehomed: r.u64()?,
+            deadline_exceeded: r.u64()?,
         }),
         k if k == FrameType::RespInfo as u8 => Response::Info(WireInfo {
             input_dim: r.u32()?,
@@ -723,6 +813,10 @@ mod tests {
             p99_us: 900,
             p999_us: 1200,
             max_us: 1500,
+            panics: 2,
+            restarts: 1,
+            rehomed: 3,
+            deadline_exceeded: 4,
         }));
         roundtrip_response(Response::Info(WireInfo {
             input_dim: 256,
@@ -831,12 +925,14 @@ mod tests {
             (ErrorCode::Evicted, 11),
             (ErrorCode::Internal, 12),
             (ErrorCode::Draining, 13),
+            (ErrorCode::WorkerRestarted, 14),
+            (ErrorCode::DeadlineExceeded, 15),
         ] {
             assert_eq!(code as u8, byte);
             assert_eq!(ErrorCode::from_u8(byte), Some(code));
         }
         assert_eq!(ErrorCode::from_u8(0), None);
-        assert_eq!(ErrorCode::from_u8(14), None);
+        assert_eq!(ErrorCode::from_u8(16), None);
         // connection-fatal vs recoverable partition
         assert!(!ErrorCode::BadMagic.recoverable());
         assert!(!ErrorCode::BadVersion.recoverable());
@@ -844,5 +940,84 @@ mod tests {
         assert!(ErrorCode::BadType.recoverable());
         assert!(ErrorCode::Rejected.recoverable());
         assert!(ErrorCode::UnknownSession.recoverable());
+        // the fault-layer codes are retryable, so the connection survives
+        assert!(ErrorCode::WorkerRestarted.recoverable());
+        assert!(ErrorCode::DeadlineExceeded.recoverable());
+    }
+
+    #[test]
+    fn v1_request_encoding_is_pinned() {
+        // frozen bytes: version-1 frames are wire ABI and must never
+        // change shape, deadline support or not (old-client compat)
+        let raw = encode_request(
+            0x1122_3344_5566_7788,
+            &Request::OneShot { precision: Precision::Int4, pixels: vec![9, 8, 7] },
+        );
+        #[rustfmt::skip]
+        let expect: Vec<u8> = vec![
+            b'L', b'S', b'P', b'N',               // magic
+            1,                                    // version
+            0x01,                                 // type: OneShot
+            0, 0,                                 // reserved
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // tag LE
+            4, 0, 0, 0,                           // body_len
+            4,                                    // precision byte (int4)
+            9, 8, 7,                              // pixels
+        ];
+        assert_eq!(raw, expect);
+        // and the versioned decoder treats it exactly like decode_request
+        let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(hdr.version, VERSION);
+        let (req, deadline_ms) =
+            decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
+        assert_eq!(req, decode_request(hdr.kind, &raw[HEADER_LEN..]).unwrap());
+        assert_eq!(deadline_ms, 0);
+    }
+
+    #[test]
+    fn deadline_encoding_roundtrips() {
+        let one = Request::OneShot { precision: Precision::Int8, pixels: vec![1, 2, 3, 4] };
+        let win = Request::StreamWindow {
+            session: 5,
+            steps: 4,
+            precision: Precision::Int2,
+            encoder: EncoderKind::Rate,
+            pixels: vec![0; 16],
+        };
+        for (req, ms) in [(&one, 250u32), (&win, 1000), (&one, 0)] {
+            let raw = encode_request_deadline(33, req, ms);
+            let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+            assert_eq!(hdr.version, VERSION_DEADLINE);
+            let (back, deadline_ms) =
+                decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
+            assert_eq!(&back, req);
+            assert_eq!(deadline_ms, ms);
+            // the v2 body is exactly the v1 body behind a 4-byte prefix
+            let v1 = encode_request(33, req);
+            assert_eq!(&raw[HEADER_LEN + 4..], &v1[HEADER_LEN..]);
+        }
+        // non-deadline kinds keep their v1 body layout under version 2
+        for req in [Request::StreamOpen, Request::Metrics, Request::Drain] {
+            let raw = encode_request_deadline(1, &req, 777);
+            let v1 = encode_request(1, &req);
+            assert_eq!(&raw[HEADER_LEN..], &v1[HEADER_LEN..]);
+            let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+            let (back, deadline_ms) =
+                decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(deadline_ms, 0, "no deadline prefix on {req:?}");
+        }
+        // a v2 body cut before the prefix is a typed Malformed, not a panic
+        assert_eq!(
+            decode_request_versioned(VERSION_DEADLINE, FrameType::OneShot as u8, &[1, 2])
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // unknown versions are rejected at the header
+        let mut h: [u8; HEADER_LEN] =
+            encode_request(0, &Request::Metrics)[..HEADER_LEN].try_into().unwrap();
+        h[4] = 3;
+        assert_eq!(decode_header(&h).unwrap_err().code, ErrorCode::BadVersion);
     }
 }

@@ -26,8 +26,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lspine::coordinator::{
-    loadgen, tcp, Backend, EncoderKind, LatencyHistogram, ReqPrecision, ServerConfig,
-    ServingEngine, TcpFrontend,
+    loadgen, tcp, Backend, EncoderKind, FaultPlan, LatencyHistogram, ReqPrecision,
+    ServerConfig, ServingEngine, TcpFrontend,
 };
 use lspine::model::{ResetPolicy, SnnEngine};
 use lspine::nce::{KernelKind, Kernels};
@@ -52,6 +52,8 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
              --listen HOST:PORT (serve the TCP wire protocol instead of
              synthetic traffic; --queue N --max-sessions N size admission
              control; SIGTERM or a client Drain frame stops gracefully)
+             --faults SPEC (seeded fault injection, e.g.
+             \"panic@6,stall@12:100ms,drop@18,reset@2\"; env LSPINE_FAULTS)
   loadgen:   --connect HOST:PORT (default 127.0.0.1:7317)
              --sessions N (default 16)  --windows N/session (default 8)
              --steps N  --bits 2|4|8  --encoder rate|delta[:G]|window:W
@@ -59,6 +61,9 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
              --arrival constant|burst|heavy-tail  --conns N (default auto)
              --seed N  --drain (stop the server afterwards)
              --retry-secs S (connect patience)  --timeout-secs S
+             --deadline-ms MS (per-window budget; 0 = none)
+             --retries N (resends on typed retriable errors, default 0)
+             --backoff-ms MS (base retry backoff, default 50)
   stream:    --bits 2|4|8  --steps N (timesteps/frame, default 4)
              --sessions N (concurrent streams, default 1)  --workers N
              --policy hold|reset|decay:K (window boundary, default hold)
@@ -86,6 +91,7 @@ fn run() -> lspine::Result<()> {
             "steps=", "sessions=", "policy=", "encoder=", "input=", "listen=",
             "queue=", "max-sessions=", "connect=", "windows=", "rate=",
             "arrival=", "conns=", "retry-secs=", "timeout-secs=", "drain",
+            "faults=", "retries=", "backoff-ms=", "deadline-ms=",
             "all", "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
@@ -337,6 +343,12 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
     let kernel_kind = parse_kernel_kind(args)?;
     let queue_capacity = args.get_usize("queue", 1024)?.max(1);
     let max_sessions = args.get_usize("max-sessions", 1024)?.max(1);
+    // --faults wins over the LSPINE_FAULTS env var; both default empty
+    // (and an empty plan costs nothing on the serving path)
+    let faults = Arc::new(match args.get("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::from_env()?,
+    });
 
     let engine = Arc::new(ServingEngine::start(ServerConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
@@ -346,6 +358,7 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
         kernels: kernel_kind,
         queue_capacity,
         max_sessions,
+        faults: Arc::clone(&faults),
         ..Default::default()
     })?);
     let frontend = TcpFrontend::bind(Arc::clone(&engine), listen)?;
@@ -355,6 +368,9 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
          max_sessions={max_sessions} listening on {}",
         frontend.local_addr()
     );
+    if !faults.is_empty() {
+        println!("  {}", faults.summary());
+    }
     while !tcp::term_requested() && !frontend.draining() {
         std::thread::sleep(Duration::from_millis(50));
     }
@@ -386,6 +402,9 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
         drain: args.has("drain"),
         connect_retry: Duration::from_secs(args.get_usize("retry-secs", 5)? as u64),
         timeout: Duration::from_secs(args.get_usize("timeout-secs", 10)? as u64),
+        retries: args.get_usize("retries", 0)? as u32,
+        backoff: Duration::from_millis(args.get_usize("backoff-ms", 50)?.max(1) as u64),
+        deadline_ms: args.get_usize("deadline-ms", 0)? as u32,
     };
     println!(
         "loadgen: connect={} sessions={} windows={} steps={} {} rate={}/s \
@@ -403,10 +422,11 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
     println!("  {}", report.summary());
     if let Some(m) = &report.server {
         println!(
-            "  server: requests={} stream_windows={} rejected={} p50_us={} \
+            "  server: requests={} stream_windows={} rejected={} panics={} \
+             restarts={} rehomed={} deadline_exceeded={} p50_us={} \
              p99_us={} p999_us={} max_us={}",
-            m.requests, m.stream_windows, m.rejected, m.p50_us, m.p99_us, m.p999_us,
-            m.max_us
+            m.requests, m.stream_windows, m.rejected, m.panics, m.restarts,
+            m.rehomed, m.deadline_exceeded, m.p50_us, m.p99_us, m.p999_us, m.max_us
         );
     }
     lspine::util::bench::emit_json_scalar(

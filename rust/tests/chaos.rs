@@ -1,0 +1,460 @@
+//! Chaos battery: seeded fault injection against the real serving stack.
+//!
+//! Every test drives deterministic faults ([`FaultPlan`]) through either
+//! the in-process engine or a genuine TCP front end and asserts the
+//! fault-tolerance contract (DESIGN.md §Fault tolerance):
+//!
+//! 1. **Exactly one answer** — every admitted request gets one reply or
+//!    one typed error; nothing is silently lost, nothing doubles.
+//! 2. **The server outlives its faults** — panics are supervised, the
+//!    worker respawns, and later requests succeed.
+//! 3. **Surviving results are bit-identical** — a request that succeeds
+//!    under chaos produces exactly the counts of a fault-free run.
+//! 4. **Drain beats restart** — a worker dying during a graceful drain
+//!    answers what it owes and exits instead of respawning.
+//!
+//! Injected worker panics print the default panic hook's backtrace to
+//! stderr ("injected fault: ..."); that noise is expected test output.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lspine::coordinator::wire::{self, ErrorCode, Request, Response, HEADER_LEN};
+use lspine::coordinator::{
+    Backend, EncoderKind, FaultPlan, ReqPrecision, ServeFault, ServerConfig,
+    ServingEngine, TcpFrontend,
+};
+use lspine::forge;
+
+fn artifacts_dir_string() -> String {
+    forge::ensure_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+/// An engine with the given fault plan (native backend, chaos defaults).
+fn start_engine(faults: &str, cfg_mut: impl FnOnce(&mut ServerConfig)) -> ServingEngine {
+    let mut cfg = ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Native,
+        workers: 1,
+        faults: Arc::new(FaultPlan::parse(faults).expect("valid plan")),
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    ServingEngine::start(cfg).expect("engine start")
+}
+
+/// A listening front end over a faulted engine.
+fn start_frontend(faults: &str, cfg_mut: impl FnOnce(&mut ServerConfig)) -> TcpFrontend {
+    let mut cfg = ServerConfig {
+        artifacts_dir: artifacts_dir_string(),
+        model: "mlp".into(),
+        backend: Backend::Native,
+        workers: 1,
+        faults: Arc::new(FaultPlan::parse(faults).expect("valid plan")),
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    let engine = Arc::new(ServingEngine::start(cfg).expect("engine start"));
+    TcpFrontend::bind(engine, "127.0.0.1:0").expect("bind")
+}
+
+fn connect(fe: &TcpFrontend) -> TcpStream {
+    let s = TcpStream::connect(fe.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+/// Read one response frame with a hard deadline (never hangs CI);
+/// `None` = clean EOF.
+fn read_resp(s: &mut TcpStream) -> Option<(u64, Response)> {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut hdr = [0u8; HEADER_LEN];
+    if !read_exact(s, &mut hdr, deadline)? {
+        return None;
+    }
+    let h = wire::decode_header(&hdr).expect("server sent a valid header");
+    let mut body = vec![0u8; h.body_len as usize];
+    assert!(
+        read_exact(s, &mut body, deadline).expect("no mid-frame EOF from the server"),
+        "server truncated a frame"
+    );
+    Some((h.tag, wire::decode_response(h.kind, &body).expect("valid body")))
+}
+
+fn read_exact(s: &mut TcpStream, buf: &mut [u8], deadline: Instant) -> Option<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match s.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Some(false);
+                }
+                panic!("EOF mid-frame after {off} bytes");
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                assert!(Instant::now() < deadline, "timed out waiting for the server");
+            }
+            Err(e) => panic!("read error: {e}"),
+        }
+    }
+    Some(true)
+}
+
+fn pixels(dim: usize, seed: u64) -> Vec<u8> {
+    forge::pixels(seed, 1, dim)
+}
+
+/// Poll the server's Metrics frame until `pred` holds (supervision runs
+/// *after* the faulted replies are answered, so counters can trail the
+/// replies by a few scheduler quanta).
+fn wait_metrics(
+    s: &mut TcpStream,
+    mut tag: u64,
+    pred: impl Fn(&wire::WireMetrics) -> bool,
+) -> wire::WireMetrics {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        s.write_all(&wire::encode_request(tag, &Request::Metrics)).unwrap();
+        match read_resp(s) {
+            Some((t, Response::Metrics(m))) => {
+                assert_eq!(t, tag);
+                if pred(&m) || Instant::now() >= deadline {
+                    assert!(pred(&m), "metrics never converged: {m:?}");
+                    return m;
+                }
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+        tag += 1;
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn worker_panic_is_supervised_over_tcp() {
+    // the batch containing pool-wide execution index 2 panics; everything
+    // else (including requests after the restart) must succeed
+    let fe = start_frontend("panic@2", |_| {});
+    let dim = fe.engine().input_dim();
+    let mut s = connect(&fe);
+
+    const N: u64 = 8;
+    for tag in 0..N {
+        s.write_all(&wire::encode_request(
+            tag,
+            &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, tag) },
+        ))
+        .unwrap();
+    }
+    let mut ok = 0u64;
+    let mut restarted = 0u64;
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..N {
+        match read_resp(&mut s).expect("every request is answered") {
+            (tag, Response::OneShot { .. }) => {
+                assert!(seen.insert(tag), "tag {tag} answered twice");
+                ok += 1;
+            }
+            (tag, Response::Error { code: ErrorCode::WorkerRestarted, message }) => {
+                assert!(seen.insert(tag), "tag {tag} answered twice");
+                assert!(!message.is_empty());
+                restarted += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(ok + restarted, N, "exactly one answer per request");
+    assert!(restarted >= 1, "the planned panic must surface as WorkerRestarted");
+
+    // supervision must have counted the panic and respawned the worker
+    let m = wait_metrics(&mut s, 1000, |m| m.panics >= 1 && m.restarts >= 1);
+    assert_eq!(m.panics, 1, "exactly the planned panic");
+    assert_eq!(m.restarts, 1);
+
+    // the server is healthy after the restart: a fresh request succeeds
+    s.write_all(&wire::encode_request(
+        2000,
+        &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, 99) },
+    ))
+    .unwrap();
+    match read_resp(&mut s) {
+        Some((2000, Response::OneShot { .. })) => {}
+        other => panic!("post-restart request must succeed, got {other:?}"),
+    }
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn sessions_rehome_fresh_after_restart() {
+    // stream windows claim one execution index each: window 0 succeeds,
+    // window 1 panics (losing the resident session), window 2 recreates
+    // the session fresh on the respawned engine
+    let engine = start_engine("panic@1", |_| {});
+    let dim = engine.input_dim();
+    let session = engine.open_stream();
+    let px = pixels(dim, 3);
+
+    let w0 = engine
+        .stream_window(session, &px, 2, ReqPrecision::Int4)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(20))
+        .unwrap();
+    assert!(w0.fault.is_none() && w0.fresh && w0.window == 0);
+
+    let w1 = engine
+        .stream_window(session, &px, 2, ReqPrecision::Int4)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(w1.fault, Some(ServeFault::WorkerRestarted));
+    assert!(!w1.fresh, "a faulted window never executed");
+
+    // the worker thread runs supervision before dequeuing window 2, so
+    // after w2's reply the counters are final (no polling needed)
+    let w2 = engine
+        .stream_window(session, &px, 2, ReqPrecision::Int4)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(20))
+        .unwrap();
+    assert!(w2.fault.is_none());
+    assert!(w2.fresh, "the rehomed session must report fresh state");
+    assert_eq!(w2.window, 0, "the state epoch restarted");
+
+    let m = engine.metrics();
+    assert_eq!(m.panics, 1);
+    assert_eq!(m.restarts, 1);
+    assert_eq!(m.rehomed, 1, "one resident session was lost to the restart");
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn deadlines_shed_behind_a_stall_over_tcp() {
+    // window 0 stalls 300ms on the single worker; window 1 carries a
+    // 50ms deadline and must be shed at dequeue — *without* advancing
+    // session state — and window 2 then runs on the un-advanced state
+    let fe = start_frontend("stall@0:300ms", |_| {});
+    let dim = fe.engine().input_dim();
+    let mut s = connect(&fe);
+    let px = pixels(dim, 5);
+
+    s.write_all(&wire::encode_request(10, &Request::StreamOpen)).unwrap();
+    let session = match read_resp(&mut s) {
+        Some((10, Response::StreamOpened { session })) => session,
+        other => panic!("expected StreamOpened, got {other:?}"),
+    };
+    let window = |session| Request::StreamWindow {
+        session,
+        steps: 2,
+        precision: ReqPrecision::Int4,
+        encoder: EncoderKind::Rate,
+        pixels: px.clone(),
+    };
+    s.write_all(&wire::encode_request(11, &window(session))).unwrap();
+    s.write_all(&wire::encode_request_deadline(12, &window(session), 50)).unwrap();
+    s.write_all(&wire::encode_request(13, &window(session))).unwrap();
+
+    match read_resp(&mut s) {
+        Some((11, Response::Window { window: 0, .. })) => {}
+        other => panic!("stalled window still succeeds, got {other:?}"),
+    }
+    match read_resp(&mut s) {
+        Some((12, Response::Error { code: ErrorCode::DeadlineExceeded, .. })) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    match read_resp(&mut s) {
+        Some((13, Response::Window { window: 1, fresh: false, .. })) => {}
+        other => panic!("shed windows must not advance state, got {other:?}"),
+    }
+    let m = wait_metrics(&mut s, 1000, |m| m.deadline_exceeded >= 1);
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.panics, 0, "a shed is not a panic");
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn dropped_replies_surface_as_internal_over_tcp() {
+    // the reply for execution index 1 is dropped server-side; the front
+    // end must convert the closed channel into a typed Internal error so
+    // the client is never left hanging
+    let fe = start_frontend("drop@1", |_| {});
+    let dim = fe.engine().input_dim();
+    let mut s = connect(&fe);
+
+    for tag in 0..3u64 {
+        // sequential send/read keeps the execution order deterministic
+        s.write_all(&wire::encode_request(
+            tag,
+            &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, tag) },
+        ))
+        .unwrap();
+        match (tag, read_resp(&mut s).expect("every request is answered")) {
+            (1, (t, Response::Error { code: ErrorCode::Internal, message })) => {
+                assert_eq!(t, 1);
+                assert!(message.contains("reply lost"), "{message}");
+            }
+            (_, (t, Response::OneShot { .. })) => assert_eq!(t, tag),
+            (_, other) => panic!("unexpected reply {other:?}"),
+        }
+    }
+    // a dropped reply is neither a panic nor a restart
+    let m = wait_metrics(&mut s, 1000, |m| m.requests >= 3);
+    assert_eq!(m.panics, 0);
+    assert_eq!(m.restarts, 0);
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn accept_resets_close_one_connection_only() {
+    // the 2nd accepted connection is reset on accept; its neighbors are
+    // untouched and the server keeps accepting afterwards
+    let fe = start_frontend("reset@1", |_| {});
+    let dim = fe.engine().input_dim();
+
+    let mut c0 = connect(&fe);
+    c0.write_all(&wire::encode_request(1, &Request::Info)).unwrap();
+    assert!(matches!(read_resp(&mut c0), Some((1, Response::Info(_)))));
+
+    let mut c1 = connect(&fe);
+    c1.write_all(&wire::encode_request(2, &Request::Info)).ok();
+    assert!(read_resp(&mut c1).is_none(), "the reset connection sees clean EOF");
+
+    let mut c2 = connect(&fe);
+    c2.write_all(&wire::encode_request(
+        3,
+        &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, 1) },
+    ))
+    .unwrap();
+    assert!(matches!(read_resp(&mut c2), Some((3, Response::OneShot { .. }))));
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn surviving_results_are_bit_identical_to_fault_free() {
+    // sequential one-shots make execution order == submission order, so
+    // the chaos run's faults land on exactly requests 2 (panic) and 5
+    // (dropped reply); every survivor must match the fault-free counts
+    let clean = start_engine("", |_| {});
+    let chaos = start_engine("panic@2,drop@5", |_| {});
+    let dim = clean.input_dim();
+
+    for i in 0..8u64 {
+        let px = pixels(dim, 100 + i);
+        let want = clean
+            .submit(&px, ReqPrecision::Int4)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(20))
+            .unwrap();
+        assert!(want.fault.is_none() && !want.rejected);
+
+        let got = chaos
+            .submit(&px, ReqPrecision::Int4)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(20));
+        match i {
+            2 => {
+                let got = got.expect("the panicked request still gets a typed reply");
+                assert_eq!(got.fault, Some(ServeFault::WorkerRestarted));
+            }
+            5 => {
+                assert!(got.is_err(), "a dropped reply closes the channel");
+            }
+            _ => {
+                let got = got.expect("survivors are answered");
+                assert!(got.fault.is_none() && !got.rejected);
+                assert_eq!(got.counts, want.counts, "request {i} diverged under chaos");
+                assert_eq!(got.prediction, want.prediction);
+            }
+        }
+    }
+    let m = chaos.metrics();
+    assert_eq!(m.panics, 1);
+    assert_eq!(m.restarts, 1);
+    clean.shutdown().unwrap();
+    chaos.shutdown().unwrap();
+}
+
+#[test]
+fn panic_during_drain_answers_owed_replies_without_respawn() {
+    // drain-vs-restart: request 0 stalls 1s then request 1 (same batch)
+    // panics; the shutdown drain begins during the stall, so supervision
+    // must NOT respawn — it answers the queued request 2 with the typed
+    // restart fault and lets the drain complete
+    use lspine::coordinator::batcher::BatcherConfig;
+    let engine = start_engine("stall@0:1s,panic@1", |cfg| {
+        cfg.batcher = BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) };
+    });
+    let dim = engine.input_dim();
+    let px = pixels(dim, 1);
+
+    let rx0 = engine.submit(&px, ReqPrecision::Int4).unwrap();
+    let rx1 = engine.submit(&px, ReqPrecision::Int4).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // batch [0,1] dequeues, stalls
+    let rx2 = engine.submit(&px, ReqPrecision::Int4).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // request 2 is dealt and queued
+
+    // shutdown starts the drain while the worker is still stalling; the
+    // panic therefore lands mid-drain and the drain must still complete
+    engine.shutdown().expect("drain completes despite the mid-drain panic");
+
+    for (who, rx) in [("r0", rx0), ("r1", rx1), ("r2", rx2)] {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|_| panic!("{who} must be answered by the drain"));
+        assert_eq!(
+            resp.fault,
+            Some(ServeFault::WorkerRestarted),
+            "{who} was owed a typed fault reply"
+        );
+    }
+}
+
+#[test]
+fn mixed_fault_plan_keeps_exactly_one_reply_per_request() {
+    // the full menagerie at once, two workers: every submitted request
+    // resolves exactly once — a reply, a typed fault, or (for the one
+    // planned dropped reply) a closed channel
+    let engine = start_engine("panic@3,stall@5:50ms,drop@7,panic@11", |cfg| {
+        cfg.workers = 2;
+    });
+    let dim = engine.input_dim();
+
+    const N: usize = 20;
+    let rxs: Vec<_> = (0..N)
+        .map(|i| engine.submit(&pixels(dim, i as u64), ReqPrecision::Int4).unwrap())
+        .collect();
+    let mut ok = 0usize;
+    let mut faulted = 0usize;
+    let mut closed = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(20)) {
+            Ok(resp) if resp.fault.is_some() => faulted += 1,
+            Ok(resp) => {
+                assert!(!resp.rejected, "capacity is ample in this test");
+                ok += 1;
+            }
+            Err(_) => closed += 1,
+        }
+    }
+    assert_eq!(ok + faulted + closed, N, "every request accounted for");
+    assert!(faulted >= 1, "the planned panics must fault some requests");
+    assert!(closed <= 1, "at most the one planned dropped reply");
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = engine.metrics();
+        if (m.panics >= 1 && m.restarts == m.panics) || Instant::now() >= deadline {
+            assert!(m.panics >= 1, "planned panics must be counted");
+            assert_eq!(m.restarts, m.panics, "every panic respawned (not draining)");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    engine.shutdown().unwrap();
+}

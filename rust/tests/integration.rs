@@ -363,6 +363,7 @@ fn serving_backpressure_rejects_over_capacity() {
             max_wait: Duration::from_millis(1),
         },
         workers: 2,
+        ..Default::default()
     })
     .unwrap();
     let mut rxs = Vec::new();

@@ -441,6 +441,7 @@ fn prop_batcher_conserves_requests() {
                 pixels: vec![],
                 precision,
                 enqueued: t0,
+                deadline: None,
                 reply: tx,
             });
             sent_ids.push(id);

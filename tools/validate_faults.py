@@ -1,0 +1,264 @@
+#!/usr/bin/env python3
+"""Python mirror validation of the fault-tolerance machinery.
+
+Usage:  python3 tools/validate_faults.py
+
+The container building these artifacts has no rust toolchain, so the
+fault-path logic is mirrored here, bit-for-bit, and checked against
+hand-computed expectations:
+
+- ``FaultPlan::parse`` / ``parse_duration``  (the --faults grammar,
+  including every rejection case pinned by the Rust unit tests);
+- the exec-window claim protocol (``claim_exec`` / ``panic_in`` /
+  ``stall_in`` / ``drop_reply_at``): exactly-once firing, the empty-plan
+  u64::MAX sentinel, and the wrapping-add guard at drop call sites;
+- ``alive_route``  (session rehoming: identical to s % workers while
+  the pool is healthy, deterministic and surjective onto survivors
+  when workers die, None when none remain);
+- the loadgen retry backoff (xorshift64* mirror): deterministic per
+  (seed, tag), jitter strictly inside [0.5x, 1.5x), exponential base
+  doubling capped at 2^6.
+"""
+
+import sys
+
+U64 = (1 << 64) - 1
+SENTINEL = U64  # u64::MAX — the empty-plan claim_exec sentinel
+
+
+# ---------------------------------------------------------------- grammar
+
+def parse_duration_ms(s):
+    """Mirror of faults::parse_duration (returns milliseconds)."""
+    s = s.strip()
+    if s.endswith("ms"):
+        num, mult = s[:-2], 1
+    elif s.endswith("s"):
+        num, mult = s[:-1], 1000
+    else:
+        num, mult = s, 1
+    num = num.strip()
+    if not num.isdigit():
+        raise ValueError(f"duration {s!r}: want e.g. 250ms or 2s")
+    return int(num) * mult
+
+
+def parse_plan(spec):
+    """Mirror of FaultPlan::parse. Returns (exec_entries, resets) where
+    exec_entries is a list of (at, kind, stall_ms_or_None)."""
+    exec_entries, resets = [], []
+    for part in (p.strip() for p in spec.split(",")):
+        if not part:
+            continue
+        if "@" not in part:
+            raise ValueError(f"fault entry {part!r}: want kind@index[:duration]")
+        kind, rest = part.split("@", 1)
+        if ":" in rest:
+            idx_str, dur_str = rest.split(":", 1)
+        else:
+            idx_str, dur_str = rest, None
+        idx_str = idx_str.strip()
+        if not idx_str.isdigit():
+            raise ValueError(f"fault entry {part!r}: index {idx_str!r} is not a u64")
+        at = int(idx_str)
+        kind = kind.strip()
+        if kind == "panic" and dur_str is None:
+            exec_entries.append((at, "panic", None))
+        elif kind == "drop" and dur_str is None:
+            exec_entries.append((at, "drop", None))
+        elif kind == "reset" and dur_str is None:
+            resets.append(at)
+        elif kind == "stall" and dur_str is not None:
+            exec_entries.append((at, "stall", parse_duration_ms(dur_str)))
+        elif kind == "stall":
+            raise ValueError(f"fault entry {part!r}: stall needs :duration")
+        elif kind in ("panic", "drop", "reset"):
+            raise ValueError(f"fault entry {part!r}: {kind} takes no duration")
+        else:
+            raise ValueError(f"fault entry {part!r}: unknown kind {kind!r}")
+    return exec_entries, resets
+
+
+def check_grammar():
+    # the same round-trip the Rust unit test pins
+    ex, rs = parse_plan("panic@6, stall@12:250ms ,drop@18,reset@2,stall@20:2s")
+    assert ex == [(6, "panic", None), (12, "stall", 250), (18, "drop", None),
+                  (20, "stall", 2000)], ex
+    assert rs == [2], rs
+    # bare numbers are milliseconds
+    ex, _ = parse_plan("stall@0:40")
+    assert ex == [(0, "stall", 40)]
+    # empty / whitespace-only specs are the empty plan
+    assert parse_plan("") == ([], [])
+    assert parse_plan("  ,  ") == ([], [])
+    # every rejection case from the Rust tests must also reject here
+    for bad in ["panic", "panic@x", "stall@3", "panic@3:10ms",
+                "jitter@1", "stall@1:fast", "reset@1:5ms", "drop@2:1s"]:
+        try:
+            parse_plan(bad)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"{bad!r} should have been rejected")
+    print("grammar: parse + duration suffixes + rejections OK")
+
+
+# ----------------------------------------------------- exec-window protocol
+
+class Plan:
+    """Mirror of the FaultPlan counter protocol."""
+
+    def __init__(self, spec):
+        self.exec, self.resets = parse_plan(spec)
+        self.exec_counter = 0
+        self.accept_counter = 0
+
+    def claim_exec(self, n):
+        if not self.exec:
+            return SENTINEL
+        base = self.exec_counter
+        self.exec_counter += n
+        return base
+
+    def panic_in(self, base, n):
+        return base != SENTINEL and any(
+            k == "panic" and base <= at < base + n for at, k, _ in self.exec)
+
+    def stall_in(self, base, n):
+        if base == SENTINEL:
+            return None
+        total = sum(ms for at, k, ms in self.exec
+                    if k == "stall" and base <= at < base + n)
+        return total or None
+
+    def drop_reply_at(self, idx):
+        return idx != SENTINEL and any(
+            k == "drop" and at == idx for at, k, _ in self.exec)
+
+    def reset_accept(self):
+        if not self.resets:
+            return False
+        idx = self.accept_counter
+        self.accept_counter += 1
+        return idx in self.resets
+
+
+def check_exec_windows():
+    p = Plan("panic@6,stall@12:5ms,drop@13")
+    b0 = p.claim_exec(4)
+    assert b0 == 0 and not p.panic_in(b0, 4) and p.stall_in(b0, 4) is None
+    b1 = p.claim_exec(4)
+    assert p.panic_in(b1, 4)  # index 6 in [4,8)
+    b2 = p.claim_exec(6)
+    assert p.stall_in(b2, 6) == 5
+    assert not p.drop_reply_at(b2 + 4) and p.drop_reply_at(b2 + 5)
+    b3 = p.claim_exec(100)
+    assert not p.panic_in(b3, 100) and p.stall_in(b3, 100) is None
+
+    # empty plan: sentinel base, and the wrapping-add at drop call sites
+    # (base.wrapping_add(i)) can never match a planned index
+    e = Plan("")
+    base = e.claim_exec(8)
+    assert base == SENTINEL
+    for i in range(8):
+        wrapped = (base + i) & U64  # u64 wrapping_add mirror
+        assert not e.drop_reply_at(wrapped)
+    assert not e.panic_in(base, 8) and e.stall_in(base, 8) is None
+
+    # resets count accepted connections, firing exactly once
+    r = Plan("reset@1")
+    assert [r.reset_accept() for _ in range(3)] == [False, True, False]
+    print("exec windows: claim/fire-once/sentinel/wrapping OK")
+
+
+# ------------------------------------------------------------- alive_route
+
+def alive_route(session, alive):
+    """Mirror of server::alive_route."""
+    live = sum(alive)
+    if live == 0:
+        return None
+    k = session % live
+    return [i for i, a in enumerate(alive) if a][k]
+
+
+def check_alive_route():
+    # healthy pool == the historical s % workers contract
+    for w in (1, 2, 3, 8):
+        alive = [True] * w
+        for s in range(100):
+            assert alive_route(s, alive) == s % w
+    # one dead worker: deterministic, never routes to the corpse, and
+    # the surviving shards all still receive sessions
+    alive = [True, False, True, True]
+    got = {alive_route(s, alive) for s in range(100)}
+    assert got == {0, 2, 3}, got
+    for s in range(100):
+        assert alive_route(s, alive) == alive_route(s, alive)
+    # session affinity is stable *within* a pool configuration
+    assert alive_route(5, alive) == [0, 2, 3][5 % 3]
+    # all dead: typed failure upstream, never a panic
+    assert alive_route(7, [False, False]) is None
+    print("alive_route: healthy==s%w, deterministic rehoming, all-dead OK")
+
+
+# ------------------------------------------------------------ retry backoff
+
+def xorshift64star(seed):
+    """Mirror of util::Rng (xorshift64*), yielding u64s."""
+    state = max(seed & U64, 1)
+    while True:
+        state ^= (state << 13) & U64
+        state ^= state >> 7
+        state ^= (state << 17) & U64
+        yield (state * 0x2545F4914F6CDD1D) & U64
+
+
+def rng_f64(seed):
+    """First Rng::f64 draw for a seed."""
+    return (next(xorshift64star(seed)) >> 11) / float(1 << 53)
+
+
+def retry_delay_ms(backoff_ms, attempt, tag, seed):
+    """Mirror of loadgen::RetryPolicy::delay (milliseconds, float)."""
+    exp = min(max(attempt - 1, 0), 6)
+    base = backoff_ms * float(1 << exp)
+    jitter = 0.5 + rng_f64(seed ^ ((tag * 0x9E3779B97F4A7C15) & U64))
+    return base * jitter
+
+
+def check_backoff():
+    # deterministic per (seed, tag)
+    for tag in (0, 1, 17, 2**40):
+        a = retry_delay_ms(50, 3, tag, seed=7)
+        b = retry_delay_ms(50, 3, tag, seed=7)
+        assert a == b
+    # jitter strictly inside [0.5x, 1.5x) of the exponential base
+    for attempt in range(1, 10):
+        exp = min(attempt - 1, 6)
+        base = 50 * (1 << exp)
+        for tag in range(200):
+            d = retry_delay_ms(50, attempt, tag, seed=42)
+            assert 0.5 * base <= d < 1.5 * base, (attempt, tag, d)
+    # base doubles per attempt and caps at 2^6
+    assert retry_delay_ms(50, 8, 3, 9) == retry_delay_ms(50, 7, 3, 9)
+    lo_hi = [(0.5 * 50 * (1 << min(a - 1, 6)), 1.5 * 50 * (1 << min(a - 1, 6)))
+             for a in (1, 2, 3)]
+    assert lo_hi[1][0] == 2 * lo_hi[0][0] and lo_hi[2][0] == 2 * lo_hi[1][0]
+    # different tags actually spread (desynchronized retry storms)
+    draws = {round(retry_delay_ms(50, 1, t, seed=1), 6) for t in range(64)}
+    assert len(draws) > 32, f"jitter collapsed: {len(draws)} distinct of 64"
+    print("backoff: deterministic, [0.5x,1.5x) jitter, 2^6 cap, spread OK")
+
+
+def main():
+    check_grammar()
+    check_exec_windows()
+    check_alive_route()
+    check_backoff()
+    print("validate_faults: ALL OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
