@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke chaos-smoke doc clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke chaos-smoke swap-smoke doc clean
 
 all: build
 
@@ -125,9 +125,39 @@ chaos-smoke:
 	grep -Eq "restarts=[1-9]" .chaos_serve.out
 	rm -f .chaos_smoke.out .chaos_serve.out
 
+# Hot-swap end-to-end smoke: serve BOTH forged models from the
+# multi-tenant registry, drive mixed loadgen traffic at them, hot-swap
+# the mlp model mid-run over the admin surface, then drain. Asserts
+# zero-downtime (lost=0, protocol_errors=0), that both models actually
+# answered windows (per-model summary keys), and that the swap really
+# republished (version bumped in the admin output). Separate port so it
+# composes with the other smokes in one CI job.
+swap-smoke:
+	cd rust && $(CARGO) build --release
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+	cd rust && \
+	( ./target/release/lspine serve --backend native --models artifacts --model mlp --listen 127.0.0.1:17323 --workers 2 > ../.swap_serve.out 2>&1 & ) && \
+	( { ./target/release/lspine loadgen --connect 127.0.0.1:17323 --model mlp,convnet --sessions 8 --windows 40 --rate 10 --retries 3 --backoff-ms 20 --retry-secs 20 > ../.swap_smoke.out 2>&1; echo $$? > ../.swap_loadgen.rc; } & ) && \
+	sleep 3 && \
+	./target/release/lspine admin --connect 127.0.0.1:17323 --swap mlp > ../.swap_admin.out || (cat ../.swap_admin.out ../.swap_serve.out; exit 1)
+	# wait for the loadgen run to finish, then fail on its exit code
+	for i in $$(seq 1 150); do test -f .swap_loadgen.rc && break; sleep 0.2; done
+	test -f .swap_loadgen.rc && test "$$(cat .swap_loadgen.rc)" = "0" || (cat .swap_smoke.out .swap_serve.out; exit 1)
+	cd rust && ./target/release/lspine admin --connect 127.0.0.1:17323 --drain > ../.swap_drain.out || (cat ../.swap_drain.out ../.swap_serve.out; exit 1)
+	cat .swap_smoke.out .swap_admin.out
+	grep -Eq "mlp_ok=[1-9]" .swap_smoke.out
+	grep -Eq "convnet_ok=[1-9]" .swap_smoke.out
+	grep -Eq "lost=0" .swap_smoke.out
+	grep -Eq "protocol_errors=0" .swap_smoke.out
+	grep -Eq "swapped model=mlp version=[0-9]+" .swap_admin.out
+	# the drained server may still be flushing its per-model table
+	for i in $$(seq 1 50); do grep -q "requests=" .swap_serve.out && break; sleep 0.2; done
+	cat .swap_serve.out
+	rm -f .swap_smoke.out .swap_admin.out .swap_drain.out .swap_serve.out .swap_loadgen.rc
+
 # The documented-API gate, same flags as the CI docs job.
 doc:
-	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib --document-private-items
 
 clean:
 	cd rust && $(CARGO) clean

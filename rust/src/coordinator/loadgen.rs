@@ -27,6 +27,17 @@
 //! exponential backoff and deterministic per-tag jitter (`retries` /
 //! `backoff`) — the client half of the chaos battery's *no request is
 //! ever silently lost* invariant.
+//!
+//! **Multi-model mixes**: `models` assigns sessions round-robin over a
+//! list of model names (session `i` → `models[i % len]`), opening each
+//! session with a version-3 model-addressed `StreamOpen`; the report
+//! then carries per-model answered-window counts (`<name>_ok=` summary
+//! keys — what `swap-smoke` greps to prove both models answered across
+//! a hot swap). An empty list keeps the legacy single-model behaviour
+//! and the legacy frame versions. Mixed-model runs assume every model
+//! shares one input dimension (the control connection's `Info` describes
+//! the default model only); a mismatch surfaces as typed `BadInput`
+//! errors, never silence.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -137,6 +148,10 @@ pub struct LoadgenConfig {
     /// frames (0 = no deadline; version-1 frames, byte-identical to
     /// pre-deadline builds).
     pub deadline_ms: u32,
+    /// Model mix: session `i` opens against `models[i % models.len()]`
+    /// via a version-3 `StreamOpen`. Empty = every session uses the
+    /// server's default model over legacy frames.
+    pub models: Vec<String>,
 }
 
 impl Default for LoadgenConfig {
@@ -158,6 +173,7 @@ impl Default for LoadgenConfig {
             retries: 0,
             backoff: Duration::from_millis(50),
             deadline_ms: 0,
+            models: Vec::new(),
         }
     }
 }
@@ -199,6 +215,9 @@ pub struct LoadgenReport {
     pub ttfp: LatencyHistogram,
     /// The server's own metrics snapshot after the run.
     pub server: Option<WireMetrics>,
+    /// Answered windows per model, sorted by name (empty on
+    /// single-model runs).
+    pub per_model: Vec<(String, u64)>,
 }
 
 impl LoadgenReport {
@@ -212,9 +231,10 @@ impl LoadgenReport {
     }
 
     /// One-line machine-greppable summary (`loadgen-smoke` keys on
-    /// `ok=` and `protocol_errors=`).
+    /// `ok=` and `protocol_errors=`; `swap-smoke` on the per-model
+    /// `<name>_ok=` keys appended for multi-model runs).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "loadgen sessions={} conns={} sent={} ok={} rejected={} evicted={} \
              expired={} restarted={} server_errors={} retried={} \
              lost={} protocol_errors={} req_per_s={:.0} p50_us={} p99_us={} \
@@ -237,7 +257,11 @@ impl LoadgenReport {
             self.latency.quantile_us(0.999),
             self.latency.max_us(),
             self.ttfp.quantile_us(0.5),
-        )
+        );
+        for (name, ok) in &self.per_model {
+            s.push_str(&format!(" {name}_ok={ok}"));
+        }
+        s
     }
 }
 
@@ -294,6 +318,8 @@ const RETRY_TICK: Duration = Duration::from_millis(5);
 struct Tally {
     sent: u64,
     ok: u64,
+    /// Answered windows keyed by model name (multi-model runs only).
+    ok_by_model: HashMap<String, u64>,
     rejected: u64,
     evicted: u64,
     expired: u64,
@@ -342,6 +368,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             Ok(Ok(t)) => {
                 total.sent += t.sent;
                 total.ok += t.ok;
+                for (name, ok) in t.ok_by_model {
+                    *total.ok_by_model.entry(name).or_insert(0) += ok;
+                }
                 total.rejected += t.rejected;
                 total.evicted += t.evicted;
                 total.expired += t.expired;
@@ -381,6 +410,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let _ = read_response(&mut control, Instant::now() + cfg.timeout); // DrainAck
     }
 
+    let mut per_model: Vec<(String, u64)> = total.ok_by_model.into_iter().collect();
+    per_model.sort();
     Ok(LoadgenReport {
         sessions: cfg.sessions,
         conns: n_conns,
@@ -398,6 +429,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         latency: total.latency,
         ttfp: total.ttfp,
         server,
+        per_model,
     })
 }
 
@@ -413,9 +445,33 @@ fn run_conn(
     let _ = stream.set_nodelay(true);
     stream.set_read_timeout(Some(Duration::from_millis(50)))?;
 
+    // which model each local slot drives (None = server default);
+    // assignment keys on the *global* session index so the mix is even
+    // regardless of how sessions landed on connections
+    let slot_models: Vec<Option<String>> = session_indices
+        .iter()
+        .map(|&global| {
+            if cfg.models.is_empty() {
+                None
+            } else {
+                Some(cfg.models[global % cfg.models.len()].clone())
+            }
+        })
+        .collect();
+
     // synchronous handshake: open every session this connection owns
-    for i in 0..session_indices.len() {
-        send_frame(&mut stream, &wire::encode_request(i as u64, &Request::StreamOpen))?;
+    // (model-addressed opens ride version-3 frames; a typed open error —
+    // UnknownModel, QuotaExceeded — fails the run loudly right here)
+    for (i, model) in slot_models.iter().enumerate() {
+        let frame = match model {
+            Some(m) => wire::encode_request_v3(
+                i as u64,
+                &Request::StreamOpen { model: Some(m.clone()) },
+                0,
+            ),
+            None => wire::encode_request(i as u64, &Request::StreamOpen { model: None }),
+        };
+        send_frame(&mut stream, &frame)?;
     }
     let open_deadline = Instant::now() + cfg.timeout;
     let mut opened: HashMap<u64, u64> = HashMap::new();
@@ -465,11 +521,12 @@ fn run_conn(
         let expected = Arc::clone(&expected);
         let retryq = Arc::clone(&retryq);
         let reader_done = Arc::clone(&reader_done);
+        let slot_models = Arc::new(slot_models);
         std::thread::Builder::new().name(format!("loadgen-rd-{conn_index}")).spawn(
             move || {
                 reader_loop(
                     read_half, pending, first_sent, expected, deadline, retryq, policy,
-                    reader_done,
+                    reader_done, slot_models,
                 )
             },
         )?
@@ -627,6 +684,7 @@ fn reader_loop(
     retryq: Arc<Mutex<Vec<Retry>>>,
     policy: RetryPolicy,
     done: Arc<AtomicBool>,
+    slot_models: Arc<Vec<Option<String>>>,
 ) -> Result<Tally> {
     let mut t = Tally::default();
     let mut ttfp_done: Vec<bool> = vec![false; first_sent.lock().unwrap().len()];
@@ -673,6 +731,9 @@ fn reader_loop(
         match resp {
             Response::Window { .. } => {
                 t.ok += 1;
+                if let Some(model) = &slot_models[p.slot] {
+                    *t.ok_by_model.entry(model.clone()).or_insert(0) += 1;
+                }
                 t.latency.record(now.duration_since(p.sent));
             }
             Response::Error { code: ErrorCode::Rejected, .. }
@@ -852,9 +913,13 @@ mod tests {
             latency: LatencyHistogram::new(),
             ttfp: LatencyHistogram::new(),
             server: None,
+            per_model: vec![("convnet".into(), 28), ("mlp".into(), 32)],
         };
         let s = r.summary();
         assert!(s.contains("ok=60"), "{s}");
+        // per-model keys ride at the end (what swap-smoke greps)
+        assert!(s.contains("convnet_ok=28"), "{s}");
+        assert!(s.contains("mlp_ok=32"), "{s}");
         assert!(s.contains("protocol_errors=0"), "{s}");
         assert!(s.contains("rejected=4"), "{s}");
         assert!(s.contains("expired=2"), "{s}");

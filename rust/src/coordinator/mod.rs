@@ -36,6 +36,11 @@
 //! streaming sessions against a listening server and reports
 //! p50/p99/p999 + time-to-first-prediction.
 //!
+//! One process serves **many models**: [`registry`] maps model names to
+//! engine pools with atomic zero-downtime hot swap (version-3 frames
+//! address models; Admin frames load/unload/list/swap them), per-model
+//! session quotas, and per-model metrics.
+//!
 //! The serving path is **fault-tolerant** (DESIGN.md §Fault tolerance):
 //! worker panics are supervised — caught, counted, answered with the
 //! typed `WorkerRestarted` error, and the worker respawns with a fresh
@@ -55,6 +60,7 @@ pub mod faults;
 pub mod firmware;
 pub mod loadgen;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod server;
 pub mod session;
@@ -65,11 +71,12 @@ pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use faults::FaultPlan;
 pub use loadgen::{Arrival, LoadgenConfig, LoadgenReport};
 pub use metrics::{LatencyHistogram, Metrics};
+pub use registry::{AdminError, ModelRegistry, ModelStatus, ModelVersion, RegistryConfig};
 pub use request::{InferRequest, InferResponse, Precision as ReqPrecision, ServeFault};
 pub use server::{default_workers, Backend, ServerConfig, ServingEngine};
 pub use session::{EncoderKind, SessionTable, StreamRequest, StreamResponse, StreamSession};
 pub use tcp::TcpFrontend;
-pub use wire::{ErrorCode, WireError, WireInfo, WireMetrics};
+pub use wire::{ErrorCode, WireError, WireInfo, WireMetrics, WireModelInfo};
 
 /// Poison-tolerant mutex access for the serving path: a thread that
 /// panicked while holding one of these locks (metrics, connection

@@ -1,0 +1,464 @@
+//! Multi-tenant model registry with zero-downtime hot swap.
+//!
+//! One serving process maps many model names onto many [`ServingEngine`]
+//! pools. Each live model holds exactly one *published* [`ModelVersion`];
+//! an admin swap loads a replacement engine **off the registry lock**,
+//! publishes it atomically (new one-shots and stream-opens route to it
+//! immediately), and retires the old version once every in-flight
+//! reference drains — streaming sessions opened before the swap keep
+//! their pinned version until they close, so their membrane state and
+//! bit-exactness contract survive the reload untouched.
+//!
+//! ## Ownership model
+//!
+//! * `live`: name → the currently published `Arc<ModelVersion>`. Lookups
+//!   clone the `Arc`, so readers never hold the registry lock while
+//!   inferring.
+//! * `retiring`: versions that were swapped out or unloaded but still
+//!   have holders (open sessions, or replies still flushing through the
+//!   TCP writer). [`ModelRegistry::reap`] drops a retiring version only
+//!   when the registry holds the last `Arc` *and* its session count is
+//!   zero; dropping the engine then drains it gracefully (queued work is
+//!   still answered — see `ServingEngine`'s `Drop`).
+//!
+//! ## Quotas
+//!
+//! Tenancy isolation is structural: every model gets its **own** engine
+//! pool, so one tenant's queue backlog cannot starve another's (each
+//! pool has its own bounded ingest queue — the queue share is the queue).
+//! On top of that, `quota_sessions` caps concurrently open streaming
+//! sessions per model; an open beyond the quota earns a typed
+//! [`wire::ErrorCode::QuotaExceeded`](super::wire::ErrorCode) instead of
+//! silently LRU-thrashing resident state.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::ArtifactStore;
+use crate::Result;
+
+use super::faults::FaultPlan;
+use super::lock;
+use super::metrics::Metrics;
+use super::server::{ServerConfig, ServingEngine};
+
+/// How a [`ModelRegistry`] is provisioned.
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Template for every engine the registry starts. `server.model` is
+    /// the **default model** — the one answering requests that carry no
+    /// model-id (v1/v2 clients, empty v3 model fields).
+    pub server: ServerConfig,
+    /// Per-model cap on concurrently open streaming sessions (0 means
+    /// "use `server.max_sessions`", i.e. the resident-state cap).
+    pub quota_sessions: usize,
+}
+
+/// One published artifact version of one model: an engine pool plus the
+/// bookkeeping that keeps it alive until its last holder drains.
+pub struct ModelVersion {
+    name: String,
+    version: u64,
+    engine: Arc<ServingEngine>,
+    open_sessions: AtomicUsize,
+}
+
+impl ModelVersion {
+    /// The registry name this version serves (manifest model key).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Monotonic registry-wide version number (bumps on load and swap).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The engine pool executing this version.
+    pub fn engine(&self) -> &Arc<ServingEngine> {
+        &self.engine
+    }
+
+    /// Streaming sessions currently open against this version.
+    pub fn open_sessions(&self) -> usize {
+        self.open_sessions.load(Ordering::SeqCst)
+    }
+}
+
+/// Typed failure of a registry/admin operation; each variant maps onto
+/// exactly one wire [`ErrorCode`](super::wire::ErrorCode).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdminError {
+    /// The named model is not live in the registry (wire code 16).
+    UnknownModel(String),
+    /// The operation needs the model idle: it still has open sessions,
+    /// or it is the default model (wire code 17).
+    Busy(String),
+    /// The model's session quota is exhausted (wire code 18).
+    Quota(String),
+    /// Engine construction or artifact loading failed (wire code 12,
+    /// `Internal`).
+    Failed(String),
+}
+
+impl std::fmt::Display for AdminError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdminError::UnknownModel(m) => write!(f, "unknown model \"{m}\""),
+            AdminError::Busy(m) => write!(f, "model busy: {m}"),
+            AdminError::Quota(m) => write!(f, "quota exceeded: {m}"),
+            AdminError::Failed(m) => write!(f, "admin operation failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for AdminError {}
+
+/// A point-in-time view of one registry entry (see [`ModelRegistry::list`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelStatus {
+    /// Registry model name.
+    pub name: String,
+    /// Published artifact version.
+    pub version: u64,
+    /// Open streaming sessions on the published version.
+    pub sessions: usize,
+    /// Whether this model answers requests without a model-id.
+    pub default: bool,
+}
+
+struct Inner {
+    live: BTreeMap<String, Arc<ModelVersion>>,
+    retiring: Vec<Arc<ModelVersion>>,
+}
+
+/// The registry: every live model's published version plus the retiring
+/// versions still draining. All methods take `&self`; share it as an
+/// `Arc<ModelRegistry>` between the TCP front end and admin surfaces.
+pub struct ModelRegistry {
+    /// Engine template for load/swap; `None` for a [`single`]-wrapped
+    /// registry, whose membership is fixed at construction.
+    ///
+    /// [`single`]: ModelRegistry::single
+    template: Option<ServerConfig>,
+    default_model: String,
+    quota_sessions: usize,
+    faults: Arc<FaultPlan>,
+    next_version: AtomicU64,
+    /// Registry-wide session-id allocator. Ids stay globally unique even
+    /// across models — engines create session state lazily per id, so a
+    /// registry-allocated id lands on `id % workers` exactly like an
+    /// engine-allocated one.
+    next_session: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    /// Start a registry serving the template's default model. Further
+    /// models join via [`load`](Self::load) (admin frames or the
+    /// `--models` watcher).
+    pub fn start(cfg: RegistryConfig) -> Result<Self> {
+        let default_model = cfg.server.model.clone();
+        let quota_sessions = if cfg.quota_sessions == 0 {
+            cfg.server.max_sessions
+        } else {
+            cfg.quota_sessions
+        };
+        let engine = Arc::new(ServingEngine::start(cfg.server.clone())?);
+        let faults = Arc::clone(engine.faults());
+        let version = Arc::new(ModelVersion {
+            name: default_model.clone(),
+            version: 1,
+            engine,
+            open_sessions: AtomicUsize::new(0),
+        });
+        let mut live = BTreeMap::new();
+        live.insert(default_model.clone(), version);
+        Ok(Self {
+            template: Some(cfg.server),
+            default_model,
+            quota_sessions,
+            faults,
+            next_version: AtomicU64::new(2),
+            next_session: AtomicU64::new(0),
+            inner: Mutex::new(Inner { live, retiring: Vec::new() }),
+        })
+    }
+
+    /// Wrap one already-running engine as a fixed single-model registry
+    /// (the legacy `serve` path). Admin load/swap/unload fail typed —
+    /// there is no engine template to rebuild from.
+    pub fn single(engine: Arc<ServingEngine>) -> Self {
+        let name = engine.model().to_string();
+        let quota_sessions = engine.max_sessions();
+        let faults = Arc::clone(engine.faults());
+        let version = Arc::new(ModelVersion {
+            name: name.clone(),
+            version: 1,
+            engine,
+            open_sessions: AtomicUsize::new(0),
+        });
+        let mut live = BTreeMap::new();
+        live.insert(name.clone(), version);
+        Self {
+            template: None,
+            default_model: name,
+            quota_sessions,
+            faults,
+            next_version: AtomicU64::new(2),
+            next_session: AtomicU64::new(0),
+            inner: Mutex::new(Inner { live, retiring: Vec::new() }),
+        }
+    }
+
+    /// The model answering requests that carry no model-id.
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// The fault plan shared by every pool (from the engine template).
+    pub fn faults(&self) -> &Arc<FaultPlan> {
+        &self.faults
+    }
+
+    /// Resolve a request's model-id to the currently published version
+    /// (`None` = the default model). The returned `Arc` keeps that
+    /// version alive across the whole request, swap or not.
+    pub fn resolve(&self, model: Option<&str>) -> std::result::Result<Arc<ModelVersion>, AdminError> {
+        let name = model.unwrap_or(&self.default_model);
+        lock(&self.inner)
+            .live
+            .get(name)
+            .cloned()
+            .ok_or_else(|| AdminError::UnknownModel(name.to_string()))
+    }
+
+    /// Load `name` into the registry (idempotent: re-loading a live
+    /// model returns its published version unchanged — use
+    /// [`swap`](Self::swap) to republish).
+    pub fn load(&self, name: &str) -> std::result::Result<Arc<ModelVersion>, AdminError> {
+        if let Ok(v) = self.resolve(Some(name)) {
+            return Ok(v);
+        }
+        let built = self.build_version(name)?;
+        let mut inner = lock(&self.inner);
+        // two concurrent loads can race past the idempotence check; the
+        // first publish wins and the loser's engine drains on drop
+        Ok(Arc::clone(inner.live.entry(name.to_string()).or_insert(built)))
+    }
+
+    /// Hot-swap `name` to a freshly loaded artifact version. The new
+    /// engine is built entirely off the registry lock — the old version
+    /// keeps answering until the single pointer-swap publishes the new
+    /// one — then the old version retires and drains via [`reap`](Self::reap).
+    pub fn swap(&self, name: &str) -> std::result::Result<Arc<ModelVersion>, AdminError> {
+        // swap republishes; loading a missing model is `load`'s job
+        self.resolve(Some(name))?;
+        let built = self.build_version(name)?;
+        let mut inner = lock(&self.inner);
+        let old = inner.live.insert(name.to_string(), Arc::clone(&built));
+        inner.retiring.extend(old);
+        drop(inner);
+        self.reap();
+        Ok(built)
+    }
+
+    /// Unload `name`. Refuses while the published version still has open
+    /// sessions (drain them first) and always refuses the default model
+    /// — v1/v2 clients have nowhere else to route.
+    pub fn unload(&self, name: &str) -> std::result::Result<(), AdminError> {
+        if name == self.default_model {
+            return Err(AdminError::Busy(format!(
+                "\"{name}\" is the default model; versionless clients route to it"
+            )));
+        }
+        {
+            let mut inner = lock(&self.inner);
+            let v = inner
+                .live
+                .get(name)
+                .ok_or_else(|| AdminError::UnknownModel(name.to_string()))?;
+            let open = v.open_sessions();
+            if open > 0 {
+                return Err(AdminError::Busy(format!(
+                    "\"{name}\" has {open} open session(s); close or drain them first"
+                )));
+            }
+            let v = inner.live.remove(name).expect("checked above");
+            inner.retiring.push(v);
+        }
+        self.reap();
+        Ok(())
+    }
+
+    /// Registry membership snapshot, sorted by model name.
+    pub fn list(&self) -> Vec<ModelStatus> {
+        lock(&self.inner)
+            .live
+            .values()
+            .map(|v| ModelStatus {
+                name: v.name().to_string(),
+                version: v.version(),
+                sessions: v.open_sessions(),
+                default: v.name() == self.default_model,
+            })
+            .collect()
+    }
+
+    /// Open a streaming session on `model` (`None` = default): allocates
+    /// a registry-unique session id and pins the session to the model's
+    /// *current* version — a later swap does not move it.
+    pub fn open_stream(
+        &self,
+        model: Option<&str>,
+    ) -> std::result::Result<(u64, Arc<ModelVersion>), AdminError> {
+        let v = self.resolve(model)?;
+        let prev = v.open_sessions.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.quota_sessions {
+            v.open_sessions.fetch_sub(1, Ordering::SeqCst);
+            return Err(AdminError::Quota(format!(
+                "model \"{}\" already has {prev} open sessions (quota {})",
+                v.name(),
+                self.quota_sessions
+            )));
+        }
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        Ok((id, v))
+    }
+
+    /// Close a session previously opened via [`open_stream`](Self::open_stream),
+    /// freeing its resident state and releasing its version pin. Call at
+    /// most once per open (the TCP front end's per-connection session map
+    /// guarantees this).
+    pub fn close_stream(&self, session: u64, version: &Arc<ModelVersion>) {
+        let _ = version.engine.close_stream(session);
+        version.open_sessions.fetch_sub(1, Ordering::SeqCst);
+        self.reap();
+    }
+
+    /// Merged metrics over every live *and* retiring engine — counters
+    /// earned by a version that is mid-retirement still show up.
+    pub fn metrics(&self) -> Metrics {
+        let versions: Vec<Arc<ModelVersion>> = {
+            let inner = lock(&self.inner);
+            inner.live.values().chain(inner.retiring.iter()).cloned().collect()
+        };
+        let mut merged = Metrics::new();
+        for v in versions {
+            merged.merge(&v.engine.metrics());
+        }
+        merged
+    }
+
+    /// Per-model metrics of the *published* versions, sorted by name.
+    pub fn metrics_by_model(&self) -> Vec<(String, u64, Metrics)> {
+        let versions: Vec<Arc<ModelVersion>> =
+            lock(&self.inner).live.values().cloned().collect();
+        versions
+            .into_iter()
+            .map(|v| (v.name().to_string(), v.version(), v.engine.metrics()))
+            .collect()
+    }
+
+    /// Drop every retiring version whose last holder is the registry
+    /// itself and whose session count is zero. Dropping the engine `Arc`
+    /// drains the pool gracefully — queued work is still executed and
+    /// answered — so a version can never retire out from under an
+    /// unflushed reply (the TCP writer's `Arc` keeps it alive).
+    pub fn reap(&self) {
+        let mut dead = Vec::new();
+        {
+            let mut inner = lock(&self.inner);
+            let mut keep = Vec::new();
+            for v in inner.retiring.drain(..) {
+                if Arc::strong_count(&v) > 1 || v.open_sessions() > 0 {
+                    keep.push(v);
+                } else {
+                    dead.push(v);
+                }
+            }
+            inner.retiring = keep;
+        }
+        // engine drains happen here, outside the registry lock
+        drop(dead);
+    }
+
+    /// Graceful shutdown: drains every engine (live and retiring) and
+    /// surfaces the first error. Call once every front end holding
+    /// version `Arc`s has stopped.
+    pub fn shutdown(self) -> Result<()> {
+        let inner = self.inner.into_inner().unwrap_or_else(|p| p.into_inner());
+        let mut first_err = None;
+        for v in inner.live.into_values().chain(inner.retiring) {
+            match Arc::try_unwrap(v) {
+                Ok(version) => match Arc::try_unwrap(version.engine) {
+                    Ok(engine) => {
+                        if let Err(e) = engine.shutdown() {
+                            first_err.get_or_insert(e);
+                        }
+                    }
+                    // someone still holds the engine; its Drop drains it
+                    Err(_) => {}
+                }
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Build (but do not publish) a fresh version of `name` from the
+    /// engine template. Distinguishes "not in the manifest" (typed
+    /// [`AdminError::UnknownModel`]) from a build failure.
+    fn build_version(&self, name: &str) -> std::result::Result<Arc<ModelVersion>, AdminError> {
+        let template = self.template.as_ref().ok_or_else(|| {
+            AdminError::Failed("registry is fixed to a single pre-built engine".into())
+        })?;
+        let store = ArtifactStore::open(&template.artifacts_dir)
+            .map_err(|e| AdminError::Failed(format!("artifacts unreadable: {e}")))?;
+        if store.manifest().model(name).is_err() {
+            return Err(AdminError::UnknownModel(name.to_string()));
+        }
+        drop(store);
+        let mut cfg = template.clone();
+        cfg.model = name.to_string();
+        let engine = ServingEngine::start(cfg)
+            .map_err(|e| AdminError::Failed(format!("engine start failed: {e}")))?;
+        Ok(Arc::new(ModelVersion {
+            name: name.to_string(),
+            version: self.next_version.fetch_add(1, Ordering::Relaxed),
+            engine: Arc::new(engine),
+            open_sessions: AtomicUsize::new(0),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admin_errors_display_their_model() {
+        assert_eq!(
+            AdminError::UnknownModel("ghost".into()).to_string(),
+            "unknown model \"ghost\""
+        );
+        assert!(AdminError::Busy("\"mlp\" has 2 open session(s); close or drain them first"
+            .into())
+        .to_string()
+        .contains("open session"));
+        assert!(AdminError::Quota("q".into()).to_string().starts_with("quota"));
+        assert!(AdminError::Failed("f".into()).to_string().contains("failed"));
+    }
+
+    #[test]
+    fn model_status_is_plain_data() {
+        let s = ModelStatus { name: "mlp".into(), version: 3, sessions: 1, default: true };
+        let t = s.clone();
+        assert_eq!(s, t);
+        assert!(format!("{s:?}").contains("mlp"));
+    }
+}

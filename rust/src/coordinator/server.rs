@@ -138,6 +138,7 @@ pub struct ServingEngine {
     metrics: Vec<Arc<Mutex<Metrics>>>,
     next_id: AtomicU64,
     next_session: AtomicU64,
+    model: String,
     input_dim: usize,
     classes: usize,
     max_sessions: usize,
@@ -164,6 +165,7 @@ impl ServingEngine {
             Kernels::for_kind(cfg.kernels)?;
         }
         let backend = cfg.backend;
+        let model = cfg.model.clone();
         let cfg_max_sessions = cfg.max_sessions;
         let n_workers = cfg.workers.max(1);
 
@@ -211,6 +213,7 @@ impl ServingEngine {
             metrics,
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(0),
+            model,
             input_dim,
             classes,
             max_sessions: cfg_max_sessions,
@@ -218,6 +221,11 @@ impl ServingEngine {
             draining,
             faults,
         })
+    }
+
+    /// The manifest model name this pool serves (`ServerConfig::model`).
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
     /// Model input dimension (the required pixel payload length).

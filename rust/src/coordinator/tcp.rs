@@ -1,11 +1,13 @@
 //! Network front end: the TCP server speaking the [`super::wire`] frames.
 //!
-//! [`TcpFrontend::bind`] attaches a listener to a running
-//! [`ServingEngine`]. Each accepted connection gets a *reader* thread
-//! (frame decode + submit into the engine's existing ingest paths) and a
-//! *writer* thread (flushes responses in request order — the protocol is
-//! pipelined, so a connection may have any number of requests in
-//! flight). The listener itself is nonblocking and polls a drain flag.
+//! [`TcpFrontend::bind_registry`] attaches a listener to a
+//! [`ModelRegistry`] (and [`TcpFrontend::bind`] wraps a single running
+//! [`ServingEngine`] in a fixed registry). Each accepted connection gets
+//! a *reader* thread (frame decode + submit into the engine's existing
+//! ingest paths) and a *writer* thread (flushes responses in request
+//! order — the protocol is pipelined, so a connection may have any
+//! number of requests in flight). The listener itself is nonblocking and
+//! polls a drain flag.
 //!
 //! Error handling is the point: every malformed input becomes a typed
 //! `Error` frame ([`super::wire::ErrorCode`]), never a panic and never a
@@ -19,13 +21,21 @@
 //! frames carry the optional deadline budget; version-1 clients keep
 //! working unchanged.
 //!
+//! **Multi-tenancy** (version-3 frames): one-shots resolve their
+//! model-id against the registry per request; stream sessions pin the
+//! model's *version at open* — the connection holds the
+//! [`ModelVersion`] `Arc`, so a hot swap never moves (or loses) a live
+//! session, and a retiring version drains only after its last reply
+//! flushed. Admin frames (load / unload / list / swap) operate the
+//! registry over the same connection grammar.
+//!
 //! **Graceful drain** (`Drain` frame, [`TcpFrontend::drain`], or a
 //! SIGTERM via [`install_term_handler`]): the listener stops accepting,
 //! readers stop at their next frame boundary, writers flush every
 //! response already owed, and [`TcpFrontend::shutdown`] joins the lot —
 //! no in-flight reply is dropped.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,11 +43,13 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::registry::{AdminError, ModelRegistry, ModelVersion};
 use super::request::{InferResponse, ServeFault};
 use super::server::ServingEngine;
 use super::session::StreamResponse;
 use super::wire::{
-    self, ErrorCode, Request, Response, WireError, WireInfo, WireMetrics, HEADER_LEN,
+    self, ErrorCode, Request, Response, WireError, WireInfo, WireMetrics, WireModelInfo,
+    HEADER_LEN,
 };
 use crate::Result;
 
@@ -48,13 +60,13 @@ const POLL: Duration = Duration::from_millis(50);
 /// the connection is abandoned (a stalled client must not block drain).
 const DRAIN_GRACE: Duration = Duration::from_secs(2);
 
-/// The TCP front end bound to a running engine.
+/// The TCP front end bound to a model registry.
 ///
 /// Dropping without [`shutdown`](Self::shutdown) detaches the threads
 /// (they exit once their sockets close); call `shutdown` for the
 /// graceful flush-and-join.
 pub struct TcpFrontend {
-    engine: Arc<ServingEngine>,
+    registry: Arc<ModelRegistry>,
     addr: SocketAddr,
     draining: Arc<AtomicBool>,
     listener: Option<JoinHandle<()>>,
@@ -62,9 +74,17 @@ pub struct TcpFrontend {
 }
 
 impl TcpFrontend {
-    /// Bind `addr` (e.g. `127.0.0.1:7317`; port 0 picks a free port) and
-    /// start accepting wire-protocol connections against `engine`.
+    /// Bind `addr` and serve a single running `engine`: wraps it in a
+    /// fixed single-model [`ModelRegistry`] (admin load/swap answer a
+    /// typed error). The historical entry point — most tests and the
+    /// synthetic `serve` path use it.
     pub fn bind(engine: Arc<ServingEngine>, addr: &str) -> Result<Self> {
+        Self::bind_registry(Arc::new(ModelRegistry::single(engine)), addr)
+    }
+
+    /// Bind `addr` (e.g. `127.0.0.1:7317`; port 0 picks a free port) and
+    /// start accepting wire-protocol connections against `registry`.
+    pub fn bind_registry(registry: Arc<ModelRegistry>, addr: &str) -> Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
         listener.set_nonblocking(true)?;
@@ -72,17 +92,17 @@ impl TcpFrontend {
         let draining = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
-        let accept_engine = Arc::clone(&engine);
+        let accept_registry = Arc::clone(&registry);
         let accept_drain = Arc::clone(&draining);
         let accept_conns = Arc::clone(&conns);
         let handle = std::thread::Builder::new()
             .name("lspine-accept".into())
             .spawn(move || {
-                accept_loop(listener, accept_engine, accept_drain, accept_conns)
+                accept_loop(listener, accept_registry, accept_drain, accept_conns)
             })?;
 
         Ok(Self {
-            engine,
+            registry,
             addr: local,
             draining,
             listener: Some(handle),
@@ -125,15 +145,27 @@ impl TcpFrontend {
         Ok(())
     }
 
-    /// The engine this front end serves (e.g. for a final metrics read).
-    pub fn engine(&self) -> &Arc<ServingEngine> {
-        &self.engine
+    /// The engine currently published for the **default model** (e.g.
+    /// for a final metrics read). Returned by value: a hot swap can
+    /// republish at any moment, so callers get a stable snapshot.
+    pub fn engine(&self) -> Arc<ServingEngine> {
+        Arc::clone(
+            self.registry
+                .resolve(None)
+                .expect("the default model is never unloadable")
+                .engine(),
+        )
+    }
+
+    /// The registry this front end serves.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 }
 
 fn accept_loop(
     listener: TcpListener,
-    engine: Arc<ServingEngine>,
+    registry: Arc<ModelRegistry>,
     draining: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 ) {
@@ -146,15 +178,15 @@ fn accept_loop(
                 // injected connection reset (fault plan `reset@N`): the
                 // accepted socket closes before a single frame is read —
                 // the client sees EOF, the server stays healthy
-                if engine.faults().reset_accept() {
+                if registry.faults().reset_accept() {
                     drop(stream);
                     continue;
                 }
-                let eng = Arc::clone(&engine);
+                let reg = Arc::clone(&registry);
                 let drain = Arc::clone(&draining);
                 let spawned = std::thread::Builder::new()
                     .name("lspine-conn".into())
-                    .spawn(move || serve_conn(stream, eng, drain));
+                    .spawn(move || serve_conn(stream, reg, drain));
                 // a spawn failure (out of threads) just drops the socket
                 if let Ok(h) = spawned {
                     super::lock(&conns).push(h);
@@ -168,19 +200,22 @@ fn accept_loop(
     }
 }
 
-/// What the reader hands the writer, in request order.
+/// What the reader hands the writer, in request order. Pending replies
+/// carry the [`ModelVersion`] `Arc` that produced them, so a retiring
+/// version cannot drain before its last owed reply flushed.
 enum Out {
     /// An already-encoded frame (acks, infos, typed errors).
     Frame(Vec<u8>),
-    /// A pending one-shot reply: `(tag, engine channel)`.
-    Infer(u64, mpsc::Receiver<InferResponse>),
-    /// A pending stream-window reply: `(tag, session, engine channel)`.
-    Stream(u64, u64, mpsc::Receiver<StreamResponse>),
+    /// A pending one-shot reply: `(tag, engine channel, version pin)`.
+    Infer(u64, mpsc::Receiver<InferResponse>, Arc<ModelVersion>),
+    /// A pending stream-window reply: `(tag, session, engine channel,
+    /// version pin)`.
+    Stream(u64, u64, mpsc::Receiver<StreamResponse>, Arc<ModelVersion>),
 }
 
 /// One connection: spawn the writer, run the reader inline, then join
 /// the writer (which flushes everything the reader submitted).
-fn serve_conn(stream: TcpStream, engine: Arc<ServingEngine>, draining: Arc<AtomicBool>) {
+fn serve_conn(stream: TcpStream, registry: Arc<ModelRegistry>, draining: Arc<AtomicBool>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(POLL));
     let write_half = match stream.try_clone() {
@@ -195,9 +230,11 @@ fn serve_conn(stream: TcpStream, engine: Arc<ServingEngine>, draining: Arc<Atomi
         Ok(w) => w,
         Err(_) => return,
     };
-    reader_loop(stream, &engine, &draining, &tx);
+    reader_loop(stream, &registry, &draining, &tx);
     drop(tx); // writer drains the queue, flushes, closes the socket
     let _ = writer.join();
+    // replies flushed; retiring versions this connection pinned can go
+    registry.reap();
 }
 
 /// Flush responses in request order. Blocking on each engine channel in
@@ -214,7 +251,9 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
     while let Ok(out) = rx.recv() {
         let frame = match out {
             Out::Frame(f) => f,
-            Out::Infer(tag, ch) => match ch.recv() {
+            // the `_pin` bindings hold the reply's ModelVersion Arc
+            // until the frame is on the socket
+            Out::Infer(tag, ch, _pin) => match ch.recv() {
                 Ok(resp) if resp.fault.is_some() => fault_frame(tag, resp.fault, false),
                 Ok(resp) if resp.rejected => err_frame(
                     tag,
@@ -231,7 +270,7 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
                 ),
                 Err(_) => err_frame(tag, ErrorCode::Internal, "engine reply lost"),
             },
-            Out::Stream(tag, session, ch) => match ch.recv() {
+            Out::Stream(tag, session, ch, _pin) => match ch.recv() {
                 // a faulted window never executed and never advanced
                 // session state, so it must not touch `windows_sent`
                 Ok(resp) if resp.fault.is_some() => fault_frame(tag, resp.fault, true),
@@ -285,6 +324,18 @@ fn err_frame(tag: u64, code: ErrorCode, message: impl Into<String>) -> Vec<u8> {
     wire::encode_response(tag, &Response::Error { code, message: message.into() })
 }
 
+/// Map a typed [`AdminError`] to its wire error frame (codes 16–18, or
+/// `Internal` for a build failure).
+fn admin_err_frame(tag: u64, err: AdminError) -> Vec<u8> {
+    let code = match err {
+        AdminError::UnknownModel(_) => ErrorCode::UnknownModel,
+        AdminError::Busy(_) => ErrorCode::ModelBusy,
+        AdminError::Quota(_) => ErrorCode::QuotaExceeded,
+        AdminError::Failed(_) => ErrorCode::Internal,
+    };
+    err_frame(tag, code, err.to_string())
+}
+
 /// Map a typed [`ServeFault`] reply to its error frame. `stream` only
 /// changes the wording (whether session state is mentioned).
 fn fault_frame(tag: u64, fault: Option<ServeFault>, stream: bool) -> Vec<u8> {
@@ -329,14 +380,16 @@ enum Frame {
 /// Decode-and-dispatch loop of one connection.
 fn reader_loop(
     mut stream: TcpStream,
-    engine: &Arc<ServingEngine>,
+    registry: &Arc<ModelRegistry>,
     draining: &AtomicBool,
     tx: &mpsc::Sender<Out>,
 ) {
-    // sessions this connection opened (and has not closed): windows are
-    // only accepted for these, so a typo'd or foreign id is a typed
-    // UnknownSession error instead of a silent fresh session
-    let mut opened: HashSet<u64> = HashSet::new();
+    // sessions this connection opened (and has not closed), each pinned
+    // to the ModelVersion published at open time: windows are only
+    // accepted for these (a typo'd or foreign id is a typed
+    // UnknownSession error instead of a silent fresh session), and a hot
+    // swap never rebinds them — the pin IS the zero-downtime contract
+    let mut opened: HashMap<u64, Arc<ModelVersion>> = HashMap::new();
     loop {
         let (header, body) = match read_frame(&mut stream, draining) {
             Frame::Ok(h, b) => (h, b),
@@ -362,38 +415,51 @@ fn reader_loop(
         // the wire budget is relative to receipt; 0 means no deadline
         let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
         let out = match req {
-            Request::OneShot { precision, pixels } => {
-                match engine.submit_with_deadline(&pixels, precision, deadline) {
-                    Ok(ch) => Out::Infer(tag, ch),
-                    Err(e) => Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string())),
+            Request::OneShot { model, precision, pixels } => {
+                // one-shots resolve per request: after a swap the very
+                // next request runs on the new version
+                match registry.resolve(model.as_deref()) {
+                    Ok(version) => {
+                        match version.engine().submit_with_deadline(&pixels, precision, deadline)
+                        {
+                            Ok(ch) => Out::Infer(tag, ch, version),
+                            Err(e) => {
+                                Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
+                            }
+                        }
+                    }
+                    Err(e) => Out::Frame(admin_err_frame(tag, e)),
                 }
             }
-            Request::StreamOpen => {
-                let session = engine.open_stream();
-                opened.insert(session);
-                Out::Frame(wire::encode_response(tag, &Response::StreamOpened { session }))
-            }
+            Request::StreamOpen { model } => match registry.open_stream(model.as_deref()) {
+                Ok((session, version)) => {
+                    opened.insert(session, version);
+                    Out::Frame(wire::encode_response(tag, &Response::StreamOpened { session }))
+                }
+                Err(e) => Out::Frame(admin_err_frame(tag, e)),
+            },
             Request::StreamWindow { session, steps, precision, encoder, pixels } => {
-                if !opened.contains(&session) {
-                    Out::Frame(err_frame(
+                match opened.get(&session) {
+                    None => Out::Frame(err_frame(
                         tag,
                         ErrorCode::UnknownSession,
                         format!("session {session} was not opened on this connection"),
-                    ))
-                } else {
-                    match engine.stream_window_with_deadline(
-                        session, &pixels, steps, precision, encoder, deadline,
-                    ) {
-                        Ok(ch) => Out::Stream(tag, session, ch),
-                        Err(e) => {
-                            Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
+                    )),
+                    Some(version) => {
+                        match version.engine().stream_window_with_deadline(
+                            session, &pixels, steps, precision, encoder, deadline,
+                        ) {
+                            Ok(ch) => Out::Stream(tag, session, ch, Arc::clone(version)),
+                            Err(e) => {
+                                Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
+                            }
                         }
                     }
                 }
             }
             Request::StreamClose { session } => {
-                if opened.remove(&session) {
-                    let _ = engine.close_stream(session);
+                if let Some(version) = opened.remove(&session) {
+                    registry.close_stream(session, &version);
                     Out::Frame(wire::encode_response(tag, &Response::Closed { session }))
                 } else {
                     Out::Frame(err_frame(
@@ -404,7 +470,7 @@ fn reader_loop(
                 }
             }
             Request::Metrics => {
-                let m = engine.metrics();
+                let m = registry.metrics();
                 Out::Frame(wire::encode_response(
                     tag,
                     &Response::Metrics(WireMetrics {
@@ -422,15 +488,23 @@ fn reader_loop(
                     }),
                 ))
             }
-            Request::Info => Out::Frame(wire::encode_response(
-                tag,
-                &Response::Info(WireInfo {
-                    input_dim: engine.input_dim() as u32,
-                    classes: engine.classes() as u32,
-                    workers: engine.workers() as u32,
-                    max_sessions: engine.max_sessions() as u32,
-                }),
-            )),
+            Request::Info => match registry.resolve(None) {
+                // Info describes the default model (v1/v2 clients have
+                // no other addressable model)
+                Ok(version) => {
+                    let engine = version.engine();
+                    Out::Frame(wire::encode_response(
+                        tag,
+                        &Response::Info(WireInfo {
+                            input_dim: engine.input_dim() as u32,
+                            classes: engine.classes() as u32,
+                            workers: engine.workers() as u32,
+                            max_sessions: engine.max_sessions() as u32,
+                        }),
+                    ))
+                }
+                Err(e) => Out::Frame(admin_err_frame(tag, e)),
+            },
             Request::Drain => {
                 // ack first, then flip the flag: the ack is owed before
                 // draining is observable anywhere else
@@ -438,12 +512,46 @@ fn reader_loop(
                 draining.store(true, Ordering::SeqCst);
                 break;
             }
+            Request::AdminLoad { model } => match registry.load(&model) {
+                Ok(version) => Out::Frame(wire::encode_response(
+                    tag,
+                    &Response::AdminLoaded { model, version: version.version() },
+                )),
+                Err(e) => Out::Frame(admin_err_frame(tag, e)),
+            },
+            Request::AdminUnload { model } => match registry.unload(&model) {
+                Ok(()) => {
+                    Out::Frame(wire::encode_response(tag, &Response::AdminUnloaded { model }))
+                }
+                Err(e) => Out::Frame(admin_err_frame(tag, e)),
+            },
+            Request::AdminList => {
+                let models = registry
+                    .list()
+                    .into_iter()
+                    .map(|s| WireModelInfo {
+                        name: s.name,
+                        version: s.version,
+                        sessions: s.sessions as u32,
+                        default: s.default,
+                    })
+                    .collect();
+                Out::Frame(wire::encode_response(tag, &Response::AdminList(models)))
+            }
+            Request::AdminSwap { model } => match registry.swap(&model) {
+                Ok(version) => Out::Frame(wire::encode_response(
+                    tag,
+                    &Response::AdminSwapped { model, version: version.version() },
+                )),
+                Err(e) => Out::Frame(admin_err_frame(tag, e)),
+            },
         };
         let _ = tx.send(out);
     }
-    // the connection's open sessions die with it (frees resident state)
-    for session in opened {
-        let _ = engine.close_stream(session);
+    // the connection's open sessions die with it (frees resident state
+    // and releases each session's version pin)
+    for (session, version) in opened {
+        registry.close_stream(session, &version);
     }
 }
 

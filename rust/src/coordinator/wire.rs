@@ -13,7 +13,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic      b"LSPN"
-//! 4       1     version    1
+//! 4       1     version    1, 2 (deadline) or 3 (model-addressed)
 //! 5       1     type       FrameType discriminant
 //! 6       2     reserved   0 (ignored on read)
 //! 8       8     tag        caller correlation id, echoed in responses
@@ -38,6 +38,17 @@ pub const VERSION: u8 = 1;
 /// `deadline_ms` field (0 = no deadline). Version-1 frames parse
 /// byte-identically — old clients never see the field.
 pub const VERSION_DEADLINE: u8 = 2;
+/// Model-addressed protocol version: everything in [`VERSION_DEADLINE`]
+/// plus multi-tenant addressing. `OneShot` bodies gain a length-prefixed
+/// model-id between the deadline and the precision byte, `StreamOpen`
+/// bodies gain the same model-id field (a zero length means "the default
+/// model"), and the Admin frame family (load / unload / list / swap)
+/// becomes decodable. `StreamWindow` keeps its version-2 layout — the
+/// model is bound to the session at open, not per window. Version-1/2
+/// frames stay byte-frozen and route to the default model.
+pub const VERSION_MODEL: u8 = 3;
+/// Longest model-id the wire can carry (a one-byte length prefix).
+pub const MAX_MODEL_ID: usize = 255;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Hard cap on a declared body length; larger declarations are rejected
@@ -63,6 +74,15 @@ pub enum FrameType {
     Info = 0x06,
     /// Ask the server to drain gracefully (acked before draining).
     Drain = 0x07,
+    /// Load a model into the registry (version-3 frames only).
+    AdminLoad = 0x08,
+    /// Unload an idle model from the registry (version-3 frames only).
+    AdminUnload = 0x09,
+    /// List registry membership (version-3 frames only).
+    AdminList = 0x0A,
+    /// Hot-swap a model to a freshly loaded artifact version
+    /// (version-3 frames only).
+    AdminSwap = 0x0B,
     /// Response to [`FrameType::OneShot`].
     RespOneShot = 0x81,
     /// Response to [`FrameType::StreamOpen`].
@@ -77,6 +97,14 @@ pub enum FrameType {
     RespInfo = 0x86,
     /// Response to [`FrameType::Drain`].
     RespDrainAck = 0x87,
+    /// Response to [`FrameType::AdminLoad`].
+    RespAdminLoaded = 0x88,
+    /// Response to [`FrameType::AdminUnload`].
+    RespAdminUnloaded = 0x89,
+    /// Response to [`FrameType::AdminList`].
+    RespAdminList = 0x8A,
+    /// Response to [`FrameType::AdminSwap`].
+    RespAdminSwapped = 0x8B,
     /// Typed error response (any request may earn one).
     RespError = 0xFF,
 }
@@ -128,6 +156,16 @@ pub enum ErrorCode {
     /// work was shed without executing. Retry with backoff or a larger
     /// deadline.
     DeadlineExceeded = 15,
+    /// The addressed model-id is not loaded in the registry. Load it via
+    /// an `AdminLoad` frame or fix the client's model list.
+    UnknownModel = 16,
+    /// The registry refused an admin operation because the model still
+    /// has open streaming sessions (e.g. unload-while-draining) or is
+    /// the default model. Retry once sessions close.
+    ModelBusy = 17,
+    /// The model's per-tenant session quota is exhausted; opening more
+    /// streams must wait for existing sessions to close.
+    QuotaExceeded = 18,
 }
 
 impl ErrorCode {
@@ -149,6 +187,9 @@ impl ErrorCode {
             13 => ErrorCode::Draining,
             14 => ErrorCode::WorkerRestarted,
             15 => ErrorCode::DeadlineExceeded,
+            16 => ErrorCode::UnknownModel,
+            17 => ErrorCode::ModelBusy,
+            18 => ErrorCode::QuotaExceeded,
             _ => return None,
         })
     }
@@ -192,8 +233,9 @@ impl std::error::Error for WireError {}
 /// A decoded frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
-    /// Negotiated protocol version ([`VERSION`] or [`VERSION_DEADLINE`]);
-    /// selects the body grammar in [`decode_request_versioned`].
+    /// Negotiated protocol version ([`VERSION`], [`VERSION_DEADLINE`] or
+    /// [`VERSION_MODEL`]); selects the body grammar in
+    /// [`decode_request_versioned`].
     pub version: u8,
     /// Raw frame-type byte (validated during body decode).
     pub kind: u8,
@@ -208,13 +250,21 @@ pub struct Header {
 pub enum Request {
     /// One-shot inference over `pixels`.
     OneShot {
+        /// Addressed model (`None` = the registry's default model).
+        /// Only expressible on the wire in version-3 frames; version-1/2
+        /// encoders ignore it.
+        model: Option<String>,
         /// Execution precision.
         precision: Precision,
         /// u8 pixels, encoder domain (length = model input_dim).
         pixels: Vec<u8>,
     },
     /// Allocate a fresh stream-session id.
-    StreamOpen,
+    StreamOpen {
+        /// Model the session binds to for its whole lifetime (`None` =
+        /// the registry's default model). Version-3 frames only.
+        model: Option<String>,
+    },
     /// One frame-window of stream `session`.
     StreamWindow {
         /// Session id from a prior `StreamOpened` response.
@@ -239,6 +289,24 @@ pub enum Request {
     Info,
     /// Request a graceful drain.
     Drain,
+    /// Load `model` into the registry (idempotent; version-3 only).
+    AdminLoad {
+        /// Manifest model name to load.
+        model: String,
+    },
+    /// Unload an idle `model` from the registry (version-3 only).
+    AdminUnload {
+        /// Registry model name to unload.
+        model: String,
+    },
+    /// List registry membership (version-3 only).
+    AdminList,
+    /// Hot-swap `model` to a freshly loaded artifact version
+    /// (version-3 only).
+    AdminSwap {
+        /// Registry model name to reload and swap.
+        model: String,
+    },
 }
 
 /// Server metrics snapshot as carried on the wire.
@@ -279,6 +347,20 @@ pub struct WireInfo {
     pub workers: u32,
     /// Pool-wide resident stream-session cap.
     pub max_sessions: u32,
+}
+
+/// One registry entry as carried in an `AdminList` response.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct WireModelInfo {
+    /// Registry model name (manifest key).
+    pub name: String,
+    /// Monotonic artifact version published for this model (bumps on
+    /// every load/swap; registry-local, not an artifact property).
+    pub version: u64,
+    /// Streaming sessions currently open against this version.
+    pub sessions: u32,
+    /// Whether this model answers requests that carry no model-id.
+    pub default: bool,
 }
 
 /// A decoded response frame body.
@@ -324,6 +406,27 @@ pub enum Response {
     Info(WireInfo),
     /// Acknowledges a drain request (sent before draining begins).
     DrainAck,
+    /// A model finished loading (or was already live).
+    AdminLoaded {
+        /// The loaded model's name.
+        model: String,
+        /// The artifact version now serving that name.
+        version: u64,
+    },
+    /// A model was unloaded from the registry.
+    AdminUnloaded {
+        /// The unloaded model's name.
+        model: String,
+    },
+    /// Registry membership snapshot.
+    AdminList(Vec<WireModelInfo>),
+    /// A model was hot-swapped to a fresh artifact version.
+    AdminSwapped {
+        /// The swapped model's name.
+        model: String,
+        /// The new artifact version now answering fresh requests.
+        version: u64,
+    },
     /// Typed error (see [`ErrorCode`]).
     Error {
         /// Typed error code.
@@ -385,15 +488,28 @@ fn encoder_from_bytes(kind: u8, param: u32) -> Result<EncoderKind, WireError> {
     }
 }
 
+fn put_model_id(body: &mut Vec<u8>, model: &str) {
+    assert!(
+        model.len() <= MAX_MODEL_ID,
+        "model id longer than MAX_MODEL_ID ({} > {MAX_MODEL_ID})",
+        model.len()
+    );
+    body.push(model.len() as u8);
+    body.extend_from_slice(model.as_bytes());
+}
+
+/// The version-1 body grammar. Model addressing is a version-3-only
+/// concept, so `model` fields are deliberately not serialized here —
+/// [`encode_request_v3`] is the encoder that carries them.
 fn request_body(req: &Request) -> (FrameType, Vec<u8>) {
     let mut body = Vec::new();
     let kind = match req {
-        Request::OneShot { precision, pixels } => {
+        Request::OneShot { model: _, precision, pixels } => {
             body.push(precision_byte(*precision));
             body.extend_from_slice(pixels);
             FrameType::OneShot
         }
-        Request::StreamOpen => FrameType::StreamOpen,
+        Request::StreamOpen { model: _ } => FrameType::StreamOpen,
         Request::StreamWindow { session, steps, precision, encoder, pixels } => {
             body.extend_from_slice(&session.to_le_bytes());
             body.extend_from_slice(&steps.to_le_bytes());
@@ -411,6 +527,19 @@ fn request_body(req: &Request) -> (FrameType, Vec<u8>) {
         Request::Metrics => FrameType::Metrics,
         Request::Info => FrameType::Info,
         Request::Drain => FrameType::Drain,
+        Request::AdminLoad { model } => {
+            put_model_id(&mut body, model);
+            FrameType::AdminLoad
+        }
+        Request::AdminUnload { model } => {
+            put_model_id(&mut body, model);
+            FrameType::AdminUnload
+        }
+        Request::AdminList => FrameType::AdminList,
+        Request::AdminSwap { model } => {
+            put_model_id(&mut body, model);
+            FrameType::AdminSwap
+        }
     };
     (kind, body)
 }
@@ -441,6 +570,51 @@ pub fn encode_request_deadline(tag: u64, req: &Request, deadline_ms: u32) -> Vec
     if prefixed {
         out.extend_from_slice(&deadline_ms.to_le_bytes());
     }
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode one version-3 (model-addressed) request frame.
+///
+/// Body layouts relative to version 2:
+/// * `OneShot`: `u32 deadline_ms | u8 model_len | model | u8 precision |
+///   pixels` — the model-id sits between the deadline and the v1 body.
+/// * `StreamOpen`: `u8 model_len | model` (length 0 = default model).
+/// * `StreamWindow`: unchanged from version 2 (`u32 deadline_ms` prefix)
+///   — the model was bound at open, re-sending it per window would only
+///   invite disagreement.
+/// * `AdminLoad`/`AdminUnload`/`AdminSwap`: `u8 model_len | model`;
+///   `AdminList`: empty body. These frame types only decode under
+///   version 3 — a version-1/2 header earns [`ErrorCode::BadType`],
+///   keeping the old grammars byte-frozen.
+/// * everything else: version-1 body layout.
+pub fn encode_request_v3(tag: u64, req: &Request, deadline_ms: u32) -> Vec<u8> {
+    let (kind, body) = match req {
+        Request::OneShot { model, precision, pixels } => {
+            let mut body = Vec::with_capacity(pixels.len() + 16);
+            body.extend_from_slice(&deadline_ms.to_le_bytes());
+            put_model_id(&mut body, model.as_deref().unwrap_or(""));
+            body.push(precision_byte(*precision));
+            body.extend_from_slice(pixels);
+            (FrameType::OneShot, body)
+        }
+        Request::StreamOpen { model } => {
+            let mut body = Vec::new();
+            put_model_id(&mut body, model.as_deref().unwrap_or(""));
+            (FrameType::StreamOpen, body)
+        }
+        Request::StreamWindow { .. } => {
+            let (kind, v1) = request_body(req);
+            let mut body = Vec::with_capacity(4 + v1.len());
+            body.extend_from_slice(&deadline_ms.to_le_bytes());
+            body.extend_from_slice(&v1);
+            (kind, body)
+        }
+        // admin frames and the rest already carry their v3 body grammar
+        other => request_body(other),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    put_header(&mut out, VERSION_MODEL, kind as u8, tag, body.len());
     out.extend_from_slice(&body);
     out
 }
@@ -503,6 +677,30 @@ pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
             FrameType::RespInfo
         }
         Response::DrainAck => FrameType::RespDrainAck,
+        Response::AdminLoaded { model, version } => {
+            put_model_id(&mut body, model);
+            body.extend_from_slice(&version.to_le_bytes());
+            FrameType::RespAdminLoaded
+        }
+        Response::AdminUnloaded { model } => {
+            put_model_id(&mut body, model);
+            FrameType::RespAdminUnloaded
+        }
+        Response::AdminList(models) => {
+            body.extend_from_slice(&(models.len() as u16).to_le_bytes());
+            for m in models {
+                put_model_id(&mut body, &m.name);
+                body.extend_from_slice(&m.version.to_le_bytes());
+                body.extend_from_slice(&m.sessions.to_le_bytes());
+                body.push(u8::from(m.default));
+            }
+            FrameType::RespAdminList
+        }
+        Response::AdminSwapped { model, version } => {
+            put_model_id(&mut body, model);
+            body.extend_from_slice(&version.to_le_bytes());
+            FrameType::RespAdminSwapped
+        }
         Response::Error { code, message } => {
             body.push(*code as u8);
             body.extend_from_slice(message.as_bytes());
@@ -526,11 +724,12 @@ pub fn decode_header(raw: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         ));
     }
     let version = raw[4];
-    if version != VERSION && version != VERSION_DEADLINE {
+    if version != VERSION && version != VERSION_DEADLINE && version != VERSION_MODEL {
         return Err(WireError::new(
             ErrorCode::BadVersion,
             format!(
-                "protocol version {version} (this build speaks {VERSION} and {VERSION_DEADLINE})"
+                "protocol version {version} (this build speaks {VERSION}, \
+                 {VERSION_DEADLINE} and {VERSION_MODEL})"
             ),
         ));
     }
@@ -592,6 +791,25 @@ impl<'a> Rd<'a> {
         s
     }
 
+    /// A length-prefixed model-id (`u8 len | bytes`); `None` for length 0.
+    fn model_id(&mut self) -> Result<Option<String>, WireError> {
+        let len = self.u8()? as usize;
+        if len == 0 {
+            return Ok(None);
+        }
+        let name = std::str::from_utf8(self.take(len)?).map_err(|_| {
+            WireError::new(ErrorCode::Malformed, "model id is not valid UTF-8")
+        })?;
+        Ok(Some(name.to_string()))
+    }
+
+    /// A model-id that must be present (admin frames address a model).
+    fn required_model_id(&mut self) -> Result<String, WireError> {
+        self.model_id()?.ok_or_else(|| {
+            WireError::new(ErrorCode::Malformed, "admin frame with empty model id")
+        })
+    }
+
     fn done(&self) -> Result<(), WireError> {
         if self.off != self.b.len() {
             return Err(WireError::new(
@@ -614,6 +832,9 @@ pub fn decode_request_versioned(
     kind: u8,
     body: &[u8],
 ) -> Result<(Request, u32), WireError> {
+    if version == VERSION_MODEL {
+        return decode_request_v3(kind, body);
+    }
     let prefixed = version == VERSION_DEADLINE
         && (kind == FrameType::OneShot as u8 || kind == FrameType::StreamWindow as u8);
     if prefixed {
@@ -630,15 +851,53 @@ pub fn decode_request_versioned(
     }
 }
 
+/// Decode a version-3 request body (see [`encode_request_v3`] for the
+/// layouts). Frame types without a v3-specific grammar — including the
+/// Admin family, which only exists under version 3 — defer to the v1/v2
+/// parsing paths.
+fn decode_request_v3(kind: u8, body: &[u8]) -> Result<(Request, u32), WireError> {
+    let mut r = Rd::new(body);
+    let (req, deadline_ms) = match kind {
+        k if k == FrameType::OneShot as u8 => {
+            let deadline_ms = r.u32()?;
+            let model = r.model_id()?;
+            let precision = precision_from_byte(r.u8()?)?;
+            let pixels = r.rest().to_vec();
+            (Request::OneShot { model, precision, pixels }, deadline_ms)
+        }
+        k if k == FrameType::StreamOpen as u8 => {
+            (Request::StreamOpen { model: r.model_id()? }, 0)
+        }
+        k if k == FrameType::StreamWindow as u8 => {
+            // identical to the v2 layout: deadline prefix + v1 body
+            let deadline_ms = r.u32()?;
+            return Ok((decode_request(kind, r.rest())?, deadline_ms));
+        }
+        k if k == FrameType::AdminLoad as u8 => {
+            (Request::AdminLoad { model: r.required_model_id()? }, 0)
+        }
+        k if k == FrameType::AdminUnload as u8 => {
+            (Request::AdminUnload { model: r.required_model_id()? }, 0)
+        }
+        k if k == FrameType::AdminList as u8 => (Request::AdminList, 0),
+        k if k == FrameType::AdminSwap as u8 => {
+            (Request::AdminSwap { model: r.required_model_id()? }, 0)
+        }
+        _ => return Ok((decode_request(kind, body)?, 0)),
+    };
+    r.done()?;
+    Ok((req, deadline_ms))
+}
+
 /// Decode a version-1 request body for header type `kind`.
 pub fn decode_request(kind: u8, body: &[u8]) -> Result<Request, WireError> {
     let mut r = Rd::new(body);
     let req = match kind {
         k if k == FrameType::OneShot as u8 => {
             let precision = precision_from_byte(r.u8()?)?;
-            Request::OneShot { precision, pixels: r.rest().to_vec() }
+            Request::OneShot { model: None, precision, pixels: r.rest().to_vec() }
         }
-        k if k == FrameType::StreamOpen as u8 => Request::StreamOpen,
+        k if k == FrameType::StreamOpen as u8 => Request::StreamOpen { model: None },
         k if k == FrameType::StreamWindow as u8 => {
             let session = r.u64()?;
             let steps = r.u32()?;
@@ -718,6 +977,30 @@ pub fn decode_response(kind: u8, body: &[u8]) -> Result<Response, WireError> {
             max_sessions: r.u32()?,
         }),
         k if k == FrameType::RespDrainAck as u8 => Response::DrainAck,
+        k if k == FrameType::RespAdminLoaded as u8 => Response::AdminLoaded {
+            model: r.required_model_id()?,
+            version: r.u64()?,
+        },
+        k if k == FrameType::RespAdminUnloaded as u8 => Response::AdminUnloaded {
+            model: r.required_model_id()?,
+        },
+        k if k == FrameType::RespAdminList as u8 => {
+            let n = u16::from_le_bytes(r.take(2)?.try_into().unwrap()) as usize;
+            let mut models = Vec::with_capacity(n);
+            for _ in 0..n {
+                models.push(WireModelInfo {
+                    name: r.required_model_id()?,
+                    version: r.u64()?,
+                    sessions: r.u32()?,
+                    default: r.u8()? != 0,
+                });
+            }
+            Response::AdminList(models)
+        }
+        k if k == FrameType::RespAdminSwapped as u8 => Response::AdminSwapped {
+            model: r.required_model_id()?,
+            version: r.u64()?,
+        },
         k if k == FrameType::RespError as u8 => {
             let code_byte = r.u8()?;
             let code = ErrorCode::from_u8(code_byte).ok_or_else(|| {
@@ -764,10 +1047,11 @@ mod tests {
     #[test]
     fn request_roundtrips() {
         roundtrip_request(Request::OneShot {
+            model: None,
             precision: Precision::Int4,
             pixels: vec![1, 2, 3, 255],
         });
-        roundtrip_request(Request::StreamOpen);
+        roundtrip_request(Request::StreamOpen { model: None });
         roundtrip_request(Request::StreamWindow {
             session: u64::MAX,
             steps: 4,
@@ -825,6 +1109,14 @@ mod tests {
             max_sessions: 1024,
         }));
         roundtrip_response(Response::DrainAck);
+        roundtrip_response(Response::AdminLoaded { model: "mlp".into(), version: 2 });
+        roundtrip_response(Response::AdminUnloaded { model: "convnet".into() });
+        roundtrip_response(Response::AdminList(vec![
+            WireModelInfo { name: "convnet".into(), version: 1, sessions: 0, default: false },
+            WireModelInfo { name: "mlp".into(), version: 3, sessions: 12, default: true },
+        ]));
+        roundtrip_response(Response::AdminList(Vec::new()));
+        roundtrip_response(Response::AdminSwapped { model: "mlp".into(), version: 4 });
         roundtrip_response(Response::Error {
             code: ErrorCode::Rejected,
             message: "queue over capacity".into(),
@@ -927,12 +1219,15 @@ mod tests {
             (ErrorCode::Draining, 13),
             (ErrorCode::WorkerRestarted, 14),
             (ErrorCode::DeadlineExceeded, 15),
+            (ErrorCode::UnknownModel, 16),
+            (ErrorCode::ModelBusy, 17),
+            (ErrorCode::QuotaExceeded, 18),
         ] {
             assert_eq!(code as u8, byte);
             assert_eq!(ErrorCode::from_u8(byte), Some(code));
         }
         assert_eq!(ErrorCode::from_u8(0), None);
-        assert_eq!(ErrorCode::from_u8(16), None);
+        assert_eq!(ErrorCode::from_u8(19), None);
         // connection-fatal vs recoverable partition
         assert!(!ErrorCode::BadMagic.recoverable());
         assert!(!ErrorCode::BadVersion.recoverable());
@@ -943,6 +1238,10 @@ mod tests {
         // the fault-layer codes are retryable, so the connection survives
         assert!(ErrorCode::WorkerRestarted.recoverable());
         assert!(ErrorCode::DeadlineExceeded.recoverable());
+        // registry codes are per-request conditions, never framing faults
+        assert!(ErrorCode::UnknownModel.recoverable());
+        assert!(ErrorCode::ModelBusy.recoverable());
+        assert!(ErrorCode::QuotaExceeded.recoverable());
     }
 
     #[test]
@@ -951,7 +1250,7 @@ mod tests {
         // change shape, deadline support or not (old-client compat)
         let raw = encode_request(
             0x1122_3344_5566_7788,
-            &Request::OneShot { precision: Precision::Int4, pixels: vec![9, 8, 7] },
+            &Request::OneShot { model: None, precision: Precision::Int4, pixels: vec![9, 8, 7] },
         );
         #[rustfmt::skip]
         let expect: Vec<u8> = vec![
@@ -976,7 +1275,8 @@ mod tests {
 
     #[test]
     fn deadline_encoding_roundtrips() {
-        let one = Request::OneShot { precision: Precision::Int8, pixels: vec![1, 2, 3, 4] };
+        let one =
+            Request::OneShot { model: None, precision: Precision::Int8, pixels: vec![1, 2, 3, 4] };
         let win = Request::StreamWindow {
             session: 5,
             steps: 4,
@@ -997,7 +1297,7 @@ mod tests {
             assert_eq!(&raw[HEADER_LEN + 4..], &v1[HEADER_LEN..]);
         }
         // non-deadline kinds keep their v1 body layout under version 2
-        for req in [Request::StreamOpen, Request::Metrics, Request::Drain] {
+        for req in [Request::StreamOpen { model: None }, Request::Metrics, Request::Drain] {
             let raw = encode_request_deadline(1, &req, 777);
             let v1 = encode_request(1, &req);
             assert_eq!(&raw[HEADER_LEN..], &v1[HEADER_LEN..]);
@@ -1017,7 +1317,152 @@ mod tests {
         // unknown versions are rejected at the header
         let mut h: [u8; HEADER_LEN] =
             encode_request(0, &Request::Metrics)[..HEADER_LEN].try_into().unwrap();
-        h[4] = 3;
+        h[4] = 9;
         assert_eq!(decode_header(&h).unwrap_err().code, ErrorCode::BadVersion);
+    }
+
+    #[test]
+    fn v3_request_encoding_is_pinned() {
+        // frozen bytes: the v3 OneShot grammar is wire ABI from day one
+        let raw = encode_request_v3(
+            0x0102_0304_0506_0708,
+            &Request::OneShot {
+                model: Some("mlp".into()),
+                precision: Precision::Int4,
+                pixels: vec![9, 8, 7],
+            },
+            250,
+        );
+        #[rustfmt::skip]
+        let expect: Vec<u8> = vec![
+            b'L', b'S', b'P', b'N',               // magic
+            3,                                    // version
+            0x01,                                 // type: OneShot
+            0, 0,                                 // reserved
+            0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // tag LE
+            12, 0, 0, 0,                          // body_len
+            250, 0, 0, 0,                         // deadline_ms LE
+            3, b'm', b'l', b'p',                  // model id (len-prefixed)
+            4,                                    // precision byte (int4)
+            9, 8, 7,                              // pixels
+        ];
+        assert_eq!(raw, expect);
+    }
+
+    #[test]
+    fn v3_model_addressing_roundtrips() {
+        let reqs: Vec<(Request, u32)> = vec![
+            (
+                Request::OneShot {
+                    model: Some("convnet".into()),
+                    precision: Precision::Int8,
+                    pixels: vec![1, 2, 3],
+                },
+                500,
+            ),
+            (
+                Request::OneShot { model: None, precision: Precision::Int2, pixels: vec![4] },
+                0,
+            ),
+            (Request::StreamOpen { model: Some("mlp".into()) }, 0),
+            (Request::StreamOpen { model: None }, 0),
+            (
+                Request::StreamWindow {
+                    session: 77,
+                    steps: 4,
+                    precision: Precision::Int4,
+                    encoder: EncoderKind::Rate,
+                    pixels: vec![0; 8],
+                },
+                120,
+            ),
+            (Request::AdminLoad { model: "mlp".into() }, 0),
+            (Request::AdminUnload { model: "convnet".into() }, 0),
+            (Request::AdminList, 0),
+            (Request::AdminSwap { model: "mlp".into() }, 0),
+        ];
+        for (req, ms) in reqs {
+            let raw = encode_request_v3(11, &req, ms);
+            let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+            assert_eq!(hdr.version, VERSION_MODEL);
+            let (back, deadline_ms) =
+                decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(deadline_ms, ms, "deadline for {req:?}");
+        }
+    }
+
+    #[test]
+    fn v3_model_errors_are_typed() {
+        // admin frame types do not exist under v1/v2 headers: BadType,
+        // keeping the old grammars frozen
+        for version in [VERSION, VERSION_DEADLINE] {
+            for kind in [
+                FrameType::AdminLoad,
+                FrameType::AdminUnload,
+                FrameType::AdminList,
+                FrameType::AdminSwap,
+            ] {
+                let err = decode_request_versioned(version, kind as u8, &[3, b'm', b'l', b'p'])
+                    .unwrap_err();
+                assert_eq!(err.code, ErrorCode::BadType, "v{version} {kind:?}");
+            }
+        }
+        // an admin frame must name a model
+        assert_eq!(
+            decode_request_versioned(VERSION_MODEL, FrameType::AdminSwap as u8, &[0])
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // model-id length running past the body is Malformed, not a panic
+        assert_eq!(
+            decode_request_versioned(VERSION_MODEL, FrameType::StreamOpen as u8, &[9, b'm'])
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // non-UTF-8 model ids are Malformed
+        assert_eq!(
+            decode_request_versioned(VERSION_MODEL, FrameType::StreamOpen as u8, &[2, 0xFF, 0xFE])
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // trailing bytes after a v3 StreamOpen body are Malformed
+        assert_eq!(
+            decode_request_versioned(
+                VERSION_MODEL,
+                FrameType::StreamOpen as u8,
+                &[1, b'a', 0xEE]
+            )
+            .unwrap_err()
+            .code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn v3_without_model_matches_v2_semantics() {
+        // a v3 frame with an empty model id routes exactly like v1/v2:
+        // deadline preserved, model resolved to the default
+        let win = Request::StreamWindow {
+            session: 5,
+            steps: 4,
+            precision: Precision::Int2,
+            encoder: EncoderKind::Delta { gain: 2 },
+            pixels: vec![0; 16],
+        };
+        let v3 = encode_request_v3(33, &win, 1000);
+        let v2 = encode_request_deadline(33, &win, 1000);
+        // StreamWindow bodies are byte-identical across v2 and v3
+        assert_eq!(&v3[HEADER_LEN..], &v2[HEADER_LEN..]);
+        let one = Request::OneShot { model: None, precision: Precision::Int8, pixels: vec![7; 4] };
+        let raw = encode_request_v3(1, &one, 0);
+        let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+        let (back, ms) =
+            decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
+        assert_eq!(back, one);
+        assert_eq!(ms, 0);
     }
 }

@@ -3,8 +3,12 @@
 //! Subcommands:
 //!   forge     — generate hermetic synthetic artifacts (no python needed)
 //!   serve     — run the serving engine on synthetic request traffic, or
-//!               (--listen) attach the TCP wire-protocol front end
+//!               (--listen) attach the TCP wire-protocol front end; with
+//!               --models DIR every manifest model is served from a
+//!               multi-tenant registry with hot swap
 //!   loadgen   — open-loop load generator against a listening server
+//!   admin     — registry administration over the wire protocol
+//!               (load / swap / unload / list models, drain)
 //!   stream    — replay a streaming (LSPS) dataset through stateful
 //!               sessions with persistent membrane state
 //!   eval      — evaluate a quantized artifact on the test set
@@ -19,25 +23,30 @@
 //!   lspine report --all
 //!   lspine serve --model mlp --bits 4 --requests 256 --concurrency 8
 //!   lspine serve --backend native --listen 127.0.0.1:7317
+//!   lspine serve --models artifacts --listen 127.0.0.1:7317
 //!   lspine loadgen --connect 127.0.0.1:7317 --sessions 256 --drain
+//!   lspine loadgen --connect 127.0.0.1:7317 --model mlp,convnet
+//!   lspine admin --connect 127.0.0.1:7317 --swap mlp
 //!   lspine stream --model mlp --bits 4 --steps 4 --workers 2
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lspine::coordinator::{
-    loadgen, tcp, Backend, EncoderKind, FaultPlan, LatencyHistogram, ReqPrecision,
-    ServerConfig, ServingEngine, TcpFrontend,
+    loadgen, tcp, wire, Backend, EncoderKind, FaultPlan, LatencyHistogram,
+    ModelRegistry, RegistryConfig, ReqPrecision, ServerConfig, ServingEngine,
+    TcpFrontend,
 };
 use lspine::model::{ResetPolicy, SnnEngine};
 use lspine::nce::{KernelKind, Kernels};
 use lspine::reports;
 use lspine::runtime::executor::{ExecutorPool, ModelKey};
 use lspine::runtime::ArtifactStore;
+use lspine::util::bench::Table;
 use lspine::util::cli::Args;
 
 const USAGE: &str = "\
-lspine <forge|serve|stream|eval|simulate|report> [options]
+lspine <forge|serve|loadgen|admin|stream|eval|simulate|report> [options]
   common:    --artifacts DIR (default: artifacts)  --model mlp|convnet
              --kernels auto|scalar|wide|avx2|neon (default: auto;
              env LSPINE_KERNELS sets the process default)
@@ -52,11 +61,18 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
              --listen HOST:PORT (serve the TCP wire protocol instead of
              synthetic traffic; --queue N --max-sessions N size admission
              control; SIGTERM or a client Drain frame stops gracefully)
+             --models DIR (serve every model in DIR's manifest from the
+             multi-tenant registry and watch the manifest for membership
+             changes; --model picks the default, else the first entry)
+             --quota-sessions N (per-model open-session cap; default:
+             --max-sessions)
              --faults SPEC (seeded fault injection, e.g.
              \"panic@6,stall@12:100ms,drop@18,reset@2\"; env LSPINE_FAULTS)
   loadgen:   --connect HOST:PORT (default 127.0.0.1:7317)
              --sessions N (default 16)  --windows N/session (default 8)
              --steps N  --bits 2|4|8  --encoder rate|delta[:G]|window:W
+             --model A[,B,...] (address sessions round-robin across
+             models via version-3 frames; default: the server default)
              --rate R (windows/s/session, default 50)
              --arrival constant|burst|heavy-tail  --conns N (default auto)
              --seed N  --drain (stop the server afterwards)
@@ -64,6 +80,9 @@ lspine <forge|serve|stream|eval|simulate|report> [options]
              --deadline-ms MS (per-window budget; 0 = none)
              --retries N (resends on typed retriable errors, default 0)
              --backoff-ms MS (base retry backoff, default 50)
+  admin:     --connect HOST:PORT (default 127.0.0.1:7317), then exactly
+             one of --load MODEL | --swap MODEL | --unload MODEL |
+             --list | --drain;  --timeout-secs S (socket read timeout)
   stream:    --bits 2|4|8  --steps N (timesteps/frame, default 4)
              --sessions N (concurrent streams, default 1)  --workers N
              --policy hold|reset|decay:K (window boundary, default hold)
@@ -92,6 +111,7 @@ fn run() -> lspine::Result<()> {
             "queue=", "max-sessions=", "connect=", "windows=", "rate=",
             "arrival=", "conns=", "retry-secs=", "timeout-secs=", "drain",
             "faults=", "retries=", "backoff-ms=", "deadline-ms=",
+            "models=", "quota-sessions=", "load=", "swap=", "unload=", "list",
             "all", "table1", "table2", "fig4", "fig5", "energy", "cpu-gpu", "help",
         ],
     )?;
@@ -108,6 +128,7 @@ fn run() -> lspine::Result<()> {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "admin" => cmd_admin(&args),
         "stream" => cmd_stream(&args),
         "report" => cmd_report(&args),
         other => anyhow::bail!("unknown command {other:?}"),
@@ -325,11 +346,15 @@ fn cmd_serve(args: &Args) -> lspine::Result<()> {
 }
 
 /// `serve --listen HOST:PORT`: attach the TCP wire-protocol front end
-/// to a serving engine and run until a SIGTERM/SIGINT or a client's
+/// to a model registry and run until a SIGTERM/SIGINT or a client's
 /// `Drain` frame asks for a graceful drain (stop accepting, flush every
-/// in-flight reply, join, print the final metrics).
+/// in-flight reply, join, print the final per-model metrics).
+///
+/// Without `--models` the registry serves the single `--model`; with
+/// `--models DIR` every model in `DIR/manifest.json` is served and a
+/// watcher thread mirrors later manifest membership changes (admin
+/// frames can load/swap/unload models either way).
 fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
-    let model = args.get_or("model", "mlp").to_string();
     // streaming sessions need the native backend, so that is the
     // network-mode default (PJRT still serves one-shot-only deployments)
     let backend = match args.get_or("backend", "native") {
@@ -343,6 +368,7 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
     let kernel_kind = parse_kernel_kind(args)?;
     let queue_capacity = args.get_usize("queue", 1024)?.max(1);
     let max_sessions = args.get_usize("max-sessions", 1024)?.max(1);
+    let quota_sessions = args.get_usize("quota-sessions", 0)?;
     // --faults wins over the LSPINE_FAULTS env var; both default empty
     // (and an empty plan costs nothing on the serving path)
     let faults = Arc::new(match args.get("faults") {
@@ -350,22 +376,58 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
         None => FaultPlan::from_env()?,
     });
 
-    let engine = Arc::new(ServingEngine::start(ServerConfig {
-        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
-        model: model.clone(),
-        backend,
-        workers,
-        kernels: kernel_kind,
-        queue_capacity,
-        max_sessions,
-        faults: Arc::clone(&faults),
-        ..Default::default()
+    // --models DIR doubles as the artifacts directory; the default model
+    // is --model if given, else the manifest's first entry
+    let models_dir = args.get("models").map(str::to_string);
+    let artifacts = match &models_dir {
+        Some(d) => d.clone(),
+        None => args.get_or("artifacts", "artifacts").to_string(),
+    };
+    let model = match (args.get("model"), &models_dir) {
+        (Some(m), _) => m.to_string(),
+        (None, Some(dir)) => ArtifactStore::open(dir)?
+            .manifest()
+            .models
+            .keys()
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("manifest in {dir} lists no models"))?,
+        (None, None) => "mlp".to_string(),
+    };
+
+    let registry = Arc::new(ModelRegistry::start(RegistryConfig {
+        server: ServerConfig {
+            artifacts_dir: artifacts,
+            model,
+            backend,
+            workers,
+            kernels: kernel_kind,
+            queue_capacity,
+            max_sessions,
+            faults: Arc::clone(&faults),
+            ..Default::default()
+        },
+        quota_sessions,
     })?);
-    let frontend = TcpFrontend::bind(Arc::clone(&engine), listen)?;
+    let mut watcher = None;
+    if let Some(dir) = &models_dir {
+        // load is idempotent, so the already-live default just no-ops
+        for name in ArtifactStore::open(dir)?.manifest().models.keys() {
+            registry
+                .load(name)
+                .map_err(|e| anyhow::anyhow!("loading model \"{name}\": {e}"))?;
+        }
+        watcher = Some(spawn_manifest_watcher(Arc::clone(&registry), dir.clone()));
+    }
+
+    let frontend = TcpFrontend::bind_registry(Arc::clone(&registry), listen)?;
     tcp::install_term_handler();
+    let names: Vec<String> = registry.list().into_iter().map(|s| s.name).collect();
     println!(
-        "serve: {model} backend={backend:?} workers={workers} queue={queue_capacity} \
-         max_sessions={max_sessions} listening on {}",
+        "serve: models=[{}] default={} backend={backend:?} workers={workers} \
+         queue={queue_capacity} max_sessions={max_sessions} listening on {}",
+        names.join(","),
+        registry.default_model(),
         frontend.local_addr()
     );
     if !faults.is_empty() {
@@ -376,10 +438,146 @@ fn serve_listen(args: &Args, listen: &str) -> lspine::Result<()> {
     }
     println!("draining: flushing in-flight replies");
     frontend.shutdown()?;
-    let engine = Arc::try_unwrap(engine)
-        .map_err(|_| anyhow::anyhow!("front end still holds the engine"))?;
-    println!("  {}", engine.metrics().summary());
-    engine.shutdown()
+    if let Some((stop, handle)) = watcher {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = handle.join();
+    }
+    let mut table =
+        Table::new(&["model", "version", "requests", "windows", "rejected", "p99_us"]);
+    for (name, version, m) in registry.metrics_by_model() {
+        table.row(&[
+            name,
+            version.to_string(),
+            m.requests.to_string(),
+            m.stream_windows.to_string(),
+            m.rejected.to_string(),
+            m.latency.quantile_us(0.99).to_string(),
+        ]);
+    }
+    print!("{}", table.to_string());
+    println!("  {}", registry.metrics().summary());
+    let registry = Arc::try_unwrap(registry)
+        .map_err(|_| anyhow::anyhow!("front end still holds the registry"))?;
+    registry.shutdown()
+}
+
+/// Poll `dir/manifest.json` (every 500 ms) and mirror membership changes
+/// into the registry: newly listed models load, delisted models unload.
+/// A refused unload (open sessions) is retried when the manifest next
+/// changes — or the operator unloads it over the admin surface.
+fn spawn_manifest_watcher(
+    registry: Arc<ModelRegistry>,
+    dir: String,
+) -> (Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("manifest-watch".into())
+        .spawn(move || {
+            let manifest = std::path::Path::new(&dir).join("manifest.json");
+            let mtime =
+                |p: &std::path::Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+            let mut last = mtime(&manifest);
+            while !flag.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(500));
+                let now = mtime(&manifest);
+                if now == last {
+                    continue;
+                }
+                last = now;
+                let Ok(store) = ArtifactStore::open(&dir) else { continue };
+                let wanted: std::collections::BTreeSet<String> =
+                    store.manifest().models.keys().cloned().collect();
+                drop(store);
+                for status in registry.list() {
+                    if !wanted.contains(&status.name) {
+                        match registry.unload(&status.name) {
+                            Ok(()) => println!("manifest: unloaded model={}", status.name),
+                            Err(e) => eprintln!("manifest: unload {}: {e}", status.name),
+                        }
+                    }
+                }
+                for name in &wanted {
+                    if registry.resolve(Some(name)).is_err() {
+                        match registry.load(name) {
+                            Ok(v) => println!(
+                                "manifest: loaded model={name} version={}",
+                                v.version()
+                            ),
+                            Err(e) => eprintln!("manifest: load {name}: {e}"),
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawn manifest watcher");
+    (stop, handle)
+}
+
+/// `admin`: registry administration over the version-3 wire protocol —
+/// load/swap/unload/list models on a listening server, or ask it to
+/// drain. Prints one stable greppable line per action (the swap-smoke
+/// CI target greps `swapped model=... version=...`).
+fn cmd_admin(args: &Args) -> lspine::Result<()> {
+    use lspine::coordinator::wire::{Request, Response};
+    use std::io::{Read, Write};
+
+    let addr = args.get_or("connect", "127.0.0.1:7317");
+    let req = if let Some(m) = args.get("load") {
+        Request::AdminLoad { model: m.to_string() }
+    } else if let Some(m) = args.get("swap") {
+        Request::AdminSwap { model: m.to_string() }
+    } else if let Some(m) = args.get("unload") {
+        Request::AdminUnload { model: m.to_string() }
+    } else if args.has("list") {
+        Request::AdminList
+    } else if args.has("drain") {
+        Request::Drain
+    } else {
+        anyhow::bail!("pick one of --load M | --swap M | --unload M | --list | --drain");
+    };
+
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(
+        args.get_usize("timeout-secs", 10)? as u64,
+    )))?;
+    conn.write_all(&wire::encode_request_v3(1, &req, 0))?;
+    let mut hdr = [0u8; wire::HEADER_LEN];
+    conn.read_exact(&mut hdr)?;
+    let h = wire::decode_header(&hdr)
+        .map_err(|e| anyhow::anyhow!("bad response header: {}", e.message))?;
+    let mut body = vec![0u8; h.body_len as usize];
+    conn.read_exact(&mut body)?;
+    let resp = wire::decode_response(h.kind, &body)
+        .map_err(|e| anyhow::anyhow!("bad response body: {}", e.message))?;
+
+    match resp {
+        Response::AdminLoaded { model, version } => {
+            println!("loaded model={model} version={version}");
+        }
+        Response::AdminSwapped { model, version } => {
+            println!("swapped model={model} version={version}");
+        }
+        Response::AdminUnloaded { model } => println!("unloaded model={model}"),
+        Response::AdminList(models) => {
+            for m in models {
+                println!(
+                    "model={} version={} sessions={}{}",
+                    m.name,
+                    m.version,
+                    m.sessions,
+                    if m.default { " default" } else { "" }
+                );
+            }
+        }
+        Response::DrainAck => println!("drain acknowledged"),
+        Response::Error { code, message } => {
+            anyhow::bail!("server refused ({code:?}): {message}");
+        }
+        other => anyhow::bail!("unexpected response: {other:?}"),
+    }
+    Ok(())
 }
 
 /// Open-loop load generation against a `serve --listen` server.
@@ -405,10 +603,21 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
         retries: args.get_usize("retries", 0)? as u32,
         backoff: Duration::from_millis(args.get_usize("backoff-ms", 50)?.max(1) as u64),
         deadline_ms: args.get_usize("deadline-ms", 0)? as u32,
+        // --model a,b,c spreads sessions round-robin across models
+        // (version-3 opens); empty = version-1 opens on the default model
+        models: args
+            .get("model")
+            .map(|s| {
+                s.split(',')
+                    .map(|m| m.trim().to_string())
+                    .filter(|m| !m.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default(),
     };
     println!(
         "loadgen: connect={} sessions={} windows={} steps={} {} rate={}/s \
-         arrival={} encoder={}",
+         arrival={} encoder={} models=[{}]",
         cfg.addr,
         cfg.sessions,
         cfg.windows,
@@ -416,7 +625,8 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
         cfg.precision.name(),
         cfg.rate,
         cfg.arrival.name(),
-        cfg.encoder.name()
+        cfg.encoder.name(),
+        if cfg.models.is_empty() { "default".to_string() } else { cfg.models.join(",") }
     );
     let report = loadgen::run(&cfg)?;
     println!("  {}", report.summary());

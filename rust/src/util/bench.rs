@@ -208,10 +208,13 @@ impl Table {
 
     /// Render as aligned plain text (columns padded, never truncated).
     pub fn to_string(&self) -> String {
-        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        // widths in chars, not bytes: `{c:<w$}` pads to a char count, so
+        // byte widths would misalign any row with a multi-byte cell
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
         for row in &self.rows {
             for (w, c) in widths.iter_mut().zip(row) {
-                *w = (*w).max(c.len());
+                *w = (*w).max(c.chars().count());
             }
         }
         let mut out = String::new();
@@ -264,10 +267,11 @@ impl Table {
             .iter()
             .map(|r| r.iter().map(|c| escape(c)).collect())
             .collect();
-        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        // char-count widths, same reason as `to_string`
+        let mut widths: Vec<usize> = header.iter().map(|h| h.chars().count()).collect();
         for row in &rows {
             for (w, c) in widths.iter_mut().zip(row) {
-                *w = (*w).max(c.len());
+                *w = (*w).max(c.chars().count());
             }
         }
         let mut out = String::new();
@@ -344,6 +348,36 @@ mod tests {
         // and all rows keep the 3-pipe structure of a 2-column table
         for l in md.lines() {
             assert_eq!(l.matches('|').count(), 3, "{l}");
+        }
+    }
+
+    #[test]
+    fn table_aligns_long_and_non_ascii_model_ids() {
+        // regression: widths were computed in bytes while `{c:<w$}`
+        // pads in chars, so a model id with multi-byte characters
+        // misaligned every other row of the per-model metrics table;
+        // ids longer than any scheme name must also stay intact
+        let long = "edge-site-42/mlp@v7-retrained-2026-08";
+        let uni = "modèle-café";
+        let mut t = Table::new(&["model", "requests"]);
+        t.row(&[long.into(), "12".into()]);
+        t.row(&[uni.into(), "3".into()]);
+        t.row(&["mlp".into(), "40000".into()]);
+        let txt = t.to_string();
+        let md = t.to_markdown();
+        assert!(txt.contains(long) && md.contains(long));
+        // markdown: every row renders to the same on-screen width
+        let widths: Vec<usize> = md.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged rows: {widths:?}");
+        // text: the second column starts at the same char offset in
+        // every row (widest first cell + 2-space gutter)
+        let w = long.chars().count();
+        for l in txt.lines().filter(|l| !l.starts_with('-')) {
+            let rest: String = l.chars().skip(w + 2).collect();
+            assert!(
+                !rest.is_empty() && !rest.starts_with(' '),
+                "misaligned row: {l:?}"
+            );
         }
     }
 

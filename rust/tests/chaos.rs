@@ -149,7 +149,11 @@ fn worker_panic_is_supervised_over_tcp() {
     for tag in 0..N {
         s.write_all(&wire::encode_request(
             tag,
-            &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, tag) },
+            &Request::OneShot {
+                model: None,
+                precision: ReqPrecision::Int4,
+                pixels: pixels(dim, tag),
+            },
         ))
         .unwrap();
     }
@@ -181,7 +185,11 @@ fn worker_panic_is_supervised_over_tcp() {
     // the server is healthy after the restart: a fresh request succeeds
     s.write_all(&wire::encode_request(
         2000,
-        &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, 99) },
+        &Request::OneShot {
+            model: None,
+            precision: ReqPrecision::Int4,
+            pixels: pixels(dim, 99),
+        },
     ))
     .unwrap();
     match read_resp(&mut s) {
@@ -244,7 +252,8 @@ fn deadlines_shed_behind_a_stall_over_tcp() {
     let mut s = connect(&fe);
     let px = pixels(dim, 5);
 
-    s.write_all(&wire::encode_request(10, &Request::StreamOpen)).unwrap();
+    s.write_all(&wire::encode_request(10, &Request::StreamOpen { model: None }))
+        .unwrap();
     let session = match read_resp(&mut s) {
         Some((10, Response::StreamOpened { session })) => session,
         other => panic!("expected StreamOpened, got {other:?}"),
@@ -291,7 +300,11 @@ fn dropped_replies_surface_as_internal_over_tcp() {
         // sequential send/read keeps the execution order deterministic
         s.write_all(&wire::encode_request(
             tag,
-            &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, tag) },
+            &Request::OneShot {
+                model: None,
+                precision: ReqPrecision::Int4,
+                pixels: pixels(dim, tag),
+            },
         ))
         .unwrap();
         match (tag, read_resp(&mut s).expect("every request is answered")) {
@@ -328,7 +341,11 @@ fn accept_resets_close_one_connection_only() {
     let mut c2 = connect(&fe);
     c2.write_all(&wire::encode_request(
         3,
-        &Request::OneShot { precision: ReqPrecision::Int4, pixels: pixels(dim, 1) },
+        &Request::OneShot {
+            model: None,
+            precision: ReqPrecision::Int4,
+            pixels: pixels(dim, 1),
+        },
     ))
     .unwrap();
     assert!(matches!(read_resp(&mut c2), Some((3, Response::OneShot { .. }))));

@@ -1,0 +1,421 @@
+//! Multi-tenant registry battery: zero-downtime hot swap, version
+//! pinning for in-flight sessions, unload refcounting, per-model session
+//! quotas, and wire-level model addressing over real sockets.
+//!
+//! The contract under test (DESIGN.md §Registry):
+//!
+//! 1. **Swap is atomic and bit-exact** — after a hot swap, new requests
+//!    run on the freshly loaded artifact version and predict exactly
+//!    what a from-scratch engine over the same artifacts predicts.
+//! 2. **Old sessions are pinned** — a streaming session opened before a
+//!    swap keeps its version (and its membrane state) until it closes;
+//!    its windows are bit-identical to an unswapped run.
+//! 3. **Unload waits for the drain** — unloading refuses (typed Busy)
+//!    while the published version has open sessions, and the default
+//!    model can never be unloaded.
+//! 4. **v1/v2 clients keep working** — frames without a model-id route
+//!    to the default model, byte-frozen grammar and all.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lspine::coordinator::wire::{self, ErrorCode, Request, Response, HEADER_LEN};
+use lspine::coordinator::{
+    AdminError, Backend, ModelRegistry, RegistryConfig, ReqPrecision, ServerConfig,
+    TcpFrontend,
+};
+use lspine::forge;
+use lspine::model::SnnEngine;
+use lspine::runtime::ArtifactStore;
+
+fn artifacts_dir_string() -> String {
+    forge::ensure_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+/// A registry over the forged artifacts, default model `mlp`.
+fn start_registry(cfg_mut: impl FnOnce(&mut RegistryConfig)) -> ModelRegistry {
+    let mut cfg = RegistryConfig {
+        server: ServerConfig {
+            artifacts_dir: artifacts_dir_string(),
+            model: "mlp".into(),
+            backend: Backend::Native,
+            workers: 2,
+            ..Default::default()
+        },
+        quota_sessions: 0,
+    };
+    cfg_mut(&mut cfg);
+    ModelRegistry::start(cfg).expect("registry start")
+}
+
+fn recv<T>(rx: std::sync::mpsc::Receiver<T>) -> T {
+    rx.recv_timeout(Duration::from_secs(20)).expect("reply within the deadline")
+}
+
+// ------------------------------------------------------------ in-process
+
+#[test]
+fn swap_publishes_a_fresh_bit_identical_version() {
+    let registry = start_registry(|_| {});
+    let dir = forge::ensure_artifacts().unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let data = store.load_test_set().unwrap();
+    let mut reference = SnnEngine::new(store.load_network("mlp", "lspine", 4).unwrap());
+
+    let before = registry.resolve(None).expect("default model is live");
+    assert_eq!(before.version(), 1);
+
+    let swapped = registry.swap("mlp").expect("hot swap");
+    assert_eq!(swapped.version(), 2, "swap bumps the published version");
+    let after = registry.resolve(None).unwrap();
+    assert!(
+        !Arc::ptr_eq(&before, &after),
+        "resolve must observe the freshly published version"
+    );
+    assert_eq!(after.version(), 2);
+
+    // the swapped-in engine predicts exactly what a from-scratch engine
+    // over the same artifacts predicts
+    for i in 0..data.n.min(8) {
+        let sample = data.sample(i);
+        let want: Vec<i32> = reference.infer(sample).iter().map(|&c| c as i32).collect();
+        let got = recv(after.engine().submit(sample, ReqPrecision::Int4).unwrap());
+        assert!(got.fault.is_none() && !got.rejected);
+        assert_eq!(got.counts, want, "sample {i} diverged after the swap");
+    }
+
+    // swapping a model that was never loaded is typed, not a load
+    assert!(matches!(
+        registry.swap("ghost"),
+        Err(AdminError::UnknownModel(_))
+    ));
+    registry.shutdown().unwrap();
+}
+
+#[test]
+fn old_version_sessions_ride_out_a_swap_bit_identically() {
+    let registry = start_registry(|cfg| cfg.server.workers = 1);
+    let dir = forge::ensure_artifacts().unwrap();
+    let px: Vec<u8> = {
+        let store = ArtifactStore::open(&dir).unwrap();
+        store.load_test_set().unwrap().sample(0).to_vec()
+    };
+
+    // reference: the same four windows on a never-swapped registry
+    let clean = start_registry(|cfg| cfg.server.workers = 1);
+    let (ref_sid, ref_v) = clean.open_stream(None).unwrap();
+    let want: Vec<Vec<i32>> = (0..4)
+        .map(|_| {
+            let r = recv(
+                ref_v
+                    .engine()
+                    .stream_window(ref_sid, &px, 2, ReqPrecision::Int4)
+                    .unwrap(),
+            );
+            assert!(r.fault.is_none() && !r.rejected);
+            r.counts
+        })
+        .collect();
+    clean.close_stream(ref_sid, &ref_v);
+
+    // chaos run: swap the model between windows 1 and 2
+    let (sid, pinned) = registry.open_stream(None).unwrap();
+    assert_eq!(pinned.version(), 1);
+    let mut got = Vec::new();
+    for w in 0..4u64 {
+        if w == 2 {
+            registry.swap("mlp").expect("mid-session swap");
+            // new opens land on version 2; our pin stays on version 1
+            let fresh = registry.resolve(None).unwrap();
+            assert_eq!(fresh.version(), 2);
+            assert_eq!(pinned.version(), 1);
+        }
+        let r = recv(
+            pinned
+                .engine()
+                .stream_window(sid, &px, 2, ReqPrecision::Int4)
+                .unwrap(),
+        );
+        assert!(r.fault.is_none() && !r.rejected, "window {w} faulted");
+        assert_eq!(r.window, w, "windows keep counting across the swap");
+        assert_eq!(r.fresh, w == 0, "the swap must not reset session state");
+        got.push(r.counts);
+    }
+    assert_eq!(got, want, "pinned-session windows diverged from the unswapped run");
+
+    registry.close_stream(sid, &pinned);
+    drop(pinned);
+    registry.reap();
+    registry.shutdown().unwrap();
+    clean.shutdown().unwrap();
+}
+
+#[test]
+fn unload_refuses_until_sessions_drain() {
+    let registry = start_registry(|_| {});
+    registry.load("convnet").expect("load the second manifest model");
+
+    let (sid, v) = registry.open_stream(Some("convnet")).unwrap();
+    match registry.unload("convnet") {
+        Err(AdminError::Busy(msg)) => assert!(msg.contains("open session"), "{msg}"),
+        other => panic!("unload with open sessions must refuse, got {other:?}"),
+    }
+
+    registry.close_stream(sid, &v);
+    drop(v);
+    registry.unload("convnet").expect("unload after the last session closed");
+    assert!(matches!(
+        registry.resolve(Some("convnet")),
+        Err(AdminError::UnknownModel(_))
+    ));
+
+    // the default model is never unloadable; unknown names are typed
+    assert!(matches!(registry.unload("mlp"), Err(AdminError::Busy(_))));
+    assert!(matches!(registry.unload("ghost"), Err(AdminError::UnknownModel(_))));
+    registry.shutdown().unwrap();
+}
+
+#[test]
+fn session_quota_is_typed_and_released_on_close() {
+    let registry = start_registry(|cfg| cfg.quota_sessions = 2);
+    let (a, va) = registry.open_stream(None).unwrap();
+    let (_b, _vb) = registry.open_stream(None).unwrap();
+    match registry.open_stream(None) {
+        Err(AdminError::Quota(msg)) => assert!(msg.contains("quota"), "{msg}"),
+        other => panic!("third open must exceed the quota, got {other:?}"),
+    }
+    // closing releases the slot
+    registry.close_stream(a, &va);
+    drop(va);
+    let (_c, _vc) = registry.open_stream(None).expect("slot freed by the close");
+    assert_eq!(registry.list()[0].sessions, 2);
+}
+
+// ------------------------------------------------------------ real socket
+
+fn connect(fe: &TcpFrontend) -> TcpStream {
+    let s = TcpStream::connect(fe.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn read_resp(s: &mut TcpStream) -> Option<(u64, Response)> {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut hdr = [0u8; HEADER_LEN];
+    if !read_exact(s, &mut hdr, deadline)? {
+        return None;
+    }
+    let h = wire::decode_header(&hdr).expect("server sent a valid header");
+    let mut body = vec![0u8; h.body_len as usize];
+    assert!(
+        read_exact(s, &mut body, deadline).expect("no mid-frame EOF from the server"),
+        "server truncated a frame"
+    );
+    Some((h.tag, wire::decode_response(h.kind, &body).expect("valid body")))
+}
+
+fn read_exact(s: &mut TcpStream, buf: &mut [u8], deadline: Instant) -> Option<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match s.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Some(false);
+                }
+                panic!("EOF mid-frame after {off} bytes");
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                assert!(Instant::now() < deadline, "timed out waiting for the server");
+            }
+            Err(e) => panic!("read error: {e}"),
+        }
+    }
+    Some(true)
+}
+
+/// A listening front end over a two-model registry (mlp default).
+fn start_two_model_frontend() -> TcpFrontend {
+    let registry = Arc::new(start_registry(|_| {}));
+    registry.load("convnet").expect("load convnet");
+    TcpFrontend::bind_registry(registry, "127.0.0.1:0").expect("bind")
+}
+
+fn one_shot_v3(tag: u64, model: Option<&str>, px: &[u8]) -> Vec<u8> {
+    wire::encode_request_v3(
+        tag,
+        &Request::OneShot {
+            model: model.map(str::to_string),
+            precision: ReqPrecision::Int4,
+            pixels: px.to_vec(),
+        },
+        0,
+    )
+}
+
+#[test]
+fn v1_and_v2_clients_route_to_the_default_model() {
+    let fe = start_two_model_frontend();
+    let dim = fe.engine().input_dim();
+    let px = forge::pixels(7, 1, dim);
+    let mut s = connect(&fe);
+
+    // expected counts: the default (mlp) model, via an explicit v3 frame
+    s.write_all(&one_shot_v3(1, Some("mlp"), &px)).unwrap();
+    let Some((1, Response::OneShot { counts: want, .. })) = read_resp(&mut s) else {
+        panic!("v3 one-shot failed")
+    };
+
+    // a v1 frame (no model-id on the wire at all) routes identically
+    s.write_all(&wire::encode_request(2, &Request::OneShot {
+        model: None,
+        precision: ReqPrecision::Int4,
+        pixels: px.clone(),
+    }))
+    .unwrap();
+    match read_resp(&mut s) {
+        Some((2, Response::OneShot { counts, .. })) => {
+            assert_eq!(counts, want, "v1 clients must land on the default model")
+        }
+        other => panic!("v1 one-shot failed: {other:?}"),
+    }
+
+    // same for v2 (deadline grammar), and for a v1 stream session
+    s.write_all(&wire::encode_request_deadline(
+        3,
+        &Request::OneShot {
+            model: None,
+            precision: ReqPrecision::Int4,
+            pixels: px.clone(),
+        },
+        10_000,
+    ))
+    .unwrap();
+    match read_resp(&mut s) {
+        Some((3, Response::OneShot { counts, .. })) => assert_eq!(counts, want),
+        other => panic!("v2 one-shot failed: {other:?}"),
+    }
+    s.write_all(&wire::encode_request(4, &Request::StreamOpen { model: None }))
+        .unwrap();
+    assert!(matches!(
+        read_resp(&mut s),
+        Some((4, Response::StreamOpened { .. }))
+    ));
+
+    // while a v3 frame addressing the *other* model answers differently
+    // typed things: unknown models are a typed recoverable error
+    s.write_all(&one_shot_v3(5, Some("ghost"), &px)).unwrap();
+    match read_resp(&mut s) {
+        Some((5, Response::Error { code: ErrorCode::UnknownModel, message })) => {
+            assert!(message.contains("ghost"), "{message}")
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // ...and the connection survives it
+    s.write_all(&one_shot_v3(6, Some("convnet"), &px)).unwrap();
+    assert!(matches!(read_resp(&mut s), Some((6, Response::OneShot { .. }))));
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn admin_frames_only_decode_under_version_3() {
+    let fe = start_two_model_frontend();
+    let mut s = connect(&fe);
+    // a v3 AdminList downgraded to a v1 header must be BadType — the
+    // v1/v2 grammars are frozen and never grew admin frames
+    let mut frame = wire::encode_request_v3(1, &Request::AdminList, 0);
+    frame[4] = wire::VERSION;
+    s.write_all(&frame).unwrap();
+    match read_resp(&mut s) {
+        Some((1, Response::Error { code: ErrorCode::BadType, .. })) => {}
+        other => panic!("expected BadType, got {other:?}"),
+    }
+    // under its proper version it lists both models
+    s.write_all(&wire::encode_request_v3(2, &Request::AdminList, 0)).unwrap();
+    match read_resp(&mut s) {
+        Some((2, Response::AdminList(models))) => {
+            let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+            assert_eq!(names, ["convnet", "mlp"], "sorted membership");
+            assert!(models.iter().any(|m| m.default && m.name == "mlp"));
+        }
+        other => panic!("expected AdminList, got {other:?}"),
+    }
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn hot_swap_under_load_is_zero_downtime() {
+    let fe = start_two_model_frontend();
+    let dim = fe.engine().input_dim();
+    let px = forge::pixels(9, 1, dim);
+    let addr = fe.local_addr();
+
+    // a loaded client: sequential one-shots alternating between both
+    // models for the whole duration of the swaps happening next door
+    let traffic = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).expect("traffic connect");
+        s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        s.set_nodelay(true).unwrap();
+        let mut first_mlp_counts: Option<Vec<i32>> = None;
+        for tag in 0..60u64 {
+            let model = if tag % 2 == 0 { "mlp" } else { "convnet" };
+            s.write_all(&one_shot_v3(tag, Some(model), &px)).unwrap();
+            match read_resp(&mut s) {
+                Some((t, Response::OneShot { counts, .. })) => {
+                    assert_eq!(t, tag);
+                    // the swap must also be bit-invisible: same artifacts,
+                    // same counts, before and after every swap
+                    if model == "mlp" {
+                        match &first_mlp_counts {
+                            None => first_mlp_counts = Some(counts),
+                            Some(want) => assert_eq!(
+                                &counts, want,
+                                "tag {tag}: counts changed across a swap"
+                            ),
+                        }
+                    }
+                }
+                other => panic!("tag {tag}: lost or errored under swap: {other:?}"),
+            }
+        }
+    });
+
+    // meanwhile: three hot swaps of the model under load
+    let mut admin = connect(&fe);
+    for (i, want_version) in [(0u64, 2u64), (1, 3), (2, 4)] {
+        std::thread::sleep(Duration::from_millis(30));
+        admin
+            .write_all(&wire::encode_request_v3(
+                100 + i,
+                &Request::AdminSwap { model: "mlp".into() },
+                0,
+            ))
+            .unwrap();
+        match read_resp(&mut admin) {
+            Some((t, Response::AdminSwapped { model, version })) => {
+                assert_eq!(t, 100 + i);
+                assert_eq!(model, "mlp");
+                assert_eq!(version, want_version, "versions are monotonic");
+            }
+            other => panic!("swap {i} failed: {other:?}"),
+        }
+    }
+    traffic.join().expect("no request was lost or errored during the swaps");
+
+    // the published version is the last swap's; retired versions drained
+    admin.write_all(&wire::encode_request_v3(200, &Request::AdminList, 0)).unwrap();
+    match read_resp(&mut admin) {
+        Some((200, Response::AdminList(models))) => {
+            let mlp = models.iter().find(|m| m.name == "mlp").expect("mlp listed");
+            assert_eq!(mlp.version, 4);
+            assert_eq!(mlp.sessions, 0);
+        }
+        other => panic!("expected AdminList, got {other:?}"),
+    }
+    fe.shutdown().unwrap();
+}

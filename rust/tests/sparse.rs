@@ -532,6 +532,7 @@ fn pruned_model_serves_bit_exact_over_sharded_tcp() {
         s.write_all(&wire::encode_request(
             i as u64,
             &Request::OneShot {
+                model: None,
                 precision: ReqPrecision::Int4,
                 pixels: sample.to_vec(),
             },

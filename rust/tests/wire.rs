@@ -103,7 +103,8 @@ fn pixels(fe: &TcpFrontend) -> Vec<u8> {
 }
 
 fn open_session(s: &mut TcpStream, tag: u64) -> u64 {
-    s.write_all(&wire::encode_request(tag, &Request::StreamOpen)).unwrap();
+    s.write_all(&wire::encode_request(tag, &Request::StreamOpen { model: None }))
+        .unwrap();
     match read_resp(s) {
         Some((t, Response::StreamOpened { session })) => {
             assert_eq!(t, tag);
@@ -140,6 +141,7 @@ fn one_shot_and_info_roundtrip_over_tcp() {
     assert!(info.classes >= 2 && info.workers == 2);
 
     s.write_all(&wire::encode_request(6, &Request::OneShot {
+        model: None,
         precision: ReqPrecision::Int4,
         pixels: px.clone(),
     }))
@@ -230,6 +232,7 @@ fn malformed_bodies_get_typed_errors() {
 
     // bad precision byte in a one-shot
     let mut frame = wire::encode_request(2, &Request::OneShot {
+        model: None,
         precision: ReqPrecision::Int4,
         pixels: px.clone(),
     });
@@ -239,6 +242,7 @@ fn malformed_bodies_get_typed_errors() {
 
     // wrong payload length (engine-level validation → BadInput)
     s.write_all(&wire::encode_request(3, &Request::OneShot {
+        model: None,
         precision: ReqPrecision::Int4,
         pixels: vec![1, 2, 3],
     }))
@@ -247,6 +251,7 @@ fn malformed_bodies_get_typed_errors() {
 
     // fp32 on the native backend is unservable → BadInput
     s.write_all(&wire::encode_request(4, &Request::OneShot {
+        model: None,
         precision: ReqPrecision::Fp32,
         pixels: px.clone(),
     }))
@@ -255,6 +260,7 @@ fn malformed_bodies_get_typed_errors() {
 
     // all recoverable: real work still flows on this connection
     s.write_all(&wire::encode_request(5, &Request::OneShot {
+        model: None,
         precision: ReqPrecision::Int4,
         pixels: px,
     }))
@@ -378,6 +384,7 @@ fn backpressure_is_typed_reject_frames_all_tags_answered() {
     let n = 64u64;
     for tag in 0..n {
         s.write_all(&wire::encode_request(tag, &Request::OneShot {
+            model: None,
             precision: ReqPrecision::Int4,
             pixels: px.clone(),
         }))
@@ -415,6 +422,7 @@ fn drain_flushes_every_in_flight_reply() {
     let mut blob = Vec::new();
     for tag in 0..k {
         blob.extend_from_slice(&wire::encode_request(tag, &Request::OneShot {
+            model: None,
             precision: ReqPrecision::Int4,
             pixels: px.clone(),
         }));
