@@ -8,7 +8,7 @@
 
 CARGO := cargo
 
-.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke chaos-smoke swap-smoke doc clean
+.PHONY: all build test artifacts bench bench-json bench-smoke stream-smoke loadgen-smoke prune-smoke chaos-smoke swap-smoke ttfs-smoke doc clean
 
 all: build
 
@@ -124,6 +124,28 @@ chaos-smoke:
 	grep -Eq "panics=[1-9]" .chaos_serve.out
 	grep -Eq "restarts=[1-9]" .chaos_serve.out
 	rm -f .chaos_smoke.out .chaos_serve.out
+
+# Early-exit (TTFS) end-to-end smoke: serve over TCP, drive early-exit
+# streaming windows (version-4 frames) through the loadgen client with
+# the one-spike-per-pixel TTFS coding, and assert the decision contract
+# held on every reply: nothing lost, no protocol errors, and every
+# decision step inside the requested budget (decision_viol=0 — the
+# client checks 1 <= decision_step <= steps on each WindowEx frame).
+# Separate port so it composes with the other smokes in one CI job.
+ttfs-smoke:
+	cd rust && $(CARGO) build --release
+	cd rust && $(CARGO) run --release -- forge --out artifacts
+	cd rust && \
+	( ./target/release/lspine serve --backend native --listen 127.0.0.1:17325 --workers 2 > ../.ttfs_serve.out 2>&1 & ) && \
+	./target/release/lspine loadgen --connect 127.0.0.1:17325 --sessions 8 --windows 4 --steps 8 --encoder ttfs:16 --early-exit --drain --retry-secs 20 > ../.ttfs_smoke.out || (cat ../.ttfs_smoke.out ../.ttfs_serve.out; exit 1)
+	cat .ttfs_smoke.out
+	grep -Eq "ok=[1-9]" .ttfs_smoke.out
+	grep -Eq "protocol_errors=0" .ttfs_smoke.out
+	grep -Eq "lost=0" .ttfs_smoke.out
+	grep -Eq "decision_viol=0" .ttfs_smoke.out
+	grep -Eq "decision_p50=[1-9]" .ttfs_smoke.out
+	cat .ttfs_serve.out
+	rm -f .ttfs_smoke.out .ttfs_serve.out
 
 # Hot-swap end-to-end smoke: serve BOTH forged models from the
 # multi-tenant registry, drive mixed loadgen traffic at them, hot-swap

@@ -9,10 +9,12 @@
 //!
 //! A1 layer-adaptive precision vs uniform (accuracy / memory / latency)
 //! A2 timestep sweep (accuracy vs T — latency is linear in T)
-//! A3 encoder ablation (deterministic rate vs Poisson vs TTFS)
+//! A3 encoder ablation (deterministic rate vs Poisson vs TTFS vs population)
 //! A4 array geometry sweep (PE count vs latency/utilization)
 //! A5 batching policy (max_wait vs throughput and p50, native backend)
 //! A6 packed-weight fault injection (accuracy cliff per precision)
+//! A7 early-exit decision ablation (decision step / synops credit per encoder)
+//! A8 forged stream families (ecg / kws / vib under early-exit windows)
 
 use std::time::Duration;
 
@@ -20,7 +22,8 @@ use lspine::array::grid::ArrayConfig;
 use lspine::array::sim::{simulate_inference, SimOverheads};
 use lspine::coordinator::batcher::BatcherConfig;
 use lspine::coordinator::{Backend, ReqPrecision, ServerConfig, ServingEngine};
-use lspine::encode::{PoissonEncoder, RateEncoder, TtfsEncoder};
+use lspine::encode::{PoissonEncoder, PopulationEncoder, RateEncoder, TtfsEncoder};
+use lspine::model::engine::argmax;
 use lspine::forge;
 use lspine::model::SnnEngine;
 use lspine::nce::Kernels;
@@ -145,6 +148,35 @@ fn main() {
     run("deterministic rate (deployed)", &mut RateEncoder::new());
     run("Poisson", &mut PoissonEncoder::new(42));
     run("TTFS (1 spike/pixel)", &mut TtfsEncoder::new(16));
+    // population coding reshapes the input geometry: 4 tuning-curve
+    // neurons per raw pixel, so the raw payload is the first dim/4
+    // pixels of each sample (a workload-shape row, not a like-for-like
+    // accuracy comparison)
+    {
+        let raw_dim = data.dim / 4;
+        let mut enc = PopulationEncoder::new(4);
+        let mut hits = 0;
+        let mut spikes = 0u64;
+        for i in 0..n {
+            let counts = engine
+                .infer_with_encoder(&data.sample(i)[..raw_dim], 16, &mut enc)
+                .to_vec();
+            hits += (argmax(&counts) == data.labels[i] as usize) as usize;
+            spikes += engine.last_layer_stats()[0].active_rows;
+        }
+        let acc = hits as f64 / n as f64;
+        let spikes_per_sample = spikes as f64 / n as f64;
+        t3.row(&[
+            "population:4 (dim/4 raw)".to_string(),
+            format!("{:.2}", acc * 100.0),
+            format!("{spikes_per_sample:.0}"),
+        ]);
+        emit_json_scalar(
+            SUITE,
+            "a3 population:4",
+            &[("accuracy", acc), ("input_spikes_per_sample", spikes_per_sample)],
+        );
+    }
     t3.print();
 
     // ---------- A4: array geometry ----------
@@ -270,4 +302,132 @@ fn main() {
     }
     t6.print();
     println!("(packed low precision is also the more fault-tolerant representation)");
+
+    // ---------- A7: early-exit decision ablation ----------
+    // `infer_until_decision_with_encoder` stops at the first readout
+    // fire; `dense_synops` then credits only the executed steps. The
+    // interesting numbers are how early each coding decides and how much
+    // of the dense synop budget the exit saves (TTFS's one-spike trains
+    // decide latest but spend least per step; rate decides fastest).
+    println!("\nA7 — early-exit decision ablation (mlp INT4, T = trained)\n");
+    let net = store.load_network("mlp", "lspine", 4).unwrap();
+    let trained_t = net.arch.timesteps();
+    let full_synops = net.arch.synops_per_step() * trained_t as u64;
+    let mut engine = SnnEngine::new(net);
+    let mut t7 = Table::new(&[
+        "Encoder",
+        "Accuracy (%)",
+        "Mean decision step",
+        "Early exits (%)",
+        "Synops saved (%)",
+    ]);
+    let mut run7 =
+        |name: &str, enc: &mut dyn lspine::encode::SpikeEncoder, raw_dim: usize| {
+            let mut hits = 0usize;
+            let mut steps_sum = 0u64;
+            let mut early = 0usize;
+            let mut executed = 0u64;
+            for i in 0..n {
+                let px = &data.sample(i)[..raw_dim];
+                let (pred, step) =
+                    engine.infer_until_decision_with_encoder(px, trained_t, enc);
+                hits += (pred == data.labels[i] as usize) as usize;
+                steps_sum += step as u64;
+                early += (step < trained_t) as usize;
+                executed += engine.last_stats().dense_synops;
+            }
+            let acc = hits as f64 / n as f64;
+            let mean_step = steps_sum as f64 / n as f64;
+            let early_frac = early as f64 / n as f64;
+            let saved = 1.0 - executed as f64 / (full_synops * n as u64) as f64;
+            t7.row(&[
+                name.to_string(),
+                format!("{:.2}", acc * 100.0),
+                format!("{mean_step:.2}"),
+                format!("{:.1}", early_frac * 100.0),
+                format!("{:.1}", saved * 100.0),
+            ]);
+            emit_json_scalar(
+                SUITE,
+                &format!("a7 {name}"),
+                &[
+                    ("accuracy", acc),
+                    ("mean_decision_step", mean_step),
+                    ("early_exit_frac", early_frac),
+                    ("synops_saved_frac", saved),
+                ],
+            );
+        };
+    run7("rate", &mut RateEncoder::new(), data.dim);
+    run7(
+        &format!("ttfs:{trained_t}"),
+        &mut TtfsEncoder::new(trained_t),
+        data.dim,
+    );
+    run7("population:4", &mut PopulationEncoder::new(4), data.dim / 4);
+    t7.print();
+
+    // ---------- A8: forged stream families ----------
+    // The three LSPS families exercise distinct temporal shapes: ECG
+    // (periodic beats + events), KWS (silence → onset envelopes), VIB
+    // (continuous carrier + intermittent anomalies). Per labeled window,
+    // every frame runs as an early-exit rate window over held membranes;
+    // agreement compares the window's summed counts against its label.
+    println!("\nA8 — forged stream families (mlp INT4, early-exit windows, held membranes)\n");
+    let net = store.load_network("mlp", "lspine", 4).unwrap();
+    let classes = net.arch.classes();
+    let mut engine = SnnEngine::new(net);
+    let mut t8 = Table::new(&[
+        "Stream",
+        "Windows",
+        "Label agreement (%)",
+        "Mean decision step",
+        "Spikes/window",
+    ]);
+    for name in ["ecg", "kws", "vib"] {
+        let stream = store.load_stream_named(name).expect("forged stream family");
+        let windows = sample_count(stream.labels.len(), 2);
+        engine.reset();
+        let mut enc = RateEncoder::new();
+        let mut agree = 0usize;
+        let mut steps_sum = 0u64;
+        let mut frames_run = 0u64;
+        let mut spikes = 0u64;
+        for w in 0..windows {
+            let mut totals = vec![0u64; classes];
+            for f in 0..stream.window {
+                let frame = stream.frame(w * stream.window + f);
+                let (counts, step) =
+                    engine.infer_window_until_decision_with_encoder(frame, 4, &mut enc);
+                for (tot, &c) in totals.iter_mut().zip(counts) {
+                    *tot += c as u64;
+                }
+                steps_sum += step as u64;
+                frames_run += 1;
+                spikes += engine.last_stats().spikes_emitted;
+            }
+            agree += (argmax(&totals) == stream.labels[w] as usize) as usize;
+        }
+        let agreement = agree as f64 / windows as f64;
+        let mean_step = steps_sum as f64 / frames_run as f64;
+        let spikes_per_window = spikes as f64 / windows as f64;
+        t8.row(&[
+            name.to_string(),
+            windows.to_string(),
+            format!("{:.1}", agreement * 100.0),
+            format!("{mean_step:.2}"),
+            format!("{spikes_per_window:.0}"),
+        ]);
+        emit_json_scalar(
+            SUITE,
+            &format!("a8 stream {name}"),
+            &[
+                ("label_agreement", agreement),
+                ("mean_decision_step", mean_step),
+                ("spikes_per_window", spikes_per_window),
+            ],
+        );
+    }
+    t8.print();
+    println!("(kws/vib are the scenario-diversity streams; decision steps track how event-dense each family is)");
 }

@@ -152,6 +152,10 @@ pub struct LoadgenConfig {
     /// via a version-3 `StreamOpen`. Empty = every session uses the
     /// server's default model over legacy frames.
     pub models: Vec<String>,
+    /// Request early-exit windows (version-4 frames, flag bit 0): the
+    /// server stops integrating at the first readout fire and the reply
+    /// carries the decision step.
+    pub early_exit: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -174,6 +178,7 @@ impl Default for LoadgenConfig {
             backoff: Duration::from_millis(50),
             deadline_ms: 0,
             models: Vec::new(),
+            early_exit: false,
         }
     }
 }
@@ -218,9 +223,24 @@ pub struct LoadgenReport {
     /// Answered windows per model, sorted by name (empty on
     /// single-model runs).
     pub per_model: Vec<(String, u64)>,
+    /// Decision steps of every early-exit answer, sorted ascending
+    /// (empty on classic runs).
+    pub decisions: Vec<u32>,
+    /// Early-exit answers whose decision step exceeded the requested
+    /// window (a server contract violation; must be 0 on a healthy run).
+    pub decision_viol: u64,
 }
 
 impl LoadgenReport {
+    /// Quantile over the early-exit decision steps (0 on classic runs).
+    pub fn decision_quantile(&self, q: f64) -> u32 {
+        if self.decisions.is_empty() {
+            return 0;
+        }
+        let idx = ((self.decisions.len() as f64 - 1.0) * q).round() as usize;
+        self.decisions[idx.min(self.decisions.len() - 1)]
+    }
+
     /// Answered windows per second over the run.
     pub fn req_per_s(&self) -> f64 {
         let dt = self.elapsed.as_secs_f64();
@@ -258,6 +278,14 @@ impl LoadgenReport {
             self.latency.max_us(),
             self.ttfp.quantile_us(0.5),
         );
+        // early-exit keys ride at the end (what ttfs-smoke greps); on
+        // classic runs the quantiles are 0 and decision_viol stays 0
+        s.push_str(&format!(
+            " decision_viol={} decision_p50={} decision_p99={}",
+            self.decision_viol,
+            self.decision_quantile(0.5),
+            self.decision_quantile(0.99),
+        ));
         for (name, ok) in &self.per_model {
             s.push_str(&format!(" {name}_ok={ok}"));
         }
@@ -330,6 +358,8 @@ struct Tally {
     received: u64,
     latency: LatencyHistogram,
     ttfp: LatencyHistogram,
+    decisions: Vec<u32>,
+    decision_viol: u64,
 }
 
 /// Run one load-generation campaign and block until it completes.
@@ -347,7 +377,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         Some((_, Response::Info(i))) => i,
         other => anyhow::bail!("expected Info response, got {other:?}"),
     };
-    let dim = info.input_dim as usize;
+    // the raw payload length the chosen coding expects for this model
+    // (population divides input_dim by its group count)
+    let dim = cfg.encoder.payload_dim(info.input_dim as usize).ok_or_else(|| {
+        anyhow::anyhow!(
+            "model input dim {} is not divisible by the population group count",
+            info.input_dim
+        )
+    })?;
 
     // partition sessions round-robin across the pool and run each
     // connection's sender/reader pair
@@ -381,6 +418,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 total.received += t.received;
                 total.latency.merge(&t.latency);
                 total.ttfp.merge(&t.ttfp);
+                total.decisions.extend(t.decisions);
+                total.decision_viol += t.decision_viol;
             }
             Ok(Err(e)) => {
                 if first_err.is_none() {
@@ -412,6 +451,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
 
     let mut per_model: Vec<(String, u64)> = total.ok_by_model.into_iter().collect();
     per_model.sort();
+    total.decisions.sort_unstable();
     Ok(LoadgenReport {
         sessions: cfg.sessions,
         conns: n_conns,
@@ -430,6 +470,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         ttfp: total.ttfp,
         server,
         per_model,
+        decisions: total.decisions,
+        decision_viol: total.decision_viol,
     })
 }
 
@@ -522,11 +564,12 @@ fn run_conn(
         let retryq = Arc::clone(&retryq);
         let reader_done = Arc::clone(&reader_done);
         let slot_models = Arc::new(slot_models);
+        let steps = cfg.steps;
         std::thread::Builder::new().name(format!("loadgen-rd-{conn_index}")).spawn(
             move || {
                 reader_loop(
                     read_half, pending, first_sent, expected, deadline, retryq, policy,
-                    reader_done, slot_models,
+                    reader_done, slot_models, steps,
                 )
             },
         )?
@@ -611,19 +654,31 @@ fn send_window(
         }
     }
     pending.lock().unwrap().insert(tag, Pending { sent: sent_at, slot, attempt });
-    let req = Request::StreamWindow {
-        session: session_id,
-        steps: cfg.steps,
-        precision: cfg.precision,
-        encoder: cfg.encoder,
-        pixels: pixels.to_vec(),
-    };
-    // a configured deadline budget rides on version-2 frames; without
-    // one the frames stay version-1, byte-identical to older builds
-    let frame = if cfg.deadline_ms > 0 {
-        wire::encode_request_deadline(tag, &req, cfg.deadline_ms)
+    // early-exit windows ride version-4 frames (flag bit 0 set); a
+    // configured deadline budget rides on version-2 frames; without
+    // either the frames stay version-1, byte-identical to older builds
+    let frame = if cfg.early_exit {
+        let req = Request::StreamWindowEarly {
+            session: session_id,
+            steps: cfg.steps,
+            precision: cfg.precision,
+            encoder: cfg.encoder,
+            pixels: pixels.to_vec(),
+        };
+        wire::encode_request_v4(tag, &req, cfg.deadline_ms)
     } else {
-        wire::encode_request(tag, &req)
+        let req = Request::StreamWindow {
+            session: session_id,
+            steps: cfg.steps,
+            precision: cfg.precision,
+            encoder: cfg.encoder,
+            pixels: pixels.to_vec(),
+        };
+        if cfg.deadline_ms > 0 {
+            wire::encode_request_deadline(tag, &req, cfg.deadline_ms)
+        } else {
+            wire::encode_request(tag, &req)
+        }
     };
     stream.write_all(&frame).is_ok()
 }
@@ -685,6 +740,7 @@ fn reader_loop(
     policy: RetryPolicy,
     done: Arc<AtomicBool>,
     slot_models: Arc<Vec<Option<String>>>,
+    steps: u32,
 ) -> Result<Tally> {
     let mut t = Tally::default();
     let mut ttfp_done: Vec<bool> = vec![false; first_sent.lock().unwrap().len()];
@@ -735,6 +791,17 @@ fn reader_loop(
                     *t.ok_by_model.entry(model.clone()).or_insert(0) += 1;
                 }
                 t.latency.record(now.duration_since(p.sent));
+            }
+            Response::WindowEx { decision_step, .. } => {
+                t.ok += 1;
+                if let Some(model) = &slot_models[p.slot] {
+                    *t.ok_by_model.entry(model.clone()).or_insert(0) += 1;
+                }
+                t.latency.record(now.duration_since(p.sent));
+                t.decisions.push(decision_step);
+                if decision_step == 0 || decision_step > steps {
+                    t.decision_viol += 1;
+                }
             }
             Response::Error { code: ErrorCode::Rejected, .. }
             | Response::Error { code: ErrorCode::Draining, .. } => {
@@ -914,9 +981,14 @@ mod tests {
             ttfp: LatencyHistogram::new(),
             server: None,
             per_model: vec![("convnet".into(), 28), ("mlp".into(), 32)],
+            decisions: vec![1, 2, 2, 3, 3, 3, 4, 9],
+            decision_viol: 1,
         };
         let s = r.summary();
         assert!(s.contains("ok=60"), "{s}");
+        assert!(s.contains("decision_viol=1"), "{s}");
+        assert!(s.contains("decision_p50=3"), "{s}");
+        assert!(s.contains("decision_p99=9"), "{s}");
         // per-model keys ride at the end (what swap-smoke greps)
         assert!(s.contains("convnet_ok=28"), "{s}");
         assert!(s.contains("mlp_ok=32"), "{s}");

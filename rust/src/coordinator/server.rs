@@ -350,7 +350,35 @@ impl ServingEngine {
         encoder: EncoderKind,
         deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<StreamResponse>> {
-        anyhow::ensure!(pixels.len() == self.input_dim, "bad input size");
+        self.stream_window_full(session, pixels, steps, precision, encoder, deadline, false)
+    }
+
+    /// The full streaming submit surface: everything in
+    /// [`stream_window_with_deadline`](Self::stream_window_with_deadline)
+    /// plus `early_exit` — when set, the worker stops integrating at the
+    /// first readout fire and the response's
+    /// [`decision_step`](StreamResponse::decision_step) reports how many
+    /// of the budgeted `steps` actually ran. The payload length is
+    /// encoder-dependent: population windows carry
+    /// `input_dim / groups` raw pixels (see [`EncoderKind::payload_dim`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn stream_window_full(
+        &self,
+        session: u64,
+        pixels: &[u8],
+        steps: u32,
+        precision: Precision,
+        encoder: EncoderKind,
+        deadline: Option<Duration>,
+        early_exit: bool,
+    ) -> Result<mpsc::Receiver<StreamResponse>> {
+        let want = encoder.payload_dim(self.input_dim).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model input dim {} is not divisible by the population group count",
+                self.input_dim
+            )
+        })?;
+        anyhow::ensure!(pixels.len() == want, "bad input size");
         anyhow::ensure!(steps >= 1, "a window needs at least one timestep");
         anyhow::ensure!(
             self.backend == Backend::Native,
@@ -369,6 +397,7 @@ impl ServingEngine {
             encoder,
             enqueued: Instant::now(),
             deadline: deadline.map(|d| Instant::now() + d),
+            early_exit,
             reply,
         };
         self.tx
@@ -470,6 +499,7 @@ fn reject_stream(metrics: &Arc<Mutex<Metrics>>, req: StreamRequest) {
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         rejected: true,
         fault: None,
+        decision_step: None,
     });
 }
 
@@ -500,6 +530,7 @@ fn fault_stream(req: StreamRequest, fault: ServeFault) {
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         rejected: false,
         fault: Some(fault),
+        decision_step: None,
     });
 }
 
@@ -907,7 +938,7 @@ fn run_stream(
         std::thread::sleep(stall);
     }
     let computed = catch_unwind(AssertUnwindSafe(
-        || -> Result<Option<(Vec<i32>, u64, bool)>> {
+        || -> Result<Option<(Vec<i32>, u64, bool, Option<u32>)>> {
             if faults.panic_in(base, 1) {
                 panic!("injected fault: worker panic (stream)");
             }
@@ -934,19 +965,32 @@ fn run_stream(
             if !fresh {
                 engine.apply_boundary(policy);
             }
-            let counts: Vec<i32> = engine
-                .infer_window_with_encoder(&req.pixels, req.steps, &mut *sess.encoder)
-                .iter()
-                .map(|&c| c as i32)
-                .collect();
+            let (raw_counts, decision) = if req.early_exit {
+                let (c, d) = engine.infer_window_until_decision_with_encoder(
+                    &req.pixels,
+                    req.steps,
+                    &mut *sess.encoder,
+                );
+                (c, Some(d))
+            } else {
+                (
+                    engine.infer_window_with_encoder(
+                        &req.pixels,
+                        req.steps,
+                        &mut *sess.encoder,
+                    ),
+                    None,
+                )
+            };
+            let counts: Vec<i32> = raw_counts.iter().map(|&c| c as i32).collect();
             engine.swap_state(&mut sess.state);
             let window = sess.windows;
             sess.windows += 1;
-            Ok(Some((counts, window, fresh)))
+            Ok(Some((counts, window, fresh, decision)))
         },
     ));
     match computed {
-        Ok(Ok(Some((counts, window, fresh)))) => {
+        Ok(Ok(Some((counts, window, fresh, decision)))) => {
             let now = Instant::now();
             {
                 let mut m = lock(metrics);
@@ -965,6 +1009,7 @@ fn run_stream(
                     latency_us: now.duration_since(req.enqueued).as_micros() as u64,
                     rejected: false,
                     fault: None,
+                    decision_step: decision,
                 });
             }
             true

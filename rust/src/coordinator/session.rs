@@ -21,7 +21,10 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use super::request::{Precision, ServeFault};
-use crate::encode::{DeltaEncoder, RateEncoder, SlidingWindowEncoder, SpikeEncoder};
+use crate::encode::{
+    DeltaEncoder, PopulationEncoder, RateEncoder, SlidingWindowEncoder, SpikeEncoder,
+    TtfsEncoder,
+};
 use crate::model::MembraneState;
 
 /// Which spike coding a stream session runs — chosen on the session's
@@ -40,15 +43,32 @@ pub enum EncoderKind {
         /// Frames in the moving-average window.
         window: usize,
     },
+    /// Time-to-first-spike temporal coding (see [`TtfsEncoder`]) — one
+    /// spike per nonzero pixel, the natural feed for early-exit serving.
+    Ttfs {
+        /// The encoder's scheduling window (spikes land in `0..t_steps`).
+        t_steps: u32,
+    },
+    /// Gaussian tuning-curve population coding (see
+    /// [`PopulationEncoder`]) — the raw payload carries
+    /// `input_dim / groups` pixels; the encoder expands each into a
+    /// `groups`-neuron activation group.
+    Population {
+        /// Tuning-curve neurons per raw pixel (>= 2).
+        groups: u32,
+    },
 }
 
 impl EncoderKind {
-    /// Parse the CLI surface: `rate`, `delta`, `delta:GAIN`, `window:W`.
+    /// Parse the CLI surface: `rate`, `delta`, `delta:GAIN`, `window:W`,
+    /// `ttfs:T` (or bare `ttfs`, defaulting to a 16-step window), and
+    /// `pop:G` / `population:G`.
     pub fn parse(s: &str) -> Option<Self> {
         let s = s.to_ascii_lowercase();
         match s.as_str() {
             "rate" => Some(EncoderKind::Rate),
             "delta" => Some(EncoderKind::Delta { gain: 4 }),
+            "ttfs" => Some(EncoderKind::Ttfs { t_steps: 16 }),
             _ => {
                 if let Some(g) = s.strip_prefix("delta:") {
                     let gain = g.parse::<u32>().ok()?;
@@ -56,6 +76,14 @@ impl EncoderKind {
                 } else if let Some(w) = s.strip_prefix("window:") {
                     let window = w.parse::<usize>().ok()?;
                     (window >= 1).then_some(EncoderKind::Sliding { window })
+                } else if let Some(t) = s.strip_prefix("ttfs:") {
+                    let t_steps = t.parse::<u32>().ok()?;
+                    (t_steps >= 1).then_some(EncoderKind::Ttfs { t_steps })
+                } else if let Some(g) =
+                    s.strip_prefix("pop:").or_else(|| s.strip_prefix("population:"))
+                {
+                    let groups = g.parse::<u32>().ok()?;
+                    (groups >= 2).then_some(EncoderKind::Population { groups })
                 } else {
                     None
                 }
@@ -63,12 +91,15 @@ impl EncoderKind {
         }
     }
 
-    /// Stable display name (`rate` / `delta:G` / `window:W`).
+    /// Stable display name (`rate` / `delta:G` / `window:W` / `ttfs:T` /
+    /// `pop:G`).
     pub fn name(self) -> String {
         match self {
             EncoderKind::Rate => "rate".into(),
             EncoderKind::Delta { gain } => format!("delta:{gain}"),
             EncoderKind::Sliding { window } => format!("window:{window}"),
+            EncoderKind::Ttfs { t_steps } => format!("ttfs:{t_steps}"),
+            EncoderKind::Population { groups } => format!("pop:{groups}"),
         }
     }
 
@@ -80,6 +111,24 @@ impl EncoderKind {
             EncoderKind::Sliding { window } => {
                 Box::new(SlidingWindowEncoder::new(window))
             }
+            EncoderKind::Ttfs { t_steps } => Box::new(TtfsEncoder::new(t_steps)),
+            EncoderKind::Population { groups } => {
+                Box::new(PopulationEncoder::new(groups))
+            }
+        }
+    }
+
+    /// Raw payload length a window must carry for a model of
+    /// `input_dim` encoded neurons. Every 1:1 coding needs `input_dim`
+    /// pixels; population needs `input_dim / groups` (and `None` marks
+    /// an impossible pairing — `input_dim` not divisible by `groups`).
+    pub fn payload_dim(self, input_dim: usize) -> Option<usize> {
+        match self {
+            EncoderKind::Population { groups } => {
+                let g = groups as usize;
+                (input_dim % g == 0).then_some(input_dim / g)
+            }
+            _ => Some(input_dim),
         }
     }
 }
@@ -102,6 +151,10 @@ pub struct StreamRequest {
     /// expired window is answered [`ServeFault::DeadlineExceeded`]
     /// without executing and session state does not advance.
     pub deadline: Option<Instant>,
+    /// Early-exit integration: stop the moment the readout layer first
+    /// fires and report the decision step in the response. Off for
+    /// classic fixed-`steps` windows.
+    pub early_exit: bool,
     /// Completion channel (one response per window).
     pub reply: mpsc::Sender<StreamResponse>,
 }
@@ -134,6 +187,11 @@ pub struct StreamResponse {
     /// window was shed past its deadline or lost its worker mid-flight.
     /// Session state did not advance. See [`super::ServeFault`].
     pub fault: Option<ServeFault>,
+    /// Timesteps actually integrated before the readout decided
+    /// (`Some(1..=steps)`) — present only on windows that requested
+    /// early exit; `None` on classic fixed-`steps` windows and on
+    /// rejected/faulted ones.
+    pub decision_step: Option<u32>,
 }
 
 /// Per-session state a worker keeps alive between windows: the membrane
@@ -303,5 +361,34 @@ mod tests {
         assert_eq!(EncoderKind::parse("window:0"), None);
         assert_eq!(EncoderKind::parse("morse"), None);
         assert_eq!(EncoderKind::Sliding { window: 3 }.name(), "window:3");
+        assert_eq!(EncoderKind::parse("ttfs"), Some(EncoderKind::Ttfs { t_steps: 16 }));
+        assert_eq!(
+            EncoderKind::parse("ttfs:8"),
+            Some(EncoderKind::Ttfs { t_steps: 8 })
+        );
+        assert_eq!(EncoderKind::parse("ttfs:0"), None);
+        assert_eq!(
+            EncoderKind::parse("pop:4"),
+            Some(EncoderKind::Population { groups: 4 })
+        );
+        assert_eq!(
+            EncoderKind::parse("POPULATION:8"),
+            Some(EncoderKind::Population { groups: 8 })
+        );
+        assert_eq!(EncoderKind::parse("pop:1"), None);
+        assert_eq!(EncoderKind::Ttfs { t_steps: 8 }.name(), "ttfs:8");
+        assert_eq!(EncoderKind::Population { groups: 4 }.name(), "pop:4");
+    }
+
+    #[test]
+    fn payload_dim_tracks_encoder_expansion() {
+        assert_eq!(EncoderKind::Rate.payload_dim(256), Some(256));
+        assert_eq!(EncoderKind::Delta { gain: 4 }.payload_dim(256), Some(256));
+        assert_eq!(
+            EncoderKind::Population { groups: 4 }.payload_dim(256),
+            Some(64)
+        );
+        // input_dim not divisible by groups: no valid payload length
+        assert_eq!(EncoderKind::Population { groups: 3 }.payload_dim(256), None);
     }
 }

@@ -294,17 +294,34 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>) {
                         )
                     } else {
                         *seen += 1;
-                        wire::encode_response(
-                            tag,
-                            &Response::Window {
-                                session: resp.session,
-                                window: resp.window,
-                                prediction: resp.prediction as u32,
-                                fresh: resp.fresh,
-                                latency_us: resp.latency_us,
-                                counts: resp.counts,
-                            },
-                        )
+                        // an early-exit window carries its decision step in
+                        // the extended reply; classic windows keep the v1
+                        // frame byte-for-byte
+                        match resp.decision_step {
+                            Some(decision_step) => wire::encode_response(
+                                tag,
+                                &Response::WindowEx {
+                                    session: resp.session,
+                                    window: resp.window,
+                                    prediction: resp.prediction as u32,
+                                    fresh: resp.fresh,
+                                    latency_us: resp.latency_us,
+                                    counts: resp.counts,
+                                    decision_step,
+                                },
+                            ),
+                            None => wire::encode_response(
+                                tag,
+                                &Response::Window {
+                                    session: resp.session,
+                                    window: resp.window,
+                                    prediction: resp.prediction as u32,
+                                    fresh: resp.fresh,
+                                    latency_us: resp.latency_us,
+                                    counts: resp.counts,
+                                },
+                            ),
+                        }
                     }
                 }
                 Err(_) => err_frame(tag, ErrorCode::Internal, "engine reply lost"),
@@ -448,6 +465,25 @@ fn reader_loop(
                     Some(version) => {
                         match version.engine().stream_window_with_deadline(
                             session, &pixels, steps, precision, encoder, deadline,
+                        ) {
+                            Ok(ch) => Out::Stream(tag, session, ch, Arc::clone(version)),
+                            Err(e) => {
+                                Out::Frame(err_frame(tag, ErrorCode::BadInput, e.to_string()))
+                            }
+                        }
+                    }
+                }
+            }
+            Request::StreamWindowEarly { session, steps, precision, encoder, pixels } => {
+                match opened.get(&session) {
+                    None => Out::Frame(err_frame(
+                        tag,
+                        ErrorCode::UnknownSession,
+                        format!("session {session} was not opened on this connection"),
+                    )),
+                    Some(version) => {
+                        match version.engine().stream_window_full(
+                            session, &pixels, steps, precision, encoder, deadline, true,
                         ) {
                             Ok(ch) => Out::Stream(tag, session, ch, Arc::clone(version)),
                             Err(e) => {

@@ -47,6 +47,17 @@ pub const VERSION_DEADLINE: u8 = 2;
 /// model is bound to the session at open, not per window. Version-1/2
 /// frames stay byte-frozen and route to the default model.
 pub const VERSION_MODEL: u8 = 3;
+/// Early-exit protocol version: everything in [`VERSION_MODEL`] plus a
+/// per-window flags byte. `StreamWindow` bodies become
+/// `u32 deadline_ms | u8 flags | v1 body`, where flags bit 0 requests
+/// early-exit integration (stop at the first readout fire); all other
+/// flag bits are reserved and must be zero ([`ErrorCode::Malformed`]
+/// otherwise). A window with flag bit 0 set is answered with a
+/// [`FrameType::RespWindowEx`] frame carrying the decision step; with
+/// the bit clear the classic [`FrameType::RespWindow`] reply is used.
+/// Every other frame kind keeps its version-3 grammar, and version-1/2/3
+/// frames stay byte-frozen.
+pub const VERSION_EARLY_EXIT: u8 = 4;
 /// Longest model-id the wire can carry (a one-byte length prefix).
 pub const MAX_MODEL_ID: usize = 255;
 /// Fixed frame-header size in bytes.
@@ -105,6 +116,10 @@ pub enum FrameType {
     RespAdminList = 0x8A,
     /// Response to [`FrameType::AdminSwap`].
     RespAdminSwapped = 0x8B,
+    /// Extended window response: the [`FrameType::RespWindow`] body plus
+    /// a trailing `u32 decision_step` — sent only for version-4 windows
+    /// that requested early exit.
+    RespWindowEx = 0x8C,
     /// Typed error response (any request may earn one).
     RespError = 0xFF,
 }
@@ -278,6 +293,24 @@ pub enum Request {
         /// The window's frame.
         pixels: Vec<u8>,
     },
+    /// One **early-exit** frame-window of stream `session`: the server
+    /// stops integrating at the first readout fire and answers with a
+    /// [`Response::WindowEx`] carrying the decision step. Only
+    /// expressible in version-4 frames ([`VERSION_EARLY_EXIT`], flags
+    /// bit 0); the fields mirror [`Request::StreamWindow`].
+    StreamWindowEarly {
+        /// Session id from a prior `StreamOpened` response.
+        session: u64,
+        /// Timestep *budget* for this window (>= 1); integration may
+        /// stop earlier, at the decision step.
+        steps: u32,
+        /// Execution precision (integer widths only).
+        precision: Precision,
+        /// Spike coding (bound to the session on its first window).
+        encoder: EncoderKind,
+        /// The window's frame.
+        pixels: Vec<u8>,
+    },
     /// Close stream `session`.
     StreamClose {
         /// Session id to close.
@@ -395,6 +428,26 @@ pub enum Response {
         /// Per-class output spike counts of this window.
         counts: Vec<i32>,
     },
+    /// Answer to one early-exit stream window: the [`Response::Window`]
+    /// fields plus the decision step.
+    WindowEx {
+        /// Session the window belonged to.
+        session: u64,
+        /// 0-based window index within the session's state epoch.
+        window: u64,
+        /// Argmax class of this window's counts.
+        prediction: u32,
+        /// Whether session state was (re)created for this window.
+        fresh: bool,
+        /// Queue + execute time (µs).
+        latency_us: u64,
+        /// Per-class output spike counts of this window.
+        counts: Vec<i32>,
+        /// Timesteps actually integrated before the readout decided
+        /// (`1..=steps`; equals the requested budget when the readout
+        /// stayed silent).
+        decision_step: u32,
+    },
     /// Acknowledges a stream close.
     Closed {
         /// The closed session id.
@@ -469,6 +522,8 @@ fn encoder_bytes(e: EncoderKind) -> (u8, u32) {
         EncoderKind::Rate => (0, 0),
         EncoderKind::Delta { gain } => (1, gain),
         EncoderKind::Sliding { window } => (2, window as u32),
+        EncoderKind::Ttfs { t_steps } => (3, t_steps),
+        EncoderKind::Population { groups } => (4, groups),
     }
 }
 
@@ -477,13 +532,22 @@ fn encoder_from_bytes(kind: u8, param: u32) -> Result<EncoderKind, WireError> {
         0 => Ok(EncoderKind::Rate),
         1 if param >= 1 => Ok(EncoderKind::Delta { gain: param }),
         2 if param >= 1 => Ok(EncoderKind::Sliding { window: param as usize }),
-        1 | 2 => Err(WireError::new(
+        3 if param >= 1 => Ok(EncoderKind::Ttfs { t_steps: param }),
+        4 if param >= 2 => Ok(EncoderKind::Population { groups: param }),
+        1 | 2 | 3 => Err(WireError::new(
             ErrorCode::BadEncoder,
             "encoder parameter must be >= 1",
         )),
+        4 => Err(WireError::new(
+            ErrorCode::BadEncoder,
+            "population encoder needs >= 2 groups",
+        )),
         other => Err(WireError::new(
             ErrorCode::BadEncoder,
-            format!("encoder byte {other} (want 0=rate/1=delta/2=sliding)"),
+            format!(
+                "encoder byte {other} \
+                 (want 0=rate/1=delta/2=sliding/3=ttfs/4=pop)"
+            ),
         )),
     }
 }
@@ -519,6 +583,11 @@ fn request_body(req: &Request) -> (FrameType, Vec<u8>) {
             body.extend_from_slice(&ep.to_le_bytes());
             body.extend_from_slice(pixels);
             FrameType::StreamWindow
+        }
+        Request::StreamWindowEarly { .. } => {
+            // only version-4 frames have a flags byte to carry the
+            // early-exit bit; the frozen v1/v2/v3 grammars cannot
+            panic!("StreamWindowEarly requires encode_request_v4")
         }
         Request::StreamClose { session } => {
             body.extend_from_slice(&session.to_le_bytes());
@@ -619,6 +688,45 @@ pub fn encode_request_v3(tag: u64, req: &Request, deadline_ms: u32) -> Vec<u8> {
     out
 }
 
+/// Encode one version-4 (early-exit) request frame.
+///
+/// `StreamWindow` / `StreamWindowEarly` bodies become
+/// `u32 deadline_ms | u8 flags | v1 StreamWindow body`, with flags
+/// bit 0 carrying the early-exit request (see [`VERSION_EARLY_EXIT`]).
+/// Every other frame kind keeps its version-3 grammar under the
+/// version-4 header.
+pub fn encode_request_v4(tag: u64, req: &Request, deadline_ms: u32) -> Vec<u8> {
+    let (kind, body) = match req {
+        Request::StreamWindow { session, steps, precision, encoder, pixels }
+        | Request::StreamWindowEarly { session, steps, precision, encoder, pixels } => {
+            let early = matches!(req, Request::StreamWindowEarly { .. });
+            let mut body = Vec::with_capacity(23 + pixels.len());
+            body.extend_from_slice(&deadline_ms.to_le_bytes());
+            body.push(early as u8); // flags: bit 0 = early exit
+            body.extend_from_slice(&session.to_le_bytes());
+            body.extend_from_slice(&steps.to_le_bytes());
+            body.push(precision_byte(*precision));
+            let (ek, ep) = encoder_bytes(*encoder);
+            body.push(ek);
+            body.extend_from_slice(&ep.to_le_bytes());
+            body.extend_from_slice(pixels);
+            (FrameType::StreamWindow, body)
+        }
+        other => {
+            let raw = encode_request_v3(tag, other, deadline_ms);
+            let kind = raw[5];
+            let mut out = raw;
+            out[4] = VERSION_EARLY_EXIT;
+            debug_assert_eq!(kind, out[5]);
+            return out;
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    put_header(&mut out, VERSION_EARLY_EXIT, kind as u8, tag, body.len());
+    out.extend_from_slice(&body);
+    out
+}
+
 /// Encode one response frame (header + body) ready to write.
 pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
     let mut body = Vec::new();
@@ -647,6 +755,24 @@ pub fn encode_response(tag: u64, resp: &Response) -> Vec<u8> {
             body.extend_from_slice(&latency_us.to_le_bytes());
             push_counts(&mut body, counts);
             FrameType::RespWindow
+        }
+        Response::WindowEx {
+            session,
+            window,
+            prediction,
+            fresh,
+            latency_us,
+            counts,
+            decision_step,
+        } => {
+            body.extend_from_slice(&session.to_le_bytes());
+            body.extend_from_slice(&window.to_le_bytes());
+            body.extend_from_slice(&prediction.to_le_bytes());
+            body.push(u8::from(*fresh));
+            body.extend_from_slice(&latency_us.to_le_bytes());
+            push_counts(&mut body, counts);
+            body.extend_from_slice(&decision_step.to_le_bytes());
+            FrameType::RespWindowEx
         }
         Response::Closed { session } => {
             body.extend_from_slice(&session.to_le_bytes());
@@ -724,12 +850,16 @@ pub fn decode_header(raw: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         ));
     }
     let version = raw[4];
-    if version != VERSION && version != VERSION_DEADLINE && version != VERSION_MODEL {
+    if version != VERSION
+        && version != VERSION_DEADLINE
+        && version != VERSION_MODEL
+        && version != VERSION_EARLY_EXIT
+    {
         return Err(WireError::new(
             ErrorCode::BadVersion,
             format!(
                 "protocol version {version} (this build speaks {VERSION}, \
-                 {VERSION_DEADLINE} and {VERSION_MODEL})"
+                 {VERSION_DEADLINE}, {VERSION_MODEL} and {VERSION_EARLY_EXIT})"
             ),
         ));
     }
@@ -832,6 +962,9 @@ pub fn decode_request_versioned(
     kind: u8,
     body: &[u8],
 ) -> Result<(Request, u32), WireError> {
+    if version == VERSION_EARLY_EXIT {
+        return decode_request_v4(kind, body);
+    }
     if version == VERSION_MODEL {
         return decode_request_v3(kind, body);
     }
@@ -849,6 +982,37 @@ pub fn decode_request_versioned(
     } else {
         Ok((decode_request(kind, body)?, 0))
     }
+}
+
+/// Decode a version-4 request body (see [`encode_request_v4`]): only
+/// `StreamWindow` carries a v4-specific grammar (the flags byte between
+/// the deadline and the v1 body); every other kind defers to the v3
+/// path.
+fn decode_request_v4(kind: u8, body: &[u8]) -> Result<(Request, u32), WireError> {
+    if kind != FrameType::StreamWindow as u8 {
+        return decode_request_v3(kind, body);
+    }
+    let mut r = Rd::new(body);
+    let deadline_ms = r.u32()?;
+    let flags = r.u8()?;
+    if flags & !1 != 0 {
+        return Err(WireError::new(
+            ErrorCode::Malformed,
+            format!("reserved v4 window flags set ({flags:#04x})"),
+        ));
+    }
+    let req = decode_request(kind, r.rest())?;
+    if flags & 1 == 0 {
+        return Ok((req, deadline_ms));
+    }
+    let Request::StreamWindow { session, steps, precision, encoder, pixels } = req
+    else {
+        unreachable!("StreamWindow kind decodes to StreamWindow");
+    };
+    Ok((
+        Request::StreamWindowEarly { session, steps, precision, encoder, pixels },
+        deadline_ms,
+    ))
 }
 
 /// Decode a version-3 request body (see [`encode_request_v3`] for the
@@ -955,6 +1119,24 @@ pub fn decode_response(kind: u8, body: &[u8]) -> Result<Response, WireError> {
             let latency_us = r.u64()?;
             let counts = take_counts(&mut r)?;
             Response::Window { session, window, prediction, fresh, latency_us, counts }
+        }
+        k if k == FrameType::RespWindowEx as u8 => {
+            let session = r.u64()?;
+            let window = r.u64()?;
+            let prediction = r.u32()?;
+            let fresh = r.u8()? != 0;
+            let latency_us = r.u64()?;
+            let counts = take_counts(&mut r)?;
+            let decision_step = r.u32()?;
+            Response::WindowEx {
+                session,
+                window,
+                prediction,
+                fresh,
+                latency_us,
+                counts,
+                decision_step,
+            }
         }
         k if k == FrameType::RespClosed as u8 => Response::Closed { session: r.u64()? },
         k if k == FrameType::RespMetrics as u8 => Response::Metrics(WireMetrics {
@@ -1464,5 +1646,204 @@ mod tests {
             decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..]).unwrap();
         assert_eq!(back, one);
         assert_eq!(ms, 0);
+    }
+
+    #[test]
+    fn v4_request_encoding_is_pinned() {
+        // frozen bytes: the v4 early-exit window grammar is wire ABI
+        // from day one — deadline, then one flags byte, then the
+        // unchanged v1 StreamWindow body
+        let raw = encode_request_v4(
+            0x1122_3344_5566_7788,
+            &Request::StreamWindowEarly {
+                session: 7,
+                steps: 8,
+                precision: Precision::Int4,
+                encoder: EncoderKind::Ttfs { t_steps: 8 },
+                pixels: vec![9, 8, 7],
+            },
+            250,
+        );
+        #[rustfmt::skip]
+        let expect: Vec<u8> = vec![
+            b'L', b'S', b'P', b'N',               // magic
+            4,                                    // version
+            0x03,                                 // type: StreamWindow
+            0, 0,                                 // reserved
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // tag LE
+            26, 0, 0, 0,                          // body_len
+            250, 0, 0, 0,                         // deadline_ms LE
+            1,                                    // flags: early exit
+            7, 0, 0, 0, 0, 0, 0, 0,               // session LE
+            8, 0, 0, 0,                           // steps LE
+            4,                                    // precision byte (int4)
+            3,                                    // encoder kind: ttfs
+            8, 0, 0, 0,                           // encoder param LE
+            9, 8, 7,                              // pixels
+        ];
+        assert_eq!(raw, expect);
+    }
+
+    #[test]
+    fn v4_early_exit_roundtrips() {
+        let early = Request::StreamWindowEarly {
+            session: 42,
+            steps: 16,
+            precision: Precision::Int2,
+            encoder: EncoderKind::Population { groups: 4 },
+            pixels: vec![0; 64],
+        };
+        let plain = Request::StreamWindow {
+            session: 42,
+            steps: 16,
+            precision: Precision::Int8,
+            encoder: EncoderKind::Rate,
+            pixels: vec![1, 2, 3],
+        };
+        for (req, ms) in [(&early, 500u32), (&early, 0), (&plain, 120)] {
+            let raw = encode_request_v4(11, req, ms);
+            let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+            assert_eq!(hdr.version, VERSION_EARLY_EXIT);
+            let (back, deadline_ms) =
+                decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..])
+                    .unwrap();
+            assert_eq!(&back, req);
+            assert_eq!(deadline_ms, ms);
+        }
+        // a flags==0 v4 window is exactly the v2/v3 body behind the
+        // extra byte: decodes to a plain StreamWindow
+        let raw = encode_request_v4(1, &plain, 77);
+        let v2 = encode_request_deadline(1, &plain, 77);
+        assert_eq!(&raw[HEADER_LEN..HEADER_LEN + 4], &v2[HEADER_LEN..HEADER_LEN + 4]);
+        assert_eq!(raw[HEADER_LEN + 4], 0);
+        assert_eq!(&raw[HEADER_LEN + 5..], &v2[HEADER_LEN + 4..]);
+        // non-window kinds under v4 keep their v3 grammar
+        for req in [
+            Request::StreamOpen { model: Some("mlp".into()) },
+            Request::Metrics,
+            Request::AdminList,
+        ] {
+            let raw = encode_request_v4(5, &req, 0);
+            let v3 = encode_request_v3(5, &req, 0);
+            assert_eq!(&raw[HEADER_LEN..], &v3[HEADER_LEN..]);
+            let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+            let (back, _) =
+                decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..])
+                    .unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn v4_reserved_flags_are_malformed() {
+        let early = Request::StreamWindowEarly {
+            session: 1,
+            steps: 4,
+            precision: Precision::Int4,
+            encoder: EncoderKind::Rate,
+            pixels: vec![0; 8],
+        };
+        let mut raw = encode_request_v4(9, &early, 0);
+        raw[HEADER_LEN + 4] = 0x82; // set a reserved flag bit
+        let hdr = decode_header(raw[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(
+            decode_request_versioned(hdr.version, hdr.kind, &raw[HEADER_LEN..])
+                .unwrap_err()
+                .code,
+            ErrorCode::Malformed
+        );
+        // truncated before the flags byte is Malformed too, not a panic
+        assert_eq!(
+            decode_request_versioned(
+                VERSION_EARLY_EXIT,
+                FrameType::StreamWindow as u8,
+                &[1, 2, 3, 4]
+            )
+            .unwrap_err()
+            .code,
+            ErrorCode::Malformed
+        );
+    }
+
+    #[test]
+    fn ttfs_population_encoder_bytes_roundtrip() {
+        // the new encoder bytes ride the frozen v1 window grammar
+        roundtrip_request(Request::StreamWindow {
+            session: 3,
+            steps: 8,
+            precision: Precision::Int8,
+            encoder: EncoderKind::Ttfs { t_steps: 16 },
+            pixels: vec![5; 24],
+        });
+        roundtrip_request(Request::StreamWindow {
+            session: 4,
+            steps: 8,
+            precision: Precision::Int2,
+            encoder: EncoderKind::Population { groups: 8 },
+            pixels: vec![6; 3],
+        });
+        // invalid parameters stay typed errors: ttfs needs >= 1 step,
+        // population >= 2 groups, and byte 9 is still unassigned
+        for (ek, ep) in [(3u8, 0u32), (4, 0), (4, 1), (9, 0)] {
+            let mut body = Vec::new();
+            body.extend_from_slice(&1u64.to_le_bytes());
+            body.extend_from_slice(&4u32.to_le_bytes());
+            body.push(4); // precision int4
+            body.push(ek);
+            body.extend_from_slice(&ep.to_le_bytes());
+            assert_eq!(
+                decode_request(FrameType::StreamWindow as u8, &body)
+                    .unwrap_err()
+                    .code,
+                ErrorCode::BadEncoder,
+                "ek={ek} ep={ep}"
+            );
+        }
+    }
+
+    #[test]
+    fn window_ex_response_roundtrips() {
+        roundtrip_response(Response::WindowEx {
+            session: 42,
+            window: 17,
+            prediction: 3,
+            fresh: false,
+            latency_us: 88,
+            counts: vec![0, 0, 0, 2],
+            decision_step: 5,
+        });
+        // the RespWindowEx body is exactly the RespWindow body plus the
+        // trailing decision step — clients slicing the old fields keep
+        // working
+        let ex = encode_response(
+            7,
+            &Response::WindowEx {
+                session: 1,
+                window: 2,
+                prediction: 3,
+                fresh: true,
+                latency_us: 4,
+                counts: vec![9, 9],
+                decision_step: 6,
+            },
+        );
+        let plain = encode_response(
+            7,
+            &Response::Window {
+                session: 1,
+                window: 2,
+                prediction: 3,
+                fresh: true,
+                latency_us: 4,
+                counts: vec![9, 9],
+            },
+        );
+        assert_eq!(
+            &ex[HEADER_LEN..ex.len() - 4],
+            &plain[HEADER_LEN..],
+            "WindowEx must extend the Window body, not reshape it"
+        );
+        assert_eq!(&ex[ex.len() - 4..], 6u32.to_le_bytes());
+        assert_eq!(ex[5], 0x8C);
     }
 }

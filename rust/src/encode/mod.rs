@@ -10,7 +10,10 @@
 //! - [`PoissonEncoder`] — classic stochastic rate code (reference /
 //!   robustness experiments; not used by the deployed graph).
 //! - [`TtfsEncoder`] — time-to-first-spike temporal code (one spike per
-//!   pixel, earlier = brighter); used in the encoder ablation bench.
+//!   pixel, earlier = brighter); drives the early-exit serving path
+//!   ([`crate::model::SnnEngine::infer_until_decision`]).
+//! - [`PopulationEncoder`] — value → Gaussian tuning-curve activation
+//!   across an N-neuron group per pixel (output dim = pixels × groups).
 //!
 //! Streaming workloads add two stateful *windowed* codings in [`window`]:
 //!
@@ -20,11 +23,13 @@
 //!   `W` frames (single-frame noise suppressed before the spike domain).
 
 mod poisson;
+mod population;
 mod rate;
 mod ttfs;
 pub mod window;
 
 pub use poisson::PoissonEncoder;
+pub use population::PopulationEncoder;
 pub use rate::RateEncoder;
 pub use ttfs::TtfsEncoder;
 pub use window::{DeltaEncoder, SlidingWindowEncoder};
@@ -44,6 +49,15 @@ pub trait SpikeEncoder {
 
     /// Total spikes this encoder will emit for one pixel over `t_steps`.
     fn expected_count(&self, pixel: u8, t_steps: u32) -> u32;
+
+    /// Encoded output length for a raw payload of `raw` pixels — the
+    /// size of the `out` buffer [`encode_step`](Self::encode_step) /
+    /// [`encode_step_plane`](Self::encode_step_plane) fill. 1:1 for
+    /// every coding except population, which expands each pixel into
+    /// its neuron group.
+    fn encoded_len(&self, raw: usize) -> usize {
+        raw
+    }
 }
 
 #[cfg(test)]
@@ -52,15 +66,25 @@ mod plane_tests {
 
     /// Every encoder's plane path must equal its byte path bit-for-bit
     /// (separate instances so stateful RNG streams stay aligned).
-    fn check_plane_equals_bytes<E: SpikeEncoder>(mut by_bytes: E, mut by_plane: E) {
+    /// `out_per_pixel` covers expanding encoders (population emits
+    /// `groups` slots per input pixel; everything else is 1:1).
+    fn check_plane_equals_bytes_dim<E: SpikeEncoder>(
+        mut by_bytes: E,
+        mut by_plane: E,
+        out_per_pixel: usize,
+    ) {
         let pixels: Vec<u8> = (0..=255u32).map(|x| (x * 37 % 256) as u8).collect();
-        let mut bytes = vec![0u8; pixels.len()];
-        let mut plane = SpikePlane::flat(pixels.len());
+        let mut bytes = vec![0u8; pixels.len() * out_per_pixel];
+        let mut plane = SpikePlane::flat(pixels.len() * out_per_pixel);
         for t in 0..16 {
             by_bytes.encode_step(&pixels, t, &mut bytes);
             by_plane.encode_step_plane(&pixels, t, &mut plane);
             assert_eq!(plane.to_u8(), bytes, "t={t}");
         }
+    }
+
+    fn check_plane_equals_bytes<E: SpikeEncoder>(by_bytes: E, by_plane: E) {
+        check_plane_equals_bytes_dim(by_bytes, by_plane, 1);
     }
 
     #[test]
@@ -72,6 +96,11 @@ mod plane_tests {
         check_plane_equals_bytes(
             SlidingWindowEncoder::new(3),
             SlidingWindowEncoder::new(3),
+        );
+        check_plane_equals_bytes_dim(
+            PopulationEncoder::new(4),
+            PopulationEncoder::new(4),
+            4,
         );
     }
 }

@@ -1,0 +1,205 @@
+//! Population coding: value → Gaussian tuning-curve activation across a
+//! group of neurons.
+//!
+//! Each input pixel is expanded into `groups` neurons whose preferred
+//! values (tuning-curve centers) are spread evenly over the u8 range:
+//! `c_i = i * 255 / (groups - 1)`. A pixel `x` activates neuron `i` in
+//! proportion to its distance from `c_i` under an integer quadratic
+//! approximation of a Gaussian bump,
+//!
+//! ```text
+//! a_i(x) = clamp(255 - d²·255 / (2·w²), 0, 255),   d = |x - c_i|,
+//! ```
+//!
+//! with tuning width `w = 255 / (groups - 1)` (one inter-center gap).
+//! The activation is then rate-coded per step with the deployed
+//! accumulate-and-fire contract ([`RateEncoder::spike_at`]), so the
+//! whole path stays integer-exact and bit-reproducible across the byte
+//! and plane encoders.
+//!
+//! Output layout is **group-major**: pixel `p`'s neurons occupy output
+//! slots `[p*groups, (p+1)*groups)`, so the encoded dimension is
+//! `pixels.len() * groups` — callers size the model input accordingly
+//! (the forge and serving layers divide the model `input_dim` by
+//! `groups` to find the expected raw payload length).
+
+use super::{RateEncoder, SpikeEncoder};
+
+/// Stateless Gaussian tuning-curve population encoder.
+#[derive(Debug, Clone)]
+pub struct PopulationEncoder {
+    groups: u32,
+    /// Activation lookup: `act[x * groups + i]` = tuning-curve activation
+    /// of group-neuron `i` for pixel value `x` (256 × groups entries).
+    act: Vec<u8>,
+}
+
+impl PopulationEncoder {
+    /// Population encoder with `groups` tuning-curve neurons per pixel
+    /// (at least 2 — a single center has no curve to tune).
+    pub fn new(groups: u32) -> Self {
+        assert!(groups >= 2, "population encoder needs >= 2 groups");
+        let w = (255 / (groups - 1)).max(1);
+        let two_w2 = 2 * w * w;
+        let mut act = Vec::with_capacity(256 * groups as usize);
+        for x in 0..=255u32 {
+            for i in 0..groups {
+                let c = i * 255 / (groups - 1);
+                let d = x.abs_diff(c);
+                let fall = d * d * 255 / two_w2;
+                act.push(255u32.saturating_sub(fall) as u8);
+            }
+        }
+        Self { groups, act }
+    }
+
+    /// Neurons emitted per input pixel.
+    #[inline]
+    pub fn groups(&self) -> u32 {
+        self.groups
+    }
+
+    /// Encoded output length for a `raw` raw-pixel payload.
+    #[inline]
+    pub fn output_len(&self, raw: usize) -> usize {
+        raw * self.groups as usize
+    }
+
+    /// Tuning-curve activation of group-neuron `i` for pixel `x`.
+    #[inline]
+    pub fn activation(&self, x: u8, i: u32) -> u8 {
+        debug_assert!(i < self.groups);
+        self.act[x as usize * self.groups as usize + i as usize]
+    }
+}
+
+impl SpikeEncoder for PopulationEncoder {
+    fn encode_step(&mut self, pixels: &[u8], t: u32, out: &mut [u8]) {
+        let g = self.groups as usize;
+        debug_assert_eq!(pixels.len() * g, out.len());
+        for (p, &x) in pixels.iter().enumerate() {
+            let acts = &self.act[x as usize * g..x as usize * g + g];
+            let slots = &mut out[p * g..(p + 1) * g];
+            for (o, &a) in slots.iter_mut().zip(acts) {
+                *o = RateEncoder::spike_at(a, t);
+            }
+        }
+    }
+
+    fn encode_step_plane(
+        &mut self,
+        pixels: &[u8],
+        t: u32,
+        out: &mut crate::nce::SpikePlane,
+    ) {
+        let g = self.groups as usize;
+        debug_assert_eq!(pixels.len() * g, out.len());
+        let act = &self.act;
+        out.fill_from_fn(|j| {
+            let a = act[pixels[j / g] as usize * g + j % g];
+            RateEncoder::spike_at(a, t) != 0
+        });
+    }
+
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        // per-pixel budget across its whole neuron group, each neuron
+        // following the rate contract on its tuning-curve activation
+        (0..self.groups)
+            .map(|i| (self.activation(pixel, i) as u32 * t_steps) >> 8)
+            .sum()
+    }
+
+    fn encoded_len(&self, raw: usize) -> usize {
+        raw * self.groups as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn center_activation_is_full_scale() {
+        for groups in [2u32, 4, 8, 10] {
+            let enc = PopulationEncoder::new(groups);
+            for i in 0..groups {
+                let c = (i * 255 / (groups - 1)) as u8;
+                assert_eq!(enc.activation(c, i), 255, "groups={groups} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_curve_is_symmetric_around_center() {
+        for groups in [2u32, 4, 8] {
+            let enc = PopulationEncoder::new(groups);
+            for i in 0..groups {
+                let c = (i * 255 / (groups - 1)) as i32;
+                for d in 1..=60i32 {
+                    let (lo, hi) = (c - d, c + d);
+                    if lo < 0 || hi > 255 {
+                        continue;
+                    }
+                    assert_eq!(
+                        enc.activation(lo as u8, i),
+                        enc.activation(hi as u8, i),
+                        "groups={groups} i={i} d={d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activation_falls_off_with_distance() {
+        let enc = PopulationEncoder::new(4);
+        // center 85 (i=1): walking away monotonically weakens activation
+        let mut last = enc.activation(85, 1);
+        for x in 86..=200u8 {
+            let a = enc.activation(x, 1);
+            assert!(a <= last, "x={x} a={a} last={last}");
+            last = a;
+        }
+        // and far-away pixels are fully silent
+        assert_eq!(enc.activation(255, 0), 0);
+        assert_eq!(enc.activation(0, 3), 0);
+    }
+
+    #[test]
+    fn expected_count_matches_emitted_train() {
+        let mut enc = PopulationEncoder::new(4);
+        let pixels: Vec<u8> = vec![0, 1, 17, 85, 128, 170, 254, 255];
+        let g = enc.groups() as usize;
+        let mut out = vec![0u8; pixels.len() * g];
+        for t_steps in [1u32, 4, 8, 16] {
+            let mut totals = vec![0u32; pixels.len() * g];
+            for t in 0..t_steps {
+                enc.encode_step(&pixels, t, &mut out);
+                for (tot, &o) in totals.iter_mut().zip(&out) {
+                    *tot += o as u32;
+                }
+            }
+            for (p, &x) in pixels.iter().enumerate() {
+                let emitted: u32 = totals[p * g..(p + 1) * g].iter().sum();
+                assert_eq!(
+                    emitted,
+                    enc.expected_count(x, t_steps),
+                    "x={x} T={t_steps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_major_layout() {
+        let mut enc = PopulationEncoder::new(4);
+        // pixel 0 activates its low-center neurons, pixel 255 its
+        // high-center ones: act(0) = [255,128,0,0], act(255) = [0,0,128,255]
+        let pixels = [0u8, 255];
+        let mut out = vec![0u8; 8];
+        // t=1 is the first step where both 255 and 128 fire under the
+        // rate contract ((a*2)>>8 - (a*1)>>8 == 1)
+        enc.encode_step(&pixels, 1, &mut out);
+        assert_eq!(out, vec![1, 1, 0, 0, 0, 0, 1, 1]);
+    }
+}

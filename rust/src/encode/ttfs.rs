@@ -51,8 +51,16 @@ impl SpikeEncoder for TtfsEncoder {
         out.fill_from_fn(|j| me.fire_step(pixels[j]) == Some(t));
     }
 
-    fn expected_count(&self, pixel: u8, _t_steps: u32) -> u32 {
-        (pixel != 0) as u32
+    fn expected_count(&self, pixel: u8, t_steps: u32) -> u32 {
+        // The spike lands iff the caller's integration window actually
+        // reaches the fire step. The encoder schedules against its own
+        // constructed window (`self.t_steps`); a shorter `t_steps` from
+        // serve/stream `--steps` truncates the train, so dim pixels
+        // (which fire late) must count 0 — not an unconditional 1.
+        match self.fire_step(pixel) {
+            Some(step) if step < t_steps => 1,
+            _ => 0,
+        }
     }
 }
 
@@ -84,6 +92,43 @@ mod tests {
         let t_dim = enc.fire_step(10).unwrap();
         assert!(t_bright < t_mid && t_mid < t_dim);
         assert_eq!(t_bright, 0);
+    }
+
+    #[test]
+    fn expected_count_honors_the_passed_window() {
+        // Regression: expected_count used to ignore `t_steps` entirely
+        // and claim one spike for every nonzero pixel. When the caller
+        // integrates fewer steps than the encoder's constructed window
+        // (stream/serve `--steps` < T), late-firing dim pixels never
+        // actually spike — the budget must say so.
+        let enc = TtfsEncoder::new(16);
+        // pixel 1 fires at step 15; an 8-step window never reaches it
+        assert_eq!(enc.fire_step(1), Some(15));
+        assert_eq!(enc.expected_count(1, 8), 0);
+        // pixel 255 fires at step 0; any window >= 1 sees it
+        assert_eq!(enc.expected_count(255, 1), 1);
+        // zero pixels never fire regardless of window
+        assert_eq!(enc.expected_count(0, 16), 0);
+        // and the budget always matches the actually-emitted train
+        let pixels: Vec<u8> = (0..=255).collect();
+        for t_steps in [1u32, 4, 8, 16, 32] {
+            let mut e = TtfsEncoder::new(16);
+            let mut out = vec![0u8; 256];
+            let mut total = vec![0u32; 256];
+            for t in 0..t_steps {
+                e.encode_step(&pixels, t, &mut out);
+                for (tot, &o) in total.iter_mut().zip(&out) {
+                    *tot += o as u32;
+                }
+            }
+            for (x, &tot) in total.iter().enumerate() {
+                assert_eq!(
+                    tot,
+                    e.expected_count(x as u8, t_steps),
+                    "x={x} T={t_steps}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -136,9 +136,11 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
     let dataset_file = "dataset.lspd";
     write_lspd(&dir.join(dataset_file), &data)?;
 
-    // Streaming dataset: ECG-like quasi-periodic channels with labeled
-    // events, same input shape as the models (own seed lane — adding it
-    // does not perturb the LSPW/LSPD byte streams).
+    // Streaming datasets, same input shape as the models (each family on
+    // its own seed lane — adding one never perturbs the LSPW/LSPD byte
+    // streams or another family). The ECG stream doubles as the legacy
+    // default `stream.lsps`; all three are addressable by name through
+    // the manifest's `streams` map.
     let stream = super::stream::stream_data(
         cfg.seed,
         cfg.stream_windows,
@@ -148,6 +150,46 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
     );
     let stream_file = "stream.lsps";
     super::stream::write_lsps(&dir.join(stream_file), &stream)?;
+    let named_streams = [
+        ("ecg", stream_file.to_string(), &stream),
+        (
+            "kws",
+            "stream_kws.lsps".to_string(),
+            &super::stream::kws_stream_data(
+                cfg.seed,
+                cfg.stream_windows,
+                cfg.stream_window_frames,
+                input_dim,
+                classes,
+            ),
+        ),
+        (
+            "vib",
+            "stream_vib.lsps".to_string(),
+            &super::stream::vib_stream_data(
+                cfg.seed,
+                cfg.stream_windows,
+                cfg.stream_window_frames,
+                input_dim,
+                classes,
+            ),
+        ),
+    ];
+    let mut streams_json: BTreeMap<String, Value> = BTreeMap::new();
+    for (name, file, s) in &named_streams {
+        if *name != "ecg" {
+            super::stream::write_lsps(&dir.join(file), s)?;
+        }
+        streams_json.insert(
+            name.to_string(),
+            obj(vec![
+                ("file", Value::Str(file.clone())),
+                ("frames", num(s.frames as f64)),
+                ("window", num(s.window as f64)),
+                ("classes", num(s.classes as f64)),
+            ]),
+        );
+    }
 
     let mut models = BTreeMap::new();
     for (name, arch) in &arches {
@@ -243,6 +285,7 @@ pub fn write_artifacts(dir: &Path, cfg: &ForgeConfig) -> Result<()> {
                 ("classes", num(stream.classes as f64)),
             ]),
         ),
+        ("streams", Value::Obj(streams_json)),
         ("models", Value::Obj(models)),
     ]);
     std::fs::write(dir.join("manifest.json"), manifest.to_json())?;

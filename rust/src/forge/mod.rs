@@ -44,7 +44,7 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 pub use dataset::write_lspd;
-pub use stream::{stream_data, write_lsps};
+pub use stream::{kws_stream_data, stream_data, vib_stream_data, write_lsps};
 pub use weights::{
     layer_from_tensor, lspw_bytes, lspw_sparse_bytes, prune_layer, prune_network,
     write_lspw, write_lspw_sparse,
@@ -54,7 +54,10 @@ pub use weights::{
 /// and the golden-vector contract). v2: artifacts gained the LSPS
 /// streaming dataset + its manifest entry (existing LSPW/LSPD bytes are
 /// unchanged — the stream generator draws from its own seed lane).
-pub const FORGE_VERSION: u32 = 2;
+/// v3: two more LSPS stream families (`kws`, `vib`) and the manifest's
+/// named `streams` map — again on fresh seed lanes, so every pre-v3
+/// artifact byte stream is unchanged.
+pub const FORGE_VERSION: u32 = 3;
 
 /// Default seed of the canonical forge artifacts.
 pub const DEFAULT_SEED: u64 = 0x5EED_1517;

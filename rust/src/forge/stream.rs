@@ -1,18 +1,28 @@
-//! LSPS streaming-dataset generator + write side.
+//! LSPS streaming-dataset generators + write side.
 //!
-//! The streaming workload needs a *continuous* signal, not i.i.d. test
-//! samples: this module forges an ECG-like quasi-periodic multi-channel
-//! stream — a piecewise-linear PQRST-ish beat whose period jitters
-//! beat-to-beat, scaled per channel, with bounded noise — and stamps one
-//! event label per fixed-size frame window. Labeled events (`label > 0`)
-//! add a sustained offset on the label's channel subset
-//! (`channel % classes == label`), so event windows are separable from
-//! baseline in the input domain.
+//! The streaming workload needs *continuous* signals, not i.i.d. test
+//! samples. Three stream families are forged, each labeling one event
+//! per fixed-size frame window (0 = baseline; an event with `label > 0`
+//! perturbs the label's channel subset `channel % classes == label`, so
+//! event windows are separable from baseline in the input domain):
 //!
-//! Like every forge generator it is seed-deterministic (all randomness
-//! through [`Rng`], integer arithmetic only — no libm), so the same seed
-//! produces identical LSPS bytes on every platform. Any change here MUST
-//! bump [`super::FORGE_VERSION`].
+//! - [`stream_data`] — ECG-like quasi-periodic channels: a
+//!   piecewise-linear PQRST-ish beat with jittered period, labeled
+//!   events as sustained channel offsets (the default `stream.lsps`,
+//!   manifest name `ecg`);
+//! - [`kws_stream_data`] — keyword-spotting audio envelopes: near-silent
+//!   mel-ish bands until a keyword fires an attack–sustain–decay
+//!   envelope on the label's band subset (manifest name `kws`);
+//! - [`vib_stream_data`] — multi-channel machine vibration:
+//!   phase-offset triangle carriers per channel, anomalies as
+//!   alternating-frame impulse bursts (manifest name `vib`).
+//!
+//! Like every forge generator they are seed-deterministic (all
+//! randomness through [`Rng`], integer arithmetic only — no libm), so
+//! the same seed produces identical LSPS bytes on every platform. Each
+//! family draws from its own seed lane (`layer_seed` tags "stream",
+//! "kws", "vib"), so adding one never perturbs another. Any change here
+//! MUST bump [`super::FORGE_VERSION`].
 
 use std::path::Path;
 
@@ -89,6 +99,111 @@ pub fn beat_amp(phase: u32, period: u32) -> u32 {
                 0
             }
         }
+    }
+}
+
+/// Generate the keyword-spotting stream: near-silent audio bands with an
+/// attack–sustain–decay keyword envelope on the label's band subset.
+pub fn kws_stream_data(
+    seed: u64,
+    windows: usize,
+    window: usize,
+    dim: usize,
+    classes: usize,
+) -> StreamData {
+    assert!(window >= 1 && dim >= 1 && classes >= 1);
+    let mut rng = Rng::new(layer_seed(seed, "kws", 0));
+    // per-band keyword gain in Q8, ~[0.5, 1.0)
+    let gains: Vec<u32> = (0..dim).map(|_| 128 + rng.below(128) as u32).collect();
+    let mut pixels = Vec::with_capacity(windows * window * dim);
+    let mut labels = Vec::with_capacity(windows);
+    for _ in 0..windows {
+        let label = rng.below(classes as u64) as u8;
+        labels.push(label);
+        // utterance onset in the first half of the window (drawn for
+        // every window so the RNG stream is label-independent)
+        let onset = rng.below((window as u64 / 2).max(1)) as usize;
+        for f in 0..window {
+            let env = kws_envelope(f, onset, window);
+            for (c, &g) in gains.iter().enumerate() {
+                let noise = rng.below(9) as i32 - 4;
+                let mut x = 20 + noise;
+                if label > 0 && c % classes == label as usize {
+                    x += ((env * g) >> 8) as i32;
+                }
+                pixels.push(x.clamp(0, 255) as u8);
+            }
+        }
+    }
+    StreamData { frames: windows * window, dim, classes, window, pixels, labels }
+}
+
+/// Attack–sustain–decay keyword envelope, `0..=200`: silence before the
+/// onset, a two-frame attack to the peak, a sustain of about a third of
+/// the window, then a linear decay back to silence.
+pub fn kws_envelope(frame: usize, onset: usize, window: usize) -> u32 {
+    if frame < onset {
+        return 0;
+    }
+    let dt = (frame - onset) as u32;
+    let sustain = (window as u32 / 3).max(1);
+    match dt {
+        0 => 96,
+        1 => 200,
+        d if d < 2 + sustain => 160,
+        d => 160u32.saturating_sub(32 * (d - 1 - sustain)),
+    }
+}
+
+/// Generate the vibration/anomaly stream: every channel carries a
+/// phase-offset triangle-wave carrier (rotating-machinery fundamental);
+/// an anomaly (`label > 0`) superimposes an alternating-frame impulse
+/// burst on the label's channel subset, stronger for higher classes.
+pub fn vib_stream_data(
+    seed: u64,
+    windows: usize,
+    window: usize,
+    dim: usize,
+    classes: usize,
+) -> StreamData {
+    assert!(window >= 1 && dim >= 1 && classes >= 1);
+    let mut rng = Rng::new(layer_seed(seed, "vib", 0));
+    let period = 8u32; // carrier period in frames
+    let phases: Vec<u32> = (0..dim).map(|_| rng.below(period as u64) as u32).collect();
+    // per-channel carrier gain in Q8, ~[0.375, 0.75)
+    let gains: Vec<u32> = (0..dim).map(|_| 96 + rng.below(96) as u32).collect();
+    let mut pixels = Vec::with_capacity(windows * window * dim);
+    let mut labels = Vec::with_capacity(windows);
+    let mut t = 0u32; // carrier phase runs continuously across windows
+    for _ in 0..windows {
+        let label = rng.below(classes as u64) as u8;
+        labels.push(label);
+        for _ in 0..window {
+            for (c, &g) in gains.iter().enumerate() {
+                let tri = triangle(t + phases[c], period);
+                let noise = rng.below(7) as i32 - 3;
+                let mut x = 24 + ((tri * g) >> 8) as i32 + noise;
+                if label > 0 && c % classes == label as usize && t % 2 == 0 {
+                    // the anomaly: a high-frequency impulse train riding
+                    // the carrier on the label's channel subset
+                    x += 40 + 6 * label as i32;
+                }
+                pixels.push(x.clamp(0, 255) as u8);
+            }
+            t += 1;
+        }
+    }
+    StreamData { frames: windows * window, dim, classes, window, pixels, labels }
+}
+
+/// Symmetric triangle wave, `0..=128`, with the given period in frames.
+pub fn triangle(t: u32, period: u32) -> u32 {
+    let ph = t % period;
+    let half = period / 2;
+    if ph <= half {
+        128 * ph / half.max(1)
+    } else {
+        128 * (period - ph) / (period - half).max(1)
     }
 }
 
@@ -206,6 +321,138 @@ mod tests {
             (back.frames, back.dim, back.classes, back.window),
             (s.frames, s.dim, s.classes, s.window)
         );
+    }
+
+    /// Mean level of one window's event channels (the subset a label
+    /// perturbs), for the separability checks below.
+    fn window_channel_mean(s: &StreamData, wdx: usize, channels: &[usize]) -> u32 {
+        let mut sum = 0u32;
+        for f in wdx * s.window..(wdx + 1) * s.window {
+            for &c in channels {
+                sum += s.frame(f)[c] as u32;
+            }
+        }
+        sum / (s.window * channels.len()) as u32
+    }
+
+    /// Shared separability harness: in `s`, every labeled window's event
+    /// channels must sit above the same channels' baseline-window mean.
+    fn assert_events_separable(s: &StreamData, margin: u32) {
+        let classes = s.classes;
+        let (w, &label) = s
+            .labels
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l > 0)
+            .expect("stream contains an event window");
+        let event_channels: Vec<usize> =
+            (0..s.dim).filter(|c| c % classes == label as usize).collect();
+        let baseline: Vec<usize> = s
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l == 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!baseline.is_empty(), "stream contains a baseline window");
+        let in_event = window_channel_mean(s, w, &event_channels);
+        let in_baseline: u32 = baseline
+            .iter()
+            .map(|&bw| window_channel_mean(s, bw, &event_channels))
+            .sum::<u32>()
+            / baseline.len() as u32;
+        assert!(
+            in_event > in_baseline + margin,
+            "event not separable: {in_event} vs {in_baseline}"
+        );
+    }
+
+    #[test]
+    fn kws_stream_deterministic_and_well_formed() {
+        let a = kws_stream_data(7, 8, 8, 16, 10);
+        let b = kws_stream_data(7, 8, 8, 16, 10);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.frames, 64);
+        assert_eq!(a.pixels.len(), a.frames * a.dim);
+        assert!(a.labels.iter().all(|&l| (l as usize) < a.classes));
+        // a different seed lane than the ECG stream with the same knobs
+        let ecg = stream_data(7, 8, 8, 16, 10);
+        assert_ne!(a.pixels, ecg.pixels);
+    }
+
+    #[test]
+    fn kws_keywords_are_separable_and_silence_is_quiet() {
+        let s = kws_stream_data(11, 40, 8, 40, 10);
+        assert_events_separable(&s, 10);
+        // baseline windows stay near the 20-count noise floor
+        let (w0, _) = s
+            .labels
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l == 0)
+            .expect("a baseline window");
+        let all: Vec<usize> = (0..s.dim).collect();
+        let quiet = window_channel_mean(&s, w0, &all);
+        assert!((14..=26).contains(&quiet), "noise floor drifted: {quiet}");
+    }
+
+    #[test]
+    fn kws_envelope_shape() {
+        // attack to the peak, sustain plateau, decay back to silence
+        assert_eq!(kws_envelope(0, 2, 12), 0); // pre-onset silence
+        assert_eq!(kws_envelope(2, 2, 12), 96); // attack
+        assert_eq!(kws_envelope(3, 2, 12), 200); // peak
+        assert_eq!(kws_envelope(4, 2, 12), 160); // sustain
+        // sustain = 12/3 = 4 frames (dt 2..=5), decay from dt 6 on
+        assert_eq!(kws_envelope(7, 2, 12), 160); // last sustain frame
+        assert_eq!(kws_envelope(8, 2, 12), 128); // decay begins
+        assert_eq!(kws_envelope(40, 2, 12), 0); // fully decayed
+    }
+
+    #[test]
+    fn vib_stream_deterministic_and_well_formed() {
+        let a = vib_stream_data(7, 8, 8, 16, 10);
+        let b = vib_stream_data(7, 8, 8, 16, 10);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.frames, 64);
+        assert_eq!(a.pixels.len(), a.frames * a.dim);
+        let kws = kws_stream_data(7, 8, 8, 16, 10);
+        assert_ne!(a.pixels, kws.pixels);
+    }
+
+    #[test]
+    fn vib_carrier_oscillates_and_anomalies_are_separable() {
+        // window = carrier period so every window sees one full cycle
+        // and the triangle contributes the same mean everywhere
+        let s = vib_stream_data(11, 40, 8, 40, 10);
+        assert_events_separable(&s, 8);
+        // the carrier is visible: within a baseline window (one full
+        // period) a single channel sweeps from trough to crest
+        let (w0, _) = s
+            .labels
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l == 0)
+            .expect("a baseline window");
+        let ch0: Vec<u32> = (w0 * s.window..(w0 + 1) * s.window)
+            .map(|f| s.frame(f)[0] as u32)
+            .collect();
+        let hi = *ch0.iter().max().unwrap();
+        let lo = *ch0.iter().min().unwrap();
+        assert!(hi >= lo + 24, "no carrier structure: hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn triangle_is_periodic_and_bounded() {
+        for t in 0..64 {
+            let v = triangle(t, 8);
+            assert!(v <= 128);
+            assert_eq!(v, triangle(t + 8, 8));
+        }
+        assert_eq!(triangle(0, 8), 0);
+        assert_eq!(triangle(4, 8), 128);
     }
 
     #[test]

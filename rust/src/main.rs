@@ -55,6 +55,10 @@ lspine <forge|serve|loadgen|admin|stream|eval|simulate|report> [options]
              S > 0 writes v2 block-sparse LSPW files)
   eval:      --bits 2|4|8  --scheme lspine|stbp|admm|trunc
              --backend native|pjrt|both  --samples N
+             --encoder rate|delta[:G]|window:W|ttfs[:T]|pop:G (native only)
+             --early-exit (native: stop each sample at its first readout
+             fire; prints decision-step quantiles and the energy credit
+             of the skipped timesteps)
   simulate:  --bits 2|4|8  --samples N
   serve:     --bits 2|4|8  --backend native|pjrt  --requests N  --concurrency N
              --workers N (default: available cores)
@@ -70,7 +74,11 @@ lspine <forge|serve|loadgen|admin|stream|eval|simulate|report> [options]
              \"panic@6,stall@12:100ms,drop@18,reset@2\"; env LSPINE_FAULTS)
   loadgen:   --connect HOST:PORT (default 127.0.0.1:7317)
              --sessions N (default 16)  --windows N/session (default 8)
-             --steps N  --bits 2|4|8  --encoder rate|delta[:G]|window:W
+             --steps N  --bits 2|4|8
+             --encoder rate|delta[:G]|window:W|ttfs[:T]|pop:G
+             --early-exit (version-4 frames: the server stops integrating
+             at the first readout fire; the summary gains decision_viol=
+             and decision_p50/p99 keys)
              --model A[,B,...] (address sessions round-robin across
              models via version-3 frames; default: the server default)
              --rate R (windows/s/session, default 50)
@@ -86,8 +94,12 @@ lspine <forge|serve|loadgen|admin|stream|eval|simulate|report> [options]
   stream:    --bits 2|4|8  --steps N (timesteps/frame, default 4)
              --sessions N (concurrent streams, default 1)  --workers N
              --policy hold|reset|decay:K (window boundary, default hold)
-             --encoder rate|delta[:GAIN]|window:W (default rate)
+             --encoder rate|delta[:GAIN]|window:W|ttfs[:T]|pop:G
              --input FILE|- (LSPS; default artifacts/stream.lsps)
+             --stream NAME (named forged stream from the manifest, e.g.
+             ecg|kws|vib; overrides --input)
+             --early-exit (stop each frame-window at its first readout
+             fire; prints latency-to-decision and decision-step quantiles)
   report:    --all | any of --table1 --table2 --fig4 --fig5 --energy --cpu-gpu
 ";
 
@@ -108,6 +120,7 @@ fn run() -> lspine::Result<()> {
             "requests=", "concurrency=", "workers=", "kernels=", "out=", "seed=",
             "sparsity=",
             "steps=", "sessions=", "policy=", "encoder=", "input=", "listen=",
+            "stream=", "early-exit",
             "queue=", "max-sessions=", "connect=", "windows=", "rate=",
             "arrival=", "conns=", "retry-secs=", "timeout-secs=", "drain",
             "faults=", "retries=", "backoff-ms=", "deadline-ms=",
@@ -179,6 +192,14 @@ fn cmd_eval(args: &Args) -> lspine::Result<()> {
         kernels.name()
     );
 
+    if args.has("early-exit") {
+        anyhow::ensure!(
+            backend == "native",
+            "--early-exit runs on the native engine only"
+        );
+        return eval_early_exit(args, &store, model, scheme, bits, kernels, &data, samples);
+    }
+
     let native_preds = if backend != "pjrt" {
         let net = if scheme == "mixed" {
             store.load_mixed_network(model)?
@@ -233,6 +254,111 @@ fn cmd_eval(args: &Args) -> lspine::Result<()> {
             anyhow::ensure!(agree == samples, "backends disagree!");
         }
     }
+    Ok(())
+}
+
+/// `eval --early-exit`: run every sample twice — the fixed-T baseline
+/// and the early-exit path (stop at the first readout fire) — and report
+/// prediction agreement, decision-step quantiles, latency-to-decision,
+/// and the energy credit of the skipped timesteps.
+#[allow(clippy::too_many_arguments)]
+fn eval_early_exit(
+    args: &Args,
+    store: &ArtifactStore,
+    model: &str,
+    scheme: &str,
+    bits: u32,
+    kernels: Kernels,
+    data: &lspine::model::io::Dataset,
+    samples: usize,
+) -> lspine::Result<()> {
+    use lspine::energy::EnergyModel;
+
+    let encoder = EncoderKind::parse(args.get_or("encoder", "rate")).ok_or_else(|| {
+        anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W|ttfs[:T]|pop:G)")
+    })?;
+    let net = if scheme == "mixed" {
+        store.load_mixed_network(model)?
+    } else {
+        store.load_network(model, scheme, bits)?
+    };
+    let trained_t = net.arch.timesteps();
+    let neurons = net.arch.total_neurons() as u64;
+    let input_dim = net.arch.input_dim();
+    let raw_dim = encoder.payload_dim(input_dim).ok_or_else(|| {
+        anyhow::anyhow!(
+            "model input dim {input_dim} is not divisible by the population group count"
+        )
+    })?;
+    if raw_dim != data.sample(0).len() {
+        // population expands each raw pixel into its neuron group, so a
+        // pop:G run feeds the first input_dim/G pixels of each sample
+        println!("  note: {} feeds the first {raw_dim} pixels per sample", encoder.name());
+    }
+
+    let mut engine = SnnEngine::with_kernels(net, kernels);
+    let em = EnergyModel::default();
+    let (mut full_j, mut early_j) = (0.0f64, 0.0f64);
+    let (mut full_s, mut early_s) = (0.0f64, 0.0f64);
+    let mut decisions = Vec::with_capacity(samples);
+    let (mut agree, mut hits_full, mut hits_early) = (0usize, 0usize, 0usize);
+    for i in 0..samples {
+        let px = &data.sample(i)[..raw_dim];
+        let label = data.labels[i] as usize;
+
+        let t_full = Instant::now();
+        let mut enc = encoder.build();
+        let counts = engine.infer_with_encoder(px, trained_t, &mut *enc);
+        let full_pred = lspine::model::engine::argmax(counts);
+        let dt = t_full.elapsed().as_secs_f64();
+        full_s += dt;
+        full_j += em
+            .breakdown(&engine.last_stats(), bits, neurons * trained_t as u64, dt)
+            .total_j();
+
+        let t_early = Instant::now();
+        let mut enc = encoder.build();
+        let (pred, decision) =
+            engine.infer_until_decision_with_encoder(px, trained_t, &mut *enc);
+        let dt = t_early.elapsed().as_secs_f64();
+        early_s += dt;
+        // the energy credit of early exit: membrane updates stop at the
+        // decision step (word traffic in stats already reflects it)
+        early_j += em
+            .breakdown(&engine.last_stats(), bits, neurons * decision as u64, dt)
+            .total_j();
+
+        decisions.push(decision);
+        agree += (pred == full_pred) as usize;
+        hits_full += (full_pred == label) as usize;
+        hits_early += (pred == label) as usize;
+    }
+    decisions.sort_unstable();
+    let quant =
+        |q: f64| decisions[((decisions.len() - 1) as f64 * q).round() as usize];
+    let mean = decisions.iter().map(|&d| d as f64).sum::<f64>() / samples as f64;
+    println!(
+        "  early-exit({}): acc={:.2}% vs fixed-T acc={:.2}%, agreement {agree}/{samples}",
+        encoder.name(),
+        hits_early as f64 * 100.0 / samples as f64,
+        hits_full as f64 * 100.0 / samples as f64,
+    );
+    println!(
+        "  decision step: mean={mean:.2} p50={} p99={} of T={trained_t}",
+        quant(0.5),
+        quant(0.99)
+    );
+    println!(
+        "  latency-to-decision: {:.3} ms/sample vs {:.3} ms/sample fixed-T",
+        early_s * 1e3 / samples as f64,
+        full_s * 1e3 / samples as f64
+    );
+    println!(
+        "  energy/inference: {:.3} uJ vs {:.3} uJ fixed-T ({:.1}% credit)",
+        early_j * 1e6 / samples as f64,
+        full_j * 1e6 / samples as f64,
+        (1.0 - early_j / full_j.max(f64::MIN_POSITIVE)) * 100.0
+    );
     Ok(())
 }
 
@@ -590,8 +716,9 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
         steps: args.get_usize("steps", 4)?.max(1) as u32,
         precision: ReqPrecision::parse(&bits.to_string())
             .ok_or_else(|| anyhow::anyhow!("bad bits"))?,
-        encoder: EncoderKind::parse(args.get_or("encoder", "rate"))
-            .ok_or_else(|| anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W)"))?,
+        encoder: EncoderKind::parse(args.get_or("encoder", "rate")).ok_or_else(|| {
+            anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W|ttfs[:T]|pop:G)")
+        })?,
         rate: args.get_or("rate", "50").parse::<f64>()?,
         arrival: loadgen::Arrival::parse(args.get_or("arrival", "constant"))
             .ok_or_else(|| anyhow::anyhow!("bad --arrival (constant|burst|heavy-tail)"))?,
@@ -614,10 +741,11 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
                     .collect()
             })
             .unwrap_or_default(),
+        early_exit: args.has("early-exit"),
     };
     println!(
         "loadgen: connect={} sessions={} windows={} steps={} {} rate={}/s \
-         arrival={} encoder={} models=[{}]",
+         arrival={} encoder={}{} models=[{}]",
         cfg.addr,
         cfg.sessions,
         cfg.windows,
@@ -626,6 +754,7 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
         cfg.rate,
         cfg.arrival.name(),
         cfg.encoder.name(),
+        if cfg.early_exit { " early-exit" } else { "" },
         if cfg.models.is_empty() { "default".to_string() } else { cfg.models.join(",") }
     );
     let report = loadgen::run(&cfg)?;
@@ -650,6 +779,9 @@ fn cmd_loadgen(args: &Args) -> lspine::Result<()> {
             ("ttfp_p50_us", report.ttfp.quantile_us(0.5) as f64),
             ("rejected", report.rejected as f64),
             ("protocol_errors", report.protocol_errors as f64),
+            ("decision_viol", report.decision_viol as f64),
+            ("decision_p50", report.decision_quantile(0.5) as f64),
+            ("decision_p99", report.decision_quantile(0.99) as f64),
         ],
     );
     Ok(())
@@ -669,23 +801,27 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
         .max(1);
     let policy = ResetPolicy::parse(args.get_or("policy", "hold"))
         .ok_or_else(|| anyhow::anyhow!("bad --policy (hold|reset|decay:K)"))?;
-    let encoder = EncoderKind::parse(args.get_or("encoder", "rate"))
-        .ok_or_else(|| anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W)"))?;
+    let encoder = EncoderKind::parse(args.get_or("encoder", "rate")).ok_or_else(|| {
+        anyhow::anyhow!("bad --encoder (rate|delta[:GAIN]|window:W|ttfs[:T]|pop:G)")
+    })?;
     let precision = ReqPrecision::parse(&bits.to_string())
         .ok_or_else(|| anyhow::anyhow!("bad bits"))?;
     let kernel_kind = parse_kernel_kind(args)?;
+    let early_exit = args.has("early-exit");
 
-    // stream source: explicit LSPS file, `-` for LSPS bytes on stdin, or
-    // the forged artifacts' stream.lsps
-    let data = match args.get("input") {
-        Some("-") => {
+    // stream source: a named forged stream from the manifest, an explicit
+    // LSPS file, `-` for LSPS bytes on stdin, or the forged artifacts'
+    // default stream.lsps
+    let data = match (args.get("stream"), args.get("input")) {
+        (Some(name), _) => ArtifactStore::open(&artifacts)?.load_stream_named(name)?,
+        (None, Some("-")) => {
             use std::io::Read;
             let mut blob = Vec::new();
             std::io::stdin().read_to_end(&mut blob)?;
             lspine::model::parse_stream(&blob)?
         }
-        Some(path) => lspine::model::load_stream(path)?,
-        None => ArtifactStore::open(&artifacts)?.load_stream_set()?,
+        (None, Some(path)) => lspine::model::load_stream(path)?,
+        (None, None) => ArtifactStore::open(&artifacts)?.load_stream_set()?,
     };
 
     let engine = ServingEngine::start(ServerConfig {
@@ -699,18 +835,20 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
     })?;
     println!(
         "stream: {model} {} frames={} window={} sessions={sessions} \
-         workers={workers} steps={steps} policy={} encoder={} kernels={}",
+         workers={workers} steps={steps} policy={} encoder={}{} kernels={}",
         precision.name(),
         data.frames,
         data.window,
         policy.name(),
         encoder.name(),
+        if early_exit { " early-exit" } else { "" },
         Kernels::for_kind(kernel_kind)?.name()
     );
 
     let ids: Vec<u64> = (0..sessions).map(|_| engine.open_stream()).collect();
     let mut win_counts = vec![vec![0i64; data.classes]; sessions];
     let mut lat = LatencyHistogram::new();
+    let mut decisions: Vec<u32> = Vec::new();
     let mut nonzero_windows = 0usize;
     let mut agree = 0usize;
     let mut total_windows = 0usize;
@@ -721,7 +859,9 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
         let rxs: Vec<_> = ids
             .iter()
             .map(|&sid| {
-                engine.stream_window_with(sid, data.frame(f), steps, precision, encoder)
+                engine.stream_window_full(
+                    sid, data.frame(f), steps, precision, encoder, None, early_exit,
+                )
             })
             .collect::<lspine::Result<_>>()?;
         let boundary = (f + 1) % data.window == 0;
@@ -738,6 +878,9 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
                  lower --sessions or raise capacity)"
             );
             lat.record(Duration::from_micros(resp.latency_us));
+            if let Some(d) = resp.decision_step {
+                decisions.push(d);
+            }
             for (w, &c) in win_counts[s].iter_mut().zip(&resp.counts) {
                 *w += c as i64;
             }
@@ -774,6 +917,21 @@ fn cmd_stream(args: &Args) -> lspine::Result<()> {
         lat.quantile_us(0.5),
         lat.quantile_us(0.99)
     );
+    if !decisions.is_empty() {
+        // latency-to-decision: the recorded per-window latency already
+        // stops at the readout fire, so the quantiles above are it; the
+        // decision-step quantiles say how many timesteps were bought
+        decisions.sort_unstable();
+        let quant =
+            |q: f64| decisions[((decisions.len() - 1) as f64 * q).round() as usize];
+        let mean =
+            decisions.iter().map(|&d| d as f64).sum::<f64>() / decisions.len() as f64;
+        println!(
+            "  decision step: mean={mean:.2} p50={} p99={} of steps={steps}",
+            quant(0.5),
+            quant(0.99)
+        );
+    }
     println!("  {}", engine.metrics().summary());
     engine.shutdown()
 }

@@ -344,12 +344,47 @@ impl SnnEngine {
     ) -> &[u32] {
         assert!(timesteps <= self.net.arch.timesteps(), "beyond trained T");
         self.reset();
-        self.run_window(pixels, timesteps, encoder);
+        self.run_window(pixels, timesteps, encoder, false);
         // dense bound stays the *trained-T* budget even for truncated
         // runs (the stats contract predates early-exit readout)
         self.stats.dense_synops =
             self.net.arch.synops_per_step() * self.net.arch.timesteps() as u64;
         &self.counts
+    }
+
+    /// Early-exit classification: integrate until the readout layer
+    /// first fires (or the trained `T` elapses), returning
+    /// `(prediction, decision_step)` with `decision_step` the number of
+    /// timesteps actually executed (`1..=T`).
+    ///
+    /// Bit-identity contract: the result is exactly
+    /// [`infer_steps`](Self::infer_steps)`(pixels, decision_step)` — the
+    /// truncation contract makes the early exit a pure latency/energy
+    /// win, never a numerics change. [`last_stats`](Self::last_stats)
+    /// reflects only the executed steps (`dense_synops` credits the
+    /// skipped tail), which is what the energy model prices.
+    pub fn infer_until_decision(&mut self, pixels: &[u8]) -> (usize, u32) {
+        let trained_t = self.net.arch.timesteps();
+        let mut enc = RateEncoder::new();
+        self.infer_until_decision_with_encoder(pixels, trained_t, &mut enc)
+    }
+
+    /// [`infer_until_decision`](Self::infer_until_decision) with an
+    /// explicit timestep budget and encoder (TTFS is the natural fit:
+    /// one spike per pixel makes the first readout fire a real
+    /// decision event).
+    pub fn infer_until_decision_with_encoder(
+        &mut self,
+        pixels: &[u8],
+        timesteps: u32,
+        encoder: &mut dyn crate::encode::SpikeEncoder,
+    ) -> (usize, u32) {
+        assert!(timesteps <= self.net.arch.timesteps(), "beyond trained T");
+        self.reset();
+        let decision = self.run_window(pixels, timesteps, encoder, true);
+        self.stats.dense_synops =
+            self.net.arch.synops_per_step() * decision as u64;
+        (argmax(&self.counts), decision)
     }
 
     /// One **streaming window**: run `steps` timesteps over `pixels`
@@ -383,21 +418,53 @@ impl SnnEngine {
         steps: u32,
         encoder: &mut dyn crate::encode::SpikeEncoder,
     ) -> &[u32] {
-        self.run_window(pixels, steps, encoder);
+        self.run_window(pixels, steps, encoder, false);
         self.stats.dense_synops = self.net.arch.synops_per_step() * steps as u64;
         &self.counts
     }
 
-    /// Shared inference loop: `steps` encoded timesteps over the current
-    /// membrane state (callers decide whether to [`reset`](Self::reset)
-    /// first and what `dense_synops` budget to record).
+    /// Early-exit streaming window: like
+    /// [`infer_window_with_encoder`](Self::infer_window_with_encoder)
+    /// but the integration stops at the first readout fire. Returns the
+    /// window's per-class counts plus the decision step (`1..=steps`;
+    /// `steps` when the readout stayed silent). Membranes are left
+    /// exactly as a fixed-`steps` run truncated at the decision step
+    /// would leave them, so held sessions stay bit-reproducible.
+    pub fn infer_window_until_decision_with_encoder(
+        &mut self,
+        pixels: &[u8],
+        steps: u32,
+        encoder: &mut dyn crate::encode::SpikeEncoder,
+    ) -> (&[u32], u32) {
+        let decision = self.run_window(pixels, steps, encoder, true);
+        self.stats.dense_synops =
+            self.net.arch.synops_per_step() * decision as u64;
+        (&self.counts, decision)
+    }
+
+    /// Shared inference loop: up to `steps` encoded timesteps over the
+    /// current membrane state (callers decide whether to
+    /// [`reset`](Self::reset) first and what `dense_synops` budget to
+    /// record). With `early_exit` the loop stops the moment the readout
+    /// layer first fires; the return value is the number of timesteps
+    /// actually executed (`steps` when the readout never fired or
+    /// `early_exit` is off). Because each timestep's integer dynamics
+    /// depend only on prior steps, an early-exited run is exactly the
+    /// fixed-`steps` run truncated at the returned step — counts,
+    /// membranes and stats included (the `infer_steps` truncation
+    /// contract).
     fn run_window(
         &mut self,
         pixels: &[u8],
         steps: u32,
         encoder: &mut dyn crate::encode::SpikeEncoder,
-    ) {
-        assert_eq!(pixels.len(), self.net.arch.input_dim(), "bad input size");
+        early_exit: bool,
+    ) -> u32 {
+        assert_eq!(
+            encoder.encoded_len(pixels.len()),
+            self.net.arch.input_dim(),
+            "bad input size"
+        );
         self.counts.fill(0);
         self.stats = InferStats::default();
         let positions = self.net.arch.layer_positions();
@@ -414,6 +481,7 @@ impl SnnEngine {
             })
             .collect();
 
+        let mut executed = 0u32;
         for t in 0..steps {
             encoder.encode_step_plane(pixels, t, &mut self.input_spikes);
             match self.net.arch {
@@ -422,8 +490,17 @@ impl SnnEngine {
             }
             let last = self.spike_bufs.last().unwrap();
             let counts = &mut self.counts;
-            last.for_each_set(|c| counts[c] += 1);
+            let mut fired = false;
+            last.for_each_set(|c| {
+                counts[c] += 1;
+                fired = true;
+            });
+            executed = t + 1;
+            if early_exit && fired {
+                break;
+            }
         }
+        executed
     }
 
     /// A zeroed membrane snapshot with this engine's layer shapes — what
@@ -941,6 +1018,57 @@ mod tests {
         assert_eq!(ResetPolicy::parse("decay:"), None);
         assert_eq!(ResetPolicy::parse("melt"), None);
         assert_eq!(ResetPolicy::Decay(2).name(), "decay:2");
+    }
+
+    #[test]
+    fn early_exit_is_truncated_fixed_t() {
+        // the early-exit run must be byte-identical to the fixed-T run
+        // truncated at decision_step: counts, membranes, stats
+        for pixels in [[255u8, 128, 64, 200], [40, 40, 40, 40], [0, 0, 0, 0]] {
+            let mut a = SnnEngine::new(tiny_mlp());
+            let (pred, step) = a.infer_until_decision(&pixels);
+            assert!(step >= 1 && step <= 4, "decision_step={step}");
+            let counts_a = a.counts.clone();
+            let mut sa = a.fresh_state();
+            a.swap_state(&mut sa);
+
+            let mut b = SnnEngine::new(tiny_mlp());
+            let counts_b = b.infer_steps(&pixels, step).to_vec();
+            assert_eq!(counts_a, counts_b, "pixels={pixels:?}");
+            assert_eq!(pred, argmax(&counts_b));
+            let mut sb = b.fresh_state();
+            b.swap_state(&mut sb);
+            assert_eq!(sa, sb, "membranes diverge at step {step}");
+        }
+    }
+
+    #[test]
+    fn early_exit_stops_at_first_readout_fire() {
+        let pixels = [255u8, 128, 64, 200];
+        let mut e = SnnEngine::new(tiny_mlp());
+        let (_, step) = e.infer_until_decision(&pixels);
+        // the step it stopped at really is the first with readout output
+        let mut f = SnnEngine::new(tiny_mlp());
+        for t in 1..step {
+            let c: u32 = f.infer_steps(&pixels, t).iter().sum();
+            assert_eq!(c, 0, "readout fired before the decision step");
+        }
+        let at: u32 = f.infer_steps(&pixels, step).iter().sum();
+        assert!(at > 0 || step == 4, "no fire at the decision step");
+        // silent input: never fires, decision_step == the full budget,
+        // dense_synops credits nothing (all steps ran)
+        let (_, silent) = e.infer_until_decision(&[0, 0, 0, 0]);
+        assert_eq!(silent, 4);
+        // energy credit: an early decision prices fewer dense synops
+        e.infer_until_decision(&pixels);
+        let early = e.last_stats().dense_synops;
+        e.infer(&pixels);
+        let full = e.last_stats().dense_synops;
+        assert_eq!(
+            early,
+            full / 4 * step as u64,
+            "dense_synops must scale with decision_step"
+        );
     }
 
     #[test]

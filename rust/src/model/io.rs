@@ -423,6 +423,9 @@ pub struct Manifest {
     pub dataset: DatasetInfo,
     /// The streaming dataset, when forged.
     pub stream: Option<StreamInfo>,
+    /// Named stream families (`ecg` / `kws` / `vib` when forged; empty
+    /// in manifests written before named streams existed).
+    pub streams: BTreeMap<String, StreamInfo>,
     /// Per-model entries (arch + quantization + HLO records).
     pub models: BTreeMap<String, ModelEntry>,
 }
@@ -444,15 +447,24 @@ impl Manifest {
             input_dim: d.req("input_dim")?.as_u64().unwrap_or(0) as usize,
             classes: d.req("classes")?.as_u64().unwrap_or(0) as usize,
         };
-        let stream = match v.get("stream") {
-            Some(s) => Some(StreamInfo {
+        let stream_info = |s: &Value| -> Result<StreamInfo> {
+            Ok(StreamInfo {
                 file: s.req("file")?.as_str().unwrap_or_default().to_string(),
                 frames: s.req("frames")?.as_u64().unwrap_or(0) as usize,
                 window: s.req("window")?.as_u64().unwrap_or(0) as usize,
                 classes: s.req("classes")?.as_u64().unwrap_or(0) as usize,
-            }),
+            })
+        };
+        let stream = match v.get("stream") {
+            Some(s) => Some(stream_info(s)?),
             None => None,
         };
+        let mut streams = BTreeMap::new();
+        if let Some(m) = v.get("streams").and_then(|s| s.as_obj()) {
+            for (name, entry) in m {
+                streams.insert(name.clone(), stream_info(entry)?);
+            }
+        }
         let mut models = BTreeMap::new();
         for (name, entry) in v
             .req("models")?
@@ -461,7 +473,7 @@ impl Manifest {
         {
             models.insert(name.clone(), Self::model_from_json(entry)?);
         }
-        Ok(Manifest { format_version, dataset, stream, models })
+        Ok(Manifest { format_version, dataset, stream, streams, models })
     }
 
     fn model_from_json(v: &Value) -> Result<ModelEntry> {

@@ -72,6 +72,21 @@ impl ArtifactStore {
         io::load_stream(self.dir.join(&info.file))
     }
 
+    /// Load a named stream family from the manifest's `streams` map
+    /// (`ecg` / `kws` / `vib` in forged artifacts); the error lists what
+    /// the manifest actually offers.
+    pub fn load_stream_named(&self, name: &str) -> Result<io::StreamData> {
+        let info = self.manifest.streams.get(name).ok_or_else(|| {
+            let have: Vec<&str> =
+                self.manifest.streams.keys().map(|s| s.as_str()).collect();
+            anyhow::anyhow!(
+                "no stream {name:?} in manifest (available: [{}]; re-run `lspine forge`)",
+                have.join(",")
+            )
+        })?;
+        io::load_stream(self.dir.join(&info.file))
+    }
+
     /// Path of the HLO text artifact for (model, bits, batch).
     pub fn hlo_path(&self, model: &str, bits: u32, batch: usize) -> Result<PathBuf> {
         let entry = self.manifest.model(model)?;

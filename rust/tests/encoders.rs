@@ -1,0 +1,487 @@
+//! Encoder-zoo conformance + property battery.
+//!
+//! Three layers of guarantees, all hermetic (no `make artifacts`, no
+//! python at test time — the golden files under `tests/golden/` were
+//! generated once by the independent replica in `tools/gen_goldens.py`):
+//!
+//! 1. **Cross-representation properties** — every encoder's bit-packed
+//!    plane path must equal its byte path bit-for-bit over ragged
+//!    widths, frame resizes, and stateful frame histories; every
+//!    encoder's `expected_count` budget must equal its actually emitted
+//!    train; the CLI `EncoderKind` surface must build encoders
+//!    indistinguishable from direct construction.
+//! 2. **Per-encoder invariants** — TTFS fires exactly once per nonzero
+//!    pixel, brighter never later, always inside its window; population
+//!    coding peaks at the nearest tuning-curve center.
+//! 3. **Early-exit semantics** — `infer_until_decision_with_encoder` is
+//!    bit-identical to a fixed-T run truncated at the decision step
+//!    (counts, membranes, and activity stats), its `dense_synops`
+//!    credits only the executed steps, and its `(prediction,
+//!    decision_step)` pairs match the checked-in golden vectors for
+//!    every golden arch x encoder x precision. The forged stream
+//!    families (ecg / kws / vib) are pinned the same way.
+
+use lspine::coordinator::EncoderKind;
+use lspine::encode::{
+    DeltaEncoder, PoissonEncoder, PopulationEncoder, RateEncoder, SlidingWindowEncoder,
+    SpikeEncoder, TtfsEncoder,
+};
+use lspine::forge::{self, GOLDEN_SEED, PRECISIONS};
+use lspine::model::engine::argmax;
+use lspine::model::SnnEngine;
+use lspine::nce::SpikePlane;
+use lspine::util::json::{self, Value};
+use lspine::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn golden(text: &str) -> Value {
+    json::parse(text).expect("golden file parses")
+}
+
+/// Samples per golden early-exit row block (matches `gen_goldens.py`).
+const SAMPLES: usize = 4;
+
+/// Tuning-curve neurons per pixel in the golden/early-exit runs.
+const POP_GROUPS: u32 = 4;
+
+/// Drive both instances of one encoder over `frames`, asserting the
+/// plane train equals the byte train bit-for-bit at every step (separate
+/// instances so stateful histories/RNG streams stay aligned).
+fn assert_plane_equals_bytes(
+    name: &str,
+    by_bytes: &mut dyn SpikeEncoder,
+    by_plane: &mut dyn SpikeEncoder,
+    frames: &[Vec<u8>],
+    steps: u32,
+    seed: u64,
+) {
+    for (f, pixels) in frames.iter().enumerate() {
+        let out_len = by_bytes.encoded_len(pixels.len());
+        let mut bytes = vec![0u8; out_len];
+        let mut plane = SpikePlane::flat(out_len);
+        for t in 0..steps {
+            by_bytes.encode_step(pixels, t, &mut bytes);
+            by_plane.encode_step_plane(pixels, t, &mut plane);
+            assert_eq!(
+                plane.to_u8(),
+                bytes,
+                "{name}: plane != bytes at frame {f} t={t} dim={} (seed={seed})",
+                pixels.len()
+            );
+        }
+    }
+}
+
+fn random_frames(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.below(256) as u8).collect())
+        .collect()
+}
+
+/// The early-exit encoder zoo: the codings the golden vectors cover.
+const ZOO: [&str; 3] = ["rate", "ttfs", "population"];
+
+fn zoo_encoder(kind: &str, t: u32) -> Box<dyn SpikeEncoder> {
+    match kind {
+        "rate" => Box::new(RateEncoder::new()),
+        "ttfs" => Box::new(TtfsEncoder::new(t)),
+        "population" => Box::new(PopulationEncoder::new(POP_GROUPS)),
+        other => panic!("unknown zoo encoder {other:?}"),
+    }
+}
+
+/// Raw payload length `kind` feeds a model of `input_dim` neurons.
+fn zoo_raw_dim(kind: &str, input_dim: usize) -> usize {
+    if kind == "population" {
+        assert_eq!(input_dim % POP_GROUPS as usize, 0);
+        input_dim / POP_GROUPS as usize
+    } else {
+        input_dim
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. cross-representation properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_plane_equals_bytes_ragged_widths_all_encoders() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+        let dim = 1 + rng.below(200) as usize;
+        let steps = 1 + rng.below(12) as u32;
+        let gain = 1 + rng.below(8) as u32;
+        let window = 1 + rng.below(5) as usize;
+        let groups = 2 + rng.below(7) as u32;
+        let frames = random_frames(&mut rng, 3, dim);
+        let mut cases: Vec<(&str, Box<dyn SpikeEncoder>, Box<dyn SpikeEncoder>)> = vec![
+            ("rate", Box::new(RateEncoder::new()), Box::new(RateEncoder::new())),
+            (
+                "poisson",
+                Box::new(PoissonEncoder::new(seed + 1)),
+                Box::new(PoissonEncoder::new(seed + 1)),
+            ),
+            (
+                "ttfs",
+                Box::new(TtfsEncoder::new(steps)),
+                Box::new(TtfsEncoder::new(steps)),
+            ),
+            (
+                "delta",
+                Box::new(DeltaEncoder::new(gain)),
+                Box::new(DeltaEncoder::new(gain)),
+            ),
+            (
+                "sliding",
+                Box::new(SlidingWindowEncoder::new(window)),
+                Box::new(SlidingWindowEncoder::new(window)),
+            ),
+            (
+                "population",
+                Box::new(PopulationEncoder::new(groups)),
+                Box::new(PopulationEncoder::new(groups)),
+            ),
+        ];
+        for (name, by_bytes, by_plane) in &mut cases {
+            assert_plane_equals_bytes(
+                name,
+                by_bytes.as_mut(),
+                by_plane.as_mut(),
+                &frames,
+                steps,
+                seed,
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_stateful_encoders_stay_aligned_across_frame_resizes() {
+    // Delta / sliding keep inter-frame history; a dimension change must
+    // restart both representations identically (restart-on-resize).
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xD1CE ^ (seed << 8) ^ seed);
+        let frames: Vec<Vec<u8>> = (0..5)
+            .map(|_| {
+                let dim = 1 + rng.below(96) as usize;
+                (0..dim).map(|_| rng.below(256) as u8).collect()
+            })
+            .collect();
+        assert_plane_equals_bytes(
+            "delta",
+            &mut DeltaEncoder::new(3),
+            &mut DeltaEncoder::new(3),
+            &frames,
+            4,
+            seed,
+        );
+        assert_plane_equals_bytes(
+            "sliding",
+            &mut SlidingWindowEncoder::new(3),
+            &mut SlidingWindowEncoder::new(3),
+            &frames,
+            4,
+            seed,
+        );
+    }
+}
+
+/// `expected_count(x, T)` must equal the spikes actually emitted for
+/// pixel `x` over a `T`-step train (`per` output slots per raw pixel).
+fn check_counts(
+    name: &str,
+    enc: &mut dyn SpikeEncoder,
+    pixels: &[u8],
+    t_budget: u32,
+    per: usize,
+    seed: u64,
+) {
+    let out_len = enc.encoded_len(pixels.len());
+    assert_eq!(out_len, pixels.len() * per, "{name}: encoded_len (seed={seed})");
+    let mut out = vec![0u8; out_len];
+    let mut emitted = vec![0u32; pixels.len()];
+    for t in 0..t_budget {
+        enc.encode_step(pixels, t, &mut out);
+        for (j, &o) in out.iter().enumerate() {
+            emitted[j / per] += o as u32;
+        }
+    }
+    for (i, &x) in pixels.iter().enumerate() {
+        assert_eq!(
+            emitted[i],
+            enc.expected_count(x, t_budget),
+            "{name}: x={x} T={t_budget} (seed={seed})"
+        );
+    }
+}
+
+#[test]
+fn prop_expected_count_matches_emitted_train() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(0xC0_FFEE ^ seed.wrapping_mul(0x9E37_79B9));
+        let t_budget = 1 + rng.below(23) as u32;
+        let pixels: Vec<u8> = (0..64).map(|_| rng.below(256) as u8).collect();
+        check_counts("rate", &mut RateEncoder::new(), &pixels, t_budget, 1, seed);
+        // the TTFS window is independent of the caller's budget: the
+        // budget may truncate the train (late spikes count 0) or exceed
+        // it (still exactly one spike per nonzero pixel)
+        let t_win = 1 + rng.below(20) as u32;
+        check_counts("ttfs", &mut TtfsEncoder::new(t_win), &pixels, t_budget, 1, seed);
+        let groups = 2 + rng.below(7) as u32;
+        check_counts(
+            "population",
+            &mut PopulationEncoder::new(groups),
+            &pixels,
+            t_budget,
+            groups as usize,
+            seed,
+        );
+    }
+}
+
+#[test]
+fn encoder_kind_builds_match_direct_construction() {
+    let pixels: Vec<u8> = (0..48u32).map(|i| (i * 37 % 256) as u8).collect();
+    let frames: [Vec<u8>; 2] =
+        [pixels.clone(), pixels.iter().map(|&x| x ^ 0x5A).collect()];
+    let cases: Vec<(&str, Box<dyn SpikeEncoder>)> = vec![
+        ("rate", Box::new(RateEncoder::new())),
+        ("delta:4", Box::new(DeltaEncoder::new(4))),
+        ("window:3", Box::new(SlidingWindowEncoder::new(3))),
+        ("ttfs:12", Box::new(TtfsEncoder::new(12))),
+        ("pop:4", Box::new(PopulationEncoder::new(4))),
+    ];
+    for (spec, mut direct) in cases {
+        let kind = EncoderKind::parse(spec).expect("spec parses");
+        assert_eq!(kind.name(), spec, "name round-trips the spec");
+        let mut built = kind.build();
+        for (f, px) in frames.iter().enumerate() {
+            let len = direct.encoded_len(px.len());
+            assert_eq!(built.encoded_len(px.len()), len, "{spec}: encoded_len");
+            let (mut a, mut b) = (vec![0u8; len], vec![0u8; len]);
+            for t in 0..12u32 {
+                direct.encode_step(px, t, &mut a);
+                built.encode_step(px, t, &mut b);
+                assert_eq!(a, b, "{spec}: built != direct at frame {f} t={t}");
+            }
+        }
+    }
+    // parse edges: defaults and rejections
+    assert_eq!(EncoderKind::parse("ttfs"), Some(EncoderKind::Ttfs { t_steps: 16 }));
+    assert_eq!(
+        EncoderKind::parse("population:8"),
+        Some(EncoderKind::Population { groups: 8 })
+    );
+    assert_eq!(EncoderKind::parse("pop:1"), None, "one center has no curve");
+    assert_eq!(EncoderKind::parse("delta:0"), None);
+    assert_eq!(EncoderKind::parse("ttfs:0"), None);
+    // population payload geometry: divisibility gates the pairing
+    let pop = EncoderKind::Population { groups: 4 };
+    assert_eq!(pop.payload_dim(24), Some(6));
+    assert_eq!(pop.payload_dim(25), None);
+    assert_eq!(EncoderKind::Rate.payload_dim(24), Some(24));
+}
+
+// ---------------------------------------------------------------------
+// 2. per-encoder invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ttfs_one_spike_brighter_never_later() {
+    for t_win in [1u32, 2, 5, 8, 16, 31] {
+        let enc = TtfsEncoder::new(t_win);
+        assert_eq!(enc.fire_step(0), None, "T={t_win}: zero never fires");
+        assert_eq!(enc.fire_step(255), Some(0), "T={t_win}: full scale fires first");
+        let mut last = u32::MAX;
+        for x in 1..=255u32 {
+            let t = enc.fire_step(x as u8).expect("nonzero pixels fire");
+            assert!(t < t_win, "x={x} T={t_win}: fire step {t} outside window");
+            assert!(t <= last, "x={x} T={t_win}: brighter pixel fired later");
+            last = t;
+        }
+    }
+}
+
+#[test]
+fn prop_population_nearest_center_dominates() {
+    for groups in [2u32, 3, 4, 6, 8, 16] {
+        let enc = PopulationEncoder::new(groups);
+        for x in 0..=255u32 {
+            let acts: Vec<u8> = (0..groups).map(|i| enc.activation(x as u8, i)).collect();
+            let max = *acts.iter().max().unwrap();
+            let dist = |i: u32| (i * 255 / (groups - 1)).abs_diff(x);
+            let nearest = (0..groups).min_by_key(|&i| dist(i)).unwrap();
+            assert_eq!(
+                acts[nearest as usize], max,
+                "groups={groups} x={x}: nearest center must peak ({acts:?})"
+            );
+            // the curve never drops below half scale at its worst
+            // midpoint (groups=2 bottoms out at 128; wider zoos stay
+            // well above)
+            assert!(max >= 128, "groups={groups} x={x}: max activation {max}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. early-exit semantics + golden pins
+// ---------------------------------------------------------------------
+
+#[test]
+fn early_exit_is_truncated_fixed_t_for_every_encoder_precision_arch() {
+    for arch in [forge::golden_mlp_arch(), forge::golden_convnet_arch()] {
+        let t = arch.timesteps();
+        for p in PRECISIONS {
+            let net = forge::raw_network(&arch, GOLDEN_SEED, p, forge::golden_theta(p));
+            for kind in ZOO {
+                let raw_dim = zoo_raw_dim(kind, arch.input_dim());
+                let pix = forge::pixels(GOLDEN_SEED ^ 0xEE, 2, raw_dim);
+                let mut eng_a = SnnEngine::new(net.clone());
+                let mut eng_b = SnnEngine::new(net.clone());
+                let mut eng_c = SnnEngine::new(net.clone());
+                for s in 0..2 {
+                    let ctx = format!("{arch:?} int{} {kind} sample {s}", p.bits());
+                    let px = &pix[s * raw_dim..(s + 1) * raw_dim];
+
+                    // A: early-exit window over fresh membranes
+                    let mut enc_a = zoo_encoder(kind, t);
+                    eng_a.reset();
+                    let (counts_a, step) = eng_a
+                        .infer_window_until_decision_with_encoder(px, t, enc_a.as_mut());
+                    let counts_a = counts_a.to_vec();
+                    assert!(1 <= step && step <= t, "{ctx}: step {step}");
+                    let stats_a = eng_a.last_stats();
+                    let mut state_a = eng_a.fresh_state();
+                    eng_a.swap_state(&mut state_a);
+
+                    // B: fixed-T run truncated at the decision step
+                    let mut enc_b = zoo_encoder(kind, t);
+                    let counts_b =
+                        eng_b.infer_with_encoder(px, step, enc_b.as_mut()).to_vec();
+                    let stats_b = eng_b.last_stats();
+                    let mut state_b = eng_b.fresh_state();
+                    eng_b.swap_state(&mut state_b);
+
+                    assert_eq!(counts_a, counts_b, "{ctx}: counts");
+                    assert_eq!(state_a, state_b, "{ctx}: membranes");
+                    assert_eq!(stats_a.active_rows, stats_b.active_rows, "{ctx}");
+                    assert_eq!(stats_a.words_touched, stats_b.words_touched, "{ctx}");
+                    assert_eq!(stats_a.spikes_emitted, stats_b.spikes_emitted, "{ctx}");
+                    // the early exit credits only the executed steps;
+                    // the truncated fixed run still bills the trained T
+                    assert_eq!(
+                        stats_a.dense_synops,
+                        arch.synops_per_step() * step as u64,
+                        "{ctx}: dense_synops credits the skipped tail"
+                    );
+
+                    // C: the reset-and-argmax wrapper agrees
+                    let mut enc_c = zoo_encoder(kind, t);
+                    let (pred, step_c) =
+                        eng_c.infer_until_decision_with_encoder(px, t, enc_c.as_mut());
+                    assert_eq!(step_c, step, "{ctx}: wrapper decision step");
+                    assert_eq!(pred, argmax(&counts_a), "{ctx}: wrapper prediction");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn early_exit_matches_golden_vectors() {
+    let g = golden(include_str!("golden/early_exit.json"));
+    assert_eq!(g.req("seed").unwrap().as_u64(), Some(GOLDEN_SEED));
+    let t = g.req("timesteps").unwrap().as_u64().unwrap() as u32;
+    assert_eq!(
+        g.req("groups").unwrap().as_u64(),
+        Some(POP_GROUPS as u64),
+        "golden population group count drifted from the test zoo"
+    );
+    let models = g.req("models").unwrap();
+    for (name, arch) in
+        [("mlp", forge::golden_mlp_arch()), ("convnet", forge::golden_convnet_arch())]
+    {
+        assert_eq!(arch.timesteps(), t, "{name}: golden T");
+        let per_model = models.req(name).unwrap();
+        for kind in ZOO {
+            let per_enc = per_model.req(kind).unwrap();
+            let raw_dim = zoo_raw_dim(kind, arch.input_dim());
+            let pix = forge::pixels(GOLDEN_SEED, SAMPLES, raw_dim);
+            for p in PRECISIONS {
+                let rows = per_enc
+                    .req(&format!("int{}", p.bits()))
+                    .unwrap()
+                    .as_arr()
+                    .unwrap();
+                assert_eq!(rows.len(), SAMPLES, "{name}/{kind}/int{}", p.bits());
+                let net =
+                    forge::raw_network(&arch, GOLDEN_SEED, p, forge::golden_theta(p));
+                let mut engine = SnnEngine::new(net);
+                for (s, row) in rows.iter().enumerate() {
+                    let row = row.as_arr().unwrap();
+                    let want_pred = row[0].as_u64().unwrap() as usize;
+                    let want_step = row[1].as_u64().unwrap() as u32;
+                    let px = &pix[s * raw_dim..(s + 1) * raw_dim];
+                    let mut enc = zoo_encoder(kind, t);
+                    let (pred, step) =
+                        engine.infer_until_decision_with_encoder(px, t, enc.as_mut());
+                    assert_eq!(
+                        (pred, step),
+                        (want_pred, want_step),
+                        "{name}/{kind}/int{} sample {s}",
+                        p.bits()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stream_families_match_golden_vectors() {
+    let g = golden(include_str!("golden/streams.json"));
+    assert_eq!(g.req("seed").unwrap().as_u64(), Some(GOLDEN_SEED));
+    let windows = g.req("windows").unwrap().as_u64().unwrap() as usize;
+    let window = g.req("window").unwrap().as_u64().unwrap() as usize;
+    let dim = g.req("dim").unwrap().as_u64().unwrap() as usize;
+    let classes = g.req("classes").unwrap().as_u64().unwrap() as usize;
+    let fams = g.req("families").unwrap();
+    type StreamFn = fn(u64, usize, usize, usize, usize) -> lspine::model::io::StreamData;
+    let families: [(&str, StreamFn); 3] = [
+        ("ecg", forge::stream_data),
+        ("kws", forge::kws_stream_data),
+        ("vib", forge::vib_stream_data),
+    ];
+    for (name, make) in families {
+        let rec = fams.req(name).unwrap();
+        let s = make(GOLDEN_SEED, windows, window, dim, classes);
+        assert_eq!(s.frames, windows * window, "{name}: frame count");
+        assert_eq!((s.dim, s.window, s.classes), (dim, window, classes), "{name}");
+        let want_labels: Vec<u8> = rec
+            .req("labels")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as u8)
+            .collect();
+        assert_eq!(s.labels, want_labels, "{name}: labels");
+        assert_eq!(
+            format!("{:016x}", fnv1a64(&s.pixels)),
+            rec.req("pixels_fnv").unwrap().as_str().unwrap(),
+            "{name}: pixel stream hash"
+        );
+    }
+}

@@ -596,6 +596,98 @@ fn loadgen_end_to_end_small() {
 }
 
 #[test]
+fn early_exit_windows_over_tcp_return_decision_steps() {
+    let fe = start_frontend(|_| {});
+    let mut s = connect(&fe);
+    let px = pixels(&fe);
+    let session = open_session(&mut s, 1);
+
+    for i in 0..3u64 {
+        let tag = 30 + i;
+        s.write_all(&wire::encode_request_v4(
+            tag,
+            &Request::StreamWindowEarly {
+                session,
+                steps: 8,
+                precision: ReqPrecision::Int4,
+                encoder: EncoderKind::Rate,
+                pixels: px.clone(),
+            },
+            0,
+        ))
+        .unwrap();
+        let (t, resp) = read_resp(&mut s).unwrap();
+        assert_eq!(t, tag);
+        let Response::WindowEx {
+            session: sid,
+            window,
+            prediction,
+            fresh,
+            decision_step,
+            counts,
+            ..
+        } = resp
+        else {
+            panic!("expected WindowEx, got {resp:?}")
+        };
+        assert_eq!(sid, session);
+        assert_eq!(window, i, "windows count up across early-exit frames");
+        assert_eq!(fresh, i == 0, "only the first window is fresh");
+        assert!(
+            (1..=8).contains(&decision_step),
+            "decision step {decision_step} outside the 8-step budget"
+        );
+        assert!((prediction as usize) < counts.len());
+    }
+
+    // an early-exit frame for a never-opened session is a typed error,
+    // same as the classic window path
+    s.write_all(&wire::encode_request_v4(
+        99,
+        &Request::StreamWindowEarly {
+            session: 54321,
+            steps: 8,
+            precision: ReqPrecision::Int4,
+            encoder: EncoderKind::Rate,
+            pixels: px,
+        },
+        0,
+    ))
+    .unwrap();
+    expect_error(&mut s, 99, ErrorCode::UnknownSession);
+    fe.shutdown().unwrap();
+}
+
+#[test]
+fn loadgen_early_exit_end_to_end() {
+    let fe = start_frontend(|_| {});
+    let cfg = loadgen::LoadgenConfig {
+        addr: fe.local_addr().to_string(),
+        sessions: 4,
+        windows: 3,
+        steps: 8,
+        rate: 200.0,
+        arrival: loadgen::Arrival::Burst,
+        seed: 5,
+        early_exit: true,
+        ..Default::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.ok, 12, "{}", report.summary());
+    assert_eq!(report.lost, 0, "{}", report.summary());
+    assert_eq!(report.protocol_errors, 0, "{}", report.summary());
+    assert_eq!(report.decision_viol, 0, "{}", report.summary());
+    assert_eq!(report.decisions.len(), 12, "one decision step per window");
+    assert!(
+        report.decisions.iter().all(|&d| (1..=8).contains(&d)),
+        "decisions inside the step budget: {:?}",
+        report.decisions
+    );
+    assert!(report.summary().contains("decision_p50="), "{}", report.summary());
+    fe.shutdown().unwrap();
+}
+
+#[test]
 fn loadgen_drives_256_sessions_with_drain() {
     // the acceptance bar: >= 256 concurrent streaming sessions over real
     // TCP, typed backpressure, graceful drain losing nothing

@@ -342,6 +342,213 @@ def infer_conv(side, channels, classes, layers, pix, T, leak=2):
 
 
 # --------------------------------------------------------------------
+# encoder zoo (mirrors rust/src/encode/{ttfs,population}.rs)
+# --------------------------------------------------------------------
+
+
+def ttfs_fire_steps(px, t_steps):
+    """``TtfsEncoder::fire_step`` per pixel: the single step each pixel
+    fires at, or -1 for x == 0 (never fires)."""
+    out = np.empty(len(px), dtype=np.int64)
+    for j, x in enumerate(px):
+        if x == 0:
+            out[j] = -1
+        else:
+            slot = (int(x) * t_steps) >> 8
+            out[j] = t_steps - 1 - min(slot, t_steps - 1)
+    return out
+
+
+def pop_act_table(groups):
+    """``PopulationEncoder`` activation lookup: [256, groups] int64."""
+    w = max(255 // (groups - 1), 1)
+    two_w2 = 2 * w * w
+    act = np.zeros((256, groups), dtype=np.int64)
+    for x in range(256):
+        for i in range(groups):
+            c = i * 255 // (groups - 1)
+            d = abs(x - c)
+            fall = d * d * 255 // two_w2
+            act[x, i] = max(255 - fall, 0)  # u32 saturating_sub
+    return act
+
+
+def make_encoder(kind, px, t_budget, groups):
+    """Return ``enc(t) -> int64[input_dim]`` matching the rust encoders.
+
+    ``px`` is the *raw* pixel payload: full input_dim for rate/ttfs,
+    input_dim // groups for population (group-major expansion)."""
+    if kind == "rate":
+        arr = np.array(px, dtype=np.int64)
+        return lambda t: spike_step(arr, t)
+    if kind == "ttfs":
+        fire = ttfs_fire_steps(px, t_budget)
+        return lambda t: (fire == t).astype(np.int64)
+    if kind == "population":
+        act = pop_act_table(groups)
+        # group-major: pixel p's neurons occupy [p*groups, (p+1)*groups)
+        acts = act[np.array(px, dtype=np.int64)].reshape(-1)
+        return lambda t: spike_step(acts, t)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------
+# early-exit inference (mirrors SnnEngine::run_window(early_exit=true))
+# --------------------------------------------------------------------
+
+
+def early_exit_mlp(sizes, layers, enc, T, leak=2):
+    """Fresh-membrane run that stops after the first step with any
+    readout spike. Returns (counts, decision_step); decision_step == T
+    when the readout stays silent."""
+    vs = [np.zeros(n, dtype=np.int64) for n in sizes[1:]]
+    counts = np.zeros(sizes[-1], dtype=np.int64)
+    for t in range(T):
+        spk = enc(t)
+        for i, (w, theta) in enumerate(layers):
+            spk, vs[i] = lif_rows(spk, w, vs[i], theta, leak)
+        counts += spk
+        if spk.any():
+            return counts, t + 1
+    return counts, T
+
+
+def early_exit_conv(side, channels, classes, layers, enc, T, leak=2):
+    """Early-exit twin of ``infer_conv``: stop at the first fc fire."""
+    c0, c1, c2 = channels
+    s2 = side // 2
+    t0, t1 = im2col_table(side, c0), im2col_table(s2, c1)
+    v0 = np.zeros((side * side, c1), dtype=np.int64)
+    v1 = np.zeros((s2 * s2, c2), dtype=np.int64)
+    v2 = np.zeros(classes, dtype=np.int64)
+    counts = np.zeros(classes, dtype=np.int64)
+    (w0, th0), (w1, th1), (w2, th2) = layers
+    for t in range(T):
+        in_plane = enc(t)
+        patches = gather(in_plane, t0).reshape(side * side, 9 * c0)
+        vv = v0 - (v0 >> leak) + patches @ w0
+        fired = (vv >= th0).astype(np.int64)
+        v0 = vv - fired * th0
+        pooled1 = maxpool2(fired.reshape(-1), side, c1)
+        patches2 = gather(pooled1, t1).reshape(s2 * s2, 9 * c1)
+        vv = v1 - (v1 >> leak) + patches2 @ w1
+        fired = (vv >= th1).astype(np.int64)
+        v1 = vv - fired * th1
+        pooled2 = maxpool2(fired.reshape(-1), s2, c2)
+        spk, v2 = lif_rows(pooled2, w2, v2, th2, leak)
+        counts += spk
+        if spk.any():
+            return counts, t + 1
+    return counts, T
+
+
+# --------------------------------------------------------------------
+# forge stream families (mirrors rust/src/forge/stream.rs)
+# --------------------------------------------------------------------
+
+
+def beat_amp(phase, period):
+    if phase == 0:
+        return 40
+    if phase == 1:
+        return 160
+    if phase == 2:
+        return 80
+    if phase == 3:
+        return 20
+    t_center = 2 * period // 5
+    d = abs(phase - t_center)
+    return 48 - 12 * d if d <= 3 else 0
+
+
+def ecg_stream(seed, windows, window, dim, classes):
+    rng = Rng(layer_seed(seed, "stream", 0))
+    gains = [96 + rng.below(128) for _ in range(dim)]
+    pixels, labels = [], []
+    phase = 0
+    period = 18 + rng.below(7)
+    for _ in range(windows):
+        label = rng.below(classes)
+        labels.append(label)
+        for _ in range(window):
+            amp = beat_amp(phase, period)
+            for c in range(dim):
+                noise = rng.below(13) - 6
+                x = 32 + ((amp * gains[c]) >> 8) + noise
+                if label > 0 and c % classes == label:
+                    x += 24 + 8 * label
+                pixels.append(min(max(x, 0), 255))
+            phase += 1
+            if phase >= period:
+                phase = 0
+                period = 18 + rng.below(7)
+    return pixels, labels
+
+
+def kws_envelope(frame, onset, window):
+    if frame < onset:
+        return 0
+    dt = frame - onset
+    sustain = max(window // 3, 1)
+    if dt == 0:
+        return 96
+    if dt == 1:
+        return 200
+    if dt < 2 + sustain:
+        return 160
+    return max(160 - 32 * (dt - 1 - sustain), 0)  # u32 saturating_sub
+
+
+def kws_stream(seed, windows, window, dim, classes):
+    rng = Rng(layer_seed(seed, "kws", 0))
+    gains = [128 + rng.below(128) for _ in range(dim)]
+    pixels, labels = [], []
+    for _ in range(windows):
+        label = rng.below(classes)
+        labels.append(label)
+        onset = rng.below(max(window // 2, 1))
+        for f in range(window):
+            env = kws_envelope(f, onset, window)
+            for c in range(dim):
+                noise = rng.below(9) - 4
+                x = 20 + noise
+                if label > 0 and c % classes == label:
+                    x += (env * gains[c]) >> 8
+                pixels.append(min(max(x, 0), 255))
+    return pixels, labels
+
+
+def triangle(t, period):
+    ph = t % period
+    half = period // 2
+    if ph <= half:
+        return 128 * ph // max(half, 1)
+    return 128 * (period - ph) // max(period - half, 1)
+
+
+def vib_stream(seed, windows, window, dim, classes):
+    rng = Rng(layer_seed(seed, "vib", 0))
+    period = 8
+    phases = [rng.below(period) for _ in range(dim)]
+    gains = [96 + rng.below(96) for _ in range(dim)]
+    pixels, labels = [], []
+    t = 0
+    for _ in range(windows):
+        label = rng.below(classes)
+        labels.append(label)
+        for _ in range(window):
+            for c in range(dim):
+                tri = triangle(t + phases[c], period)
+                noise = rng.below(7) - 3
+                x = 24 + ((tri * gains[c]) >> 8) + noise
+                if label > 0 and c % classes == label and t % 2 == 0:
+                    x += 40 + 6 * label
+                pixels.append(min(max(x, 0), 255))
+            t += 1
+    return pixels, labels
+
+
+# --------------------------------------------------------------------
 # golden generation
 # --------------------------------------------------------------------
 
@@ -452,6 +659,80 @@ def gen_quant_golden():
     return out
 
 
+POP_GROUPS = 4
+ENCODERS = ("rate", "ttfs", "population")
+STREAM_KNOBS = dict(windows=6, window=8, dim=16, classes=10)
+
+
+def gen_early_exit_golden():
+    """``SnnEngine::infer_until_decision_with_encoder`` pins: for every
+    golden arch x encoder x precision x sample, ``[prediction,
+    decision_step]`` of a fresh-membrane early-exit run over the T=8
+    window (population feeds ``input_dim // POP_GROUPS`` raw pixels;
+    decision_step == T when the readout never fires)."""
+    out = {}
+    arch_runs = [
+        ("mlp", MLP_SIZES[0], list(zip(MLP_SIZES[:-1], MLP_SIZES[1:])), None),
+        (
+            "convnet",
+            CONV["side"] * CONV["side"] * CONV["channels"][0],
+            conv_shapes(CONV["side"], CONV["channels"], CONV["classes"]),
+            CONV,
+        ),
+    ]
+    early_exits = 0
+    for model, dim, shapes, conv in arch_runs:
+        per_enc = {}
+        for kind in ENCODERS:
+            raw_dim = dim // POP_GROUPS if kind == "population" else dim
+            pix = pixels(GOLDEN_SEED, SAMPLES, raw_dim)
+            per_prec = {}
+            for bits in (2, 4, 8):
+                theta = GOLDEN_THETA[bits]
+                layers = [
+                    (raw_layer_q(GOLDEN_SEED, i, bits, k, n), theta)
+                    for i, (k, n) in enumerate(shapes)
+                ]
+                rows = []
+                for s in range(SAMPLES):
+                    px = pix[s * raw_dim : (s + 1) * raw_dim]
+                    enc = make_encoder(kind, px, T, POP_GROUPS)
+                    if conv is None:
+                        counts, step = early_exit_mlp(MLP_SIZES, layers, enc, T)
+                    else:
+                        counts, step = early_exit_conv(
+                            conv["side"],
+                            conv["channels"],
+                            conv["classes"],
+                            layers,
+                            enc,
+                            T,
+                        )
+                    early_exits += T - step
+                    rows.append([int(np.argmax(counts)), int(step)])
+                per_prec[f"int{bits}"] = rows
+            per_enc[kind] = per_prec
+        out[model] = per_enc
+    if early_exits == 0:
+        raise SystemExit(
+            "early-exit goldens never exit early: the pins are vacuous"
+        )
+    return out
+
+
+def gen_streams_golden():
+    """Forge stream-family pins: per family, the window labels plus the
+    FNV-1a64 of the raw pixel bytes (knobs: STREAM_KNOBS, golden seed)."""
+    out = {}
+    for name, gen in (("ecg", ecg_stream), ("kws", kws_stream), ("vib", vib_stream)):
+        px, labels = gen(GOLDEN_SEED, **STREAM_KNOBS)
+        out[name] = {
+            "labels": [int(l) for l in labels],
+            "pixels_fnv": f"{fnv1a64(bytes(px)):016x}",
+        }
+    return out
+
+
 DECAY_WINDOWS = 3
 DECAY_STEPS = 4
 
@@ -496,6 +777,8 @@ def main():
     engine = gen_engine_golden()
     quant = gen_quant_golden()
     decay = gen_decay_golden()
+    early = gen_early_exit_golden()
+    streams = gen_streams_golden()
 
     # sanity: goldens must exercise real spiking activity per
     # configuration, not silence. Exception: trunc/INT2 — the truncation
@@ -549,6 +832,23 @@ def main():
             },
             f,
             indent=1,
+        )
+        f.write("\n")
+    with open(os.path.join(golden_dir, "early_exit.json"), "w") as f:
+        json.dump(
+            {
+                "seed": GOLDEN_SEED,
+                "timesteps": T,
+                "groups": POP_GROUPS,
+                "models": early,
+            },
+            f,
+            indent=1,
+        )
+        f.write("\n")
+    with open(os.path.join(golden_dir, "streams.json"), "w") as f:
+        json.dump(
+            {"seed": GOLDEN_SEED, **STREAM_KNOBS, "families": streams}, f, indent=1
         )
         f.write("\n")
     print("wrote", golden_dir)
